@@ -1,0 +1,8 @@
+"""Repo-root pytest config: make `compile.*` importable when pytest is
+invoked as `pytest python/tests/` from the repository root (the Makefile
+runs it from python/; both work)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

@@ -1,0 +1,95 @@
+//! Initial loads at scale (paper §3.4/§5.5/§6.4): the fallback moment
+//! where METL's "reserve capacity" is spent — XLA bulk lane vs the Alg-6
+//! lane for snapshot replays, and horizontal scaling 1→8 instances over
+//! the partitioned CDC backlog.
+//!
+//! Run with: `cargo run --release --example initial_load`
+
+use metl::config::PipelineConfig;
+use metl::coordinator::batcher::InitialLoader;
+use metl::coordinator::pipeline::Pipeline;
+use metl::coordinator::scaler;
+use metl::runtime::BulkRuntime;
+use metl::util::rng::Rng;
+use metl::workload::{self, DmlKind, TraceOp};
+
+const ROWS: usize = 4000;
+
+fn loaded_pipeline(cfg: &PipelineConfig) -> anyhow::Result<Pipeline> {
+    let mut land = workload::generate(cfg);
+    let mut rng = Rng::seed_from(cfg.seed ^ 0x10AD);
+    workload::populate(&mut land, ROWS, &mut rng);
+    Ok(Pipeline::from_landscape(cfg.clone(), land)?)
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = PipelineConfig::small();
+    cfg.partitions = 8;
+    cfg.artifacts_dir = Some("artifacts".into());
+
+    // ---- lane comparison: XLA bulk vs Alg 6 -----------------------------
+    println!("== initial load: {} rows/table ==", ROWS);
+    let runtime = BulkRuntime::try_load("artifacts");
+    match &runtime {
+        Some(rt) => println!(
+            "bulk runtime loaded: {} variants on {}",
+            rt.n_variants(),
+            rt.platform
+        ),
+        None => println!("no artifacts — run `make artifacts` for the XLA lane"),
+    }
+
+    let p_bulk = loaded_pipeline(&cfg)?;
+    let loader = InitialLoader { runtime };
+    let t0 = std::time::Instant::now();
+    let r_bulk = loader.initial_load(&p_bulk, 0)?;
+    let bulk_wall = t0.elapsed();
+    println!(
+        "bulk lane:  {} rows -> {} messages (bulk={}) in {:?}",
+        r_bulk.rows, r_bulk.out_messages, r_bulk.used_bulk, bulk_wall
+    );
+
+    let p_fall = loaded_pipeline(&cfg)?;
+    let fallback = InitialLoader { runtime: None };
+    let t0 = std::time::Instant::now();
+    let r_fall = fallback.initial_load(&p_fall, 0)?;
+    let fall_wall = t0.elapsed();
+    println!(
+        "alg-6 lane: {} rows -> {} messages (bulk={}) in {:?}",
+        r_fall.rows, r_fall.out_messages, r_fall.used_bulk, fall_wall
+    );
+    assert_eq!(r_bulk.rows, r_fall.rows);
+    assert_eq!(
+        r_bulk.out_messages, r_fall.out_messages,
+        "the two lanes must produce identical message counts"
+    );
+
+    // ---- horizontal scaling over a CDC backlog --------------------------
+    println!("\n== horizontal scaling (stable state i, §5.5) ==");
+    println!("{:>10} {:>12} {:>14}", "instances", "wall", "events/s");
+    let mut base_eps = 0.0;
+    for instances in [1usize, 2, 4, 8] {
+        let p = loaded_pipeline(&cfg)?;
+        // backlog: one update event per existing row across 4 services
+        for service in 0..p.cfg.n_services {
+            for _ in 0..1500 {
+                p.resolve_op(&TraceOp::Dml { service, kind: DmlKind::Update })?;
+            }
+        }
+        let report = scaler::run_scaled(&p, instances);
+        let eps = report.throughput_eps();
+        if instances == 1 {
+            base_eps = eps;
+        }
+        println!(
+            "{:>10} {:>12?} {:>14.0}  (x{:.2})",
+            instances,
+            report.wall,
+            eps,
+            eps / base_eps
+        );
+        assert_eq!(report.processed, (p.cfg.n_services * 1500) as u64);
+    }
+    println!("\ninitial_load OK");
+    Ok(())
+}

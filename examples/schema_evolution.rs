@@ -1,0 +1,116 @@
+//! Schema evolution walkthrough: the paper's §3.3 semi-automated workflow
+//! and the figure-6 worked update example, end to end — registry rules,
+//! the four Alg-5 trigger cases, notices, and the inspection views.
+//!
+//! Run with: `cargo run --release --example schema_evolution`
+
+use metl::cdm::{CdmType, CdmVersionNo};
+use metl::coordinator::inspect;
+use metl::matrix::fixtures::{fig6_matrix, fig6_trees};
+use metl::matrix::update::{auto_update, ChangeCase, Notice};
+use metl::prelude::*;
+use metl::schema::EvolutionError;
+
+fn main() -> anyhow::Result<()> {
+    // ---- 1. The Apicurio-sim registry enforces evolution discipline ----
+    println!("== registry rules (§3.3) ==");
+    let registry = Registry::new(Compatibility::Backward, true);
+    let s = registry.create_schema("payments.incoming", "src.payments.incoming");
+    let f = |n: &str| (n.to_string(), ExtractType::Int64, true);
+    registry.register_version(s, &[f("id"), f("value")]).unwrap();
+    // single-attribute additions pass
+    let (v2, diff) = registry
+        .register_version(s, &[f("id"), f("value"), f("currency")])
+        .unwrap();
+    println!("v{} accepted, diff: +{:?}", v2.0, diff.added);
+    // removals violate backward compatibility
+    let err = registry.register_version(s, &[f("id")]).unwrap_err();
+    println!("removal rejected: {err}");
+    assert!(matches!(err, EvolutionError::RemovalForbidden { .. }));
+    // two changes at once violate the single-change rule
+    let err = registry
+        .register_version(s, &[f("id"), f("value"), f("currency"), f("x"), f("y")])
+        .unwrap_err();
+    println!("double change rejected: {err}");
+
+    // ---- 2. Figure 6: the two update events through Alg 5 --------------
+    println!("\n== figure-6 worked example (Alg 5) ==");
+    let (mut tree, mut cdm) = fig6_trees();
+    let m = fig6_matrix(&tree, &cdm);
+    let mut dpm = DpmSet::from_matrix(&m, &tree, &cdm, StateI(0))
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("initial DPM: {} elements", dpm.n_elements());
+
+    // event (1): new extracting version s1.v3 with a7 ≡ a4 ≡ a1
+    let s1 = tree.schema_by_name("s1").unwrap();
+    let v3 = tree.add_version(s1, &[("a1".into(), ExtractType::Int64, true)]);
+    let report = auto_update(
+        &mut dpm,
+        &tree,
+        &cdm,
+        ChangeCase::AddedSchemaVersion { schema: s1, v: v3 },
+        StateI(1),
+    );
+    println!(
+        "event 1 (added s1.v3): +{} elements, {} notice(s)",
+        report.elements_added,
+        report.notices.len()
+    );
+    for n in &report.notices {
+        match n {
+            Notice::SmallerPermutation { old_rank, new_rank, .. } => println!(
+                "  notice: copied block shrank {old_rank} -> {new_rank} \
+                 (user should double-check, §5.4.2)"
+            ),
+            other => println!("  notice: {other:?}"),
+        }
+    }
+
+    // event (2): new CDM version (c3≡c1, c4≡c2), old rows deleted (§5.4.3)
+    let e1 = cdm.entity_by_name("s1cdm").unwrap();
+    let w2 = cdm.add_version(
+        e1,
+        &[
+            ("c1".into(), CdmType::Integer, "c3 ≡ c1".into()),
+            ("c2".into(), CdmType::Integer, "c4 ≡ c2".into()),
+        ],
+    );
+    let report = auto_update(
+        &mut dpm,
+        &tree,
+        &cdm,
+        ChangeCase::AddedCdmVersion { entity: e1, w: w2 },
+        StateI(2),
+    );
+    println!(
+        "event 2 (added CDM v2): +{} elements to new rows, -{} blocks of \
+         the old version (red cleanup in fig 6)",
+        report.elements_added, report.blocks_removed
+    );
+    assert!(dpm.row(e1, CdmVersionNo(1)).is_empty());
+
+    // ---- 3. Inspection views (§6.3 UI queries) --------------------------
+    println!("\n== inspection (UI sim, §6.3) ==");
+    print!("{}", inspect::reverse_search(&dpm, &tree, &cdm, e1, w2));
+    print!("{}", inspect::version_progression(&dpm, &tree, &cdm, s1));
+
+    // ---- 4. A deletion storm (cases 1+2) --------------------------------
+    println!("== deletion storm ==");
+    let before = dpm.n_elements();
+    let report = auto_update(
+        &mut dpm,
+        &tree,
+        &cdm,
+        ChangeCase::DeletedSchemaVersion { schema: s1, v: VersionNo(1) },
+        StateI(3),
+    );
+    println!(
+        "deleted s1.v1: -{} blocks, -{} elements (DPM {} -> {})",
+        report.blocks_removed,
+        report.elements_removed,
+        before,
+        dpm.n_elements()
+    );
+    println!("\nschema_evolution OK");
+    Ok(())
+}

@@ -1,0 +1,96 @@
+"""AOT: lower the L2 graphs to HLO *text* artifacts for the rust runtime.
+
+HLO text — NOT ``lowered.compile()`` / serialized HloModuleProto — is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which xla_extension 0.5.1 (the version behind the published `xla` 0.1.6
+crate) rejects; the text parser reassigns ids and round-trips cleanly.
+(See /opt/xla-example/README.md.)
+
+Artifacts:
+  artifacts/bulk_map_b{B}_p{P}_q{Q}.hlo.txt   one per shape variant
+  artifacts/degrees_q{Q}_p{P}.hlo.txt
+  artifacts/manifest.json                     variant index for rust
+
+`make artifacts` runs this once; rust never shells out to python.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+# (batch, p_attrs, q_attrs) variants the rust bulk lane can pick from.
+# 128 is the MXU/tile edge the pallas kernel is scheduled for; the small
+# variant keeps smoke tests fast.
+BULK_VARIANTS = [
+    (256, 128, 128),
+    (1024, 128, 128),
+]
+DEGREE_VARIANTS = [
+    (128, 128),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bulk_map(batch, p, q, impl="pallas"):
+    fn, specs = model.make_bulk_map_fn(batch, p, q, impl=impl)
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def lower_degrees(q, p):
+    fn, specs = model.make_degrees_fn(q, p)
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts",
+                    help="artifact output directory")
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "bulk_map": [], "degrees": []}
+
+    for batch, p, q in BULK_VARIANTS:
+        # two impls per shape: the pallas TPU schedule and the jnp fused-dot
+        # CPU layout (runtime picks per platform; METL_BULK_IMPL overrides)
+        for impl in ("pallas", "jnp"):
+            name = f"bulk_map_{impl}_b{batch}_p{p}_q{q}.hlo.txt"
+            text = lower_bulk_map(batch, p, q, impl=impl)
+            with open(os.path.join(out_dir, name), "w") as f:
+                f.write(text)
+            manifest["bulk_map"].append(
+                {"file": name, "batch": batch, "p": p, "q": q, "impl": impl,
+                 "outputs": ["presence[b,q]", "src_idx[b,q]"]}
+            )
+            print(f"wrote {name} ({len(text)} chars)", file=sys.stderr)
+
+    for q, p in DEGREE_VARIANTS:
+        name = f"degrees_q{q}_p{p}.hlo.txt"
+        text = lower_degrees(q, p)
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        manifest["degrees"].append({"file": name, "q": q, "p": p})
+        print(f"wrote {name} ({len(text)} chars)", file=sys.stderr)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json ({out_dir})", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: row/column occupancy of a mapping block.
+
+Feeds the largest-permutation-matrix extraction of Alg 2 / Alg 3 (paper
+§5.3): a rectangular mapping block is sized down to its largest permutation
+sub-matrix by discarding all-zero rows and columns; the degrees computed
+here are exactly the evidence needed (a block is a valid 1:1 mapping iff
+every row/col degree is ≤ 1; the permutation rank is the number of 1s).
+
+The grid walks (Q/bq, P/bp) tiles; row/col degree outputs are revisited
+along the reduction axis and accumulate in VMEM, same schedule family as
+block_map.py. interpret=True on this image.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_TILE = 128
+
+
+def _degrees_kernel(mb_ref, row_ref, col_ref):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init_row():
+        row_ref[...] = jnp.zeros_like(row_ref)
+
+    @pl.when(i == 0)
+    def _init_col():
+        col_ref[...] = jnp.zeros_like(col_ref)
+
+    tile = mb_ref[...]
+    row_ref[...] += jnp.sum(tile, axis=1, keepdims=True)
+    col_ref[...] += jnp.sum(tile, axis=0, keepdims=True)
+
+
+def permute_extract(mb, *, bq=DEFAULT_TILE, bp=DEFAULT_TILE, interpret=True):
+    """Row/col degrees of a (Q, P) 0/1 block via a tiled Pallas reduction.
+
+    Returns (row_deg (Q,), col_deg (P,), ones ()) matching
+    ref.permute_extract_ref. Q and P must be multiples of the tile sizes;
+    callers pad with zeros (padding adds zero degree, so results are exact).
+    """
+    q, p = mb.shape
+    assert q % bq == 0 and p % bp == 0, mb.shape
+    grid = (q // bq, p // bp)
+    row2d, col2d = pl.pallas_call(
+        _degrees_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bq, bp), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, bp), lambda i, j: (0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, p), jnp.float32),
+        ],
+        interpret=interpret,
+    )(mb)
+    row_deg = row2d[:, 0]
+    col_deg = col2d[0, :]
+    ones = jnp.sum(row_deg)
+    return row_deg, col_deg, ones

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for the METL bulk-mapping kernels.
+
+These are the ground truth the Pallas kernels (block_map.py,
+permute_extract.py) are validated against in python/tests/.
+
+Semantics (paper §4.2/§5.5): a mapping block ``M`` (shape Q×P, values in
+{0,1}, at most one 1 per row and per column — a sub-permutation matrix)
+applies the paper's mapping function ``ncd_q <- m_qp * nad_p`` to a *batch*
+of incoming messages. A message is encoded as a presence vector
+``x in {0,1}^P`` (``nad_p``: 1 iff attribute p carries a non-"null" data
+object). The bulk path additionally needs, for every produced output slot q,
+the *source index* p whose data object must be relabelled onto the CDM
+attribute c_q — that is what lets the rust coordinator move the actual
+payload bytes without python on the request path.
+"""
+
+import jax.numpy as jnp
+
+
+def block_map_ref(m, x):
+    """Reference bulk mapping.
+
+    Args:
+      m: (Q, P) float array, entries in {0, 1}; sub-permutation matrix.
+      x: (B, P) float array, entries in {0, 1}; batch of presence vectors.
+
+    Returns:
+      presence: (B, Q) float, presence[b, q] = sum_p m[q, p] * x[b, p]
+        (the paper's mapping function, vectorized over the batch).
+      src_idx:  (B, Q) float, the 0-based source attribute index p feeding
+        output slot q for message b, or -1.0 when the slot stays "null".
+    """
+    presence = x @ m.T
+    # Encode indices as p+1 so that index 0 is distinguishable from "absent",
+    # then shift back and mark absent slots with -1.
+    idx1 = (x * (jnp.arange(x.shape[1], dtype=x.dtype) + 1.0)) @ m.T
+    src_idx = jnp.where(presence > 0.5, idx1 - 1.0, -1.0)
+    return presence, src_idx
+
+
+def permute_extract_ref(mb):
+    """Reference row/column occupancy used to extract the largest
+    permutation matrix from a rectangular mapping block (paper §5.3.1).
+
+    Args:
+      mb: (Q, P) float array with entries in {0, 1} (general block, not
+        necessarily a permutation).
+
+    Returns:
+      row_deg: (Q,) float — number of 1s per row.
+      col_deg: (P,) float — number of 1s per column.
+      ones:    () float — total number of 1s in the block.
+    """
+    row_deg = jnp.sum(mb, axis=1)
+    col_deg = jnp.sum(mb, axis=0)
+    ones = jnp.sum(mb)
+    return row_deg, col_deg, ones

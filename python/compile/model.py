@@ -1,0 +1,91 @@
+"""L2: the METL bulk-mapping compute graph (build-time JAX).
+
+The rust coordinator's *bulk lane* (initial loads / snapshot replays,
+paper §5.5 "horizontal scaling ... for initial loads") maps thousands of
+messages against one mapping block at once. This module is the jax graph
+that gets AOT-lowered to HLO text by aot.py and executed from rust via
+PJRT; it calls the L1 Pallas kernels and is the only compute that crosses
+the language boundary.
+
+Graph: bulk_map(m, x) -> (presence (B,Q), src_idx (B,Q))
+  m: (Q, P) 0/1 mapping block (a padded largest-permutation matrix, the
+     dense ᵢDPM_rw rematerialized for the matmul lane)
+  x: (B, P) batch of presence vectors (nad_p per message)
+
+src_idx[b, q] == p means: relabel message b's data object at extracting
+attribute p onto CDM attribute q (the paper's mapping function with the
+relabelled-container semantics of §3.1). -1 means the slot stays "null" and
+— per the dense-message rule of §5.5 — is omitted from the outgoing message.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels import block_map as bm
+from compile.kernels import permute_extract as pe
+
+
+def bulk_map(m, x):
+    """Batched mapping of presence vectors through one mapping block."""
+    presence, src_idx = bm.block_map(m.astype(jnp.float32),
+                                     x.astype(jnp.float32))
+    return presence, src_idx
+
+
+def bulk_map_multi(ms, x):
+    """Map one incoming batch through a *column* of mapping blocks
+    (paper: one incoming message maps to ᵢm' outgoing messages — the
+    column super-set ᵢDCPM). ms: (K, Q, P); returns (K, B, Q) x2."""
+
+    def one(m):
+        return bulk_map(m, x)
+
+    import jax
+
+    presence, src_idx = jax.vmap(one)(ms)
+    return presence, src_idx
+
+
+def block_degrees(mb):
+    """Row/col occupancy of a block — evidence for PM extraction (Alg 2/3)."""
+    return pe.permute_extract(mb.astype(jnp.float32))
+
+
+def make_bulk_map_fn(batch, p_attrs, q_attrs, impl="pallas"):
+    """Shape-specialized entry point for AOT lowering (one executable per
+    (B, P, Q, impl) variant; rust picks the variant from
+    artifacts/manifest.json and pads to it).
+
+    impl="pallas": the L1 tiled kernel — the TPU deployment schedule
+    (grid while-loop in HLO, MXU-edge tiles).
+    impl="jnp": the pure-jnp reference — lowers to one fused dot, which is
+    the right layout for the CPU-PJRT backend this image runs (see
+    EXPERIMENTS.md §Perf L2). Both are verified equal in python/tests.
+    """
+
+    from compile.kernels import ref
+
+    def fn(m, x):
+        if impl == "pallas":
+            presence, src_idx = bulk_map(m, x)
+        else:
+            presence, src_idx = ref.block_map_ref(m, x)
+        return (presence, src_idx)
+
+    import jax
+
+    m_spec = jax.ShapeDtypeStruct((q_attrs, p_attrs), jnp.float32)
+    x_spec = jax.ShapeDtypeStruct((batch, p_attrs), jnp.float32)
+    return fn, (m_spec, x_spec)
+
+
+def make_degrees_fn(q_attrs, p_attrs):
+    """Shape-specialized degree reduction for AOT lowering."""
+
+    def fn(mb):
+        row_deg, col_deg, ones = block_degrees(mb)
+        return (row_deg, col_deg, jnp.reshape(ones, (1,)))
+
+    import jax
+
+    spec = jax.ShapeDtypeStruct((q_attrs, p_attrs), jnp.float32)
+    return fn, (spec,)

@@ -1,0 +1,136 @@
+"""Kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+Sweeps shapes/dtypes with hypothesis and asserts allclose against ref.py.
+All pallas calls run interpret=True (CPU image; see DESIGN.md).
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import block_map as bm
+from compile.kernels import permute_extract as pe
+from compile.kernels import ref
+
+
+def rand_subpermutation(rng, q, p, rank=None):
+    """Random QxP 0/1 matrix with <=1 one per row and per column."""
+    m = np.zeros((q, p), dtype=np.float32)
+    k = rank if rank is not None else rng.integers(0, min(q, p) + 1)
+    rows = rng.permutation(q)[:k]
+    cols = rng.permutation(p)[:k]
+    m[rows, cols] = 1.0
+    return m
+
+
+def rand_presence(rng, b, p, density=0.5):
+    return (rng.random((b, p)) < density).astype(np.float32)
+
+
+TILE_CASES = [
+    # (B, P, Q, bb, bq, bp)
+    (8, 16, 16, 8, 8, 8),
+    (16, 32, 16, 8, 8, 16),
+    (128, 128, 128, 128, 128, 128),
+    (256, 128, 256, 64, 64, 32),
+]
+
+
+@pytest.mark.parametrize("b,p,q,bb,bq,bp", TILE_CASES)
+def test_block_map_matches_ref(b, p, q, bb, bq, bp):
+    rng = np.random.default_rng(b * 1000 + p + q)
+    m = rand_subpermutation(rng, q, p)
+    x = rand_presence(rng, b, p)
+    presence, src_idx = bm.block_map(jnp.asarray(m), jnp.asarray(x),
+                                     bb=bb, bq=bq, bp=bp)
+    ref_presence, ref_idx = ref.block_map_ref(jnp.asarray(m), jnp.asarray(x))
+    np.testing.assert_allclose(presence, ref_presence, atol=1e-6)
+    np.testing.assert_allclose(src_idx, ref_idx, atol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    b_tiles=st.integers(1, 3),
+    p_tiles=st.integers(1, 3),
+    q_tiles=st.integers(1, 3),
+    tile=st.sampled_from([8, 16]),
+    density=st.floats(0.0, 1.0),
+)
+def test_block_map_hypothesis_sweep(seed, b_tiles, p_tiles, q_tiles, tile,
+                                    density):
+    rng = np.random.default_rng(seed)
+    b, p, q = b_tiles * tile, p_tiles * tile, q_tiles * tile
+    m = rand_subpermutation(rng, q, p)
+    x = rand_presence(rng, b, p, density)
+    presence, src_idx = bm.block_map(jnp.asarray(m), jnp.asarray(x),
+                                     bb=tile, bq=tile, bp=tile)
+    ref_presence, ref_idx = ref.block_map_ref(jnp.asarray(m), jnp.asarray(x))
+    np.testing.assert_allclose(presence, ref_presence, atol=1e-6)
+    np.testing.assert_allclose(src_idx, ref_idx, atol=1e-6)
+
+
+def test_block_map_semantics_gather():
+    """presence/src_idx must agree with direct gather semantics: if
+    m[q,p]==1 and x[b,p]==1 then slot q of message b is fed from p."""
+    rng = np.random.default_rng(7)
+    q_n, p_n, b_n = 16, 24, 8
+    m = rand_subpermutation(rng, q_n, p_n, rank=10)
+    x = rand_presence(rng, b_n, p_n, 0.6)
+    presence, src_idx = bm.block_map(jnp.asarray(m), jnp.asarray(x),
+                                     bb=8, bq=8, bp=8)
+    presence = np.asarray(presence)
+    src_idx = np.asarray(src_idx)
+    for bi in range(b_n):
+        for qi in range(q_n):
+            ps = np.nonzero(m[qi])[0]
+            if len(ps) == 1 and x[bi, ps[0]] == 1.0:
+                assert presence[bi, qi] == 1.0
+                assert src_idx[bi, qi] == ps[0]
+            else:
+                assert presence[bi, qi] == 0.0
+                assert src_idx[bi, qi] == -1.0
+
+
+def test_block_map_empty_and_full():
+    b, p, q = 16, 16, 16
+    zeros_m = jnp.zeros((q, p), jnp.float32)
+    eye_m = jnp.eye(q, p, dtype=jnp.float32)
+    x = jnp.ones((b, p), jnp.float32)
+    pres0, idx0 = bm.block_map(zeros_m, x, bb=8, bq=8, bp=8)
+    assert float(jnp.sum(pres0)) == 0.0
+    assert bool(jnp.all(idx0 == -1.0))
+    pres1, idx1 = bm.block_map(eye_m, x, bb=8, bq=8, bp=8)
+    assert bool(jnp.all(pres1 == 1.0))
+    np.testing.assert_allclose(
+        np.asarray(idx1), np.tile(np.arange(q, dtype=np.float32), (b, 1)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    q_tiles=st.integers(1, 4),
+    p_tiles=st.integers(1, 4),
+    density=st.floats(0.0, 1.0),
+)
+def test_permute_extract_hypothesis(seed, q_tiles, p_tiles, density):
+    rng = np.random.default_rng(seed)
+    tile = 8
+    q, p = q_tiles * tile, p_tiles * tile
+    mb = (rng.random((q, p)) < density).astype(np.float32)
+    row_deg, col_deg, ones = pe.permute_extract(jnp.asarray(mb),
+                                                bq=tile, bp=tile)
+    r_ref, c_ref, o_ref = ref.permute_extract_ref(jnp.asarray(mb))
+    np.testing.assert_allclose(row_deg, r_ref, atol=1e-6)
+    np.testing.assert_allclose(col_deg, c_ref, atol=1e-6)
+    np.testing.assert_allclose(ones, o_ref, atol=1e-6)
+
+
+def test_permute_extract_detects_valid_permutation():
+    rng = np.random.default_rng(3)
+    m = rand_subpermutation(rng, 16, 16, rank=9)
+    row_deg, col_deg, ones = pe.permute_extract(jnp.asarray(m), bq=8, bp=8)
+    assert float(jnp.max(row_deg)) <= 1.0
+    assert float(jnp.max(col_deg)) <= 1.0
+    assert float(ones) == 9.0

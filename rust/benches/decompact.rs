@@ -1,0 +1,72 @@
+//! Bench: §5.3.3/§6.2 — the hybrid strategy's restore path. The stored
+//! `ᵢ𝔇𝔘𝔖𝔅` must rebuild the in-memory `ᵢ𝔇𝔓𝔐` (Alg 4 then Alg 2)
+//! fast enough for restarts and instance copies.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{section, Bench};
+use metl::config::PipelineConfig;
+use metl::matrix::decompact::recreate_dpm;
+use metl::matrix::dpm::DpmSet;
+use metl::matrix::dusb::DusbSet;
+use metl::message::StateI;
+use metl::store::MatrixStore;
+use metl::workload;
+
+fn main() {
+    for (name, cfg) in [
+        ("paper_day", PipelineConfig::paper_day()),
+        ("eos_scale-", {
+            let mut c = PipelineConfig::eos_scale();
+            c.n_services = 60;
+            c.n_entities = 60;
+            c
+        }),
+    ] {
+        section(&format!("restore path @ {name}"));
+        let land = workload::generate(&cfg);
+        let dpm_direct =
+            DpmSet::from_matrix(&land.matrix, &land.tree, &land.cdm, StateI(0))
+                .unwrap();
+        let dusb =
+            DusbSet::from_matrix(&land.matrix, &land.tree, &land.cdm, StateI(0))
+                .unwrap();
+        println!(
+            "  DPM {} elements | DUSB {} elements (+{} special nulls)",
+            dpm_direct.n_elements(),
+            dusb.n_elements(),
+            dusb.n_special_nulls()
+        );
+
+        let bench = Bench::new(2, 10);
+        bench.run("Alg 4: DUSB -> M", || {
+            dusb.decompact(&land.tree, &land.cdm).count_ones()
+        });
+        bench.run("view: DUSB -> M -> DPM", || {
+            recreate_dpm(&dusb, &land.tree, &land.cdm)
+                .unwrap()
+                .n_elements()
+        });
+        // correctness of the restore
+        let restored = recreate_dpm(&dusb, &land.tree, &land.cdm).unwrap();
+        assert!(dpm_direct.same_elements(&restored));
+
+        // store round trip (serialize + fsync-less write + parse)
+        let dir = std::env::temp_dir()
+            .join("metl-bench-store")
+            .join(format!("{name}-{}", std::process::id()));
+        let store = MatrixStore::open(&dir).unwrap();
+        bench.run("store: save DUSB (json)", || {
+            store.save_dusb(&dusb).unwrap()
+        });
+        bench.run("store: load + recreate DPM", || {
+            store
+                .view_recreate_dpm(&land.tree, &land.cdm)
+                .unwrap()
+                .unwrap()
+                .n_elements()
+        });
+    }
+    println!("\ndecompact bench OK");
+}

@@ -1,0 +1,51 @@
+//! Minimal bench harness shared by all bench binaries (criterion is not
+//! available offline; see DESIGN.md §2). Prints one row per measurement:
+//! mean ± σ with percentiles over `iters` timed runs after `warmup` runs.
+
+#![allow(dead_code)] // each bench binary uses a subset of the harness
+
+use metl::util::stats::{format_ns, Summary};
+use std::time::Instant;
+
+pub struct Bench {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self { warmup: 3, iters: 10 }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Self { warmup, iters }
+    }
+
+    /// Time `f` and print a row. Returns the summary (ns).
+    pub fn run<R>(&self, name: &str, mut f: impl FnMut() -> R) -> Summary {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        let s = Summary::from(&samples);
+        println!("  {name:<44} {}", s.row(format_ns));
+        s
+    }
+}
+
+/// Section header helper.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Allow the harness file to compile standalone if cargo ever treats it as
+/// a bench target root (it should not — it is `#[path]`-included).
+#[allow(dead_code)]
+fn main() {}

@@ -1,0 +1,170 @@
+//! Bench: §3.5/§5.4/fig 6 — automated DMM updates. The paper's point:
+//! a version addition touches up to ~100k raw matrix parameters
+//! ("virtually impossible to update for a user"), but the set-based
+//! Alg 5 performs work proportional only to the *stored* elements.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{section, Bench};
+use metl::config::PipelineConfig;
+use metl::coordinator::pipeline::Pipeline;
+use metl::matrix::dpm::DpmSet;
+use metl::matrix::update::{auto_update, ChangeCase};
+use metl::message::StateI;
+use metl::workload;
+
+fn main() {
+    section("raw diff size vs Alg-5 set operations (per version addition)");
+    let mut cfg = PipelineConfig::eos_scale();
+    cfg.n_services = 60;
+    cfg.n_entities = 60;
+    let mut land = workload::generate(&cfg);
+    let dpm0 =
+        DpmSet::from_matrix(&land.matrix, &land.tree, &land.cdm, StateI(0))
+            .unwrap();
+    // one schema version addition: raw parameter diff = new columns x all
+    // live rows (the naive update surface the paper deems impossible)
+    let schema = land.tree.schemas().next().unwrap().id;
+    let live_rows: usize = land
+        .cdm
+        .entities()
+        .flat_map(|e| {
+            e.versions
+                .iter()
+                .map(|&w| land.cdm.version(e.id, w).unwrap().height())
+        })
+        .sum();
+    let new_cols = cfg.attrs_per_schema + 1;
+    println!(
+        "  raw diff surface: {} new columns x {} live rows = {} parameters",
+        new_cols,
+        live_rows,
+        new_cols * live_rows
+    );
+
+    let fields = workload::evolved_fields(&land.tree, schema);
+    let v_new = land.tree.add_version(schema, &fields);
+    let (nr, nc) = (land.cdm.n_attr_ids(), land.tree.n_attr_ids());
+    land.matrix.grow(nr, nc);
+    let mut dpm = dpm0.clone();
+    let report = auto_update(
+        &mut dpm,
+        &land.tree,
+        &land.cdm,
+        ChangeCase::AddedSchemaVersion { schema, v: v_new },
+        StateI(1),
+    );
+    println!(
+        "  Alg 5 set ops: +{} elements in {} blocks ({} notices) — {}x \
+         smaller than the raw surface",
+        report.elements_added,
+        report.blocks_added,
+        report.notices.len(),
+        (new_cols * live_rows) / report.diff_elements().max(1)
+    );
+
+    section("Alg 5 case timing (eos_scale- landscape)");
+    let bench = Bench::new(3, 15);
+    // case 3: added schema version
+    bench.run("case 3: added schema version (copy via ≡)", || {
+        let mut d = dpm0.clone();
+        auto_update(
+            &mut d,
+            &land.tree,
+            &land.cdm,
+            ChangeCase::AddedSchemaVersion { schema, v: v_new },
+            StateI(1),
+        )
+        .elements_added
+    });
+    // case 1: deleted schema version
+    let v1 = metl::schema::VersionNo(1);
+    bench.run("case 1: deleted schema version (drop column)", || {
+        let mut d = dpm0.clone();
+        auto_update(
+            &mut d,
+            &land.tree,
+            &land.cdm,
+            ChangeCase::DeletedSchemaVersion { schema, v: v1 },
+            StateI(1),
+        )
+        .elements_removed
+    });
+    // case 4: added CDM version (+ §5.4.3 cleanup)
+    let entity = land.cdm.entities().next().unwrap().id;
+    let cdm_fields: Vec<(String, metl::cdm::CdmType, String)> = {
+        let w = *land.cdm.versions_of(entity).last().unwrap();
+        land.cdm
+            .version(entity, w)
+            .unwrap()
+            .attrs
+            .iter()
+            .map(|&a| {
+                let at = land.cdm.attr(a);
+                (at.name.clone(), at.ty, at.description.clone())
+            })
+            .collect()
+    };
+    let w_new = land.cdm.add_version(entity, &cdm_fields);
+    let (nr, nc) = (land.cdm.n_attr_ids(), land.tree.n_attr_ids());
+    land.matrix.grow(nr, nc);
+    bench.run("case 4: added CDM version (+cleanup)", || {
+        let mut d = dpm0.clone();
+        auto_update(
+            &mut d,
+            &land.tree,
+            &land.cdm,
+            ChangeCase::AddedCdmVersion { entity, w: w_new },
+            StateI(1),
+        )
+        .elements_added
+    });
+    // case 2: deleted CDM version
+    let w1 = metl::cdm::CdmVersionNo(1);
+    bench.run("case 2: deleted CDM version (drop row)", || {
+        let mut d = dpm0.clone();
+        auto_update(
+            &mut d,
+            &land.tree,
+            &land.cdm,
+            ChangeCase::DeletedCdmVersion { entity, w: w1 },
+            StateI(1),
+        )
+        .elements_removed
+    });
+
+    section("update-vs-recompute (the automation dividend)");
+    let bench = Bench::new(2, 8);
+    let su = bench.run("Alg 5 incremental update", || {
+        let mut d = dpm0.clone();
+        auto_update(
+            &mut d,
+            &land.tree,
+            &land.cdm,
+            ChangeCase::AddedSchemaVersion { schema, v: v_new },
+            StateI(1),
+        )
+        .elements_added
+    });
+    let sr = bench.run("full recompute (Alg 2 from matrix)", || {
+        DpmSet::from_matrix(&land.matrix, &land.tree, &land.cdm, StateI(1))
+            .unwrap()
+            .n_elements()
+    });
+    println!(
+        "  incremental update is {:.0}x faster than recompute",
+        sr.mean / su.mean
+    );
+
+    section("full workflow (pipeline storm incl. store + cache eviction)");
+    let cfg2 = PipelineConfig::paper_day();
+    let pipeline = Pipeline::new(cfg2).unwrap();
+    let bench = Bench::new(1, 5);
+    let mut svc = 0usize;
+    bench.run("apply_schema_change end-to-end", || {
+        svc += 1;
+        pipeline.apply_schema_change(svc % 80).unwrap().elements_added
+    });
+    println!("\nupdate bench OK");
+}

@@ -1,0 +1,307 @@
+//! In-process Kafka-sim broker: topics, partitions, offsets, consumer
+//! groups, at-least-once delivery, offset reset.
+//!
+//! Substitution for the paper's Kafka/Kafka-streams substrate (DESIGN.md
+//! §2): what METL relies on is semantic — per-partition ordering, keyed
+//! partitioning, committed offsets per consumer group, the ability to
+//! reset offsets for a new initial load (§3.4), and at-least-once delivery
+//! (§5.5: "the ETL pipeline with the DMM system ensures an 'at least once'
+//! approach").
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, RwLock};
+
+/// A record as stored in a partition log.
+#[derive(Debug, Clone)]
+pub struct Record<V> {
+    pub offset: u64,
+    pub key: u64,
+    pub value: V,
+}
+
+#[derive(Debug)]
+struct Partition<V> {
+    log: Vec<Record<V>>,
+}
+
+impl<V> Default for Partition<V> {
+    fn default() -> Self {
+        Self { log: Vec::new() }
+    }
+}
+
+#[derive(Debug)]
+struct TopicInner<V> {
+    partitions: Vec<Mutex<Partition<V>>>,
+}
+
+/// A named topic with a fixed partition count.
+pub struct Topic<V> {
+    inner: Arc<TopicInner<V>>,
+}
+
+impl<V> Clone for Topic<V> {
+    fn clone(&self) -> Self {
+        Self { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl<V: Clone> Topic<V> {
+    fn new(partitions: usize) -> Self {
+        Self {
+            inner: Arc::new(TopicInner {
+                partitions: (0..partitions.max(1))
+                    .map(|_| Mutex::new(Partition::default()))
+                    .collect(),
+            }),
+        }
+    }
+
+    pub fn n_partitions(&self) -> usize {
+        self.inner.partitions.len()
+    }
+
+    /// Keyed produce: records with the same key land on the same partition
+    /// (ordering guarantee the DW upserts rely on).
+    pub fn produce(&self, key: u64, value: V) -> (usize, u64) {
+        let p = (fxhash(key) % self.inner.partitions.len() as u64) as usize;
+        self.produce_to(p, key, value)
+    }
+
+    pub fn produce_to(&self, partition: usize, key: u64, value: V) -> (usize, u64) {
+        let mut part = self.inner.partitions[partition].lock().unwrap();
+        let offset = part.log.len() as u64;
+        part.log.push(Record { offset, key, value });
+        (partition, offset)
+    }
+
+    /// Read up to `max` records from `partition` starting at `offset`.
+    pub fn fetch(&self, partition: usize, offset: u64, max: usize) -> Vec<Record<V>> {
+        let part = self.inner.partitions[partition].lock().unwrap();
+        part.log
+            .iter()
+            .skip(offset as usize)
+            .take(max)
+            .cloned()
+            .collect()
+    }
+
+    /// End offset (= log length) of a partition.
+    pub fn end_offset(&self, partition: usize) -> u64 {
+        self.inner.partitions[partition].lock().unwrap().log.len() as u64
+    }
+
+    pub fn total_records(&self) -> u64 {
+        (0..self.n_partitions()).map(|p| self.end_offset(p)).sum()
+    }
+}
+
+/// FNV-1a–style key hash for partitioning (stable across runs).
+fn fxhash(key: u64) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in key.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// The broker: a namespace of topics.
+pub struct Broker<V> {
+    topics: RwLock<HashMap<String, Topic<V>>>,
+    default_partitions: usize,
+}
+
+impl<V: Clone> Broker<V> {
+    pub fn new(default_partitions: usize) -> Self {
+        Self {
+            topics: RwLock::new(HashMap::new()),
+            default_partitions: default_partitions.max(1),
+        }
+    }
+
+    pub fn create_topic(&self, name: &str, partitions: usize) -> Topic<V> {
+        let mut topics = self.topics.write().unwrap();
+        topics
+            .entry(name.to_string())
+            .or_insert_with(|| Topic::new(partitions))
+            .clone()
+    }
+
+    /// Get-or-create with the broker default partition count.
+    pub fn topic(&self, name: &str) -> Topic<V> {
+        if let Some(t) = self.topics.read().unwrap().get(name) {
+            return t.clone();
+        }
+        self.create_topic(name, self.default_partitions)
+    }
+
+    pub fn topic_names(&self) -> Vec<String> {
+        let mut names: Vec<String> =
+            self.topics.read().unwrap().keys().cloned().collect();
+        names.sort();
+        names
+    }
+}
+
+/// A consumer-group member over one topic: tracks committed offsets per
+/// partition. Polling returns records past the committed offset; a poll
+/// without a following `commit` re-delivers the same records next time —
+/// that is the at-least-once contract.
+pub struct Consumer<V> {
+    topic: Topic<V>,
+    /// Partitions assigned to this member.
+    assignment: Vec<usize>,
+    committed: Vec<u64>, // per assigned partition (indexed like assignment)
+    position: Vec<u64>,  // fetch position (>= committed)
+}
+
+impl<V: Clone> Consumer<V> {
+    /// Member `member_idx` of `group_size` consumers: round-robin partition
+    /// assignment like Kafka's range assignor.
+    pub fn new(topic: Topic<V>, member_idx: usize, group_size: usize) -> Self {
+        let assignment: Vec<usize> = (0..topic.n_partitions())
+            .filter(|p| p % group_size.max(1) == member_idx)
+            .collect();
+        let n = assignment.len();
+        Self { topic, assignment, committed: vec![0; n], position: vec![0; n] }
+    }
+
+    pub fn assignment(&self) -> &[usize] {
+        &self.assignment
+    }
+
+    /// Poll up to `max` records across assigned partitions. Advances the
+    /// *position* (not the committed offset).
+    pub fn poll(&mut self, max: usize) -> Vec<(usize, Record<V>)> {
+        let mut out = Vec::new();
+        for (i, &p) in self.assignment.iter().enumerate() {
+            if out.len() >= max {
+                break;
+            }
+            let batch = self.topic.fetch(p, self.position[i], max - out.len());
+            if let Some(last) = batch.last() {
+                self.position[i] = last.offset + 1;
+            }
+            out.extend(batch.into_iter().map(|r| (p, r)));
+        }
+        out
+    }
+
+    /// Commit everything polled so far.
+    pub fn commit(&mut self) {
+        self.committed.copy_from_slice(&self.position);
+    }
+
+    /// Abandon uncommitted progress: next poll re-delivers (at-least-once).
+    pub fn rewind_to_committed(&mut self) {
+        self.position.copy_from_slice(&self.committed);
+    }
+
+    /// Reset offsets to zero — the paper's "set back Kafka-offsets and start
+    /// new initial loads" fallback (§3.4).
+    pub fn reset_to_beginning(&mut self) {
+        self.committed.iter_mut().for_each(|o| *o = 0);
+        self.position.iter_mut().for_each(|o| *o = 0);
+    }
+
+    /// Records remaining past the current position (lag).
+    pub fn lag(&self) -> u64 {
+        self.assignment
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| self.topic.end_offset(p).saturating_sub(self.position[i]))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn produce_fetch_ordering_per_partition() {
+        let t: Topic<u64> = Topic::new(1);
+        for i in 0..10 {
+            t.produce(1, i);
+        }
+        let recs = t.fetch(0, 0, 100);
+        assert_eq!(recs.len(), 10);
+        assert!(recs.windows(2).all(|w| w[0].offset + 1 == w[1].offset));
+        assert_eq!(recs.iter().map(|r| r.value).collect::<Vec<_>>(),
+                   (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn keyed_produce_is_sticky() {
+        let t: Topic<u64> = Topic::new(4);
+        let (p1, _) = t.produce(42, 0);
+        let (p2, _) = t.produce(42, 1);
+        assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn consumer_group_partitions_disjoint_and_complete() {
+        let t: Topic<u64> = Topic::new(8);
+        let c0: Consumer<u64> = Consumer::new(t.clone(), 0, 3);
+        let c1: Consumer<u64> = Consumer::new(t.clone(), 1, 3);
+        let c2: Consumer<u64> = Consumer::new(t.clone(), 2, 3);
+        let mut all: Vec<usize> = [c0.assignment(), c1.assignment(), c2.assignment()]
+            .concat();
+        all.sort();
+        assert_eq!(all, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn at_least_once_redelivery() {
+        let t: Topic<u64> = Topic::new(1);
+        t.produce(1, 100);
+        t.produce(1, 101);
+        let mut c = Consumer::new(t.clone(), 0, 1);
+        let first = c.poll(10);
+        assert_eq!(first.len(), 2);
+        // crash before commit: rewind re-delivers everything
+        c.rewind_to_committed();
+        let again = c.poll(10);
+        assert_eq!(again.len(), 2);
+        c.commit();
+        c.rewind_to_committed();
+        assert!(c.poll(10).is_empty());
+    }
+
+    #[test]
+    fn reset_to_beginning_replays() {
+        let t: Topic<u64> = Topic::new(2);
+        for i in 0..20 {
+            t.produce(i, i);
+        }
+        let mut c = Consumer::new(t.clone(), 0, 1);
+        c.poll(100);
+        c.commit();
+        assert_eq!(c.lag(), 0);
+        c.reset_to_beginning();
+        assert_eq!(c.poll(100).len(), 20);
+    }
+
+    #[test]
+    fn broker_topic_reuse() {
+        let b: Broker<u64> = Broker::new(4);
+        let t1 = b.topic("fx.payments");
+        t1.produce(1, 1);
+        let t2 = b.topic("fx.payments");
+        assert_eq!(t2.total_records(), 1);
+        assert_eq!(b.topic_names(), vec!["fx.payments"]);
+    }
+
+    #[test]
+    fn lag_counts_unread() {
+        let t: Topic<u64> = Topic::new(1);
+        for i in 0..5 {
+            t.produce(1, i);
+        }
+        let mut c = Consumer::new(t.clone(), 0, 1);
+        assert_eq!(c.lag(), 5);
+        c.poll(2);
+        assert_eq!(c.lag(), 3);
+    }
+}

@@ -1,0 +1,181 @@
+//! Caffeine-sim column cache (paper §6.2): "a cached function that reads
+//! in the columns `ᵢ𝒟𝒞𝒫𝓜_v^o` ... into an efficient hashmap which makes
+//! them accessible in O(1). We evict the cache every time a business
+//! entity, schema or mapping is updated" — the eviction that produces the
+//! §7 latency spikes.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::matrix::dpm::{DpmBlock, DpmSet};
+use crate::message::StateI;
+use crate::schema::{SchemaId, VersionNo};
+
+type Column = Arc<Vec<Arc<DpmBlock>>>;
+
+/// Cache statistics surfaced on the dashboard (fig 7 records "the storage
+/// requirements of the Caffeine cache").
+#[derive(Debug, Default)]
+pub struct CacheStats {
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+    pub evictions: AtomicU64,
+}
+
+/// The `ᵢ𝒟𝒞𝒫𝓜` column cache.
+pub struct DcpmCache {
+    state: RwLock<StateI>,
+    columns: RwLock<HashMap<(SchemaId, VersionNo), Column>>,
+    pub stats: CacheStats,
+}
+
+impl DcpmCache {
+    pub fn new(state: StateI) -> Self {
+        Self {
+            state: RwLock::new(state),
+            columns: RwLock::new(HashMap::new()),
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn state(&self) -> StateI {
+        *self.state.read().unwrap()
+    }
+
+    /// O(1) column lookup; populates from `dpm` on miss. A `dpm` whose
+    /// state differs from the cache's triggers a defensive full eviction
+    /// (the cache must never serve a stale configuration).
+    pub fn column(
+        &self,
+        dpm: &DpmSet,
+        schema: SchemaId,
+        version: VersionNo,
+    ) -> Column {
+        if dpm.state != self.state() {
+            self.evict_all(dpm.state);
+        }
+        if let Some(col) = self.columns.read().unwrap().get(&(schema, version))
+        {
+            self.stats.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(col);
+        }
+        self.stats.misses.fetch_add(1, Ordering::Relaxed);
+        let built: Column = Arc::new(dpm.column(schema, version));
+        self.columns
+            .write()
+            .unwrap()
+            .insert((schema, version), Arc::clone(&built));
+        built
+    }
+
+    /// Evict everything and move to a new state (§6.2: on every update of
+    /// a business entity, schema or mapping).
+    pub fn evict_all(&self, new_state: StateI) {
+        let mut columns = self.columns.write().unwrap();
+        if !columns.is_empty() {
+            self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        columns.clear();
+        *self.state.write().unwrap() = new_state;
+    }
+
+    /// Number of cached columns.
+    pub fn len(&self) -> usize {
+        self.columns.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Approximate resident bytes (dashboard metric).
+    pub fn approx_bytes(&self) -> usize {
+        let columns = self.columns.read().unwrap();
+        columns
+            .values()
+            .map(|col| {
+                col.iter()
+                    .map(|b| {
+                        std::mem::size_of::<DpmBlock>()
+                            + b.elements.len() * std::mem::size_of::<(u32, u32)>()
+                    })
+                    .sum::<usize>()
+                    + std::mem::size_of::<Column>()
+            })
+            .sum()
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let h = self.stats.hits.load(Ordering::Relaxed) as f64;
+        let m = self.stats.misses.load(Ordering::Relaxed) as f64;
+        if h + m == 0.0 {
+            0.0
+        } else {
+            h / (h + m)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::fixtures::{fig5_matrix, fig5_trees};
+
+    fn setup() -> (DpmSet, DcpmCache, SchemaId) {
+        let (t, c) = fig5_trees();
+        let m = fig5_matrix(&t, &c);
+        let dpm = DpmSet::from_matrix(&m, &t, &c, StateI(0)).unwrap();
+        let s1 = t.schema_by_name("s1").unwrap();
+        (dpm, DcpmCache::new(StateI(0)), s1)
+    }
+
+    #[test]
+    fn hit_after_miss() {
+        let (dpm, cache, s1) = setup();
+        let c1 = cache.column(&dpm, s1, VersionNo(1));
+        assert_eq!(c1.len(), 2);
+        assert_eq!(cache.stats.misses.load(Ordering::Relaxed), 1);
+        let c2 = cache.column(&dpm, s1, VersionNo(1));
+        assert_eq!(cache.stats.hits.load(Ordering::Relaxed), 1);
+        assert!(Arc::ptr_eq(&c1, &c2));
+        assert!(cache.hit_rate() > 0.49);
+    }
+
+    #[test]
+    fn eviction_on_state_change() {
+        let (mut dpm, cache, s1) = setup();
+        cache.column(&dpm, s1, VersionNo(1));
+        assert_eq!(cache.len(), 1);
+        // DMM moves to state 1 (e.g. after Alg 5)
+        dpm.state = StateI(1);
+        let col = cache.column(&dpm, s1, VersionNo(1));
+        assert_eq!(col.len(), 2);
+        assert_eq!(cache.stats.evictions.load(Ordering::Relaxed), 1);
+        assert_eq!(cache.state(), StateI(1));
+        // re-populated under the new state
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.stats.misses.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn explicit_evict_resets() {
+        let (dpm, cache, s1) = setup();
+        cache.column(&dpm, s1, VersionNo(1));
+        cache.column(&dpm, s1, VersionNo(2));
+        assert_eq!(cache.len(), 2);
+        assert!(cache.approx_bytes() > 0);
+        cache.evict_all(StateI(2));
+        assert!(cache.is_empty());
+        assert_eq!(cache.state(), StateI(2));
+    }
+
+    #[test]
+    fn empty_columns_are_cached_too() {
+        let (dpm, cache, s1) = setup();
+        let col = cache.column(&dpm, s1, VersionNo(99));
+        assert!(col.is_empty());
+        cache.column(&dpm, s1, VersionNo(99));
+        assert_eq!(cache.stats.hits.load(Ordering::Relaxed), 1);
+    }
+}

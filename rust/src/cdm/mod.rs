@@ -1,0 +1,331 @@
+//! The *range* side of the dynamic network: the canonical data model.
+//!
+//! The CDM tree `ᵢR` (paper §4.1) has root `ᵢr`, business-entity nodes
+//! `be_r`, versioned children `v_w`, and CDM-attribute leaves `c_q`. CDM
+//! attributes carry **generalized types** and business descriptions
+//! ("time" → "Time of the payment", int32 → integer; §3.1), and own the
+//! *row* indices `q` of the mapping matrix.
+//!
+//! Per §5.1's business rule, outdated CDM versions are deleted from the
+//! matrix — the tree records them, the DMM drops their row sets.
+
+use std::collections::HashMap;
+
+use crate::schema::ExtractType;
+
+/// Global row index `q` of a CDM attribute in the mapping matrix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CdmAttrId(pub u32);
+
+impl CdmAttrId {
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Id of a business entity `be_r`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct EntityId(pub u32);
+
+/// CDM version number `w` (1-based).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CdmVersionNo(pub u32);
+
+/// Generalized CDM data types (§3.1: "more general data types for sharing").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CdmType {
+    Integer,
+    Number,
+    Boolean,
+    Text,
+    Date,
+    Timestamp,
+    Binary,
+    Identifier,
+}
+
+impl CdmType {
+    /// The type-generalization mapping applied during CDM design: every
+    /// physical extracting type widens to one canonical type.
+    pub fn generalize(ty: ExtractType) -> CdmType {
+        match ty {
+            ExtractType::Int32 | ExtractType::Int64 => CdmType::Integer,
+            ExtractType::Float32
+            | ExtractType::Float64
+            | ExtractType::Decimal => CdmType::Number,
+            ExtractType::Boolean => CdmType::Boolean,
+            ExtractType::Varchar => CdmType::Text,
+            ExtractType::Bytes => CdmType::Binary,
+            ExtractType::DebeziumDate => CdmType::Date,
+            ExtractType::MicroTimestamp => CdmType::Timestamp,
+            ExtractType::Uuid => CdmType::Identifier,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CdmType::Integer => "integer",
+            CdmType::Number => "number",
+            CdmType::Boolean => "boolean",
+            CdmType::Text => "text",
+            CdmType::Date => "date",
+            CdmType::Timestamp => "timestamp",
+            CdmType::Binary => "binary",
+            CdmType::Identifier => "identifier",
+        }
+    }
+}
+
+/// One CDM attribute leaf `c_q`.
+#[derive(Debug, Clone)]
+pub struct CdmAttribute {
+    pub id: CdmAttrId,
+    pub name: String,
+    pub ty: CdmType,
+    /// Business description, absent from extracting schemata (§3.1).
+    pub description: String,
+    /// `≡` link to the previous CDM version's attribute (Alg 5 case 4).
+    pub equiv: Option<CdmAttrId>,
+}
+
+/// One versioned business entity `ᵢR_w^r`: a block of CDM attributes owning
+/// a contiguous row range of the mapping matrix.
+#[derive(Debug, Clone)]
+pub struct CdmVersion {
+    pub entity: EntityId,
+    pub version: CdmVersionNo,
+    pub attrs: Vec<CdmAttrId>,
+}
+
+impl CdmVersion {
+    pub fn row_start(&self) -> usize {
+        self.attrs.first().map(|a| a.index()).unwrap_or(0)
+    }
+
+    pub fn height(&self) -> usize {
+        self.attrs.len()
+    }
+
+    pub fn local_of(&self, id: CdmAttrId) -> Option<usize> {
+        let start = self.attrs.first()?.0;
+        if id.0 >= start && ((id.0 - start) as usize) < self.attrs.len() {
+            Some((id.0 - start) as usize)
+        } else {
+            None
+        }
+    }
+}
+
+/// A business entity node with version children.
+#[derive(Debug, Clone)]
+pub struct EntityNode {
+    pub id: EntityId,
+    pub name: String,
+    /// Outgoing topic for mapped messages of this entity.
+    pub topic: String,
+    pub versions: Vec<CdmVersionNo>,
+}
+
+/// The CDM tree `ᵢR` plus its attribute arena.
+#[derive(Debug, Default, Clone)]
+pub struct CdmTree {
+    entities: Vec<EntityNode>,
+    by_name: HashMap<String, EntityId>,
+    versions: HashMap<(EntityId, CdmVersionNo), CdmVersion>,
+    attrs: Vec<CdmAttribute>,
+    attr_owner: Vec<(EntityId, CdmVersionNo)>,
+}
+
+impl CdmTree {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn n_attr_ids(&self) -> usize {
+        self.attrs.len()
+    }
+
+    pub fn n_entities(&self) -> usize {
+        self.entities.len()
+    }
+
+    pub fn entities(&self) -> impl Iterator<Item = &EntityNode> {
+        self.entities.iter()
+    }
+
+    pub fn add_entity(&mut self, name: &str) -> EntityId {
+        debug_assert!(!self.by_name.contains_key(name));
+        let id = EntityId(self.entities.len() as u32);
+        self.entities.push(EntityNode {
+            id,
+            name: name.to_string(),
+            topic: format!("cdm.{name}"),
+            versions: Vec::new(),
+        });
+        self.by_name.insert(name.to_string(), id);
+        id
+    }
+
+    pub fn entity(&self, id: EntityId) -> &EntityNode {
+        &self.entities[id.0 as usize]
+    }
+
+    pub fn entity_by_name(&self, name: &str) -> Option<EntityId> {
+        self.by_name.get(name).copied()
+    }
+
+    /// Add a CDM version; fields are (name, type, description). Equivalence
+    /// links resolve by (name, type) against the previous version.
+    pub fn add_version(
+        &mut self,
+        entity: EntityId,
+        fields: &[(String, CdmType, String)],
+    ) -> CdmVersionNo {
+        let prev = self.latest_version(entity);
+        let w = CdmVersionNo(prev.map(|p| p.0 + 1).unwrap_or(1));
+        let prev_attrs: Vec<CdmAttribute> = prev
+            .map(|pw| {
+                self.versions[&(entity, pw)]
+                    .attrs
+                    .iter()
+                    .map(|a| self.attrs[a.index()].clone())
+                    .collect()
+            })
+            .unwrap_or_default();
+        let mut ids = Vec::with_capacity(fields.len());
+        for (name, ty, desc) in fields {
+            let id = CdmAttrId(self.attrs.len() as u32);
+            let equiv = prev_attrs
+                .iter()
+                .find(|a| &a.name == name && a.ty == *ty)
+                .map(|a| a.id);
+            self.attrs.push(CdmAttribute {
+                id,
+                name: name.clone(),
+                ty: *ty,
+                description: desc.clone(),
+                equiv,
+            });
+            self.attr_owner.push((entity, w));
+            ids.push(id);
+        }
+        self.versions
+            .insert((entity, w), CdmVersion { entity, version: w, attrs: ids });
+        self.entities[entity.0 as usize].versions.push(w);
+        w
+    }
+
+    pub fn delete_version(&mut self, entity: EntityId, w: CdmVersionNo) -> bool {
+        if self.versions.remove(&(entity, w)).is_some() {
+            self.entities[entity.0 as usize].versions.retain(|x| *x != w);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn latest_version(&self, entity: EntityId) -> Option<CdmVersionNo> {
+        self.entities[entity.0 as usize].versions.iter().max().copied()
+    }
+
+    pub fn version(
+        &self,
+        entity: EntityId,
+        w: CdmVersionNo,
+    ) -> Option<&CdmVersion> {
+        self.versions.get(&(entity, w))
+    }
+
+    pub fn versions_of(&self, entity: EntityId) -> &[CdmVersionNo] {
+        &self.entities[entity.0 as usize].versions
+    }
+
+    pub fn attr(&self, id: CdmAttrId) -> &CdmAttribute {
+        &self.attrs[id.index()]
+    }
+
+    pub fn owner_of(&self, id: CdmAttrId) -> (EntityId, CdmVersionNo) {
+        self.attr_owner[id.index()]
+    }
+
+    pub fn equiv_root(&self, id: CdmAttrId) -> CdmAttrId {
+        let mut cur = id;
+        while let Some(prev) = self.attrs[cur.index()].equiv {
+            cur = prev;
+        }
+        cur
+    }
+
+    pub fn equivalent_in(
+        &self,
+        id: CdmAttrId,
+        entity: EntityId,
+        w2: CdmVersionNo,
+    ) -> Option<CdmAttrId> {
+        let root = self.equiv_root(id);
+        let cv = self.version(entity, w2)?;
+        cv.attrs.iter().copied().find(|a| self.equiv_root(*a) == root)
+    }
+
+    /// Path string `r.be_r.v_w.c_q`.
+    pub fn path_of(&self, id: CdmAttrId) -> String {
+        let (e, w) = self.owner_of(id);
+        format!("r.{}.v{}.{}", self.entity(e).name, w.0, self.attr(id).name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f(name: &str, desc: &str) -> (String, CdmType, String) {
+        (name.to_string(), CdmType::Integer, desc.to_string())
+    }
+
+    #[test]
+    fn type_generalization_table() {
+        assert_eq!(CdmType::generalize(ExtractType::Int32), CdmType::Integer);
+        assert_eq!(CdmType::generalize(ExtractType::Int64), CdmType::Integer);
+        assert_eq!(CdmType::generalize(ExtractType::Decimal), CdmType::Number);
+        assert_eq!(
+            CdmType::generalize(ExtractType::MicroTimestamp),
+            CdmType::Timestamp
+        );
+        assert_eq!(CdmType::generalize(ExtractType::Uuid), CdmType::Identifier);
+    }
+
+    #[test]
+    fn entity_versions_and_rows() {
+        let mut c = CdmTree::new();
+        let e = c.add_entity("Payment");
+        let w1 = c.add_version(e, &[f("amount", "Payment amount"), f("time", "Time of the payment")]);
+        let w2 = c.add_version(e, &[f("amount", "Payment amount"), f("time", "Time of the payment"), f("currency", "ISO currency")]);
+        assert_eq!((w1, w2), (CdmVersionNo(1), CdmVersionNo(2)));
+        let cv2 = c.version(e, w2).unwrap();
+        assert_eq!(cv2.row_start(), 2);
+        assert_eq!(cv2.height(), 3);
+        // equivalences link across versions
+        let time_w2 = cv2.attrs[1];
+        assert_eq!(c.equiv_root(time_w2), CdmAttrId(1));
+    }
+
+    #[test]
+    fn delete_version_per_section_5_1() {
+        let mut c = CdmTree::new();
+        let e = c.add_entity("Payment");
+        let w1 = c.add_version(e, &[f("a", "")]);
+        c.add_version(e, &[f("a", "")]);
+        assert!(c.delete_version(e, w1));
+        assert_eq!(c.versions_of(e), &[CdmVersionNo(2)]);
+    }
+
+    #[test]
+    fn descriptions_present() {
+        let mut c = CdmTree::new();
+        let e = c.add_entity("Payment");
+        let w = c.add_version(e, &[f("time", "Time of the payment")]);
+        let q = c.version(e, w).unwrap().attrs[0];
+        assert_eq!(c.attr(q).description, "Time of the payment");
+        assert_eq!(c.path_of(q), "r.Payment.v1.time");
+    }
+}

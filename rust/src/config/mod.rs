@@ -1,0 +1,224 @@
+//! Launcher configuration: simulation topology + runtime knobs, with the
+//! paper-scale presets of §3.5, parseable from a simple `key = value` file
+//! (TOML subset — sections flatten to `section.key`).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Full pipeline configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelineConfig {
+    /// Number of simulated microservices (paper: "more than 80").
+    pub n_services: usize,
+    /// Attributes per schema version (paper estimate: ~10, §3.5).
+    pub attrs_per_schema: usize,
+    /// Schema versions kept in parallel (paper estimate: ~10, §3.5).
+    pub versions_per_schema: usize,
+    /// Business entities in the CDM.
+    pub n_entities: usize,
+    /// Attributes per business entity version.
+    pub attrs_per_entity: usize,
+    /// Fraction of schema attributes mapped to the CDM (rest filtered).
+    pub mapped_fraction: f64,
+    /// Probability an optional attribute is null in generated rows.
+    pub null_prob: f64,
+    /// Broker partitions per topic.
+    pub partitions: usize,
+    /// Worker threads for the parallel mapper.
+    pub threads: usize,
+    /// CDC events for a generated day trace (paper: 1168 on 2022-02-13).
+    pub trace_events: usize,
+    /// Schema-change storms per day trace (paper: "a few times a day").
+    pub schema_changes: usize,
+    /// Deterministic seed.
+    pub seed: u64,
+    /// Bulk lane batch threshold (messages buffered before XLA dispatch).
+    pub bulk_threshold: usize,
+    /// artifacts/ directory for the PJRT runtime (None disables the lane).
+    pub artifacts_dir: Option<String>,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self::small()
+    }
+}
+
+impl PipelineConfig {
+    /// Small smoke-test profile.
+    pub fn small() -> Self {
+        PipelineConfig {
+            n_services: 4,
+            attrs_per_schema: 6,
+            versions_per_schema: 3,
+            n_entities: 2,
+            attrs_per_entity: 8,
+            mapped_fraction: 0.6,
+            null_prob: 0.2,
+            partitions: 4,
+            threads: 4,
+            trace_events: 200,
+            schema_changes: 2,
+            seed: 42,
+            bulk_threshold: 64,
+            artifacts_dir: None,
+        }
+    }
+
+    /// The paper's measured day (§7): 80 services, 1168 CDC events,
+    /// a few DMM updates evicting the cache.
+    pub fn paper_day() -> Self {
+        PipelineConfig {
+            n_services: 80,
+            attrs_per_schema: 10,
+            versions_per_schema: 10,
+            n_entities: 12,
+            attrs_per_entity: 12,
+            mapped_fraction: 0.7,
+            null_prob: 0.25,
+            partitions: 8,
+            threads: 8,
+            trace_events: 1168,
+            schema_changes: 3,
+            seed: 20220213,
+            bulk_threshold: 128,
+            artifacts_dir: Some("artifacts".into()),
+        }
+    }
+
+    /// §3.5 estimation scale: ~10k extracting attributes versioned ×10,
+    /// >1k CDM attributes — the 10⁸-element matrix after the §5.1 rule.
+    pub fn eos_scale() -> Self {
+        PipelineConfig {
+            n_services: 100,
+            attrs_per_schema: 10,
+            versions_per_schema: 10,
+            n_entities: 100,
+            attrs_per_entity: 10,
+            mapped_fraction: 0.8,
+            null_prob: 0.25,
+            partitions: 16,
+            threads: 8,
+            trace_events: 10_000,
+            schema_changes: 5,
+            seed: 7,
+            bulk_threshold: 256,
+            artifacts_dir: Some("artifacts".into()),
+        }
+    }
+
+    /// Parse from the TOML-subset text format.
+    pub fn parse(text: &str) -> Result<Self> {
+        let kv = parse_kv(text)?;
+        let mut cfg = PipelineConfig::small();
+        if let Some(profile) = kv.get("profile") {
+            cfg = match profile.as_str() {
+                "small" => PipelineConfig::small(),
+                "paper_day" => PipelineConfig::paper_day(),
+                "eos_scale" => PipelineConfig::eos_scale(),
+                other => bail!("unknown profile {other:?}"),
+            };
+        }
+        macro_rules! num {
+            ($key:expr, $field:expr) => {
+                if let Some(v) = kv.get($key) {
+                    $field = v.parse().with_context(|| format!("bad {}", $key))?;
+                }
+            };
+        }
+        num!("sim.services", cfg.n_services);
+        num!("sim.attrs_per_schema", cfg.attrs_per_schema);
+        num!("sim.versions_per_schema", cfg.versions_per_schema);
+        num!("sim.entities", cfg.n_entities);
+        num!("sim.attrs_per_entity", cfg.attrs_per_entity);
+        num!("sim.mapped_fraction", cfg.mapped_fraction);
+        num!("sim.null_prob", cfg.null_prob);
+        num!("sim.trace_events", cfg.trace_events);
+        num!("sim.schema_changes", cfg.schema_changes);
+        num!("sim.seed", cfg.seed);
+        num!("runtime.partitions", cfg.partitions);
+        num!("runtime.threads", cfg.threads);
+        num!("runtime.bulk_threshold", cfg.bulk_threshold);
+        if let Some(v) = kv.get("runtime.artifacts_dir") {
+            cfg.artifacts_dir =
+                if v.is_empty() { None } else { Some(v.clone()) };
+        }
+        Ok(cfg)
+    }
+}
+
+/// Parse `key = value` lines with `[section]` prefixes and `#` comments.
+fn parse_kv(text: &str) -> Result<HashMap<String, String>> {
+    let mut out = HashMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') {
+                bail!("line {}: malformed section {line:?}", lineno + 1);
+            }
+            section = line[1..line.len() - 1].trim().to_string();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{section}.{}", k.trim())
+        };
+        out.insert(key, v.trim().trim_matches('"').to_string());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_overrides() {
+        let text = r#"
+            profile = "paper_day"  # base profile
+            [sim]
+            services = 10
+            seed = 99
+            [runtime]
+            threads = 2
+            artifacts_dir = ""
+        "#;
+        let cfg = PipelineConfig::parse(text).unwrap();
+        assert_eq!(cfg.n_services, 10);
+        assert_eq!(cfg.seed, 99);
+        assert_eq!(cfg.threads, 2);
+        assert_eq!(cfg.artifacts_dir, None);
+        // untouched fields come from paper_day
+        assert_eq!(cfg.trace_events, 1168);
+    }
+
+    #[test]
+    fn empty_text_is_small_profile() {
+        assert_eq!(PipelineConfig::parse("").unwrap(), PipelineConfig::small());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(PipelineConfig::parse("[broken").is_err());
+        assert!(PipelineConfig::parse("novalue").is_err());
+        assert!(PipelineConfig::parse("profile = \"nope\"").is_err());
+        assert!(PipelineConfig::parse("[sim]\nservices = abc").is_err());
+    }
+
+    #[test]
+    fn paper_day_matches_section7() {
+        let cfg = PipelineConfig::paper_day();
+        assert_eq!(cfg.trace_events, 1168);
+        assert_eq!(cfg.n_services, 80);
+        assert!(cfg.schema_changes >= 2); // "a few times a day"
+    }
+}

@@ -1,0 +1,223 @@
+//! The bulk lane: initial loads through the AOT-compiled XLA kernels
+//! (paper §3.4/§6.4 — offset resets and initial loads are the fallback
+//! and scale-out moments; thousands of snapshot messages per block
+//! amortize one compiled executable).
+//!
+//! Messages are packed into presence tensors in *block-local* coordinates,
+//! executed through [`BulkRuntime`], and unpacked into the same
+//! `OutMessage`s the Alg-6 lane would produce — the two lanes are
+//! equivalence-tested in `rust/tests/integration_runtime.rs`.
+
+use anyhow::{Context, Result};
+
+use super::pipeline::Pipeline;
+use crate::matrix::blocks;
+use crate::message::cdc::CdcOp;
+use crate::message::{InMessage, OutMessage};
+use crate::runtime::BulkRuntime;
+use crate::util::json::Json;
+
+/// Outcome of one initial load.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoadReport {
+    pub rows: usize,
+    pub out_messages: usize,
+    /// Whether the XLA lane served the load (false = Alg 6 fallback).
+    pub used_bulk: bool,
+}
+
+/// The initial-load driver.
+pub struct InitialLoader {
+    pub runtime: Option<BulkRuntime>,
+}
+
+impl InitialLoader {
+    /// Build from a pipeline config's artifacts dir (None → fallback lane).
+    pub fn from_config(cfg: &crate::config::PipelineConfig) -> InitialLoader {
+        let runtime = cfg
+            .artifacts_dir
+            .as_ref()
+            .and_then(BulkRuntime::try_load);
+        InitialLoader { runtime }
+    }
+
+    /// Snapshot one service's table and map every row to the CDM,
+    /// publishing to the out topic. Uses the XLA bulk lane when available
+    /// and the blocks fit the compiled dims.
+    pub fn initial_load(
+        &self,
+        pipeline: &Pipeline,
+        service: usize,
+    ) -> Result<LoadReport> {
+        let land = pipeline.landscape.read().unwrap();
+        let db = &land.dbs[service];
+        let state = pipeline.state.current();
+        let snapshot = pipeline.connector().snapshot(
+            &land.tree,
+            db,
+            0,
+            state,
+            0,
+        );
+        let rows = snapshot.len();
+        let messages: Vec<InMessage> = snapshot
+            .iter()
+            .filter_map(|ev| ev.after.as_ref().map(|m| m.to_dense()))
+            .collect();
+
+        let schema = db.tables[0].schema;
+        let version = db.tables[0].live_version;
+        let dpm = std::sync::Arc::clone(&pipeline.dmm.read().unwrap());
+        let column = dpm.column(schema, version);
+
+        // decide lane
+        let bulk_ok = self.runtime.as_ref().is_some_and(|rt| {
+            let (pmax, qmax) = rt.block_dims();
+            column.iter().all(|b| {
+                blocks::block_extent(&land.tree, &land.cdm, b.key)
+                    .is_some_and(|ext| {
+                        ext.cols.len() <= pmax && ext.rows.len() <= qmax
+                    })
+            })
+        });
+
+        let mut out_messages = 0usize;
+        if bulk_ok && !messages.is_empty() {
+            let rt = self.runtime.as_ref().unwrap();
+            for block in column.iter() {
+                let ext = blocks::block_extent(&land.tree, &land.cdm, block.key)
+                    .context("live block")?;
+                // block-local permutation elements
+                let elements: Vec<(usize, usize)> = block
+                    .elements
+                    .iter()
+                    .map(|&(q, p)| {
+                        (q.index() - ext.rows.start, p.index() - ext.cols.start)
+                    })
+                    .collect();
+                // block-local presence per message
+                let presence: Vec<Vec<usize>> = messages
+                    .iter()
+                    .map(|m| {
+                        m.fields
+                            .iter()
+                            .filter(|(a, v)| {
+                                !v.is_null()
+                                    && ext.cols.contains(&a.index())
+                            })
+                            .map(|(a, _)| a.index() - ext.cols.start)
+                            .collect()
+                    })
+                    .collect();
+                let mapped = rt.bulk_map_block(&elements, &presence)?;
+                for (msg, pairs) in messages.iter().zip(mapped) {
+                    if pairs.is_empty() {
+                        continue;
+                    }
+                    let fields: Vec<(crate::cdm::CdmAttrId, Json)> = pairs
+                        .iter()
+                        .map(|&(ql, pl)| {
+                            let q = crate::cdm::CdmAttrId(
+                                (ext.rows.start + ql) as u32,
+                            );
+                            let p = crate::schema::AttrId(
+                                (ext.cols.start + pl) as u32,
+                            );
+                            let data = msg
+                                .data_object(p)
+                                .expect("bulk presence implies data")
+                                .clone();
+                            (q, data)
+                        })
+                        .collect();
+                    let out = OutMessage {
+                        key: msg.key,
+                        entity: block.key.entity,
+                        version: block.key.w,
+                        state,
+                        ts_us: msg.ts_us,
+                        fields,
+                    };
+                    pipeline
+                        .out_topic
+                        .produce(out.key, std::sync::Arc::new((CdcOp::SnapshotRead, out)));
+                    out_messages += 1;
+                    pipeline.metrics.messages_out.inc();
+                }
+            }
+            pipeline.metrics.bulk_events.add(rows as u64);
+            pipeline.metrics.events_in.add(rows as u64);
+            pipeline.metrics.transformations.add(rows as u64);
+            Ok(LoadReport { rows, out_messages, used_bulk: true })
+        } else {
+            drop(land);
+            // Alg-6 fallback lane
+            for ev in &snapshot {
+                let ev = std::sync::Arc::new(ev.clone());
+                let before = pipeline.metrics.messages_out.get();
+                pipeline.process_event(&ev);
+                out_messages +=
+                    (pipeline.metrics.messages_out.get() - before) as usize;
+            }
+            Ok(LoadReport { rows, out_messages, used_bulk: false })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PipelineConfig;
+    use crate::util::rng::Rng;
+
+    fn loaded_pipeline(rows: usize) -> Pipeline {
+        let cfg = PipelineConfig::small();
+        let mut land = crate::workload::generate(&cfg);
+        let mut rng = Rng::seed_from(5);
+        crate::workload::populate(&mut land, rows, &mut rng);
+        // keep only the rows we just made
+        Pipeline::from_landscape(cfg, land).unwrap()
+    }
+
+    #[test]
+    fn fallback_lane_loads_snapshot() {
+        let p = loaded_pipeline(25);
+        let loader = InitialLoader { runtime: None };
+        let report = loader.initial_load(&p, 0).unwrap();
+        assert_eq!(report.rows, 25);
+        assert!(!report.used_bulk);
+        assert!(report.out_messages > 0);
+        // outputs reached the topic
+        assert!(p.out_topic.total_records() >= report.out_messages as u64);
+    }
+
+    #[test]
+    fn bulk_lane_matches_fallback_when_artifacts_present() {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        }
+        let p_bulk = loaded_pipeline(40);
+        let p_fall = loaded_pipeline(40);
+        let bulk = InitialLoader {
+            runtime: crate::runtime::BulkRuntime::try_load(&dir),
+        };
+        assert!(bulk.runtime.is_some());
+        let fall = InitialLoader { runtime: None };
+        let rb = bulk.initial_load(&p_bulk, 1).unwrap();
+        let rf = fall.initial_load(&p_fall, 1).unwrap();
+        assert!(rb.used_bulk);
+        assert_eq!(rb.rows, rf.rows);
+        assert_eq!(rb.out_messages, rf.out_messages);
+        // drain both sinks and compare DW contents
+        let mut cb = crate::broker::Consumer::new(p_bulk.out_topic.clone(), 0, 1);
+        let mut cf = crate::broker::Consumer::new(p_fall.out_topic.clone(), 0, 1);
+        p_bulk.drain_sinks(&mut cb);
+        p_fall.drain_sinks(&mut cf);
+        let dwb = p_bulk.dw.lock().unwrap();
+        let dwf = p_fall.dw.lock().unwrap();
+        assert_eq!(dwb.total_rows(), dwf.total_rows());
+    }
+}

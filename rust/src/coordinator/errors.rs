@@ -1,0 +1,100 @@
+//! Error management (paper §3.4): dead-letter queue for events that cannot
+//! be mapped, retry accounting, and the offset-reset / initial-load
+//! fallback options "one needs to keep in mind when reading the paper".
+
+use std::sync::{Arc, Mutex};
+
+use crate::message::cdc::CdcEvent;
+
+/// One event that exhausted its mapping attempts.
+#[derive(Debug, Clone)]
+pub struct DeadLetter {
+    pub event: Arc<CdcEvent>,
+    pub error: String,
+    pub attempts: u32,
+}
+
+/// Thread-safe dead-letter queue.
+#[derive(Debug, Default)]
+pub struct Dlq {
+    entries: Mutex<Vec<DeadLetter>>,
+}
+
+impl Dlq {
+    pub fn push(&self, event: Arc<CdcEvent>, error: String, attempts: u32) {
+        self.entries
+            .lock()
+            .unwrap()
+            .push(DeadLetter { event, error, attempts });
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drain for reprocessing (after an offset reset / matrix fix).
+    pub fn drain(&self) -> Vec<DeadLetter> {
+        std::mem::take(&mut self.entries.lock().unwrap())
+    }
+
+    pub fn snapshot(&self) -> Vec<DeadLetter> {
+        self.entries.lock().unwrap().clone()
+    }
+}
+
+/// Retry policy for state-sync mapping failures.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    pub max_attempts: u32,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self { max_attempts: 2 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::message::cdc::{CdcOp, CdcSource};
+
+    fn ev() -> Arc<CdcEvent> {
+        Arc::new(CdcEvent {
+            op: CdcOp::Create,
+            before: None,
+            after: None,
+            source: CdcSource {
+                connector: "pg".into(),
+                db: "d".into(),
+                table: "t".into(),
+            },
+            ts_us: 0,
+        })
+    }
+
+    #[test]
+    fn push_drain() {
+        let dlq = Dlq::default();
+        assert!(dlq.is_empty());
+        dlq.push(ev(), "unknown column".into(), 2);
+        dlq.push(ev(), "state mismatch".into(), 3);
+        assert_eq!(dlq.len(), 2);
+        let drained = dlq.drain();
+        assert_eq!(drained.len(), 2);
+        assert_eq!(drained[0].error, "unknown column");
+        assert!(dlq.is_empty());
+    }
+
+    #[test]
+    fn snapshot_does_not_drain() {
+        let dlq = Dlq::default();
+        dlq.push(ev(), "x".into(), 1);
+        assert_eq!(dlq.snapshot().len(), 1);
+        assert_eq!(dlq.len(), 1);
+    }
+}

@@ -1,0 +1,132 @@
+//! UI-sim inspection queries (paper §6.3): the reverse search over
+//! `ᵢ𝔇ℜ𝔓𝔐` ("which incoming Kafka messages map to one business entity
+//! version") and the version-progression view over one extracting schema —
+//! the two data-owner feature requests the paper describes — rendered as
+//! text for the CLI.
+
+use crate::cdm::{CdmTree, CdmVersionNo, EntityId};
+use crate::matrix::dpm::DpmSet;
+use crate::schema::{SchemaId, SchemaTree};
+
+/// Reverse search: all incoming schema versions feeding one business
+/// entity version, with per-element mapping paths.
+pub fn reverse_search(
+    dpm: &DpmSet,
+    tree: &SchemaTree,
+    cdm: &CdmTree,
+    entity: EntityId,
+    w: CdmVersionNo,
+) -> String {
+    let mut out = format!(
+        "reverse search: {} v{} (state {})\n",
+        cdm.entity(entity).name,
+        w.0,
+        dpm.state.0
+    );
+    let blocks = dpm.row(entity, w);
+    if blocks.is_empty() {
+        out.push_str("  (no incoming mappings)\n");
+        return out;
+    }
+    for block in blocks {
+        let schema = tree.schema(block.key.schema);
+        out.push_str(&format!(
+            "  <- {} v{} ({} elements)\n",
+            schema.name,
+            block.key.v.0,
+            block.elements.len()
+        ));
+        for &(q, p) in &block.elements {
+            out.push_str(&format!(
+                "     {} <- {}\n",
+                cdm.path_of(q),
+                tree.path_of(p)
+            ));
+        }
+    }
+    out
+}
+
+/// Version progression: how one schema's mappings evolve across versions
+/// (paper: "a search function which exhibits all mappings with relation to
+/// one extracting schema and multiple versions").
+pub fn version_progression(
+    dpm: &DpmSet,
+    tree: &SchemaTree,
+    cdm: &CdmTree,
+    schema: SchemaId,
+) -> String {
+    let node = tree.schema(schema);
+    let mut out = format!("version progression: {}\n", node.name);
+    for &v in &node.versions {
+        let column = dpm.column(schema, v);
+        let elements: usize = column.iter().map(|b| b.elements.len()).sum();
+        out.push_str(&format!(
+            "  v{}: {} block(s), {} mapped attribute(s)\n",
+            v.0,
+            column.len(),
+            elements
+        ));
+        for block in column {
+            out.push_str(&format!(
+                "    -> {} v{}:",
+                cdm.entity(block.key.entity).name,
+                block.key.w.0
+            ));
+            for &(q, p) in &block.elements {
+                out.push_str(&format!(
+                    " {}≡{}",
+                    tree.attr(p).name,
+                    cdm.attr(q).name
+                ));
+            }
+            out.push('\n');
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::dpm::DpmSet;
+    use crate::matrix::fixtures::{fig5_matrix, fig5_trees};
+    use crate::message::StateI;
+    use crate::schema::VersionNo;
+
+    #[test]
+    fn reverse_search_lists_feeding_versions() {
+        let (t, c) = fig5_trees();
+        let m = fig5_matrix(&t, &c);
+        let dpm = DpmSet::from_matrix(&m, &t, &c, StateI(0)).unwrap();
+        let be1 = c.entity_by_name("be1").unwrap();
+        let text = reverse_search(&dpm, &t, &c, be1, CdmVersionNo(2));
+        assert!(text.contains("<- s1 v1 (2 elements)"));
+        assert!(text.contains("<- s1 v2 (2 elements)"));
+        assert!(text.contains("r.be1.v2.c3 <- d.s1.v1.a1"));
+    }
+
+    #[test]
+    fn reverse_search_empty_entity() {
+        let (t, c) = fig5_trees();
+        let m = fig5_matrix(&t, &c);
+        let dpm = DpmSet::from_matrix(&m, &t, &c, StateI(0)).unwrap();
+        let be1 = c.entity_by_name("be1").unwrap();
+        // be1 v1 was superseded: no mappings
+        let text = reverse_search(&dpm, &t, &c, be1, CdmVersionNo(1));
+        assert!(text.contains("no incoming mappings"));
+    }
+
+    #[test]
+    fn version_progression_shows_block_evolution() {
+        let (t, c) = fig5_trees();
+        let m = fig5_matrix(&t, &c);
+        let dpm = DpmSet::from_matrix(&m, &t, &c, StateI(0)).unwrap();
+        let s1 = t.schema_by_name("s1").unwrap();
+        let text = version_progression(&dpm, &t, &c, s1);
+        assert!(text.contains("v1: 2 block(s), 4 mapped attribute(s)"));
+        assert!(text.contains("v2: 1 block(s), 2 mapped attribute(s)"));
+        assert!(text.contains("a1≡c3"));
+        let _ = VersionNo(1);
+    }
+}

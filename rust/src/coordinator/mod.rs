@@ -1,0 +1,17 @@
+//! The METL coordinator (L3): pipeline wiring, distributed state-i
+//! management, the semi-automated update workflow, error management, the
+//! XLA bulk lane and horizontal scaling — the paper's §3/§6 system around
+//! the DMM core.
+
+pub mod batcher;
+pub mod errors;
+pub mod inspect;
+pub mod pipeline;
+pub mod recovery;
+pub mod scaler;
+pub mod state;
+pub mod workflow;
+
+pub use errors::DeadLetter;
+pub use pipeline::Pipeline;
+pub use state::StateManager;

@@ -1,0 +1,552 @@
+//! The wired METL pipeline (paper fig 1): Debezium-sim sources → Kafka-sim
+//! CDC topic → METL (DMM mapping, Alg 6) → CDM topic → DW + ML sinks, with
+//! the state-i update workflow and error management in the control lane.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::errors::{Dlq, RetryPolicy};
+use super::state::StateManager;
+use super::workflow::{NoticePolicy, WorkflowOutcome};
+use crate::broker::{Consumer, Topic};
+use crate::cache::DcpmCache;
+use crate::config::PipelineConfig;
+use crate::mapper::parallel::ParallelMapper;
+use crate::mapper::MapError;
+use crate::matrix::dpm::DpmSet;
+use crate::matrix::dusb::DusbSet;
+use crate::matrix::update::{auto_update, ChangeCase, UpdateReport};
+use crate::message::cdc::{CdcEvent, CdcOp};
+use crate::message::{OutMessage, StateI};
+use crate::metrics::PipelineMetrics;
+use crate::schema::evolution::{self, Compatibility};
+use crate::sink::{DwSink, MlSink};
+use crate::source::{Connector, Dml};
+use crate::store::MatrixStore;
+use crate::util::rng::Rng;
+use crate::util::IdGen;
+use crate::workload::{self, DmlKind, Landscape, TraceOp};
+
+/// A mapped output record on the CDM topic: the originating CDC op travels
+/// with the message so the DW can upsert/tombstone.
+pub type OutRecord = Arc<(CdcOp, OutMessage)>;
+
+/// The full pipeline.
+pub struct Pipeline {
+    pub cfg: PipelineConfig,
+    pub landscape: RwLock<Landscape>,
+    /// Merged CDC stream (per-table Debezium topics fan into this; METL
+    /// consumes it partition-parallel).
+    pub cdc_topic: Topic<Arc<CdcEvent>>,
+    /// The outgoing CDM stream — "the API of the microservice system".
+    pub out_topic: Topic<OutRecord>,
+    pub dmm: RwLock<Arc<DpmSet>>,
+    pub cache: Arc<DcpmCache>,
+    pub store: Option<MatrixStore>,
+    pub state: StateManager,
+    pub metrics: Arc<PipelineMetrics>,
+    pub dlq: Dlq,
+    pub retry: RetryPolicy,
+    pub notice_policy: NoticePolicy,
+    pub dw: Mutex<DwSink>,
+    pub ml: Mutex<MlSink>,
+    connector: Connector,
+    rng: Mutex<Rng>,
+    next_key: IdGen,
+    /// Simulated µs clock (1 ms per produced event).
+    clock_us: AtomicU64,
+}
+
+/// Report of one trace run.
+#[derive(Debug, Clone)]
+pub struct TraceReport {
+    pub events: u64,
+    pub out_messages: u64,
+    pub dead_letters: u64,
+    pub dmm_updates: u64,
+    pub wall: std::time::Duration,
+}
+
+impl Pipeline {
+    /// Build a pipeline over a freshly generated landscape.
+    pub fn new(cfg: PipelineConfig) -> Result<Pipeline> {
+        let landscape = workload::generate(&cfg);
+        Self::from_landscape(cfg, landscape)
+    }
+
+    pub fn from_landscape(
+        cfg: PipelineConfig,
+        landscape: Landscape,
+    ) -> Result<Pipeline> {
+        let state = StateManager::new(StateI(0));
+        let dpm = DpmSet::from_matrix(
+            &landscape.matrix,
+            &landscape.tree,
+            &landscape.cdm,
+            StateI(0),
+        )
+        .map_err(|e| anyhow::anyhow!("matrix violates 1:1: {e}"))?;
+        let broker = crate::broker::Broker::new(cfg.partitions);
+        let cdc_topic = broker.create_topic("fx.cdc", cfg.partitions);
+        let out_broker = crate::broker::Broker::new(cfg.partitions);
+        let out_topic = out_broker.create_topic("cdm.out", cfg.partitions);
+        let seed = cfg.seed;
+        Ok(Pipeline {
+            cfg,
+            landscape: RwLock::new(landscape),
+            cdc_topic,
+            out_topic,
+            dmm: RwLock::new(Arc::new(dpm)),
+            cache: Arc::new(DcpmCache::new(StateI(0))),
+            store: None,
+            state,
+            metrics: Arc::new(PipelineMetrics::default()),
+            dlq: Dlq::default(),
+            retry: RetryPolicy::default(),
+            notice_policy: NoticePolicy::AutoConfirm,
+            dw: Mutex::new(DwSink::new()),
+            ml: Mutex::new(MlSink::new()),
+            connector: Connector::new("src"),
+            rng: Mutex::new(Rng::seed_from(seed ^ 0xE05)),
+            next_key: IdGen::new(),
+            clock_us: AtomicU64::new(1_600_000_000_000_000),
+        })
+    }
+
+    /// Attach the Postgres-sim store (hybrid §6.2 persistence).
+    pub fn with_store(mut self, dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let store = MatrixStore::open(dir)?;
+        // persist the initial DUSB
+        {
+            let land = self.landscape.read().unwrap();
+            let dusb = DusbSet::from_matrix(
+                &land.matrix,
+                &land.tree,
+                &land.cdm,
+                self.state.current(),
+            )
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+            store.save_dusb(&dusb)?;
+        }
+        self.store = Some(store);
+        Ok(self)
+    }
+
+    fn now_us(&self) -> u64 {
+        self.clock_us.fetch_add(1_000, Ordering::Relaxed)
+    }
+
+    /// Resolve one trace op: apply DML → CDC event → topic, or run the
+    /// schema-change workflow.
+    pub fn resolve_op(&self, op: &TraceOp) -> Result<()> {
+        match op {
+            TraceOp::Dml { service, kind } => {
+                let ev = self.apply_dml(*service, *kind)?;
+                if let Some(ev) = ev {
+                    let key =
+                        ev.mapping_payload().map(|m| m.key).unwrap_or_default();
+                    self.cdc_topic.produce(key, Arc::new(ev));
+                }
+                Ok(())
+            }
+            TraceOp::SchemaChange { service } => {
+                self.apply_schema_change(*service).map(|_| ())
+            }
+        }
+    }
+
+    fn apply_dml(&self, service: usize, kind: DmlKind) -> Result<Option<CdcEvent>> {
+        let mut land = self.landscape.write().unwrap();
+        let state = self.state.current();
+        let ts = self.now_us();
+        let mut rng = self.rng.lock().unwrap();
+        // split the landscape borrow: tree read-only, dbs mutable
+        let Landscape { tree, dbs, .. } = &mut *land;
+        let db = &mut dbs[service];
+        let (schema, version) =
+            (db.tables[0].schema, db.tables[0].live_version);
+        let dml = match kind {
+            DmlKind::Insert => {
+                let key = self.next_key.next() + 1_000_000;
+                let row = crate::source::random_row(
+                    tree, schema, version, key, &mut rng, self.cfg.null_prob,
+                );
+                Dml::Insert { table: 0, row }
+            }
+            DmlKind::Update | DmlKind::Delete => {
+                let keys: Vec<u64> = db.tables[0].keys().collect();
+                match rng.choose(&keys).copied() {
+                    None => {
+                        // empty table: degrade to insert
+                        let key = self.next_key.next() + 1_000_000;
+                        let row = crate::source::random_row(
+                            tree, schema, version, key, &mut rng,
+                            self.cfg.null_prob,
+                        );
+                        Dml::Insert { table: 0, row }
+                    }
+                    Some(key) if kind == DmlKind::Update => {
+                        let row = crate::source::random_row(
+                            tree, schema, version, key, &mut rng,
+                            self.cfg.null_prob,
+                        );
+                        Dml::Update { table: 0, row }
+                    }
+                    Some(key) => Dml::Delete { table: 0, key },
+                }
+            }
+        };
+        drop(rng);
+        Ok(db.apply(tree, dml, state, ts))
+    }
+
+    /// The §3.3 semi-automated workflow: register an evolved schema
+    /// version, migrate the table, run Alg 5, bump state i, evict the
+    /// cache, persist, audit.
+    pub fn apply_schema_change(&self, service: usize) -> Result<UpdateReport> {
+        let mut land = self.landscape.write().unwrap();
+        let schema = land.dbs[service].tables[0].schema;
+        let fields = workload::evolved_fields(&land.tree, schema);
+        // registry-style evolution validation (backward compatible adds)
+        let latest = land.tree.latest_version(schema).context("has versions")?;
+        let prev_fields: Vec<_> = land
+            .tree
+            .version(schema, latest)
+            .unwrap()
+            .attrs
+            .iter()
+            .map(|&a| {
+                let at = land.tree.attr(a);
+                (at.name.clone(), at.ty, at.optional)
+            })
+            .collect();
+        evolution::validate(Compatibility::Backward, &prev_fields, &fields, true)
+            .map_err(|e| anyhow::anyhow!("evolution rejected: {e}"))?;
+        let v = land.tree.add_version(schema, &fields);
+        {
+            let Landscape { tree, dbs, .. } = &mut *land;
+            dbs[service].migrate_table(tree, 0, v);
+        }
+
+        // Alg 5 on a cloned DMM snapshot, then atomic swap
+        let new_state = self.state.bump();
+        let mut dpm = (**self.dmm.read().unwrap()).clone();
+        let report = auto_update(
+            &mut dpm,
+            &land.tree,
+            &land.cdm,
+            ChangeCase::AddedSchemaVersion { schema, v },
+            new_state,
+        );
+        // mirror into the ground-truth matrix (kept for benches/invariants)
+        let (n_rows, n_cols) = (land.cdm.n_attr_ids(), land.tree.n_attr_ids());
+        land.matrix.grow(n_rows, n_cols);
+        for block in dpm.column(schema, v) {
+            for &(q, p) in &block.elements {
+                land.matrix.set(q.index(), p.index(), true);
+            }
+        }
+        *self.dmm.write().unwrap() = Arc::new(dpm);
+        self.cache.evict_all(new_state);
+        self.metrics.dmm_updates.inc();
+
+        let outcome = WorkflowOutcome::evaluate(
+            self.notice_policy,
+            new_state,
+            report.clone(),
+        );
+        if let Some(store) = &self.store {
+            let dusb = DusbSet::from_matrix(
+                &land.matrix,
+                &land.tree,
+                &land.cdm,
+                new_state,
+            )
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+            store.save_dusb(&dusb)?;
+            store.log_update(&outcome.audit_json("added-schema-version"))?;
+        }
+        Ok(report)
+    }
+
+    /// Map one CDC event through the DMM (Alg 6 lane), with the §3.4
+    /// state-sync retry: an out-of-sync message is restamped against the
+    /// current DMM state once; persistent failures go to the DLQ by the
+    /// caller.
+    pub fn map_event(
+        &self,
+        ev: &CdcEvent,
+    ) -> Result<Vec<(CdcOp, OutMessage)>, MapError> {
+        let Some(payload) = ev.mapping_payload() else {
+            return Ok(Vec::new());
+        };
+        // no to_dense() copy: Alg 6 skips null fields itself, so the
+        // sparse payload maps identically (perf: see EXPERIMENTS.md §Perf)
+        let dpm = Arc::clone(&self.dmm.read().unwrap());
+        let mapper = self.mapper_for(dpm);
+        match mapper.map(payload) {
+            Ok(outs) => Ok(outs.into_iter().map(|o| (ev.op, o)).collect()),
+            Err(MapError::StateMismatch { .. }) => {
+                self.metrics.sync_retries.inc();
+                let mut restamped = payload.clone();
+                restamped.state = mapper.state();
+                let outs = mapper.map(&restamped)?;
+                Ok(outs.into_iter().map(|o| (ev.op, o)).collect())
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    fn mapper_for(&self, dpm: Arc<DpmSet>) -> ParallelMapper {
+        ParallelMapper::with_threads(
+            dpm,
+            Arc::clone(&self.cache),
+            self.cfg.threads,
+        )
+    }
+
+    /// Process one CDC event end to end: map, publish, count, time.
+    pub fn process_event(&self, ev: &Arc<CdcEvent>) {
+        self.metrics.events_in.inc();
+        let t0 = Instant::now();
+        match self.map_event(ev) {
+            Ok(outs) => {
+                self.metrics.transformations.inc();
+                self.metrics.map_latency.record(t0.elapsed());
+                for out in outs {
+                    let key = out.1.key;
+                    self.out_topic.produce(key, Arc::new(out));
+                    self.metrics.messages_out.inc();
+                }
+            }
+            Err(e) => {
+                self.metrics.dead_letters.inc();
+                self.dlq.push(
+                    Arc::clone(ev),
+                    e.to_string(),
+                    self.retry.max_attempts,
+                );
+            }
+        }
+    }
+
+    /// Drain the CDM topic into the DW + ML sinks.
+    pub fn drain_sinks(&self, consumer: &mut Consumer<OutRecord>) -> usize {
+        let mut n = 0;
+        loop {
+            let batch = consumer.poll(256);
+            if batch.is_empty() {
+                break;
+            }
+            let mut dw = self.dw.lock().unwrap();
+            let mut ml = self.ml.lock().unwrap();
+            for (_, rec) in &batch {
+                let (op, msg) = &*rec.value;
+                dw.apply(msg, *op);
+                if *op != CdcOp::Delete {
+                    ml.observe(msg);
+                }
+                n += 1;
+            }
+            drop((dw, ml));
+            consumer.commit();
+        }
+        n
+    }
+
+    /// Run a whole trace single-instance: resolve ops, consume the CDC
+    /// topic, map, feed the sinks. Returns the §7-style report.
+    pub fn run_trace(&self, ops: &[TraceOp]) -> Result<TraceReport> {
+        let start = Instant::now();
+        let mut consumer: Consumer<Arc<CdcEvent>> =
+            Consumer::new(self.cdc_topic.clone(), 0, 1);
+        let mut out_consumer: Consumer<OutRecord> =
+            Consumer::new(self.out_topic.clone(), 0, 1);
+        for op in ops {
+            self.resolve_op(op)?;
+            loop {
+                let batch = consumer.poll(64);
+                if batch.is_empty() {
+                    break;
+                }
+                for (_, rec) in &batch {
+                    self.process_event(&rec.value);
+                }
+                consumer.commit();
+            }
+            self.drain_sinks(&mut out_consumer);
+        }
+        Ok(TraceReport {
+            events: self.metrics.events_in.get(),
+            out_messages: self.metrics.messages_out.get(),
+            dead_letters: self.metrics.dead_letters.get(),
+            dmm_updates: self.metrics.dmm_updates.get(),
+            wall: start.elapsed(),
+        })
+    }
+
+    /// Restore the DMM from the store (restart path, §6.2): decompact the
+    /// persisted DUSB through the view and swap it in.
+    pub fn restore_from_store(&self) -> Result<bool> {
+        let Some(store) = &self.store else { return Ok(false) };
+        let land = self.landscape.read().unwrap();
+        match store.view_recreate_dpm(&land.tree, &land.cdm)? {
+            None => Ok(false),
+            Some(dpm) => {
+                let state = dpm.state;
+                *self.dmm.write().unwrap() = Arc::new(dpm);
+                self.cache.evict_all(state);
+                Ok(true)
+            }
+        }
+    }
+
+    /// Fig-7 dashboard snapshot.
+    pub fn dashboard(&self) -> String {
+        self.metrics
+            .dashboard(self.cache.approx_bytes(), self.cache.hit_rate())
+    }
+
+    /// Debezium connector reference (snapshot/initial-load paths).
+    pub fn connector(&self) -> &Connector {
+        &self.connector
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_pipeline() -> Pipeline {
+        Pipeline::new(PipelineConfig::small()).unwrap()
+    }
+
+    #[test]
+    fn insert_event_flows_to_sinks() {
+        let p = small_pipeline();
+        let ops = vec![TraceOp::Dml { service: 0, kind: DmlKind::Insert }];
+        let report = p.run_trace(&ops).unwrap();
+        assert_eq!(report.events, 1);
+        assert!(report.out_messages >= 1);
+        assert_eq!(report.dead_letters, 0);
+        assert!(p.dw.lock().unwrap().total_rows() >= 1);
+    }
+
+    #[test]
+    fn trace_with_schema_change_keeps_flowing() {
+        let p = small_pipeline();
+        let mut ops = vec![];
+        for _ in 0..20 {
+            ops.push(TraceOp::Dml { service: 1, kind: DmlKind::Insert });
+        }
+        ops.push(TraceOp::SchemaChange { service: 1 });
+        for _ in 0..20 {
+            ops.push(TraceOp::Dml { service: 1, kind: DmlKind::Insert });
+        }
+        let report = p.run_trace(&ops).unwrap();
+        assert_eq!(report.events, 40);
+        assert_eq!(report.dmm_updates, 1);
+        assert_eq!(report.dead_letters, 0);
+        assert_eq!(p.state.current(), StateI(1));
+        // cache was evicted and repopulated under the new state
+        assert_eq!(p.cache.state(), StateI(1));
+    }
+
+    #[test]
+    fn update_and_delete_round_trip_dw() {
+        let p = small_pipeline();
+        let ops = vec![
+            TraceOp::Dml { service: 0, kind: DmlKind::Insert },
+            TraceOp::Dml { service: 0, kind: DmlKind::Update },
+            TraceOp::Dml { service: 0, kind: DmlKind::Delete },
+        ];
+        let report = p.run_trace(&ops).unwrap();
+        assert_eq!(report.events, 3);
+        // row deleted again: DW empty (the delete tombstones by key)
+        assert_eq!(p.dw.lock().unwrap().total_rows(), 0);
+    }
+
+    #[test]
+    fn out_of_sync_message_restamps_once() {
+        let p = small_pipeline();
+        // produce an event at state 0
+        p.resolve_op(&TraceOp::Dml { service: 0, kind: DmlKind::Insert })
+            .unwrap();
+        // bump DMM state without touching the queued message
+        {
+            let mut dpm = (**p.dmm.read().unwrap()).clone();
+            dpm.state = StateI(1);
+            *p.dmm.write().unwrap() = Arc::new(dpm);
+            p.cache.evict_all(StateI(1));
+        }
+        let mut consumer = Consumer::new(p.cdc_topic.clone(), 0, 1);
+        for (_, rec) in consumer.poll(10) {
+            p.process_event(&rec.value);
+        }
+        assert_eq!(p.metrics.sync_retries.get(), 1);
+        assert_eq!(p.metrics.dead_letters.get(), 0);
+    }
+
+    #[test]
+    fn unknown_column_goes_to_dlq() {
+        let p = small_pipeline();
+        p.resolve_op(&TraceOp::Dml { service: 0, kind: DmlKind::Insert })
+            .unwrap();
+        // drop every block of the schema's live version from the DMM
+        {
+            let land = p.landscape.read().unwrap();
+            let schema = land.dbs[0].tables[0].schema;
+            let v = land.dbs[0].tables[0].live_version;
+            let mut dpm = (**p.dmm.read().unwrap()).clone();
+            dpm.remove_column(schema, v);
+            *p.dmm.write().unwrap() = Arc::new(dpm);
+            p.cache.evict_all(StateI(0));
+        }
+        let mut consumer = Consumer::new(p.cdc_topic.clone(), 0, 1);
+        for (_, rec) in consumer.poll(10) {
+            p.process_event(&rec.value);
+        }
+        assert_eq!(p.metrics.dead_letters.get(), 1);
+        assert_eq!(p.dlq.len(), 1);
+        assert!(p.dlq.snapshot()[0].error.contains("no mapping column"));
+    }
+
+    #[test]
+    fn store_persists_and_restores() {
+        let dir = std::env::temp_dir()
+            .join("metl-pipe-store")
+            .join(format!("{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let p = Pipeline::new(PipelineConfig::small())
+            .unwrap()
+            .with_store(&dir)
+            .unwrap();
+        let before = p.dmm.read().unwrap().n_elements();
+        p.apply_schema_change(0).unwrap();
+        let after = p.dmm.read().unwrap().n_elements();
+        assert!(after >= before);
+        // wipe in-memory DMM, restore from store
+        *p.dmm.write().unwrap() = Arc::new(DpmSet::new(StateI(999)));
+        assert!(p.restore_from_store().unwrap());
+        assert_eq!(p.dmm.read().unwrap().n_elements(), after);
+        assert_eq!(p.dmm.read().unwrap().state, StateI(1));
+        // audit log recorded the update
+        let log = p.store.as_ref().unwrap().read_log().unwrap();
+        assert_eq!(log.len(), 1);
+    }
+
+    #[test]
+    fn dashboard_contains_counts() {
+        let p = small_pipeline();
+        let ops: Vec<TraceOp> = (0..5)
+            .map(|_| TraceOp::Dml { service: 0, kind: DmlKind::Insert })
+            .collect();
+        p.run_trace(&ops).unwrap();
+        let dash = p.dashboard();
+        assert!(dash.contains("METL dashboard"));
+        assert!(dash.contains("transformations"));
+    }
+}

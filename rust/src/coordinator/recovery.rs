@@ -1,0 +1,224 @@
+//! Recovery procedures (paper §3.4): "it is good practice to have
+//! additional error-management procedures in place as well as options to
+//! set back Kafka-offsets and start new initial loads."
+//!
+//! The full recovery story, as a first-class coordinator API:
+//! 1. quarantine — failed events accumulate in the DLQ with reasons;
+//! 2. repair — the operator (or the workflow) restores a consistent DMM
+//!    (store restore, or recompute from the ground-truth matrix);
+//! 3. replay — DLQ events are re-mapped under the repaired state;
+//! 4. reload — if replay cannot recover (schema truly gone), the affected
+//!    service is re-snapshotted through an initial load, after setting
+//!    the consumer offsets back.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::batcher::InitialLoader;
+use super::pipeline::Pipeline;
+use crate::broker::Consumer;
+use crate::matrix::dpm::DpmSet;
+use crate::message::cdc::CdcEvent;
+
+/// Outcome of a recovery round.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecoveryReport {
+    /// DLQ entries taken into the round.
+    pub quarantined: usize,
+    /// Entries that mapped successfully after the repair.
+    pub replayed: usize,
+    /// Entries still failing → returned to the DLQ.
+    pub still_failing: usize,
+    /// Services re-snapshotted through the initial-load fallback.
+    pub reloaded_services: Vec<usize>,
+}
+
+/// Step 2 — repair: rebuild the DMM from the landscape's ground-truth
+/// matrix under the *current* state (operator action "recompute the
+/// mapping configuration").
+pub fn repair_dmm_from_truth(pipeline: &Pipeline) -> Result<()> {
+    let land = pipeline.landscape.read().unwrap();
+    let dpm = DpmSet::from_matrix(
+        &land.matrix,
+        &land.tree,
+        &land.cdm,
+        pipeline.state.current(),
+    )
+    .map_err(|e| anyhow::anyhow!("{e}"))?;
+    drop(land);
+    *pipeline.dmm.write().unwrap() = Arc::new(dpm);
+    pipeline.cache.evict_all(pipeline.state.current());
+    Ok(())
+}
+
+/// Steps 3+4 — replay the DLQ; events that still fail send their source
+/// service through an offset-reset + initial load (the paper's last
+/// resort), after which they are dropped from the queue (the reload
+/// re-produced their rows authoritatively).
+pub fn replay_dlq(
+    pipeline: &Pipeline,
+    loader: &InitialLoader,
+) -> Result<RecoveryReport> {
+    let dead = pipeline.dlq.drain();
+    let mut report = RecoveryReport {
+        quarantined: dead.len(),
+        replayed: 0,
+        still_failing: 0,
+        reloaded_services: Vec::new(),
+    };
+    for entry in dead {
+        match pipeline.map_event(&entry.event) {
+            Ok(outs) => {
+                report.replayed += 1;
+                for out in outs {
+                    let key = out.1.key;
+                    pipeline.out_topic.produce(key, Arc::new(out));
+                    pipeline.metrics.messages_out.inc();
+                }
+            }
+            Err(_) => {
+                report.still_failing += 1;
+                // find the owning service by source db name
+                let service = {
+                    let land = pipeline.landscape.read().unwrap();
+                    land.dbs
+                        .iter()
+                        .position(|db| db.db_name == entry.event.source.db)
+                };
+                if let Some(service) = service {
+                    if !report.reloaded_services.contains(&service) {
+                        loader.initial_load(pipeline, service)?;
+                        report.reloaded_services.push(service);
+                    }
+                } else {
+                    // unknown source: keep it quarantined
+                    pipeline.dlq.push(
+                        entry.event,
+                        entry.error,
+                        entry.attempts + 1,
+                    );
+                }
+            }
+        }
+    }
+    Ok(report)
+}
+
+/// Full §3.4 fallback: set the CDC consumer back to the beginning and
+/// reprocess everything (idempotent sinks absorb the duplicates).
+pub fn offset_reset_reprocess(
+    pipeline: &Pipeline,
+    consumer: &mut Consumer<Arc<CdcEvent>>,
+) -> usize {
+    consumer.reset_to_beginning();
+    let mut n = 0;
+    loop {
+        let batch = consumer.poll(256);
+        if batch.is_empty() {
+            break;
+        }
+        for (_, rec) in &batch {
+            pipeline.process_event(&rec.value);
+            n += 1;
+        }
+        consumer.commit();
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PipelineConfig;
+    use crate::message::StateI;
+    use crate::workload::{DmlKind, TraceOp};
+
+    fn poisoned_pipeline() -> Pipeline {
+        // a pipeline whose DMM lost a live column → events dead-letter
+        let p = Pipeline::new(PipelineConfig::small()).unwrap();
+        for _ in 0..5 {
+            p.resolve_op(&TraceOp::Dml { service: 0, kind: DmlKind::Insert })
+                .unwrap();
+        }
+        {
+            let land = p.landscape.read().unwrap();
+            let schema = land.dbs[0].tables[0].schema;
+            let v = land.dbs[0].tables[0].live_version;
+            let mut dpm = (**p.dmm.read().unwrap()).clone();
+            dpm.remove_column(schema, v);
+            *p.dmm.write().unwrap() = Arc::new(dpm);
+            p.cache.evict_all(StateI(0));
+        }
+        let mut c = Consumer::new(p.cdc_topic.clone(), 0, 1);
+        loop {
+            let batch = c.poll(64);
+            if batch.is_empty() {
+                break;
+            }
+            for (_, rec) in &batch {
+                p.process_event(&rec.value);
+            }
+            c.commit();
+        }
+        p
+    }
+
+    #[test]
+    fn repair_then_replay_recovers_everything() {
+        let p = poisoned_pipeline();
+        assert_eq!(p.dlq.len(), 5);
+        repair_dmm_from_truth(&p).unwrap();
+        let loader = InitialLoader { runtime: None };
+        let report = replay_dlq(&p, &loader).unwrap();
+        assert_eq!(report.quarantined, 5);
+        assert_eq!(report.replayed, 5);
+        assert_eq!(report.still_failing, 0);
+        assert!(report.reloaded_services.is_empty());
+        assert!(p.dlq.is_empty());
+    }
+
+    #[test]
+    fn unrecoverable_events_trigger_initial_load() {
+        let p = poisoned_pipeline();
+        // do NOT repair: replay fails again → service reload kicks in
+        let loader = InitialLoader { runtime: None };
+        let report = replay_dlq(&p, &loader).unwrap();
+        assert_eq!(report.quarantined, 5);
+        assert_eq!(report.replayed, 0);
+        assert_eq!(report.still_failing, 5);
+        assert_eq!(report.reloaded_services, vec![0]);
+        // the reload snapshot re-produced the service's rows
+        assert!(p.metrics.events_in.get() >= 5);
+    }
+
+    #[test]
+    fn offset_reset_reprocesses_idempotently() {
+        let p = Pipeline::new(PipelineConfig::small()).unwrap();
+        for _ in 0..8 {
+            p.resolve_op(&TraceOp::Dml { service: 1, kind: DmlKind::Insert })
+                .unwrap();
+        }
+        let mut consumer = Consumer::new(p.cdc_topic.clone(), 0, 1);
+        // normal pass
+        loop {
+            let batch = consumer.poll(64);
+            if batch.is_empty() {
+                break;
+            }
+            for (_, rec) in &batch {
+                p.process_event(&rec.value);
+            }
+            consumer.commit();
+        }
+        // full reprocess
+        let n = offset_reset_reprocess(&p, &mut consumer);
+        assert_eq!(n, 8);
+        assert_eq!(p.metrics.events_in.get(), 16);
+        // sinks stay consistent
+        let mut out = Consumer::new(p.out_topic.clone(), 0, 1);
+        p.drain_sinks(&mut out);
+        let dw = p.dw.lock().unwrap();
+        assert!(dw.total_duplicates() > 0);
+    }
+}

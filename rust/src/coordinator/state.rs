@@ -1,0 +1,62 @@
+//! Distributed configuration state `i` (paper §3.4/§3.5): every core
+//! element — message, schema snapshot, DMM, cache — inherits the state;
+//! transitions happen only through the update workflow, and components
+//! check sync at their boundaries.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::message::StateI;
+
+/// The pipeline-wide state counter.
+#[derive(Debug, Default)]
+pub struct StateManager {
+    i: AtomicU64,
+}
+
+impl StateManager {
+    pub fn new(initial: StateI) -> Self {
+        Self { i: AtomicU64::new(initial.0) }
+    }
+
+    pub fn current(&self) -> StateI {
+        StateI(self.i.load(Ordering::Acquire))
+    }
+
+    /// Transition i → i+1 (one external trigger applied). Returns the new
+    /// state.
+    pub fn bump(&self) -> StateI {
+        StateI(self.i.fetch_add(1, Ordering::AcqRel) + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bump_is_monotonic() {
+        let s = StateManager::new(StateI(0));
+        assert_eq!(s.current(), StateI(0));
+        assert_eq!(s.bump(), StateI(1));
+        assert_eq!(s.bump(), StateI(2));
+        assert_eq!(s.current(), StateI(2));
+    }
+
+    #[test]
+    fn concurrent_bumps_unique() {
+        let s = std::sync::Arc::new(StateManager::new(StateI(0)));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let s = std::sync::Arc::clone(&s);
+            handles.push(std::thread::spawn(move || {
+                (0..100).map(|_| s.bump().0).collect::<Vec<_>>()
+            }));
+        }
+        let mut all: Vec<u64> =
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        all.sort();
+        all.dedup();
+        assert_eq!(all.len(), 800);
+        assert_eq!(s.current(), StateI(800));
+    }
+}

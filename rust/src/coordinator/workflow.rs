@@ -1,0 +1,150 @@
+//! The semi-automated update workflow (paper §3.3/§5.4.2): registry
+//! change events become Alg-5 change cases; notices from automated
+//! updates are routed to a confirmation policy (the paper's UI-based
+//! confirmation, "scheduled for full automation" — our sim defaults to
+//! auto-confirm and records what a user would have seen).
+
+use crate::matrix::update::{ChangeCase, Notice, UpdateReport};
+use crate::message::StateI;
+use crate::schema::RegistryEvent;
+use crate::util::json::Json;
+
+/// Translate a registry event into the Alg-5 change case it triggers.
+/// `SchemaCreated` yields none — the first version arrives separately and
+/// needs manual initialization anyway (§5.4.2).
+pub fn change_case_for(event: &RegistryEvent) -> Option<ChangeCase> {
+    match event {
+        RegistryEvent::SchemaCreated { .. } => None,
+        RegistryEvent::VersionAdded { schema, version, .. } => {
+            Some(ChangeCase::AddedSchemaVersion { schema: *schema, v: *version })
+        }
+        RegistryEvent::VersionDeleted { schema, version } => {
+            Some(ChangeCase::DeletedSchemaVersion { schema: *schema, v: *version })
+        }
+    }
+}
+
+/// What to do with semi-automated notices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum NoticePolicy {
+    /// Accept the automated result, record the notice (current METL
+    /// behaviour per §6.3's error-and-update process).
+    #[default]
+    AutoConfirm,
+    /// Treat smaller-permutation notices as failures needing a user.
+    Strict,
+}
+
+/// Outcome of the workflow around one update.
+#[derive(Debug, Clone)]
+pub struct WorkflowOutcome {
+    pub new_state: StateI,
+    pub report: UpdateReport,
+    /// Notices a user must review under `Strict`.
+    pub pending_review: Vec<Notice>,
+}
+
+impl WorkflowOutcome {
+    pub fn evaluate(
+        policy: NoticePolicy,
+        new_state: StateI,
+        report: UpdateReport,
+    ) -> WorkflowOutcome {
+        let pending_review = match policy {
+            NoticePolicy::AutoConfirm => Vec::new(),
+            NoticePolicy::Strict => report.notices.clone(),
+        };
+        WorkflowOutcome { new_state, report, pending_review }
+    }
+
+    /// Audit-log line for the store's update log.
+    pub fn audit_json(&self, case: &str) -> Json {
+        let mut j = Json::obj();
+        j.set("state", Json::Num(self.new_state.0 as f64));
+        j.set("case", Json::Str(case.to_string()));
+        j.set("blocks_added", Json::Num(self.report.blocks_added as f64));
+        j.set("blocks_removed", Json::Num(self.report.blocks_removed as f64));
+        j.set("elements_added", Json::Num(self.report.elements_added as f64));
+        j.set(
+            "elements_removed",
+            Json::Num(self.report.elements_removed as f64),
+        );
+        j.set("notices", Json::Num(self.report.notices.len() as f64));
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schema::{SchemaId, VersionNo};
+
+    #[test]
+    fn registry_events_translate() {
+        let ev = RegistryEvent::VersionAdded {
+            schema: SchemaId(2),
+            version: VersionNo(3),
+            diff: Default::default(),
+        };
+        assert_eq!(
+            change_case_for(&ev),
+            Some(ChangeCase::AddedSchemaVersion {
+                schema: SchemaId(2),
+                v: VersionNo(3)
+            })
+        );
+        let ev = RegistryEvent::VersionDeleted {
+            schema: SchemaId(2),
+            version: VersionNo(1),
+        };
+        assert_eq!(
+            change_case_for(&ev),
+            Some(ChangeCase::DeletedSchemaVersion {
+                schema: SchemaId(2),
+                v: VersionNo(1)
+            })
+        );
+        assert_eq!(
+            change_case_for(&RegistryEvent::SchemaCreated { schema: SchemaId(0) }),
+            None
+        );
+    }
+
+    #[test]
+    fn strict_policy_surfaces_notices() {
+        let mut report = UpdateReport::default();
+        report.notices.push(Notice::EmptyBlock {
+            source: crate::matrix::BlockKey::new(
+                SchemaId(0),
+                VersionNo(1),
+                crate::cdm::EntityId(0),
+                crate::cdm::CdmVersionNo(1),
+            ),
+        });
+        let auto = WorkflowOutcome::evaluate(
+            NoticePolicy::AutoConfirm,
+            StateI(1),
+            report.clone(),
+        );
+        assert!(auto.pending_review.is_empty());
+        let strict =
+            WorkflowOutcome::evaluate(NoticePolicy::Strict, StateI(1), report);
+        assert_eq!(strict.pending_review.len(), 1);
+    }
+
+    #[test]
+    fn audit_json_shape() {
+        let outcome = WorkflowOutcome::evaluate(
+            NoticePolicy::AutoConfirm,
+            StateI(4),
+            UpdateReport { blocks_added: 2, elements_added: 9, ..Default::default() },
+        );
+        let j = outcome.audit_json("added-schema-version");
+        assert_eq!(j.get("state").unwrap().as_u64(), Some(4));
+        assert_eq!(j.get("elements_added").unwrap().as_u64(), Some(9));
+        assert_eq!(
+            j.get("case").unwrap().as_str(),
+            Some("added-schema-version")
+        );
+    }
+}

@@ -1,0 +1,61 @@
+//! # metl — a modern ETL pipeline with a dynamic mapping matrix
+//!
+//! Reproduction of Haase, Röseler & Seidel (2022): a streaming ETL
+//! framework that extracts CDC events from a simulated microservice
+//! landscape, transforms them to a canonical data model (CDM) through the
+//! paper's **dynamic mapping matrix (DMM)**, and loads them to data-
+//! warehouse and ML sinks — as a three-layer rust + JAX + Pallas system
+//! (see DESIGN.md).
+//!
+//! Quick tour (see `examples/quickstart.rs`):
+//!
+//! - [`schema`] / [`cdm`] — the two metadata trees of the dynamic network.
+//! - [`matrix`] — the mapping matrix `ᵢM`, its block partitioning, the two
+//!   compaction strategies (Alg 2 → `ᵢ𝔇𝔓𝔐`, Alg 3 → `ᵢ𝔇𝔘𝔖𝔅`),
+//!   decompaction (Alg 4), and automated updates (Alg 5).
+//! - [`mapper`] — the baseline sequential mapper (Alg 1) and the parallel
+//!   dense mapper (Alg 6).
+//! - [`broker`] / [`source`] / [`sink`] — the Kafka / Debezium / DW+ML
+//!   simulation substrates.
+//! - [`coordinator`] — the METL app: pipeline wiring, state-i sync,
+//!   update workflows, error management, horizontal scaling, bulk lane.
+//! - [`runtime`] — PJRT loader executing the AOT-compiled JAX/Pallas bulk
+//!   mapping kernels from `artifacts/`.
+
+pub mod broker;
+pub mod cache;
+pub mod cdm;
+pub mod config;
+pub mod coordinator;
+pub mod mapper;
+pub mod matrix;
+pub mod message;
+pub mod metrics;
+pub mod runtime;
+pub mod schema;
+pub mod sink;
+pub mod source;
+pub mod store;
+pub mod util;
+pub mod workload;
+
+/// Convenience prelude for examples and benches.
+pub mod prelude {
+    pub use crate::broker::{Broker, Consumer, Topic};
+    pub use crate::cdm::{CdmAttrId, CdmTree, CdmType, CdmVersionNo, EntityId};
+    pub use crate::mapper::{baseline::BaselineMapper, parallel::ParallelMapper};
+    pub use crate::matrix::{
+        dpm::DpmSet, dusb::DusbSet, BlockKey, MappingMatrix,
+    };
+    pub use crate::message::{
+        cdc::{CdcEvent, CdcOp},
+        InMessage, OutMessage, StateI,
+    };
+    pub use crate::schema::{
+        AttrId, Compatibility, ExtractType, Registry, SchemaId, SchemaTree,
+        VersionNo,
+    };
+    pub use crate::util::json::Json;
+    pub use crate::util::rng::Rng;
+    pub use crate::util::stats::Summary;
+}

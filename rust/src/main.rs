@@ -1,0 +1,368 @@
+//! metl — CLI launcher for the METL reproduction.
+//!
+//! Subcommands (hand-rolled arg parsing; no clap offline):
+//!   run        simulate a day trace through the full pipeline (fig 1/§7)
+//!   compact    build ᵢ𝔇𝔓𝔐/ᵢ𝔇𝔘𝔖𝔅 at a profile's scale, print ratios
+//!   update     apply a schema-change storm, print Alg-5 reports
+//!   inspect    UI-sim queries: reverse search + version progression
+//!   bulk       run an initial load through the XLA bulk lane
+//!   dashboard  run a short trace and print the fig-7 dashboard
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use metl::config::PipelineConfig;
+use metl::coordinator::batcher::InitialLoader;
+use metl::coordinator::{inspect, pipeline::Pipeline, scaler};
+use metl::matrix::compaction::CompactionStats;
+use metl::matrix::dpm::DpmSet;
+use metl::matrix::dusb::DusbSet;
+use metl::message::StateI;
+use metl::util::rng::Rng;
+use metl::util::stats::format_ns;
+use metl::workload;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: metl <command> [--profile small|paper_day|eos_scale] [--config FILE]\n\
+         \n\
+         commands:\n\
+           run        [--instances N]   simulate a day trace end to end\n\
+           compact                      compaction ratios at profile scale\n\
+           update     [--storms N]      schema-change storms + Alg-5 reports\n\
+           inspect    [--entity N | --schema N]\n\
+           bulk       [--rows N]        initial load via the XLA bulk lane\n\
+           dashboard                    short trace + fig-7 dashboard\n\
+           csv-export [--out FILE]      export the DMM as mapping CSV\n\
+           csv-import --file FILE       validate + import a mapping CSV\n\
+           serve      [--seconds N]     run the pipeline as a daemon with\n\
+                                        live traffic + periodic dashboards"
+    );
+    std::process::exit(2);
+}
+
+struct Args {
+    command: String,
+    flags: Vec<(String, String)>,
+}
+
+impl Args {
+    fn parse() -> Args {
+        let mut argv = std::env::args().skip(1);
+        let Some(command) = argv.next() else { usage() };
+        let mut flags = Vec::new();
+        let rest: Vec<String> = argv.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            let flag = rest[i].trim_start_matches("--").to_string();
+            let value = rest.get(i + 1).cloned().unwrap_or_default();
+            flags.push((flag, value));
+            i += 2;
+        }
+        Args { command, flags }
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .find(|(f, _)| f == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("bad --{name}")),
+        }
+    }
+}
+
+fn load_config(args: &Args) -> Result<PipelineConfig> {
+    if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read config {path}"))?;
+        return PipelineConfig::parse(&text);
+    }
+    Ok(match args.get("profile") {
+        None | Some("small") => PipelineConfig::small(),
+        Some("paper_day") => PipelineConfig::paper_day(),
+        Some("eos_scale") => PipelineConfig::eos_scale(),
+        Some(other) => bail!("unknown profile {other}"),
+    })
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let cfg = load_config(&args)?;
+    match args.command.as_str() {
+        "run" => cmd_run(&args, cfg),
+        "compact" => cmd_compact(cfg),
+        "update" => cmd_update(&args, cfg),
+        "inspect" => cmd_inspect(&args, cfg),
+        "bulk" => cmd_bulk(&args, cfg),
+        "dashboard" => cmd_dashboard(cfg),
+        "csv-export" => cmd_csv_export(&args, cfg),
+        "csv-import" => cmd_csv_import(&args, cfg),
+        "serve" => cmd_serve(&args, cfg),
+        _ => usage(),
+    }
+}
+
+/// Daemon mode: a producer loop feeds live DML (with occasional schema
+/// changes), the consumer loop maps continuously, and the fig-7 dashboard
+/// refreshes once per second — the long-running shape of the real METL
+/// service, bounded by --seconds for scripted runs.
+fn cmd_serve(args: &Args, cfg: PipelineConfig) -> Result<()> {
+    use metl::broker::Consumer;
+    use metl::workload::{DmlKind, TraceOp};
+    let seconds = args.get_usize("seconds", 10)?;
+    let pipeline = Pipeline::new(cfg)?;
+    let deadline = std::time::Instant::now()
+        + std::time::Duration::from_secs(seconds as u64);
+    let mut rng = Rng::seed_from(pipeline.cfg.seed ^ 0x5E21E);
+    let mut consumer = Consumer::new(pipeline.cdc_topic.clone(), 0, 1);
+    let mut out_consumer = Consumer::new(pipeline.out_topic.clone(), 0, 1);
+    let mut last_dash = std::time::Instant::now();
+    let mut tick = 0u64;
+    println!("serving for {seconds}s (ctrl-c to stop)...");
+    while std::time::Instant::now() < deadline {
+        // produce a small burst of source traffic
+        for _ in 0..1 + rng.gen_range(8) {
+            let service = rng.gen_range(pipeline.cfg.n_services as u64) as usize;
+            let roll = rng.f64();
+            let kind = if roll < 0.7 {
+                DmlKind::Insert
+            } else if roll < 0.95 {
+                DmlKind::Update
+            } else {
+                DmlKind::Delete
+            };
+            pipeline.resolve_op(&TraceOp::Dml { service, kind })?;
+        }
+        // rare schema change (the paper: a few times a day)
+        tick += 1;
+        if tick % 997 == 0 {
+            let service = rng.gen_range(pipeline.cfg.n_services as u64) as usize;
+            let _ = pipeline.apply_schema_change(service);
+        }
+        // consume + map + sink
+        loop {
+            let batch = consumer.poll(128);
+            if batch.is_empty() {
+                break;
+            }
+            for (_, rec) in &batch {
+                pipeline.process_event(&rec.value);
+            }
+            consumer.commit();
+        }
+        pipeline.drain_sinks(&mut out_consumer);
+        if last_dash.elapsed() >= std::time::Duration::from_secs(1) {
+            println!("{}", pipeline.dashboard());
+            last_dash = std::time::Instant::now();
+        }
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    println!("{}", pipeline.dashboard());
+    println!(
+        "served {} events, {} updates, dlq={}",
+        pipeline.metrics.events_in.get(),
+        pipeline.metrics.dmm_updates.get(),
+        pipeline.dlq.len()
+    );
+    Ok(())
+}
+
+fn cmd_csv_export(args: &Args, cfg: PipelineConfig) -> Result<()> {
+    let land = workload::generate(&cfg);
+    let dpm = DpmSet::from_matrix(&land.matrix, &land.tree, &land.cdm, StateI(0))
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let csv = metl::matrix::csv_import::export_dpm(&dpm, &land.tree, &land.cdm);
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &csv)?;
+            println!("wrote {} mapping rows to {path}", dpm.n_elements());
+        }
+        None => print!("{csv}"),
+    }
+    Ok(())
+}
+
+fn cmd_csv_import(args: &Args, cfg: PipelineConfig) -> Result<()> {
+    let path = args.get("file").context("csv-import needs --file FILE")?;
+    let text = std::fs::read_to_string(path)?;
+    let land = workload::generate(&cfg);
+    let (dpm, report) = metl::matrix::csv_import::import_dpm(
+        &text,
+        &land.tree,
+        &land.cdm,
+        StateI(0),
+    )?;
+    println!(
+        "imported {}/{} rows into {} blocks ({} elements)",
+        report.imported,
+        report.rows,
+        dpm.n_blocks(),
+        dpm.n_elements()
+    );
+    for (line, reason) in &report.rejected {
+        println!("  rejected line {line}: {reason}");
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args, cfg: PipelineConfig) -> Result<()> {
+    let instances = args.get_usize("instances", 1)?;
+    let mut rng = Rng::seed_from(cfg.seed);
+    let ops = workload::day_trace(&cfg, &mut rng);
+    let pipeline = Pipeline::new(cfg)?;
+    println!(
+        "running {} trace ops on {} services ({} instances)...",
+        ops.len(),
+        pipeline.cfg.n_services,
+        instances
+    );
+    if instances <= 1 {
+        let report = pipeline.run_trace(&ops)?;
+        println!(
+            "events={} out={} dlq={} updates={} wall={:?}",
+            report.events,
+            report.out_messages,
+            report.dead_letters,
+            report.dmm_updates,
+            report.wall
+        );
+    } else {
+        for op in &ops {
+            pipeline.resolve_op(op)?;
+        }
+        let report = scaler::run_scaled(&pipeline, instances);
+        println!(
+            "processed={} instances={} wall={:?} ({:.0} events/s)",
+            report.processed,
+            report.instances,
+            report.wall,
+            report.throughput_eps()
+        );
+    }
+    println!("{}", pipeline.dashboard());
+    Ok(())
+}
+
+fn cmd_compact(cfg: PipelineConfig) -> Result<()> {
+    println!(
+        "generating landscape: {} services x {} versions...",
+        cfg.n_services, cfg.versions_per_schema
+    );
+    let land = workload::generate(&cfg);
+    let dpm = DpmSet::from_matrix(&land.matrix, &land.tree, &land.cdm, StateI(0))
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let dusb =
+        DusbSet::from_matrix(&land.matrix, &land.tree, &land.cdm, StateI(0))
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let stats = CompactionStats::measure(
+        &land.matrix,
+        &land.tree,
+        &land.cdm,
+        &dpm,
+        &dusb,
+    );
+    println!("{}", stats.row());
+    Ok(())
+}
+
+fn cmd_update(args: &Args, cfg: PipelineConfig) -> Result<()> {
+    let storms = args.get_usize("storms", 3)?;
+    let pipeline = Pipeline::new(cfg)?;
+    for i in 0..storms {
+        let service = i % pipeline.cfg.n_services;
+        let t0 = std::time::Instant::now();
+        let report = pipeline.apply_schema_change(service)?;
+        println!(
+            "storm {i}: svc{service} +{} blocks +{} elements -{} blocks \
+             ({} notices) in {}",
+            report.blocks_added,
+            report.elements_added,
+            report.blocks_removed,
+            report.notices.len(),
+            format_ns(t0.elapsed().as_nanos() as f64),
+        );
+    }
+    println!("final state i = {}", pipeline.state.current().0);
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args, cfg: PipelineConfig) -> Result<()> {
+    let land = workload::generate(&cfg);
+    let dpm = DpmSet::from_matrix(&land.matrix, &land.tree, &land.cdm, StateI(0))
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    if let Some(e) = args.get("entity") {
+        let id = metl::cdm::EntityId(e.parse::<u32>().context("bad --entity")?);
+        let w =
+            *land.cdm.versions_of(id).last().context("entity has versions")?;
+        println!(
+            "{}",
+            inspect::reverse_search(&dpm, &land.tree, &land.cdm, id, w)
+        );
+    } else if let Some(s) = args.get("schema") {
+        let id =
+            metl::schema::SchemaId(s.parse::<u32>().context("bad --schema")?);
+        println!(
+            "{}",
+            inspect::version_progression(&dpm, &land.tree, &land.cdm, id)
+        );
+    } else {
+        bail!("inspect needs --entity N or --schema N");
+    }
+    Ok(())
+}
+
+fn cmd_bulk(args: &Args, cfg: PipelineConfig) -> Result<()> {
+    let rows = args.get_usize("rows", 2000)?;
+    let mut land = workload::generate(&cfg);
+    let mut rng = Rng::seed_from(cfg.seed ^ 0xB);
+    workload::populate(&mut land, rows, &mut rng);
+    let loader = InitialLoader::from_config(&cfg);
+    let pipeline = Pipeline::from_landscape(cfg, land)?;
+    println!(
+        "bulk runtime: {}",
+        loader
+            .runtime
+            .as_ref()
+            .map(|r| format!(
+                "loaded ({} variants, platform {})",
+                r.n_variants(),
+                r.platform
+            ))
+            .unwrap_or_else(|| "unavailable — Alg-6 fallback".into())
+    );
+    let t0 = std::time::Instant::now();
+    let report = loader.initial_load(&pipeline, 0)?;
+    println!(
+        "initial load: {} rows -> {} messages, bulk={} in {:?}",
+        report.rows,
+        report.out_messages,
+        report.used_bulk,
+        t0.elapsed()
+    );
+    Ok(())
+}
+
+fn cmd_dashboard(cfg: PipelineConfig) -> Result<()> {
+    let mut rng = Rng::seed_from(cfg.seed);
+    let mut small = cfg;
+    small.trace_events = small.trace_events.min(300);
+    let ops = workload::day_trace(&small, &mut rng);
+    let pipeline = Pipeline::new(small)?;
+    pipeline.run_trace(&ops)?;
+    println!("{}", pipeline.dashboard());
+    let dmm = Arc::clone(&pipeline.dmm.read().unwrap());
+    println!(
+        "dmm: {} blocks, {} elements, state {}",
+        dmm.n_blocks(),
+        dmm.n_elements(),
+        dmm.state.0
+    );
+    Ok(())
+}

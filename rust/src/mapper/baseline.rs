@@ -1,0 +1,193 @@
+//! **Algorithm 1** — the baseline sparse & sequential mapper (paper §4.5).
+//!
+//! Maps one sparse incoming message `ᵢMIn_v^o` to `ᵢm'` outgoing messages,
+//! one per mapping block in the column `ᵢ𝒞𝔐𝔅_v^o` — *including* null
+//! blocks, producing messages whose payload is all `"null"` objects. The
+//! outgoing message is pre-constructed with every CDM attribute paired
+//! with `"null"`, then 1-elements replace the nulls via the mapping
+//! function `ncd_q ← m_qp · nad_p`.
+
+use super::MapError;
+use crate::cdm::CdmTree;
+use crate::matrix::{blocks, MappingMatrix};
+use crate::message::{InMessage, OutMessage, StateI};
+use crate::schema::SchemaTree;
+use crate::util::json::Json;
+
+/// Baseline mapper holding references to the uncompacted system.
+pub struct BaselineMapper<'a> {
+    pub matrix: &'a MappingMatrix,
+    pub tree: &'a SchemaTree,
+    pub cdm: &'a CdmTree,
+    pub state: StateI,
+}
+
+impl<'a> BaselineMapper<'a> {
+    pub fn new(
+        matrix: &'a MappingMatrix,
+        tree: &'a SchemaTree,
+        cdm: &'a CdmTree,
+        state: StateI,
+    ) -> Self {
+        Self { matrix, tree, cdm, state }
+    }
+
+    /// Map one incoming message to `ᵢm'` outgoing messages (Alg 1).
+    pub fn map(&self, msg: &InMessage) -> Result<Vec<OutMessage>, MapError> {
+        if msg.state != self.state {
+            return Err(MapError::StateMismatch {
+                message: msg.state,
+                dmm: self.state,
+            });
+        }
+        let sv = self
+            .tree
+            .version(msg.schema, msg.version)
+            .ok_or(MapError::UnknownColumn {
+                schema: msg.schema,
+                version: msg.version,
+            })?;
+        let mut outs = Vec::new();
+        // line 2: the column of blocks matching the incoming indices —
+        // the baseline iterates ALL (r, w), null blocks included.
+        for entity in self.cdm.entities() {
+            for &w in &entity.versions {
+                let cv = self.cdm.version(entity.id, w).expect("live");
+                // line 4: pre-construct the all-null outgoing message
+                let mut out = OutMessage {
+                    key: msg.key,
+                    entity: entity.id,
+                    version: w,
+                    state: self.state,
+                    ts_us: msg.ts_us,
+                    fields: cv
+                        .attrs
+                        .iter()
+                        .map(|&q| (q, Json::Null))
+                        .collect(),
+                };
+                // line 5: all m_qp != 0 of the block
+                let ext = blocks::BlockExtent {
+                    rows: cv.row_start()..cv.row_start() + cv.height(),
+                    cols: sv.col_start()..sv.col_start() + sv.width(),
+                };
+                for (q, p) in self
+                    .matrix
+                    .ones_in(ext.rows.clone(), ext.cols.clone())
+                {
+                    let attr = sv.attrs[p - ext.cols.start];
+                    // lines 7-8: the mapping function ncd <- m_qp * nad_p
+                    let nad = msg.nad(attr);
+                    let ncd = 1 * nad; // m_qp == 1 here
+                    if ncd == 1 {
+                        // lines 9-11: replace the "null" object
+                        let data =
+                            msg.data_object(attr).expect("nad==1").clone();
+                        let slot = q - ext.rows.start;
+                        out.fields[slot].1 = data;
+                    }
+                }
+                outs.push(out);
+            }
+        }
+        Ok(outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::fixtures::{fig5_matrix, fig5_trees};
+    use crate::schema::VersionNo;
+
+    fn incoming(t: &SchemaTree, values: &[(usize, Json)]) -> InMessage {
+        let s1 = t.schema_by_name("s1").unwrap();
+        let sv = t.version(s1, VersionNo(1)).unwrap();
+        let mut fields: Vec<_> =
+            sv.attrs.iter().map(|&a| (a, Json::Null)).collect();
+        for (i, v) in values {
+            fields[*i].1 = v.clone();
+        }
+        InMessage {
+            key: 1,
+            schema: s1,
+            version: VersionNo(1),
+            state: StateI(0),
+            ts_us: 10,
+            fields,
+        }
+    }
+
+    #[test]
+    fn maps_one_message_to_all_blocks() {
+        let (t, c) = fig5_trees();
+        let m = fig5_matrix(&t, &c);
+        let mapper = BaselineMapper::new(&m, &t, &c, StateI(0));
+        let msg = incoming(
+            &t,
+            &[(0, Json::Num(11.0)), (1, Json::Num(22.0)), (2, Json::Num(33.0))],
+        );
+        let outs = mapper.map(&msg).unwrap();
+        // ᵢm' = all (entity, version) pairs: be1(v1,v2) + be2(v1) + be3(v1)
+        assert_eq!(outs.len(), 4);
+        // be1.v2: c3<-a1=11, c4<-a3=33
+        let be1 = c.entity_by_name("be1").unwrap();
+        let out = outs
+            .iter()
+            .find(|o| o.entity == be1 && o.version == crate::cdm::CdmVersionNo(2))
+            .unwrap();
+        assert_eq!(out.fields[0].1.as_f64(), Some(11.0));
+        assert_eq!(out.fields[1].1.as_f64(), Some(33.0));
+        // be2.v1 is a null block for s1 → all-null payload
+        let be2 = c.entity_by_name("be2").unwrap();
+        let out = outs.iter().find(|o| o.entity == be2).unwrap();
+        assert!(out.fields.iter().all(|(_, v)| v.is_null()));
+        // be3.v1: c6<-a2=22, c7<-a1=11
+        let be3 = c.entity_by_name("be3").unwrap();
+        let out = outs.iter().find(|o| o.entity == be3).unwrap();
+        assert_eq!(out.fields[0].1.as_f64(), Some(22.0));
+        assert_eq!(out.fields[1].1.as_f64(), Some(11.0));
+    }
+
+    #[test]
+    fn null_data_objects_stay_null() {
+        let (t, c) = fig5_trees();
+        let m = fig5_matrix(&t, &c);
+        let mapper = BaselineMapper::new(&m, &t, &c, StateI(0));
+        // only a2 carries data
+        let msg = incoming(&t, &[(1, Json::Num(22.0))]);
+        let outs = mapper.map(&msg).unwrap();
+        let be1 = c.entity_by_name("be1").unwrap();
+        let out = outs
+            .iter()
+            .find(|o| o.entity == be1 && o.version == crate::cdm::CdmVersionNo(2))
+            .unwrap();
+        // c3 maps a1 which is null → ncd = 1 * 0 = 0 → stays null
+        assert!(out.fields[0].1.is_null());
+    }
+
+    #[test]
+    fn state_mismatch_is_error() {
+        let (t, c) = fig5_trees();
+        let m = fig5_matrix(&t, &c);
+        let mapper = BaselineMapper::new(&m, &t, &c, StateI(5));
+        let msg = incoming(&t, &[]);
+        assert_eq!(
+            mapper.map(&msg).unwrap_err(),
+            MapError::StateMismatch { message: StateI(0), dmm: StateI(5) }
+        );
+    }
+
+    #[test]
+    fn unknown_version_is_error() {
+        let (t, c) = fig5_trees();
+        let m = fig5_matrix(&t, &c);
+        let mapper = BaselineMapper::new(&m, &t, &c, StateI(0));
+        let mut msg = incoming(&t, &[]);
+        msg.version = VersionNo(99);
+        assert!(matches!(
+            mapper.map(&msg).unwrap_err(),
+            MapError::UnknownColumn { .. }
+        ));
+    }
+}

@@ -1,0 +1,31 @@
+//! The two mapping engines of the paper:
+//!
+//! - [`baseline`] — Algorithm 1: sparse, sequential, over raw matrix
+//!   blocks; produces *all* possible outgoing messages including all-null
+//!   ones (§4.5). Kept as the reference semantics and the bench baseline.
+//! - [`parallel`] — Algorithm 6: dense, set-based, over `ᵢ𝔇𝔓𝔐` columns;
+//!   only non-null attributes, only non-empty outputs, parallel over
+//!   blocks and messages (§5.5).
+//!
+//! Both check the distributed-state precondition (§3.4): a message whose
+//! state `i` differs from the DMM's is a sync error, surfaced as
+//! [`MapError::StateMismatch`] and routed to error management.
+
+pub mod baseline;
+pub mod parallel;
+
+use crate::message::StateI;
+use crate::schema::{SchemaId, VersionNo};
+
+/// Mapping failures surfaced to the coordinator's error management.
+#[derive(Debug, Clone, thiserror::Error, PartialEq)]
+pub enum MapError {
+    /// §3.4: "a new schema version has been pulled from the registry for a
+    /// Kafka-message, but this version is not known to METL yet."
+    #[error("message state {message:?} out of sync with DMM state {dmm:?}")]
+    StateMismatch { message: StateI, dmm: StateI },
+    /// The message's schema version has no mapping column (not registered
+    /// or all blocks deleted).
+    #[error("no mapping column for schema {schema:?} v{}", version.0)]
+    UnknownColumn { schema: SchemaId, version: VersionNo },
+}

@@ -1,0 +1,257 @@
+//! **Algorithm 6** — parallel & dense mapping with `ᵢ𝔇𝔓𝔐` (paper §5.5).
+//!
+//! The simplified mapping function: every stored element has value 1 and
+//! every present attribute has `nad_p = 1`, so *finding* the element with
+//! index p in the dense set IS the mapping — `1 * 1 = 1` — and the data
+//! object is relabelled to `c_q` by set intersection. Three parallelism
+//! levels: messages (stream), blocks (independent mapping paths), and
+//! elements (linearly independent rows/columns of the permutation
+//! matrices). Element-level work is a handful of lookups, so this
+//! implementation parallelizes at the block and message levels and keeps
+//! the element loop tight (the paper's own implementation reserves the
+//! block split as "reserve capacity", §6.4).
+
+use std::sync::Arc;
+
+use super::MapError;
+use crate::cache::DcpmCache;
+use crate::matrix::dpm::{DpmBlock, DpmSet};
+use crate::message::{InMessage, OutMessage, StateI};
+use crate::util::threadpool::par_map;
+
+/// Parallel mapper over a DMM snapshot + column cache.
+pub struct ParallelMapper {
+    dpm: Arc<DpmSet>,
+    cache: Arc<DcpmCache>,
+    /// Parallelize across blocks when a column has at least this many.
+    pub block_parallel_threshold: usize,
+    pub threads: usize,
+}
+
+impl ParallelMapper {
+    pub fn new(dpm: Arc<DpmSet>, cache: Arc<DcpmCache>) -> Self {
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4);
+        Self::with_threads(dpm, cache, threads)
+    }
+
+    /// Construct without the `available_parallelism` syscall — the hot
+    /// path builds one mapper per event (cheap Arc clones only).
+    pub fn with_threads(
+        dpm: Arc<DpmSet>,
+        cache: Arc<DcpmCache>,
+        threads: usize,
+    ) -> Self {
+        Self { dpm, cache, block_parallel_threshold: 4, threads }
+    }
+
+    pub fn state(&self) -> StateI {
+        self.dpm.state
+    }
+
+    /// Swap in a new DMM snapshot after an update (state i+1).
+    pub fn replace_dpm(&mut self, dpm: Arc<DpmSet>) {
+        self.dpm = dpm;
+    }
+
+    /// Map one dense incoming message (Alg 6 inner loop). Returns only
+    /// non-empty outgoing messages.
+    pub fn map(&self, msg: &InMessage) -> Result<Vec<OutMessage>, MapError> {
+        if msg.state != self.dpm.state {
+            return Err(MapError::StateMismatch {
+                message: msg.state,
+                dmm: self.dpm.state,
+            });
+        }
+        // line 3: ᵢ𝒟𝒞𝒫𝓜_v^o lookup through the cache (O(1) warm)
+        let column = self.cache.column(&self.dpm, msg.schema, msg.version);
+        if column.is_empty() {
+            return Err(MapError::UnknownColumn {
+                schema: msg.schema,
+                version: msg.version,
+            });
+        }
+        // line 4: each block in the column — an independent mapping path
+        let map_block = |block: &Arc<DpmBlock>| self.map_one_block(msg, block);
+        let outs: Vec<Option<OutMessage>> =
+            if column.len() >= self.block_parallel_threshold {
+                par_map(self.threads, &column, map_block)
+            } else {
+                column.iter().map(map_block).collect()
+            };
+        Ok(outs.into_iter().flatten().collect())
+    }
+
+    /// One independent mapping path: message × block → optional output.
+    fn map_one_block(
+        &self,
+        msg: &InMessage,
+        block: &DpmBlock,
+    ) -> Option<OutMessage> {
+        // line 5: create message with empty payload
+        let mut fields = Vec::with_capacity(block.elements.len());
+        // line 6: ∀ m_qp ∈ DPM block — the simplified set-intersection
+        // mapping function (1 * 1 = 1)
+        for &(q, p) in &block.elements {
+            // "if there is ad_p ∈ MIn for the same index p": dense
+            // messages hold ~10 fields; linear scan beats hashing here.
+            if let Some((_, data)) =
+                msg.fields.iter().find(|(a, v)| *a == p && !v.is_null())
+            {
+                fields.push((q, data.clone()));
+            }
+        }
+        // line 12: only send out non-empty payloads
+        if fields.is_empty() {
+            return None;
+        }
+        Some(OutMessage {
+            key: msg.key,
+            entity: block.key.entity,
+            version: block.key.w,
+            state: msg.state,
+            ts_us: msg.ts_us,
+            fields,
+        })
+    }
+
+    /// Map a batch of messages in parallel (the stream level of §5.5).
+    /// Per-message results keep input order; errors are per-message.
+    pub fn map_batch(
+        &self,
+        msgs: &[InMessage],
+    ) -> Vec<Result<Vec<OutMessage>, MapError>> {
+        par_map(self.threads, msgs, |m| self.map(m))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::fixtures::{fig5_matrix, fig5_trees};
+    use crate::message::StateI;
+    use crate::schema::{SchemaTree, VersionNo};
+    use crate::util::json::Json;
+
+    fn setup() -> (SchemaTree, crate::cdm::CdmTree, ParallelMapper) {
+        let (t, c) = fig5_trees();
+        let m = fig5_matrix(&t, &c);
+        let dpm = Arc::new(
+            DpmSet::from_matrix(&m, &t, &c, StateI(0)).unwrap(),
+        );
+        let cache = Arc::new(DcpmCache::new(StateI(0)));
+        let mapper = ParallelMapper::new(dpm, cache);
+        (t, c, mapper)
+    }
+
+    fn dense_msg(t: &SchemaTree, idx_vals: &[(usize, f64)]) -> InMessage {
+        let s1 = t.schema_by_name("s1").unwrap();
+        let sv = t.version(s1, VersionNo(1)).unwrap();
+        InMessage {
+            key: 9,
+            schema: s1,
+            version: VersionNo(1),
+            state: StateI(0),
+            ts_us: 5,
+            fields: idx_vals
+                .iter()
+                .map(|&(i, v)| (sv.attrs[i], Json::Num(v)))
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn dense_mapping_emits_only_nonempty() {
+        let (t, c, mapper) = setup();
+        let msg = dense_msg(&t, &[(0, 11.0), (2, 33.0)]); // a1, a3
+        let outs = mapper.map(&msg).unwrap();
+        // be1.v2 gets c3<-a1, c4<-a3; be3.v1 gets c7<-a1 (c6<-a2 absent);
+        // be2 has no s1 block at all.
+        assert_eq!(outs.len(), 2);
+        let be1 = c.entity_by_name("be1").unwrap();
+        let o1 = outs.iter().find(|o| o.entity == be1).unwrap();
+        assert_eq!(o1.fields.len(), 2);
+        assert!(o1.is_dense_valid());
+        let be3 = c.entity_by_name("be3").unwrap();
+        let o3 = outs.iter().find(|o| o.entity == be3).unwrap();
+        assert_eq!(o3.fields.len(), 1);
+        assert_eq!(o3.fields[0].1.as_f64(), Some(11.0));
+    }
+
+    #[test]
+    fn all_unmapped_attrs_produce_nothing() {
+        let (t, _c, mapper) = setup();
+        // a message carrying only attributes mapped by nothing
+        let s1 = t.schema_by_name("s1").unwrap();
+        let sv = t.version(s1, VersionNo(2)).unwrap();
+        let msg = InMessage {
+            key: 1,
+            schema: s1,
+            version: VersionNo(2),
+            state: StateI(0),
+            ts_us: 0,
+            fields: vec![(sv.attrs[0], Json::Null)], // null → dense empty
+        };
+        let outs = mapper.map(&msg).unwrap();
+        assert!(outs.is_empty());
+    }
+
+    #[test]
+    fn matches_baseline_semantics() {
+        // Alg 6 == dense(Alg 1 minus all-null outputs)
+        use crate::mapper::baseline::BaselineMapper;
+        let (t, c, mapper) = setup();
+        let m = fig5_matrix(&t, &c);
+        let baseline = BaselineMapper::new(&m, &t, &c, StateI(0));
+        let sparse = dense_msg(&t, &[(0, 1.0), (1, 2.0), (2, 3.0)]);
+        let base_outs: Vec<_> = baseline
+            .map(&sparse)
+            .unwrap()
+            .into_iter()
+            .map(|o| OutMessage {
+                fields: o
+                    .fields
+                    .into_iter()
+                    .filter(|(_, v)| !v.is_null())
+                    .collect(),
+                ..o
+            })
+            .filter(|o| !o.fields.is_empty())
+            .collect();
+        let mut fast_outs = mapper.map(&sparse).unwrap();
+        fast_outs.sort_by_key(|o| (o.entity, o.version));
+        let mut base_sorted = base_outs;
+        base_sorted.sort_by_key(|o| (o.entity, o.version));
+        assert_eq!(fast_outs, base_sorted);
+    }
+
+    #[test]
+    fn state_mismatch_detected() {
+        let (t, _c, mapper) = setup();
+        let mut msg = dense_msg(&t, &[(0, 1.0)]);
+        msg.state = StateI(9);
+        assert!(matches!(
+            mapper.map(&msg).unwrap_err(),
+            MapError::StateMismatch { .. }
+        ));
+    }
+
+    #[test]
+    fn batch_maps_in_order() {
+        let (t, _c, mapper) = setup();
+        let msgs: Vec<_> = (0..64)
+            .map(|k| {
+                let mut m = dense_msg(&t, &[(0, k as f64)]);
+                m.key = k;
+                m
+            })
+            .collect();
+        let results = mapper.map_batch(&msgs);
+        assert_eq!(results.len(), 64);
+        for (k, r) in results.iter().enumerate() {
+            let outs = r.as_ref().unwrap();
+            assert!(outs.iter().all(|o| o.key == k as u64));
+        }
+    }
+}

@@ -1,0 +1,231 @@
+//! Block partitioning of `ᵢM` and largest-permutation-matrix extraction
+//! (paper §4.4 naming scheme, §5.3.1 step 2).
+//!
+//! A mapping block `MB` is the rectangle of one versioned extracting
+//! schema × one versioned business entity. Sizing a block down to its
+//! **largest permutation matrix** `PM` means discarding all-zero rows and
+//! columns; under the paper's 1:1-mapping constraint (§4.5) the remaining
+//! 1-elements *are* a permutation matrix. For unconstrained input (CSV
+//! imports) we fall back to a greedy maximum matching and report the
+//! dropped elements.
+
+use std::ops::Range;
+
+use super::{BlockKey, MappingMatrix};
+use crate::cdm::CdmTree;
+use crate::schema::SchemaTree;
+
+/// The rectangle of a block within `ᵢM` (global row/col index ranges).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BlockExtent {
+    pub rows: Range<usize>,
+    pub cols: Range<usize>,
+}
+
+impl BlockExtent {
+    pub fn area(&self) -> u64 {
+        self.rows.len() as u64 * self.cols.len() as u64
+    }
+}
+
+/// Resolve a block's rectangle from the two trees; `None` if either
+/// versioned schema no longer exists.
+pub fn block_extent(
+    tree: &SchemaTree,
+    cdm: &CdmTree,
+    key: BlockKey,
+) -> Option<BlockExtent> {
+    let sv = tree.version(key.schema, key.v)?;
+    let cv = cdm.version(key.entity, key.w)?;
+    Some(BlockExtent {
+        rows: cv.row_start()..cv.row_start() + cv.height(),
+        cols: sv.col_start()..sv.col_start() + sv.width(),
+    })
+}
+
+/// Enumerate every block key (live versions only) — the partition of `ᵢM`
+/// into `ᵢ𝔐𝔅` (Alg 2 step 3 / baseline Alg 1).
+pub fn all_block_keys(tree: &SchemaTree, cdm: &CdmTree) -> Vec<BlockKey> {
+    let mut keys = Vec::new();
+    for s in tree.schemas() {
+        for &v in &s.versions {
+            for e in cdm.entities() {
+                for &w in &e.versions {
+                    keys.push(BlockKey::new(s.id, v, e.id, w));
+                }
+            }
+        }
+    }
+    keys
+}
+
+/// Is the block all-zero (`NB` at block granularity)?
+pub fn is_null_block(m: &MappingMatrix, ext: &BlockExtent) -> bool {
+    m.ones_in(ext.rows.clone(), ext.cols.clone()).is_empty()
+}
+
+/// Violation of the 1:1 mapping constraint (§4.5: "we restrain the blocks
+/// to 1:1 attribute mappings").
+#[derive(Debug, thiserror::Error, PartialEq)]
+#[error("block violates 1:1 mapping: {kind} {index} has {degree} ones")]
+pub struct ConstraintViolation {
+    pub kind: &'static str,
+    pub index: usize,
+    pub degree: usize,
+}
+
+/// Extract the largest permutation matrix of a block as global (q, p)
+/// element pairs. Errors if the block is not a valid 1:1 mapping.
+pub fn largest_permutation(
+    m: &MappingMatrix,
+    ext: &BlockExtent,
+) -> Result<Vec<(usize, usize)>, ConstraintViolation> {
+    let ones = m.ones_in(ext.rows.clone(), ext.cols.clone());
+    validate_one_to_one(&ones)?;
+    Ok(ones)
+}
+
+fn validate_one_to_one(
+    ones: &[(usize, usize)],
+) -> Result<(), ConstraintViolation> {
+    // ones are row-major sorted; row duplicates are adjacent.
+    for pair in ones.windows(2) {
+        if pair[0].0 == pair[1].0 {
+            return Err(ConstraintViolation {
+                kind: "row",
+                index: pair[0].0,
+                degree: 2,
+            });
+        }
+    }
+    let mut cols: Vec<usize> = ones.iter().map(|&(_, p)| p).collect();
+    cols.sort_unstable();
+    for pair in cols.windows(2) {
+        if pair[0] == pair[1] {
+            return Err(ConstraintViolation {
+                kind: "column",
+                index: pair[0],
+                degree: 2,
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Greedy maximal-matching fallback for unconstrained blocks (CSV import
+/// path): keeps the first 1 per row whose column is still free. Returns
+/// (kept, dropped_count).
+pub fn largest_permutation_greedy(
+    m: &MappingMatrix,
+    ext: &BlockExtent,
+) -> (Vec<(usize, usize)>, usize) {
+    let ones = m.ones_in(ext.rows.clone(), ext.cols.clone());
+    let mut used_rows = std::collections::HashSet::new();
+    let mut used_cols = std::collections::HashSet::new();
+    let mut kept = Vec::new();
+    for (q, p) in &ones {
+        if used_rows.contains(q) || used_cols.contains(p) {
+            continue;
+        }
+        used_rows.insert(*q);
+        used_cols.insert(*p);
+        kept.push((*q, *p));
+    }
+    let dropped = ones.len() - kept.len();
+    (kept, dropped)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::fixtures::{fig5_matrix, fig5_trees};
+
+    #[test]
+    fn extents_are_contiguous_rectangles() {
+        let (t, c) = fig5_trees();
+        let s1 = t.schema_by_name("s1").unwrap();
+        let be1 = c.entity_by_name("be1").unwrap();
+        let key = BlockKey::new(
+            s1,
+            crate::schema::VersionNo(1),
+            be1,
+            crate::cdm::CdmVersionNo(2),
+        );
+        let ext = block_extent(&t, &c, key).unwrap();
+        assert_eq!(ext.rows.len(), 2);
+        assert_eq!(ext.cols.len(), 3);
+        assert_eq!(ext.area(), 6);
+    }
+
+    #[test]
+    fn all_block_keys_cover_live_versions() {
+        let (t, c) = fig5_trees();
+        // schemas: s1 (2 versions) + s2 (1) = 3 columns of blocks;
+        // entities: be1 (2 versions) + be2 (1) + be3 (1) = 4 rows of blocks.
+        assert_eq!(all_block_keys(&t, &c).len(), 3 * 4);
+    }
+
+    #[test]
+    fn fig5_matrix_has_7_ones_over_30_live_elements() {
+        let (t, c) = fig5_trees();
+        let m = fig5_matrix(&t, &c);
+        assert_eq!(m.count_ones(), 7);
+        // live elements: cols of live versions (3+2+1=6) × rows of
+        // be1.v2 + be2.v1 + be3.v1 (2+1+2=5) = 30 (the fig-5 "30 elements")
+        let live_rows = 5;
+        let live_cols = 6;
+        assert_eq!(live_rows * live_cols, 30);
+    }
+
+    #[test]
+    fn largest_permutation_extracts_ones() {
+        let (t, c) = fig5_trees();
+        let m = fig5_matrix(&t, &c);
+        let s1 = t.schema_by_name("s1").unwrap();
+        let be1 = c.entity_by_name("be1").unwrap();
+        let key = BlockKey::new(s1, crate::schema::VersionNo(1), be1, crate::cdm::CdmVersionNo(2));
+        let ext = block_extent(&t, &c, key).unwrap();
+        let pm = largest_permutation(&m, &ext).unwrap();
+        assert_eq!(pm.len(), 2); // (c3,a1), (c4,a3)
+    }
+
+    #[test]
+    fn null_block_detection() {
+        let (t, c) = fig5_trees();
+        let m = fig5_matrix(&t, &c);
+        let s2 = t.schema_by_name("s2").unwrap();
+        let be3 = c.entity_by_name("be3").unwrap();
+        let key = BlockKey::new(s2, crate::schema::VersionNo(1), be3, crate::cdm::CdmVersionNo(1));
+        let ext = block_extent(&t, &c, key).unwrap();
+        assert!(is_null_block(&m, &ext));
+    }
+
+    #[test]
+    fn one_to_one_violations_detected() {
+        let mut m = MappingMatrix::new(3, 3);
+        m.set(0, 0, true);
+        m.set(0, 1, true); // row degree 2
+        let ext = BlockExtent { rows: 0..3, cols: 0..3 };
+        let err = largest_permutation(&m, &ext).unwrap_err();
+        assert_eq!(err.kind, "row");
+        let mut m = MappingMatrix::new(3, 3);
+        m.set(0, 1, true);
+        m.set(2, 1, true); // col degree 2
+        let err = largest_permutation(&m, &ext).unwrap_err();
+        assert_eq!(err.kind, "column");
+    }
+
+    #[test]
+    fn greedy_fallback_drops_conflicts() {
+        let mut m = MappingMatrix::new(3, 3);
+        m.set(0, 0, true);
+        m.set(0, 1, true);
+        m.set(1, 1, true);
+        m.set(2, 2, true);
+        let ext = BlockExtent { rows: 0..3, cols: 0..3 };
+        let (kept, dropped) = largest_permutation_greedy(&m, &ext);
+        assert_eq!(kept.len(), 3); // (0,0), (1,1), (2,2)
+        assert_eq!(dropped, 1);
+        validate_one_to_one(&kept).unwrap();
+    }
+}

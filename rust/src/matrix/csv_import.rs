@@ -1,0 +1,279 @@
+//! CSV initialization/upload path (paper §5.3.1/§5.4.2: "the
+//! initialisation can also be done via an upload of a CSV file", and the
+//! UI "provides a good way to enforce the basic rule of the system (as
+//! compared to CSV initialisation files)") — so the CSV lane must
+//! validate the 1:1 rule itself and report what it had to drop.
+//!
+//! Format (header optional, `#` comments allowed):
+//!
+//! ```csv
+//! schema,version,attribute,entity,cdm_version,cdm_attribute
+//! payments.main,1,time,Payment,1,time_of_payment
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::dpm::{DpmBlock, DpmSet};
+use super::BlockKey;
+use crate::cdm::{CdmAttrId, CdmTree, CdmVersionNo};
+use crate::message::StateI;
+use crate::schema::{AttrId, SchemaTree, VersionNo};
+
+/// One parsed CSV mapping row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsvRow {
+    pub schema: String,
+    pub version: u32,
+    pub attribute: String,
+    pub entity: String,
+    pub cdm_version: u32,
+    pub cdm_attribute: String,
+}
+
+/// Import outcome: the built set plus everything the validator rejected.
+#[derive(Debug)]
+pub struct ImportReport {
+    pub rows: usize,
+    pub imported: usize,
+    /// (line number, reason) for rows dropped by 1:1 enforcement or
+    /// unresolvable names.
+    pub rejected: Vec<(usize, String)>,
+}
+
+/// Parse CSV text into rows (no resolution yet).
+pub fn parse_csv(text: &str) -> Result<Vec<(usize, CsvRow)>> {
+    let mut rows = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+        if lineno == 0 && fields.first() == Some(&"schema") {
+            continue; // header
+        }
+        if fields.len() != 6 {
+            bail!("line {}: expected 6 fields, got {}", lineno + 1, fields.len());
+        }
+        let num = |s: &str, what: &str| -> Result<u32> {
+            s.parse()
+                .with_context(|| format!("line {}: bad {what} {s:?}", lineno + 1))
+        };
+        rows.push((
+            lineno + 1,
+            CsvRow {
+                schema: fields[0].to_string(),
+                version: num(fields[1], "version")?,
+                attribute: fields[2].to_string(),
+                entity: fields[3].to_string(),
+                cdm_version: num(fields[4], "cdm_version")?,
+                cdm_attribute: fields[5].to_string(),
+            },
+        ));
+    }
+    Ok(rows)
+}
+
+/// Resolve rows against the trees and build an `ᵢ𝔇𝔓𝔐`, enforcing the
+/// 1:1 rule per block: later rows that double-map a row or column within
+/// one block are rejected (first-wins, like the UI would refuse them).
+pub fn import_dpm(
+    text: &str,
+    tree: &SchemaTree,
+    cdm: &CdmTree,
+    state: StateI,
+) -> Result<(DpmSet, ImportReport)> {
+    let rows = parse_csv(text)?;
+    let mut report =
+        ImportReport { rows: rows.len(), imported: 0, rejected: Vec::new() };
+    let mut blocks: HashMap<BlockKey, Vec<(CdmAttrId, AttrId)>> =
+        HashMap::new();
+    for (lineno, row) in rows {
+        match resolve(&row, tree, cdm) {
+            Err(reason) => report.rejected.push((lineno, reason)),
+            Ok((key, q, p)) => {
+                let elements = blocks.entry(key).or_default();
+                if elements.iter().any(|&(eq, _)| eq == q) {
+                    report.rejected.push((
+                        lineno,
+                        format!(
+                            "1:1 violation: CDM attribute {:?} already mapped \
+                             in this block",
+                            row.cdm_attribute
+                        ),
+                    ));
+                } else if elements.iter().any(|&(_, ep)| ep == p) {
+                    report.rejected.push((
+                        lineno,
+                        format!(
+                            "1:1 violation: attribute {:?} already mapped in \
+                             this block",
+                            row.attribute
+                        ),
+                    ));
+                } else {
+                    elements.push((q, p));
+                    report.imported += 1;
+                }
+            }
+        }
+    }
+    let mut dpm = DpmSet::new(state);
+    for (key, mut elements) in blocks {
+        elements.sort();
+        dpm.insert_block(DpmBlock { key, elements });
+    }
+    Ok((dpm, report))
+}
+
+fn resolve(
+    row: &CsvRow,
+    tree: &SchemaTree,
+    cdm: &CdmTree,
+) -> std::result::Result<(BlockKey, CdmAttrId, AttrId), String> {
+    let schema = tree
+        .schema_by_name(&row.schema)
+        .ok_or_else(|| format!("unknown schema {:?}", row.schema))?;
+    let v = VersionNo(row.version);
+    let sv = tree
+        .version(schema, v)
+        .ok_or_else(|| format!("unknown version {} of {:?}", row.version, row.schema))?;
+    let p = sv
+        .attrs
+        .iter()
+        .copied()
+        .find(|a| tree.attr(*a).name == row.attribute)
+        .ok_or_else(|| {
+            format!("attribute {:?} not in {:?} v{}", row.attribute, row.schema, row.version)
+        })?;
+    let entity = cdm
+        .entity_by_name(&row.entity)
+        .ok_or_else(|| format!("unknown entity {:?}", row.entity))?;
+    let w = CdmVersionNo(row.cdm_version);
+    let cv = cdm
+        .version(entity, w)
+        .ok_or_else(|| format!("unknown CDM version {} of {:?}", row.cdm_version, row.entity))?;
+    let q = cv
+        .attrs
+        .iter()
+        .copied()
+        .find(|a| cdm.attr(*a).name == row.cdm_attribute)
+        .ok_or_else(|| {
+            format!("CDM attribute {:?} not in {:?} v{}", row.cdm_attribute, row.entity, row.cdm_version)
+        })?;
+    Ok((BlockKey::new(schema, v, entity, w), q, p))
+}
+
+/// Export an `ᵢ𝔇𝔓𝔐` back to the CSV format (round-trip / backup lane).
+pub fn export_dpm(dpm: &DpmSet, tree: &SchemaTree, cdm: &CdmTree) -> String {
+    let mut out =
+        String::from("schema,version,attribute,entity,cdm_version,cdm_attribute\n");
+    let mut blocks: Vec<_> = dpm.blocks().collect();
+    blocks.sort_by_key(|b| b.key);
+    for block in blocks {
+        let schema = tree.schema(block.key.schema);
+        let entity = cdm.entity(block.key.entity);
+        for &(q, p) in &block.elements {
+            out.push_str(&format!(
+                "{},{},{},{},{},{}\n",
+                schema.name,
+                block.key.v.0,
+                tree.attr(p).name,
+                entity.name,
+                block.key.w.0,
+                cdm.attr(q).name
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::fixtures::{fig5_matrix, fig5_trees};
+
+    #[test]
+    fn parse_basic_csv() {
+        let text = "schema,version,attribute,entity,cdm_version,cdm_attribute\n\
+                    # comment\n\
+                    s1,1,a1,be1,2,c3\n\
+                    \n\
+                    s1,1,a3,be1,2,c4\n";
+        let rows = parse_csv(text).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].1.attribute, "a1");
+        assert_eq!(rows[1].0, 5); // line number preserved
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(parse_csv("a,b,c\n").is_err());
+        assert!(parse_csv("s1,x,a1,be1,2,c3\n").is_err());
+    }
+
+    #[test]
+    fn import_builds_fig5_dpm() {
+        let (t, c) = fig5_trees();
+        let text = "\
+            s1,1,a1,be1,2,c3\n\
+            s1,1,a3,be1,2,c4\n\
+            s1,2,a1,be1,2,c3\n\
+            s1,2,a3,be1,2,c4\n\
+            s2,1,a6,be2,1,c5\n\
+            s1,1,a2,be3,1,c6\n\
+            s1,1,a1,be3,1,c7\n";
+        let (dpm, report) = import_dpm(text, &t, &c, StateI(0)).unwrap();
+        assert_eq!(report.imported, 7);
+        assert!(report.rejected.is_empty());
+        // equals the fixture matrix compiled through Alg 2
+        let m = fig5_matrix(&t, &c);
+        let direct =
+            crate::matrix::dpm::DpmSet::from_matrix(&m, &t, &c, StateI(0))
+                .unwrap();
+        assert!(dpm.same_elements(&direct));
+    }
+
+    #[test]
+    fn import_enforces_one_to_one() {
+        let (t, c) = fig5_trees();
+        let text = "\
+            s1,1,a1,be1,2,c3\n\
+            s1,1,a2,be1,2,c3\n\
+            s1,1,a1,be1,2,c4\n";
+        let (dpm, report) = import_dpm(text, &t, &c, StateI(0)).unwrap();
+        assert_eq!(report.imported, 1);
+        assert_eq!(report.rejected.len(), 2);
+        assert!(report.rejected[0].1.contains("1:1 violation"));
+        assert_eq!(dpm.n_elements(), 1);
+    }
+
+    #[test]
+    fn import_reports_unresolvable_names() {
+        let (t, c) = fig5_trees();
+        let text = "\
+            ghost,1,a1,be1,2,c3\n\
+            s1,9,a1,be1,2,c3\n\
+            s1,1,zz,be1,2,c3\n\
+            s1,1,a1,be9,1,c3\n\
+            s1,1,a1,be1,2,zz\n";
+        let (dpm, report) = import_dpm(text, &t, &c, StateI(0)).unwrap();
+        assert_eq!(report.imported, 0);
+        assert_eq!(report.rejected.len(), 5);
+        assert_eq!(dpm.n_blocks(), 0);
+    }
+
+    #[test]
+    fn export_import_roundtrip() {
+        let (t, c) = fig5_trees();
+        let m = fig5_matrix(&t, &c);
+        let dpm = crate::matrix::dpm::DpmSet::from_matrix(&m, &t, &c, StateI(0))
+            .unwrap();
+        let csv = export_dpm(&dpm, &t, &c);
+        let (back, report) = import_dpm(&csv, &t, &c, StateI(0)).unwrap();
+        assert!(report.rejected.is_empty());
+        assert!(back.same_elements(&dpm));
+    }
+}

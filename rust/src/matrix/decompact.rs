@@ -1,0 +1,42 @@
+//! Decompaction paths (paper §5.3.3) and the hybrid restore pipeline
+//! (§6.2): `ᵢ𝔇𝔘𝔖𝔅 → ᵢM → ᵢ𝔇𝔓𝔐`.
+//!
+//! The direct decompactions live on the sets themselves
+//! ([`DpmSet::decompact`], [`DusbSet::decompact`]); this module provides
+//! the composed restore used when the app restarts from the store or a
+//! configuration is copied to another instance.
+
+use super::blocks::ConstraintViolation;
+use super::dpm::DpmSet;
+use super::dusb::DusbSet;
+use crate::cdm::CdmTree;
+use crate::schema::SchemaTree;
+
+/// Recreate the in-memory `ᵢ𝔇𝔓𝔐` from the stored `ᵢ𝔇𝔘𝔖𝔅` — the
+/// "two algorithms" path of §6.2 (Alg 4 then Alg 2).
+pub fn recreate_dpm(
+    dusb: &DusbSet,
+    tree: &SchemaTree,
+    cdm: &CdmTree,
+) -> Result<DpmSet, ConstraintViolation> {
+    let m = dusb.decompact(tree, cdm);
+    DpmSet::from_matrix(&m, tree, cdm, dusb.state)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::fixtures::{fig5_matrix, fig5_trees};
+    use crate::message::StateI;
+
+    #[test]
+    fn restore_pipeline_matches_direct_build() {
+        let (t, c) = fig5_trees();
+        let m = fig5_matrix(&t, &c);
+        let direct = DpmSet::from_matrix(&m, &t, &c, StateI(3)).unwrap();
+        let dusb = DusbSet::from_matrix(&m, &t, &c, StateI(3)).unwrap();
+        let restored = recreate_dpm(&dusb, &t, &c).unwrap();
+        assert!(direct.same_elements(&restored));
+        assert_eq!(restored.state, StateI(3));
+    }
+}

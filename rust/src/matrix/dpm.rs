@@ -1,0 +1,319 @@
+//! `ᵢ𝔇𝔓𝔐` — the dense set of block-partitioned largest permutation
+//! matrices: *the* dynamic mapping matrix of the balanced strategy
+//! (paper §5.3.1, Algorithm 2).
+//!
+//! Each surviving block stores only its 1-elements as (q, p) pairs of
+//! global attribute ids; null blocks are deleted entirely. Column
+//! super-sets `ᵢ𝒟𝒞𝒫𝓜` (all blocks of one versioned extracting schema)
+//! drive the per-message lookup of Alg 6; row super-sets `ᵢ𝒟ℛ𝒫𝓜` drive
+//! the UI's reverse search (§6.3).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::blocks::{self, BlockExtent, ConstraintViolation};
+use super::{BlockKey, MappingMatrix};
+use crate::cdm::{CdmAttrId, CdmTree, CdmVersionNo, EntityId};
+use crate::message::StateI;
+use crate::schema::{AttrId, SchemaId, SchemaTree, VersionNo};
+
+/// One dense permutation-matrix block `ᵢ_ov DPM_rw`: only 1-elements.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DpmBlock {
+    pub key: BlockKey,
+    /// (c_q, a_p) pairs, sorted by q. Linearly independent by the
+    /// permutation property — each q and each p occurs at most once.
+    pub elements: Vec<(CdmAttrId, AttrId)>,
+}
+
+impl DpmBlock {
+    pub fn rank(&self) -> usize {
+        self.elements.len()
+    }
+}
+
+/// The super-super-set `ᵢ𝔇𝔓𝔐` with its column/row indexes.
+#[derive(Debug, Clone, Default)]
+pub struct DpmSet {
+    pub state: StateI,
+    blocks: HashMap<BlockKey, Arc<DpmBlock>>,
+    by_col: HashMap<(SchemaId, VersionNo), Vec<BlockKey>>,
+    by_row: HashMap<(EntityId, CdmVersionNo), Vec<BlockKey>>,
+}
+
+impl DpmSet {
+    pub fn new(state: StateI) -> Self {
+        Self { state, ..Default::default() }
+    }
+
+    /// **Algorithm 2**: transform `ᵢM` into `ᵢ𝔇𝔓𝔐`.
+    ///
+    /// Partition into blocks, skip null blocks, size each survivor down to
+    /// its largest permutation matrix, block-partition into elements and
+    /// keep only the 1s. Errors on 1:1-constraint violations.
+    pub fn from_matrix(
+        m: &MappingMatrix,
+        tree: &SchemaTree,
+        cdm: &CdmTree,
+        state: StateI,
+    ) -> Result<DpmSet, ConstraintViolation> {
+        let mut set = DpmSet::new(state);
+        for key in blocks::all_block_keys(tree, cdm) {
+            let ext = blocks::block_extent(tree, cdm, key).expect("live block");
+            if blocks::is_null_block(m, &ext) {
+                continue; // null blocks are deleted (Alg 2 step 4)
+            }
+            let pm = blocks::largest_permutation(m, &ext)?;
+            set.insert_block(DpmBlock {
+                key,
+                elements: pm
+                    .into_iter()
+                    .map(|(q, p)| (CdmAttrId(q as u32), AttrId(p as u32)))
+                    .collect(),
+            });
+        }
+        Ok(set)
+    }
+
+    pub fn insert_block(&mut self, block: DpmBlock) {
+        let key = block.key;
+        if self.blocks.insert(key, Arc::new(block)).is_none() {
+            self.by_col.entry(key.col_key()).or_default().push(key);
+            self.by_row.entry(key.row_key()).or_default().push(key);
+        }
+    }
+
+    pub fn remove_block(&mut self, key: BlockKey) -> Option<Arc<DpmBlock>> {
+        let removed = self.blocks.remove(&key)?;
+        if let Some(v) = self.by_col.get_mut(&key.col_key()) {
+            v.retain(|k| *k != key);
+        }
+        if let Some(v) = self.by_row.get_mut(&key.row_key()) {
+            v.retain(|k| *k != key);
+        }
+        Some(removed)
+    }
+
+    pub fn block(&self, key: BlockKey) -> Option<&Arc<DpmBlock>> {
+        self.blocks.get(&key)
+    }
+
+    pub fn blocks(&self) -> impl Iterator<Item = &Arc<DpmBlock>> {
+        self.blocks.values()
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Total stored mapping elements (the compaction metric of fig 5).
+    pub fn n_elements(&self) -> usize {
+        self.blocks.values().map(|b| b.elements.len()).sum()
+    }
+
+    /// Column super-set `ᵢ𝒟𝒞𝒫𝓜_v^o`: the blocks mapping one incoming
+    /// message — the Alg 6 lookup.
+    pub fn column(&self, schema: SchemaId, v: VersionNo) -> Vec<Arc<DpmBlock>> {
+        self.by_col
+            .get(&(schema, v))
+            .map(|keys| {
+                let mut blocks: Vec<Arc<DpmBlock>> = keys
+                    .iter()
+                    .map(|k| Arc::clone(&self.blocks[k]))
+                    .collect();
+                blocks.sort_by_key(|b| b.key);
+                blocks
+            })
+            .unwrap_or_default()
+    }
+
+    /// Row super-set `ᵢ𝒟ℛ𝒫𝓜_w^r`: the reverse search of §6.3 — which
+    /// incoming schema versions feed one business-entity version.
+    pub fn row(&self, entity: EntityId, w: CdmVersionNo) -> Vec<Arc<DpmBlock>> {
+        self.by_row
+            .get(&(entity, w))
+            .map(|keys| {
+                let mut blocks: Vec<Arc<DpmBlock>> = keys
+                    .iter()
+                    .map(|k| Arc::clone(&self.blocks[k]))
+                    .collect();
+                blocks.sort_by_key(|b| b.key);
+                blocks
+            })
+            .unwrap_or_default()
+    }
+
+    /// All column keys present (used by update case 3 to locate the
+    /// previous version's column super-set).
+    pub fn column_keys(&self) -> Vec<(SchemaId, VersionNo)> {
+        let mut keys: Vec<_> = self.by_col.keys().copied().collect();
+        keys.sort();
+        keys
+    }
+
+    pub fn row_keys(&self) -> Vec<(EntityId, CdmVersionNo)> {
+        let mut keys: Vec<_> = self.by_row.keys().copied().collect();
+        keys.sort();
+        keys
+    }
+
+    /// Remove every block of a column super-set; returns removed keys
+    /// (update case 1).
+    pub fn remove_column(&mut self, schema: SchemaId, v: VersionNo) -> Vec<BlockKey> {
+        let keys = self.by_col.remove(&(schema, v)).unwrap_or_default();
+        for key in &keys {
+            self.blocks.remove(key);
+            if let Some(vv) = self.by_row.get_mut(&key.row_key()) {
+                vv.retain(|k| k != key);
+            }
+        }
+        keys
+    }
+
+    /// Remove every block of a row super-set (update case 2 / §5.4.3
+    /// cleanup).
+    pub fn remove_row(&mut self, entity: EntityId, w: CdmVersionNo) -> Vec<BlockKey> {
+        let keys = self.by_row.remove(&(entity, w)).unwrap_or_default();
+        for key in &keys {
+            self.blocks.remove(key);
+            if let Some(vv) = self.by_col.get_mut(&key.col_key()) {
+                vv.retain(|k| k != key);
+            }
+        }
+        keys
+    }
+
+    /// Rebuild the full matrix from this set (the simple §5.3.3 direction).
+    pub fn decompact(&self, n_rows: usize, n_cols: usize) -> MappingMatrix {
+        let mut m = MappingMatrix::new(n_rows, n_cols);
+        for block in self.blocks.values() {
+            for (q, p) in &block.elements {
+                m.set(q.index(), p.index(), true);
+            }
+        }
+        m
+    }
+
+    /// Structural equality ignoring state (used by restore tests).
+    pub fn same_elements(&self, other: &DpmSet) -> bool {
+        if self.blocks.len() != other.blocks.len() {
+            return false;
+        }
+        self.blocks.iter().all(|(k, b)| {
+            other.blocks.get(k).is_some_and(|ob| {
+                let mut a = b.elements.clone();
+                let mut c = ob.elements.clone();
+                a.sort();
+                c.sort();
+                a == c
+            })
+        })
+    }
+}
+
+/// Extent helper re-export for callers needing rectangles.
+pub fn extent_of(
+    tree: &SchemaTree,
+    cdm: &CdmTree,
+    key: BlockKey,
+) -> Option<BlockExtent> {
+    blocks::block_extent(tree, cdm, key)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::fixtures::{fig5_matrix, fig5_trees};
+
+    #[test]
+    fn algorithm2_compacts_fig5_from_30_to_7() {
+        let (t, c) = fig5_trees();
+        let m = fig5_matrix(&t, &c);
+        let dpm = DpmSet::from_matrix(&m, &t, &c, StateI(1)).unwrap();
+        // fig 5: "the efficient standard algorithm 2 compacts the above
+        // matrix from 30 to 7 elements"
+        assert_eq!(dpm.n_elements(), 7);
+        // blocks with at least one 1: (s1v1,be1v2), (s1v2,be1v2),
+        // (s2v1,be2v1), (s1v1,be3v1) = 4  (+ null blocks deleted)
+        assert_eq!(dpm.n_blocks(), 4);
+    }
+
+    #[test]
+    fn column_superset_lookup() {
+        let (t, c) = fig5_trees();
+        let m = fig5_matrix(&t, &c);
+        let dpm = DpmSet::from_matrix(&m, &t, &c, StateI(0)).unwrap();
+        let s1 = t.schema_by_name("s1").unwrap();
+        let col = dpm.column(s1, VersionNo(1));
+        // s1.v1 feeds be1.v2 (2 elements) and be3.v1 (2 elements)
+        assert_eq!(col.len(), 2);
+        assert_eq!(col.iter().map(|b| b.rank()).sum::<usize>(), 4);
+        // unknown column is empty
+        assert!(dpm.column(s1, VersionNo(9)).is_empty());
+    }
+
+    #[test]
+    fn row_superset_reverse_search() {
+        let (t, c) = fig5_trees();
+        let m = fig5_matrix(&t, &c);
+        let dpm = DpmSet::from_matrix(&m, &t, &c, StateI(0)).unwrap();
+        let be1 = c.entity_by_name("be1").unwrap();
+        let row = dpm.row(be1, CdmVersionNo(2));
+        // be1.v2 is fed by s1.v1 and s1.v2
+        assert_eq!(row.len(), 2);
+        let schemas: Vec<_> = row.iter().map(|b| b.key.v).collect();
+        assert_eq!(schemas, vec![VersionNo(1), VersionNo(2)]);
+    }
+
+    #[test]
+    fn decompact_roundtrips_exactly() {
+        let (t, c) = fig5_trees();
+        let m = fig5_matrix(&t, &c);
+        let dpm = DpmSet::from_matrix(&m, &t, &c, StateI(0)).unwrap();
+        let back = dpm.decompact(m.n_rows(), m.n_cols());
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn remove_column_updates_indexes() {
+        let (t, c) = fig5_trees();
+        let m = fig5_matrix(&t, &c);
+        let mut dpm = DpmSet::from_matrix(&m, &t, &c, StateI(0)).unwrap();
+        let s1 = t.schema_by_name("s1").unwrap();
+        let removed = dpm.remove_column(s1, VersionNo(1));
+        assert_eq!(removed.len(), 2);
+        assert!(dpm.column(s1, VersionNo(1)).is_empty());
+        let be3 = c.entity_by_name("be3").unwrap();
+        assert!(dpm.row(be3, CdmVersionNo(1)).is_empty());
+        // s1.v2 block survives
+        assert_eq!(dpm.column(s1, VersionNo(2)).len(), 1);
+        assert_eq!(dpm.n_elements(), 3);
+    }
+
+    #[test]
+    fn remove_row_updates_indexes() {
+        let (t, c) = fig5_trees();
+        let m = fig5_matrix(&t, &c);
+        let mut dpm = DpmSet::from_matrix(&m, &t, &c, StateI(0)).unwrap();
+        let be1 = c.entity_by_name("be1").unwrap();
+        let removed = dpm.remove_row(be1, CdmVersionNo(2));
+        assert_eq!(removed.len(), 2);
+        assert_eq!(dpm.n_elements(), 3);
+        let s1 = t.schema_by_name("s1").unwrap();
+        // s1.v1 still feeds be3.v1
+        assert_eq!(dpm.column(s1, VersionNo(1)).len(), 1);
+    }
+
+    #[test]
+    fn same_elements_ignores_order() {
+        let (t, c) = fig5_trees();
+        let m = fig5_matrix(&t, &c);
+        let a = DpmSet::from_matrix(&m, &t, &c, StateI(0)).unwrap();
+        let b = DpmSet::from_matrix(&m, &t, &c, StateI(5)).unwrap();
+        assert!(a.same_elements(&b));
+        let mut c2 = DpmSet::from_matrix(&m, &t, &c, StateI(0)).unwrap();
+        let key = *c2.column_keys().first().unwrap();
+        c2.remove_column(key.0, key.1);
+        assert!(!a.same_elements(&c2));
+    }
+}

@@ -1,0 +1,395 @@
+//! `ᵢ𝔇𝔘𝔖𝔅` — the aggressive compaction strategy (paper §5.3.2,
+//! Algorithm 3): version-super-blocks are swept in ascending version
+//! order, consecutive equivalent square blocks are deduplicated, and only
+//! *unique* square blocks survive — plus **special null blocks** that mark
+//! where a permutation pattern ends (fig 5's single green 0). Null blocks
+//! that would start a sequence ("non-saved special null blocks", red in
+//! fig 5) are omitted entirely.
+//!
+//! Cross-version equivalence of square blocks is decided under the
+//! attribute-equivalence relation `≡`: an element (q, p) is canonicalized
+//! to (q, equiv_root(p)), so the v1 block {(c3,a1),(c4,a3)} and the v2
+//! block {(c3,a4≡a1),(c4,a5≡a3)} compare equal and are stored once.
+
+use std::collections::HashMap;
+
+use super::blocks;
+use super::{BlockKey, MappingMatrix};
+use crate::cdm::{CdmAttrId, CdmTree, CdmVersionNo, EntityId};
+use crate::message::StateI;
+use crate::schema::{AttrId, SchemaId, SchemaTree, VersionNo};
+use crate::util::json::Json;
+
+/// Canonical square-block content: elements as (q, equiv-root of p),
+/// sorted. The empty vec is *not* used — null blocks are a variant.
+pub type CanonPm = Vec<(CdmAttrId, AttrId)>;
+
+/// One stored unique square block.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SquareBlock {
+    /// A unique largest permutation matrix (canonical form).
+    Pm(CanonPm),
+    /// A special null block: the pattern ends at this version.
+    Null,
+}
+
+/// One entry of a version-super-block sequence.
+#[derive(Debug, Clone, PartialEq)]
+pub struct UsbEntry {
+    /// Version the pattern starts at.
+    pub v_from: VersionNo,
+    pub block: SquareBlock,
+}
+
+/// The super-set `ᵢ𝔇𝔘𝔖𝔅`, grouped by version-super-block coordinate
+/// (schema o, entity r, CDM version w).
+#[derive(Debug, Clone, Default)]
+pub struct DusbSet {
+    pub state: StateI,
+    groups: HashMap<(SchemaId, EntityId, CdmVersionNo), Vec<UsbEntry>>,
+}
+
+impl DusbSet {
+    pub fn new(state: StateI) -> Self {
+        Self { state, ..Default::default() }
+    }
+
+    /// **Algorithm 3**: transform `ᵢM` into `ᵢ𝔇𝔘𝔖𝔅`.
+    pub fn from_matrix(
+        m: &MappingMatrix,
+        tree: &SchemaTree,
+        cdm: &CdmTree,
+        state: StateI,
+    ) -> Result<DusbSet, blocks::ConstraintViolation> {
+        let mut set = DusbSet::new(state);
+        for s in tree.schemas() {
+            for e in cdm.entities() {
+                for &w in &e.versions {
+                    let mut seq: Vec<UsbEntry> = Vec::new();
+                    for &v in &s.versions {
+                        let key = BlockKey::new(s.id, v, e.id, w);
+                        let ext = blocks::block_extent(tree, cdm, key)
+                            .expect("live block");
+                        if blocks::is_null_block(m, &ext) {
+                            // NB: store only if it terminates a PM run
+                            if matches!(
+                                seq.last(),
+                                Some(UsbEntry { block: SquareBlock::Pm(_), .. })
+                            ) {
+                                seq.push(UsbEntry {
+                                    v_from: v,
+                                    block: SquareBlock::Null,
+                                });
+                            }
+                            continue;
+                        }
+                        let pm = blocks::largest_permutation(m, &ext)?;
+                        let canon = canonicalize(tree, &pm);
+                        let is_dup = matches!(
+                            seq.last(),
+                            Some(UsbEntry { block: SquareBlock::Pm(prev), .. })
+                                if *prev == canon
+                        );
+                        if !is_dup {
+                            seq.push(UsbEntry {
+                                v_from: v,
+                                block: SquareBlock::Pm(canon),
+                            });
+                        }
+                    }
+                    if !seq.is_empty() {
+                        set.groups.insert((s.id, e.id, w), seq);
+                    }
+                }
+            }
+        }
+        Ok(set)
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Stored mapping elements (PM elements only — the fig-5 "5 elements").
+    pub fn n_elements(&self) -> usize {
+        self.groups
+            .values()
+            .flatten()
+            .map(|e| match &e.block {
+                SquareBlock::Pm(canon) => canon.len(),
+                SquareBlock::Null => 0,
+            })
+            .sum()
+    }
+
+    /// Stored special null blocks (the fig-5 "special 6th element").
+    pub fn n_special_nulls(&self) -> usize {
+        self.groups
+            .values()
+            .flatten()
+            .filter(|e| matches!(e.block, SquareBlock::Null))
+            .count()
+    }
+
+    pub fn groups(
+        &self,
+    ) -> impl Iterator<Item = (&(SchemaId, EntityId, CdmVersionNo), &Vec<UsbEntry>)>
+    {
+        self.groups.iter()
+    }
+
+    pub fn group(
+        &self,
+        o: SchemaId,
+        r: EntityId,
+        w: CdmVersionNo,
+    ) -> Option<&Vec<UsbEntry>> {
+        self.groups.get(&(o, r, w))
+    }
+
+    /// **Algorithm 4**: decompact to the full matrix. Each stored block is
+    /// replayed over ascending versions until the next entry's version
+    /// (reassigning elements through `≡`), the special null block stops a
+    /// run, and leading nulls need no representation.
+    pub fn decompact(&self, tree: &SchemaTree, cdm: &CdmTree) -> MappingMatrix {
+        let mut m =
+            MappingMatrix::new(cdm.n_attr_ids(), tree.n_attr_ids());
+        for (&(o, _r, _w), seq) in &self.groups {
+            let versions = tree.versions_of(o);
+            for (idx, entry) in seq.iter().enumerate() {
+                let v_end = seq.get(idx + 1).map(|e| e.v_from);
+                let canon = match &entry.block {
+                    SquareBlock::Pm(c) => c,
+                    SquareBlock::Null => continue,
+                };
+                for &v in versions {
+                    if v < entry.v_from || v_end.is_some_and(|ve| v >= ve) {
+                        continue;
+                    }
+                    for &(q, root) in canon {
+                        // the attribute of version v descending from `root`
+                        if let Some(p) = tree.equivalent_in(root, o, v) {
+                            m.set(q.index(), p.index(), true);
+                        }
+                    }
+                }
+            }
+        }
+        m
+    }
+
+    /// Serialize for the Postgres-sim store (ids are raw numbers).
+    pub fn to_json(&self) -> Json {
+        let mut groups: Vec<_> = self.groups.iter().collect();
+        groups.sort_by_key(|(k, _)| **k);
+        let mut arr = Vec::new();
+        for (&(o, r, w), seq) in groups {
+            let mut g = Json::obj();
+            g.set("o", Json::Num(o.0 as f64));
+            g.set("r", Json::Num(r.0 as f64));
+            g.set("w", Json::Num(w.0 as f64));
+            let entries = seq
+                .iter()
+                .map(|e| {
+                    let mut j = Json::obj();
+                    j.set("v", Json::Num(e.v_from.0 as f64));
+                    match &e.block {
+                        SquareBlock::Null => j.set("null", Json::Bool(true)),
+                        SquareBlock::Pm(canon) => {
+                            let elems = canon
+                                .iter()
+                                .map(|(q, p)| {
+                                    Json::Arr(vec![
+                                        Json::Num(q.0 as f64),
+                                        Json::Num(p.0 as f64),
+                                    ])
+                                })
+                                .collect();
+                            j.set("pm", Json::Arr(elems));
+                        }
+                    }
+                    j
+                })
+                .collect();
+            g.set("seq", Json::Arr(entries));
+            arr.push(g);
+        }
+        let mut root = Json::obj();
+        root.set("state", Json::Num(self.state.0 as f64));
+        root.set("groups", Json::Arr(arr));
+        root
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<DusbSet> {
+        use anyhow::{anyhow, Context};
+        let state = StateI(j.get("state").and_then(Json::as_u64).unwrap_or(0));
+        let mut set = DusbSet::new(state);
+        let groups = j
+            .get("groups")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing groups"))?;
+        for g in groups {
+            let num = |k: &str| -> anyhow::Result<u32> {
+                Ok(g.get(k)
+                    .and_then(Json::as_u64)
+                    .with_context(|| format!("missing {k}"))? as u32)
+            };
+            let key = (
+                SchemaId(num("o")?),
+                EntityId(num("r")?),
+                CdmVersionNo(num("w")?),
+            );
+            let mut seq = Vec::new();
+            for e in g
+                .get("seq")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing seq"))?
+            {
+                let v = VersionNo(
+                    e.get("v").and_then(Json::as_u64).ok_or_else(|| anyhow!("missing v"))?
+                        as u32,
+                );
+                let block = if e.get("null").and_then(Json::as_bool) == Some(true)
+                {
+                    SquareBlock::Null
+                } else {
+                    let pm = e
+                        .get("pm")
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| anyhow!("missing pm"))?;
+                    SquareBlock::Pm(
+                        pm.iter()
+                            .map(|pair| {
+                                let pair =
+                                    pair.as_arr().ok_or_else(|| anyhow!("bad pair"))?;
+                                Ok((
+                                    CdmAttrId(
+                                        pair[0]
+                                            .as_u64()
+                                            .ok_or_else(|| anyhow!("bad q"))?
+                                            as u32,
+                                    ),
+                                    AttrId(
+                                        pair[1]
+                                            .as_u64()
+                                            .ok_or_else(|| anyhow!("bad p"))?
+                                            as u32,
+                                    ),
+                                ))
+                            })
+                            .collect::<anyhow::Result<Vec<_>>>()?,
+                    )
+                };
+                seq.push(UsbEntry { v_from: v, block });
+            }
+            set.groups.insert(key, seq);
+        }
+        Ok(set)
+    }
+}
+
+/// Canonicalize a PM's elements: map each column through `equiv_root`.
+fn canonicalize(tree: &SchemaTree, pm: &[(usize, usize)]) -> CanonPm {
+    let mut canon: CanonPm = pm
+        .iter()
+        .map(|&(q, p)| {
+            (CdmAttrId(q as u32), tree.equiv_root(AttrId(p as u32)))
+        })
+        .collect();
+    canon.sort();
+    canon
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::dpm::DpmSet;
+    use crate::matrix::fixtures::{fig5_matrix, fig5_trees};
+
+    #[test]
+    fn algorithm3_compacts_fig5_to_5_plus_special_null() {
+        let (t, c) = fig5_trees();
+        let m = fig5_matrix(&t, &c);
+        let dusb = DusbSet::from_matrix(&m, &t, &c, StateI(1)).unwrap();
+        // fig 5: "the aggressive algorithm 3 compacts the above matrix from
+        // 30 to 5 elements with a special 6th element"
+        assert_eq!(dusb.n_elements(), 5);
+        assert_eq!(dusb.n_special_nulls(), 1);
+    }
+
+    #[test]
+    fn equivalent_version_blocks_are_deduped() {
+        let (t, c) = fig5_trees();
+        let m = fig5_matrix(&t, &c);
+        let dusb = DusbSet::from_matrix(&m, &t, &c, StateI(0)).unwrap();
+        let s1 = t.schema_by_name("s1").unwrap();
+        let be1 = c.entity_by_name("be1").unwrap();
+        let seq = dusb.group(s1, be1, CdmVersionNo(2)).unwrap();
+        // v1 and v2 blocks are ≡-equal: stored once, starting at v1
+        assert_eq!(seq.len(), 1);
+        assert_eq!(seq[0].v_from, VersionNo(1));
+        assert!(matches!(&seq[0].block, SquareBlock::Pm(c2) if c2.len() == 2));
+    }
+
+    #[test]
+    fn trailing_null_block_is_stored_leading_is_not() {
+        let (t, c) = fig5_trees();
+        let m = fig5_matrix(&t, &c);
+        let dusb = DusbSet::from_matrix(&m, &t, &c, StateI(0)).unwrap();
+        let s1 = t.schema_by_name("s1").unwrap();
+        let be3 = c.entity_by_name("be3").unwrap();
+        // be3 row block: PM at v1, all-zero at v2 → Null entry at v2
+        let seq = dusb.group(s1, be3, CdmVersionNo(1)).unwrap();
+        assert_eq!(seq.len(), 2);
+        assert!(matches!(seq[1].block, SquareBlock::Null));
+        assert_eq!(seq[1].v_from, VersionNo(2));
+        // be2 never maps s1: no group at all (red non-saved null blocks)
+        let be2 = c.entity_by_name("be2").unwrap();
+        assert!(dusb.group(s1, be2, CdmVersionNo(1)).is_none());
+    }
+
+    #[test]
+    fn algorithm4_decompacts_exactly() {
+        let (t, c) = fig5_trees();
+        let m = fig5_matrix(&t, &c);
+        let dusb = DusbSet::from_matrix(&m, &t, &c, StateI(0)).unwrap();
+        let back = dusb.decompact(&t, &c);
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn hybrid_restore_path_dusb_to_dpm() {
+        // §6.2: recreate ᵢ𝔇𝔓𝔐 from ᵢ𝔇𝔘𝔖𝔅 via ᵢM
+        let (t, c) = fig5_trees();
+        let m = fig5_matrix(&t, &c);
+        let dpm_direct = DpmSet::from_matrix(&m, &t, &c, StateI(0)).unwrap();
+        let dusb = DusbSet::from_matrix(&m, &t, &c, StateI(0)).unwrap();
+        let recreated =
+            DpmSet::from_matrix(&dusb.decompact(&t, &c), &t, &c, StateI(0))
+                .unwrap();
+        assert!(dpm_direct.same_elements(&recreated));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let (t, c) = fig5_trees();
+        let m = fig5_matrix(&t, &c);
+        let dusb = DusbSet::from_matrix(&m, &t, &c, StateI(7)).unwrap();
+        let j = dusb.to_json();
+        let parsed = crate::util::json::parse(&j.to_pretty()).unwrap();
+        let back = DusbSet::from_json(&parsed).unwrap();
+        assert_eq!(back.state, StateI(7));
+        assert_eq!(back.n_elements(), dusb.n_elements());
+        assert_eq!(back.n_special_nulls(), dusb.n_special_nulls());
+        assert_eq!(back.decompact(&t, &c), m);
+    }
+
+    #[test]
+    fn dusb_never_larger_than_dpm() {
+        let (t, c) = fig5_trees();
+        let m = fig5_matrix(&t, &c);
+        let dpm = DpmSet::from_matrix(&m, &t, &c, StateI(0)).unwrap();
+        let dusb = DusbSet::from_matrix(&m, &t, &c, StateI(0)).unwrap();
+        assert!(dusb.n_elements() <= dpm.n_elements());
+    }
+}

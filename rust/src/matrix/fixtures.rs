@@ -1,0 +1,106 @@
+//! Worked-example fixtures from the paper's figures, reused by unit tests,
+//! integration tests (`cargo test figure5` / `figure6`) and benches.
+
+use super::MappingMatrix;
+use crate::cdm::{CdmTree, CdmType, CdmVersionNo};
+use crate::schema::{ExtractType, SchemaTree, VersionNo};
+
+fn cdm_f(name: &str) -> (String, CdmType, String) {
+    (name.to_string(), CdmType::Integer, String::new())
+}
+
+fn ext_f(name: &str) -> (String, ExtractType, bool) {
+    (name.to_string(), ExtractType::Int64, true)
+}
+
+/// Figure-3/figure-5 trees: schema s1 (v1: a1,a2,a3; v2: a4≡a1, a5≡a3),
+/// s2 (v1: a6); entities be1 (v1: c1,c2; v2: c3,c4), be2 (v1: c5),
+/// be3 (v1: c6,c7).
+pub fn fig5_trees() -> (SchemaTree, CdmTree) {
+    let mut t = SchemaTree::new();
+    let s1 = t.add_schema("s1", "t.s1");
+    t.add_version(s1, &[ext_f("a1"), ext_f("a2"), ext_f("a3")]);
+    // v2 drops a2; a1→a4, a3→a5 via equivalences
+    t.add_version(s1, &[ext_f("a1"), ext_f("a3")]);
+    let s2 = t.add_schema("s2", "t.s2");
+    t.add_version(s2, &[ext_f("a6")]);
+
+    let mut c = CdmTree::new();
+    let be1 = c.add_entity("be1");
+    c.add_version(be1, &[cdm_f("c1"), cdm_f("c2")]);
+    c.add_version(be1, &[cdm_f("c3"), cdm_f("c4")]);
+    let be2 = c.add_entity("be2");
+    c.add_version(be2, &[cdm_f("c5")]);
+    let be3 = c.add_entity("be3");
+    c.add_version(be3, &[cdm_f("c6"), cdm_f("c7")]);
+    (t, c)
+}
+
+/// The exact figure-5 matrix over the fig5 trees. Only be1.v2 is live for
+/// be1 (v1 deleted per §5.1's rule); 30 live elements, 7 ones.
+pub fn fig5_matrix(t: &SchemaTree, c: &CdmTree) -> MappingMatrix {
+    let mut m = MappingMatrix::new(c.n_attr_ids(), t.n_attr_ids());
+    let s1 = t.schema_by_name("s1").unwrap();
+    let s2 = t.schema_by_name("s2").unwrap();
+    let (v1, v2) = (VersionNo(1), VersionNo(2));
+    let a = |s, v, i: usize| t.version(s, v).unwrap().attrs[i].index();
+    let be1 = c.entity_by_name("be1").unwrap();
+    let be2 = c.entity_by_name("be2").unwrap();
+    let be3 = c.entity_by_name("be3").unwrap();
+    let (w1, w2) = (CdmVersionNo(1), CdmVersionNo(2));
+    let q = |e, w, i: usize| c.version(e, w).unwrap().attrs[i].index();
+    m.set(q(be1, w2, 0), a(s1, v1, 0), true); // c3 <- a1
+    m.set(q(be1, w2, 0), a(s1, v2, 0), true); // c3 <- a4 (≡a1)
+    m.set(q(be1, w2, 1), a(s1, v1, 2), true); // c4 <- a3
+    m.set(q(be1, w2, 1), a(s1, v2, 1), true); // c4 <- a5 (≡a3)
+    m.set(q(be2, w1, 0), a(s2, v1, 0), true); // c5 <- a6
+    m.set(q(be3, w1, 0), a(s1, v1, 1), true); // c6 <- a2
+    m.set(q(be3, w1, 1), a(s1, v1, 0), true); // c7 <- a1
+    m
+}
+
+/// Delete be1.v1 from the fig5 CDM tree (the figure shows be1.v2 live
+/// only — §5.1: outdated CDM versions are deleted from the matrix).
+pub fn fig5_drop_old_cdm(c: &mut CdmTree) {
+    let be1 = c.entity_by_name("be1").unwrap();
+    c.delete_version(be1, CdmVersionNo(1));
+}
+
+/// Figure-6 trees: schema s1 v1 (a1,a2,a3) and v2 (a4≡a1, a5, a6≡a2);
+/// CDM entities s1' (v1: c1,c2) and s2' (v1: c6,c7). The update events of
+/// fig 6 — adding s1.v3 (a7≡a4) and CDM v2 (c3≡c1, c4≡c2) — are applied
+/// by the test through Alg 5.
+pub fn fig6_trees() -> (SchemaTree, CdmTree) {
+    let mut t = SchemaTree::new();
+    let s1 = t.add_schema("s1", "t.s1");
+    t.add_version(s1, &[ext_f("a1"), ext_f("a2"), ext_f("a3")]);
+    // v2: a4≡a1, a5 (new), a6≡a2 — figure's header row
+    t.add_version(s1, &[ext_f("a1"), ext_f("a5"), ext_f("a2")]);
+    let mut c = CdmTree::new();
+    let e1 = c.add_entity("s1cdm");
+    c.add_version(e1, &[cdm_f("c1"), cdm_f("c2")]);
+    let e2 = c.add_entity("s2cdm");
+    c.add_version(e2, &[cdm_f("c6"), cdm_f("c7")]);
+    (t, c)
+}
+
+/// The figure-6 starting matrix (states before the two update events):
+/// rows s1cdm.v1 {c1,c2} and s2cdm.v1 {c6,c7}; columns s1.v1 {a1,a2,a3},
+/// s1.v2 {a4≡a1, a5, a6≡a2}.
+pub fn fig6_matrix(t: &SchemaTree, c: &CdmTree) -> MappingMatrix {
+    let mut m = MappingMatrix::new(c.n_attr_ids(), t.n_attr_ids());
+    let s1 = t.schema_by_name("s1").unwrap();
+    let (v1, v2) = (VersionNo(1), VersionNo(2));
+    let a = |v, i: usize| t.version(s1, v).unwrap().attrs[i].index();
+    let e1 = c.entity_by_name("s1cdm").unwrap();
+    let e2 = c.entity_by_name("s2cdm").unwrap();
+    let w1 = CdmVersionNo(1);
+    let q = |e, i: usize| c.version(e, w1).unwrap().attrs[i].index();
+    m.set(q(e1, 0), a(v1, 0), true); // c1 <- a1
+    m.set(q(e1, 0), a(v2, 0), true); // c1 <- a4 (≡a1)
+    m.set(q(e1, 1), a(v1, 2), true); // c2 <- a3
+    m.set(q(e1, 1), a(v2, 2), true); // c2 <- a6 (figure: c2 maps a3 and a6≡a2)
+    m.set(q(e2, 0), a(v1, 1), true); // c6 <- a2
+    m.set(q(e2, 1), a(v1, 0), true); // c7 <- a1
+    m
+}

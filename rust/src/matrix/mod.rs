@@ -1,0 +1,291 @@
+//! The mapping matrix `ᵢM` and the dynamic mapping matrix (DMM) — the
+//! paper's primary contribution (§4–§5).
+//!
+//! `ᵢM` is the `ᵢm × ᵢn` 0/1 parameter matrix over all CDM attributes
+//! (rows, `q`) × all extracting attributes (columns, `p`); figure 3. It is
+//! block-scoped by versioned schemata: block `ᵢMB` = (schema o, version v)
+//! × (entity r, CDM version w) covers a contiguous rectangle because each
+//! versioned schema owns a contiguous id range.
+//!
+//! Note on orientation: §4.3's prose swaps `m`/`n` relative to figure 3;
+//! we follow the *figures* (and the `m_qp` index order): rows are CDM
+//! attributes `c_q`, columns are extracting attributes `a_p`, and the
+//! estimated row:column ratio is 1:100 (§5.2).
+
+pub mod blocks;
+pub mod compaction;
+pub mod csv_import;
+pub mod decompact;
+pub mod dpm;
+pub mod dusb;
+pub mod fixtures;
+pub mod update;
+
+use crate::cdm::{CdmVersionNo, EntityId};
+use crate::schema::{SchemaId, VersionNo};
+
+/// Identity of one mapping block `ᵢ_ov MB_rw`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BlockKey {
+    pub schema: SchemaId,
+    pub v: VersionNo,
+    pub entity: EntityId,
+    pub w: CdmVersionNo,
+}
+
+impl BlockKey {
+    pub fn new(
+        schema: SchemaId,
+        v: VersionNo,
+        entity: EntityId,
+        w: CdmVersionNo,
+    ) -> Self {
+        Self { schema, v, entity, w }
+    }
+
+    /// The column super-block coordinate (paper: `𝒞` — all blocks of one
+    /// versioned extracting schema).
+    pub fn col_key(&self) -> (SchemaId, VersionNo) {
+        (self.schema, self.v)
+    }
+
+    /// The row super-block coordinate (`ℛ`).
+    pub fn row_key(&self) -> (EntityId, CdmVersionNo) {
+        (self.entity, self.w)
+    }
+
+    /// The version super-block coordinate (`𝒱` — all versions of schema o
+    /// against one versioned entity; the unit of Alg 3).
+    pub fn version_key(&self) -> (SchemaId, EntityId, CdmVersionNo) {
+        (self.schema, self.entity, self.w)
+    }
+}
+
+/// The full sparse parameter matrix `ᵢM` as a row-major bitmap.
+///
+/// At the paper's estimated scale (§3.5: up to 10⁹ elements before the
+/// §5.1 CDM-version rule) this is a 125 MB bitset — cheap enough to hold
+/// as ground truth while the DMM sets do the real work.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MappingMatrix {
+    n_rows: usize,
+    n_cols: usize,
+    words_per_row: usize,
+    bits: Vec<u64>,
+}
+
+impl MappingMatrix {
+    pub fn new(n_rows: usize, n_cols: usize) -> Self {
+        let words_per_row = n_cols.div_ceil(64);
+        Self {
+            n_rows,
+            n_cols,
+            words_per_row,
+            bits: vec![0; n_rows * words_per_row],
+        }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    /// Total parameter count `ᵢm × ᵢn` (the paper's "number of elements").
+    pub fn n_elements(&self) -> u64 {
+        self.n_rows as u64 * self.n_cols as u64
+    }
+
+    #[inline]
+    pub fn get(&self, q: usize, p: usize) -> bool {
+        debug_assert!(q < self.n_rows && p < self.n_cols);
+        let word = self.bits[q * self.words_per_row + p / 64];
+        (word >> (p % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, q: usize, p: usize, value: bool) {
+        debug_assert!(q < self.n_rows && p < self.n_cols, "({q},{p}) out of ({}x{})", self.n_rows, self.n_cols);
+        let word = &mut self.bits[q * self.words_per_row + p / 64];
+        if value {
+            *word |= 1 << (p % 64);
+        } else {
+            *word &= !(1 << (p % 64));
+        }
+    }
+
+    /// Number of 1-elements in the whole matrix.
+    pub fn count_ones(&self) -> u64 {
+        self.bits.iter().map(|w| w.count_ones() as u64).sum()
+    }
+
+    /// Number of 1-elements within a rectangle.
+    pub fn count_ones_in(
+        &self,
+        rows: std::ops::Range<usize>,
+        cols: std::ops::Range<usize>,
+    ) -> u64 {
+        let mut n = 0;
+        for q in rows {
+            for p in cols.clone() {
+                n += self.get(q, p) as u64;
+            }
+        }
+        n
+    }
+
+    /// Iterate 1-elements of a rectangle as (q, p), row-major. Word-skips
+    /// empty 64-column runs, so null blocks cost ~cols/64 loads per row.
+    pub fn ones_in(
+        &self,
+        rows: std::ops::Range<usize>,
+        cols: std::ops::Range<usize>,
+    ) -> Vec<(usize, usize)> {
+        assert!(
+            rows.end <= self.n_rows && cols.end <= self.n_cols,
+            "block ({rows:?},{cols:?}) outside matrix {}x{} — grow() after tree changes",
+            self.n_rows,
+            self.n_cols
+        );
+        let mut out = Vec::new();
+        for q in rows {
+            let row_base = q * self.words_per_row;
+            let w_start = cols.start / 64;
+            let w_end = (cols.end + 63) / 64;
+            for wi in w_start..w_end.min(self.words_per_row) {
+                let mut word = self.bits[row_base + wi];
+                if word == 0 {
+                    continue;
+                }
+                while word != 0 {
+                    let bit = word.trailing_zeros() as usize;
+                    let p = wi * 64 + bit;
+                    if p >= cols.start && p < cols.end {
+                        out.push((q, p));
+                    }
+                    word &= word - 1;
+                }
+            }
+        }
+        out
+    }
+
+    /// Grow to at least (n_rows, n_cols), preserving content. Used when
+    /// version additions extend the trees (fig 6's yellow column blocks).
+    pub fn grow(&mut self, n_rows: usize, n_cols: usize) {
+        let n_rows = n_rows.max(self.n_rows);
+        let n_cols = n_cols.max(self.n_cols);
+        if n_rows == self.n_rows && n_cols == self.n_cols {
+            return;
+        }
+        let mut next = MappingMatrix::new(n_rows, n_cols);
+        for q in 0..self.n_rows {
+            for wi in 0..self.words_per_row {
+                let word = self.bits[q * self.words_per_row + wi];
+                if word == 0 {
+                    continue;
+                }
+                // same word layout prefix when words_per_row unchanged
+                next.bits[q * next.words_per_row + wi] |= word;
+            }
+        }
+        *self = next;
+    }
+
+    /// Zero out a rectangle (version deletions).
+    pub fn clear_block(
+        &mut self,
+        rows: std::ops::Range<usize>,
+        cols: std::ops::Range<usize>,
+    ) {
+        for q in rows {
+            for p in cols.clone() {
+                self.set(q, p, false);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_count() {
+        let mut m = MappingMatrix::new(5, 200);
+        assert_eq!(m.count_ones(), 0);
+        m.set(0, 0, true);
+        m.set(4, 199, true);
+        m.set(2, 64, true);
+        assert!(m.get(0, 0) && m.get(4, 199) && m.get(2, 64));
+        assert!(!m.get(1, 1));
+        assert_eq!(m.count_ones(), 3);
+        m.set(2, 64, false);
+        assert_eq!(m.count_ones(), 2);
+    }
+
+    #[test]
+    fn ones_in_respects_rectangle() {
+        let mut m = MappingMatrix::new(10, 300);
+        m.set(1, 10, true);
+        m.set(1, 100, true);
+        m.set(5, 10, true);
+        m.set(9, 299, true);
+        assert_eq!(m.ones_in(0..10, 0..300).len(), 4);
+        assert_eq!(m.ones_in(0..2, 0..64), vec![(1, 10)]);
+        assert_eq!(m.ones_in(1..2, 90..110), vec![(1, 100)]);
+        assert_eq!(m.ones_in(6..9, 0..300), vec![]);
+    }
+
+    #[test]
+    fn word_boundary_columns() {
+        let mut m = MappingMatrix::new(2, 130);
+        for p in [63, 64, 127, 128, 129] {
+            m.set(1, p, true);
+        }
+        assert_eq!(
+            m.ones_in(1..2, 63..130),
+            vec![(1, 63), (1, 64), (1, 127), (1, 128), (1, 129)]
+        );
+        assert_eq!(m.ones_in(1..2, 64..128).len(), 2);
+    }
+
+    #[test]
+    fn grow_preserves_content() {
+        let mut m = MappingMatrix::new(3, 70);
+        m.set(2, 69, true);
+        m.set(0, 0, true);
+        m.grow(5, 200);
+        assert_eq!(m.n_rows(), 5);
+        assert_eq!(m.n_cols(), 200);
+        assert!(m.get(2, 69) && m.get(0, 0));
+        assert_eq!(m.count_ones(), 2);
+        // shrink requests are no-ops
+        m.grow(1, 1);
+        assert_eq!(m.n_rows(), 5);
+    }
+
+    #[test]
+    fn clear_block_zeroes_rectangle() {
+        let mut m = MappingMatrix::new(4, 100);
+        for q in 0..4 {
+            for p in 0..100 {
+                m.set(q, p, true);
+            }
+        }
+        m.clear_block(1..3, 10..20);
+        assert_eq!(m.count_ones(), 400 - 20);
+        assert!(!m.get(1, 10));
+        assert!(m.get(0, 10) && m.get(3, 19) && m.get(1, 9));
+    }
+
+    #[test]
+    fn block_key_coordinates() {
+        let k = BlockKey::new(SchemaId(1), VersionNo(2), EntityId(3), CdmVersionNo(4));
+        assert_eq!(k.col_key(), (SchemaId(1), VersionNo(2)));
+        assert_eq!(k.row_key(), (EntityId(3), CdmVersionNo(4)));
+        assert_eq!(k.version_key(), (SchemaId(1), EntityId(3), CdmVersionNo(4)));
+    }
+}

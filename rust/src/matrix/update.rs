@@ -1,0 +1,365 @@
+//! **Algorithm 5** — automated updates of the DMM (paper §5.4): transition
+//! `ᵢ𝔇𝔓𝔐 → ᵢ₊₁𝔇𝔓𝔐` in response to the four external triggers, working
+//! on sets only (never rebuilding the full matrix).
+//!
+//! - case 1: deleted extracting version `ᵢD_v^o` → drop the column set;
+//! - case 2: deleted CDM version `ᵢR_w^r` → drop the row set;
+//! - case 3: added extracting version `ᵢ₊₁D_{v+1}^o` → copy known values
+//!   along attribute equivalences from the previous version's column set;
+//! - case 4: added CDM version `ᵢ₊₁R_{w+1}^r` → same on row level, then
+//!   delete the previous CDM version's rows (§5.4.3 cleanup rule: one
+//!   business-entity version only).
+//!
+//! Copies that cannot reassign every element produce **notices** ("inform
+//! the user about newly created smaller permutation matrices", fig 6) —
+//! the semi-automated part of the workflow (§5.4.2).
+
+use super::dpm::{DpmBlock, DpmSet};
+use super::BlockKey;
+use crate::cdm::{CdmTree, CdmVersionNo, EntityId};
+use crate::message::StateI;
+use crate::schema::{SchemaId, SchemaTree, VersionNo};
+
+/// The four update triggers of §3.5 / Alg 5.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChangeCase {
+    DeletedSchemaVersion { schema: SchemaId, v: VersionNo },
+    DeletedCdmVersion { entity: EntityId, w: CdmVersionNo },
+    AddedSchemaVersion { schema: SchemaId, v: VersionNo },
+    AddedCdmVersion { entity: EntityId, w: CdmVersionNo },
+}
+
+/// User-facing notice emitted by an automated update (§5.4.2).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Notice {
+    /// The copied block is smaller than its source — a mapped attribute
+    /// was deleted; the user should double-check the new block.
+    SmallerPermutation { block: BlockKey, old_rank: usize, new_rank: usize },
+    /// The copy produced no elements at all (new null block).
+    EmptyBlock { source: BlockKey },
+    /// Case 3/4 found no previous version to copy from: the user must
+    /// initialize the block manually (UI / CSV path, §5.4.2).
+    NeedsManualInit { schema: Option<SchemaId>, entity: Option<EntityId> },
+}
+
+/// Outcome of one automated update.
+#[derive(Debug, Clone, Default)]
+pub struct UpdateReport {
+    pub blocks_added: usize,
+    pub blocks_removed: usize,
+    pub elements_added: usize,
+    pub elements_removed: usize,
+    pub notices: Vec<Notice>,
+}
+
+impl UpdateReport {
+    /// Size of the diff-set handled automatically (§3.5: "up to 100.000
+    /// elements ... virtually impossible to update for a user").
+    pub fn diff_elements(&self) -> usize {
+        self.elements_added + self.elements_removed
+    }
+}
+
+/// Apply Algorithm 5 to `dpm`, advancing its state to `new_state`.
+pub fn auto_update(
+    dpm: &mut DpmSet,
+    tree: &SchemaTree,
+    cdm: &CdmTree,
+    change: ChangeCase,
+    new_state: StateI,
+) -> UpdateReport {
+    let mut report = UpdateReport::default();
+    match change {
+        // case 1
+        ChangeCase::DeletedSchemaVersion { schema, v } => {
+            remove_counted(dpm, &mut report, |d| d.remove_column(schema, v));
+        }
+        // case 2
+        ChangeCase::DeletedCdmVersion { entity, w } => {
+            remove_counted(dpm, &mut report, |d| d.remove_row(entity, w));
+        }
+        // case 3
+        ChangeCase::AddedSchemaVersion { schema, v } => {
+            let prev = dpm
+                .column_keys()
+                .into_iter()
+                .filter(|(s, pv)| *s == schema && *pv < v)
+                .map(|(_, pv)| pv)
+                .max();
+            let Some(prev) = prev else {
+                report.notices.push(Notice::NeedsManualInit {
+                    schema: Some(schema),
+                    entity: None,
+                });
+                dpm.state = new_state;
+                return report;
+            };
+            for block in dpm.column(schema, prev) {
+                let mut elements = Vec::with_capacity(block.elements.len());
+                for &(q, p) in &block.elements {
+                    if let Some(p2) = tree.equivalent_in(p, schema, v) {
+                        elements.push((q, p2));
+                    }
+                }
+                let new_key = BlockKey::new(schema, v, block.key.entity, block.key.w);
+                if elements.is_empty() {
+                    report.notices.push(Notice::EmptyBlock { source: block.key });
+                    continue;
+                }
+                if elements.len() < block.elements.len() {
+                    report.notices.push(Notice::SmallerPermutation {
+                        block: new_key,
+                        old_rank: block.elements.len(),
+                        new_rank: elements.len(),
+                    });
+                }
+                report.blocks_added += 1;
+                report.elements_added += elements.len();
+                dpm.insert_block(DpmBlock { key: new_key, elements });
+            }
+        }
+        // case 4
+        ChangeCase::AddedCdmVersion { entity, w } => {
+            let prev = dpm
+                .row_keys()
+                .into_iter()
+                .filter(|(e, pw)| *e == entity && *pw < w)
+                .map(|(_, pw)| pw)
+                .max();
+            let Some(prev) = prev else {
+                report.notices.push(Notice::NeedsManualInit {
+                    schema: None,
+                    entity: Some(entity),
+                });
+                dpm.state = new_state;
+                return report;
+            };
+            for block in dpm.row(entity, prev) {
+                let mut elements = Vec::with_capacity(block.elements.len());
+                for &(q, p) in &block.elements {
+                    if let Some(q2) = cdm.equivalent_in(q, entity, w) {
+                        elements.push((q2, p));
+                    }
+                }
+                let new_key =
+                    BlockKey::new(block.key.schema, block.key.v, entity, w);
+                if elements.is_empty() {
+                    report.notices.push(Notice::EmptyBlock { source: block.key });
+                    continue;
+                }
+                if elements.len() < block.elements.len() {
+                    report.notices.push(Notice::SmallerPermutation {
+                        block: new_key,
+                        old_rank: block.elements.len(),
+                        new_rank: elements.len(),
+                    });
+                }
+                report.blocks_added += 1;
+                report.elements_added += elements.len();
+                dpm.insert_block(DpmBlock { key: new_key, elements });
+            }
+            // §5.4.3 cleanup: delete the previous CDM version's rows
+            remove_counted(dpm, &mut report, |d| d.remove_row(entity, prev));
+        }
+    }
+    dpm.state = new_state;
+    report
+}
+
+fn remove_counted(
+    dpm: &mut DpmSet,
+    report: &mut UpdateReport,
+    f: impl FnOnce(&mut DpmSet) -> Vec<BlockKey>,
+) {
+    // count elements before removal
+    let snapshot: Vec<(BlockKey, usize)> = dpm
+        .blocks()
+        .map(|b| (b.key, b.elements.len()))
+        .collect();
+    let removed = f(dpm);
+    for key in &removed {
+        if let Some((_, n)) = snapshot.iter().find(|(k, _)| k == key) {
+            report.elements_removed += n;
+        }
+    }
+    report.blocks_removed += removed.len();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::dpm::DpmSet;
+    use crate::matrix::fixtures::{fig6_matrix, fig6_trees};
+    use crate::schema::ExtractType;
+
+    fn setup() -> (crate::schema::SchemaTree, CdmTree, DpmSet) {
+        let (t, c) = fig6_trees();
+        let m = fig6_matrix(&t, &c);
+        let dpm = DpmSet::from_matrix(&m, &t, &c, StateI(0)).unwrap();
+        (t, c, dpm)
+    }
+
+    use crate::cdm::{CdmTree, CdmType};
+
+    /// Figure-6 event (1): adding extracting version s1.v3 with a7≡a4≡a1.
+    #[test]
+    fn fig6_event1_add_schema_version_copies_equivalences() {
+        let (mut t, c, mut dpm) = setup();
+        let s1 = t.schema_by_name("s1").unwrap();
+        let before = dpm.n_elements();
+        // v3 has only attribute a1-lineage (displayed a7≡a4)
+        let v3 = t.add_version(s1, &[("a1".into(), ExtractType::Int64, true)]);
+        let report = auto_update(
+            &mut dpm,
+            &t,
+            &c,
+            ChangeCase::AddedSchemaVersion { schema: s1, v: v3 },
+            StateI(1),
+        );
+        // fig 6 column s1.v3: c1=1 (copied via ≡), c2=0, c6=0, c7=0...
+        // source column v2 had blocks: (s1cdm: c1<-a4, c2<-a6) — c2's a6
+        // has no descendant in v3 → smaller PM notice.
+        assert_eq!(report.blocks_added, 1);
+        assert_eq!(report.elements_added, 1);
+        assert!(report
+            .notices
+            .iter()
+            .any(|n| matches!(n, Notice::SmallerPermutation { new_rank: 1, old_rank: 2, .. })));
+        assert_eq!(dpm.n_elements(), before + 1);
+        assert_eq!(dpm.state, StateI(1));
+        // the new column maps c1 <- a7
+        let col = dpm.column(s1, v3);
+        assert_eq!(col.len(), 1);
+        let e1 = c.entity_by_name("s1cdm").unwrap();
+        assert_eq!(col[0].key.entity, e1);
+    }
+
+    /// Figure-6 event (2): adding CDM version v2 (c3≡c1, c4≡c2), then
+    /// deleting the old CDM version's rows (red in the figure).
+    #[test]
+    fn fig6_event2_add_cdm_version_copies_rows_then_deletes_old() {
+        let (t, mut c, mut dpm) = setup();
+        let e1 = c.entity_by_name("s1cdm").unwrap();
+        let old_row_elements: usize = dpm
+            .row(e1, CdmVersionNo(1))
+            .iter()
+            .map(|b| b.rank())
+            .sum();
+        assert_eq!(old_row_elements, 4);
+        let w2 = c.add_version(
+            e1,
+            &[
+                ("c1".into(), CdmType::Integer, String::new()),
+                ("c2".into(), CdmType::Integer, String::new()),
+            ],
+        );
+        let report = auto_update(
+            &mut dpm,
+            &t,
+            &c,
+            ChangeCase::AddedCdmVersion { entity: e1, w: w2 },
+            StateI(2),
+        );
+        // both v1-column and v2-column blocks copied to the new rows
+        assert_eq!(report.blocks_added, 2);
+        assert_eq!(report.elements_added, 4);
+        // cleanup removed the old version's two blocks
+        assert_eq!(report.blocks_removed, 2);
+        assert_eq!(report.elements_removed, 4);
+        assert!(dpm.row(e1, CdmVersionNo(1)).is_empty());
+        let new_rows: usize =
+            dpm.row(e1, w2).iter().map(|b| b.rank()).sum();
+        assert_eq!(new_rows, 4);
+        // other entity untouched
+        let e2 = c.entity_by_name("s2cdm").unwrap();
+        assert_eq!(dpm.row(e2, CdmVersionNo(1)).len(), 1);
+    }
+
+    #[test]
+    fn case1_deletes_column_sets() {
+        let (t, c, mut dpm) = setup();
+        let s1 = t.schema_by_name("s1").unwrap();
+        let report = auto_update(
+            &mut dpm,
+            &t,
+            &c,
+            ChangeCase::DeletedSchemaVersion { schema: s1, v: VersionNo(1) },
+            StateI(1),
+        );
+        assert_eq!(report.blocks_removed, 2); // s1cdm + s2cdm blocks at v1
+        assert_eq!(report.elements_removed, 4);
+        assert!(dpm.column(s1, VersionNo(1)).is_empty());
+        assert_eq!(dpm.n_elements(), 2); // v2 column survives
+    }
+
+    #[test]
+    fn case2_deletes_row_sets() {
+        let (t, c, mut dpm) = setup();
+        let e2 = c.entity_by_name("s2cdm").unwrap();
+        let report = auto_update(
+            &mut dpm,
+            &t,
+            &c,
+            ChangeCase::DeletedCdmVersion { entity: e2, w: CdmVersionNo(1) },
+            StateI(1),
+        );
+        assert_eq!(report.blocks_removed, 1);
+        assert_eq!(report.elements_removed, 2);
+        assert!(dpm.row(e2, CdmVersionNo(1)).is_empty());
+    }
+
+    #[test]
+    fn first_version_needs_manual_init() {
+        let (mut t, c, mut dpm) = setup();
+        let s9 = t.add_schema("s9", "t.s9");
+        let v1 = t.add_version(s9, &[("x".into(), ExtractType::Int64, true)]);
+        let report = auto_update(
+            &mut dpm,
+            &t,
+            &c,
+            ChangeCase::AddedSchemaVersion { schema: s9, v: v1 },
+            StateI(1),
+        );
+        assert!(matches!(
+            report.notices[0],
+            Notice::NeedsManualInit { schema: Some(_), .. }
+        ));
+        assert_eq!(report.blocks_added, 0);
+    }
+
+    /// Update path must equal recompute-from-scratch on the ground-truth
+    /// matrix (the invariant behind "automated updates").
+    #[test]
+    fn update_equals_recompute_for_fig6_event1() {
+        let (mut t, c, mut dpm) = setup();
+        let s1 = t.schema_by_name("s1").unwrap();
+        let v3 = t.add_version(s1, &[("a1".into(), ExtractType::Int64, true)]);
+        auto_update(
+            &mut dpm,
+            &t,
+            &c,
+            ChangeCase::AddedSchemaVersion { schema: s1, v: v3 },
+            StateI(1),
+        );
+        // ground truth: extend the full matrix the same way (copy values
+        // for equivalent attributes), then recompact
+        let mut m = fig6_matrix(&t, &c);
+        m.grow(c.n_attr_ids(), t.n_attr_ids());
+        let v2 = VersionNo(2);
+        let sv2 = t.version(s1, v2).unwrap().clone();
+        let sv3 = t.version(s1, v3).unwrap().clone();
+        for q in 0..m.n_rows() {
+            for (i, &p2) in sv2.attrs.iter().enumerate() {
+                let _ = i;
+                if m.get(q, p2.index()) {
+                    if let Some(p3) = t.equivalent_in(p2, s1, v3) {
+                        let _ = &sv3;
+                        m.set(q, p3.index(), true);
+                    }
+                }
+            }
+        }
+        let recomputed = DpmSet::from_matrix(&m, &t, &c, StateI(1)).unwrap();
+        assert!(dpm.same_elements(&recomputed));
+    }
+}

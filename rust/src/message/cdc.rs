@@ -1,0 +1,163 @@
+//! Debezium-style CDC envelopes (paper §3.2, fig 2): a CDC event carries a
+//! "before" and "after" payload plus source metadata; creation events have
+//! an empty "before", deletions an empty "after".
+
+use super::InMessage;
+
+/// CDC operation kinds (Debezium op codes c/u/d, plus schema-change
+//  notifications which the pipeline's control lane consumes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CdcOp {
+    Create,
+    Update,
+    Delete,
+    /// Snapshot read during an initial load (Debezium op "r").
+    SnapshotRead,
+}
+
+impl CdcOp {
+    pub fn code(self) -> &'static str {
+        match self {
+            CdcOp::Create => "c",
+            CdcOp::Update => "u",
+            CdcOp::Delete => "d",
+            CdcOp::SnapshotRead => "r",
+        }
+    }
+
+    pub fn from_code(code: &str) -> Option<CdcOp> {
+        Some(match code {
+            "c" => CdcOp::Create,
+            "u" => CdcOp::Update,
+            "d" => CdcOp::Delete,
+            "r" => CdcOp::SnapshotRead,
+            _ => return None,
+        })
+    }
+}
+
+/// Source block of the envelope (fig 2: connector/db/table).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CdcSource {
+    pub connector: String,
+    pub db: String,
+    pub table: String,
+}
+
+/// One CDC event as extracted by the connector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CdcEvent {
+    pub op: CdcOp,
+    /// Row image before the change; None for creates/snapshot reads.
+    pub before: Option<InMessage>,
+    /// Row image after the change; None for deletes.
+    pub after: Option<InMessage>,
+    pub source: CdcSource,
+    /// Commit timestamp, µs.
+    pub ts_us: u64,
+}
+
+impl CdcEvent {
+    /// The payload METL maps: "after" for upserts, "before" for deletes
+    /// (so the DW can tombstone by key).
+    pub fn mapping_payload(&self) -> Option<&InMessage> {
+        match self.op {
+            CdcOp::Create | CdcOp::Update | CdcOp::SnapshotRead => {
+                self.after.as_ref()
+            }
+            CdcOp::Delete => self.before.as_ref(),
+        }
+    }
+
+    /// Envelope well-formedness per fig 2 semantics.
+    pub fn is_well_formed(&self) -> bool {
+        match self.op {
+            CdcOp::Create | CdcOp::SnapshotRead => {
+                self.before.is_none() && self.after.is_some()
+            }
+            CdcOp::Update => self.before.is_some() && self.after.is_some(),
+            CdcOp::Delete => self.after.is_none() && self.before.is_some(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::message::StateI;
+    use crate::schema::{AttrId, SchemaId, VersionNo};
+    use crate::util::json::Json;
+
+    fn row(key: u64) -> InMessage {
+        InMessage {
+            key,
+            schema: SchemaId(0),
+            version: VersionNo(1),
+            state: StateI(0),
+            ts_us: 1,
+            fields: vec![(AttrId(0), Json::Num(key as f64))],
+        }
+    }
+
+    fn src() -> CdcSource {
+        CdcSource {
+            connector: "postgresql".into(),
+            db: "payments".into(),
+            table: "incoming".into(),
+        }
+    }
+
+    #[test]
+    fn op_codes_roundtrip() {
+        for op in [CdcOp::Create, CdcOp::Update, CdcOp::Delete, CdcOp::SnapshotRead] {
+            assert_eq!(CdcOp::from_code(op.code()), Some(op));
+        }
+        assert_eq!(CdcOp::from_code("x"), None);
+    }
+
+    #[test]
+    fn create_has_empty_before() {
+        let ev = CdcEvent {
+            op: CdcOp::Create,
+            before: None,
+            after: Some(row(1)),
+            source: src(),
+            ts_us: 1,
+        };
+        assert!(ev.is_well_formed());
+        assert_eq!(ev.mapping_payload().unwrap().key, 1);
+    }
+
+    #[test]
+    fn delete_maps_before_image() {
+        let ev = CdcEvent {
+            op: CdcOp::Delete,
+            before: Some(row(2)),
+            after: None,
+            source: src(),
+            ts_us: 1,
+        };
+        assert!(ev.is_well_formed());
+        assert_eq!(ev.mapping_payload().unwrap().key, 2);
+    }
+
+    #[test]
+    fn malformed_envelopes_detected() {
+        let ev = CdcEvent {
+            op: CdcOp::Create,
+            before: Some(row(1)),
+            after: Some(row(1)),
+            source: src(),
+            ts_us: 1,
+        };
+        assert!(!ev.is_well_formed());
+        let ev = CdcEvent {
+            op: CdcOp::Update,
+            before: None,
+            after: Some(row(1)),
+            source: src(),
+            ts_us: 1,
+        };
+        assert!(!ev.is_well_formed());
+    }
+}

@@ -1,0 +1,294 @@
+//! JSON wire codec for messages and CDC envelopes (fig 2 shape).
+//!
+//! The wire format carries attribute *names* (like real Debezium payloads)
+//! plus the schema coordinates (o, v, state). Decoding resolves names back
+//! to `AttrId`s through the schema tree — exactly the lookup METL performs
+//! when it links a Kafka message to the mapping network (§4.1: "once a
+//! Kafka-message is linked to the mapping network...").
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::cdc::{CdcEvent, CdcOp, CdcSource};
+use super::{InMessage, OutMessage, StateI};
+use crate::cdm::CdmTree;
+use crate::schema::{SchemaId, SchemaTree, VersionNo};
+use crate::util::json::{parse, Json};
+
+/// Encode an incoming message payload as a JSON object in field order.
+pub fn encode_in(msg: &InMessage, tree: &SchemaTree) -> Json {
+    let mut payload = Json::obj();
+    for (attr, value) in &msg.fields {
+        payload.set(&tree.attr(*attr).name, value.clone());
+    }
+    let mut obj = Json::obj();
+    obj.set("key", Json::Num(msg.key as f64));
+    obj.set("schemaId", Json::Num(msg.schema.0 as f64));
+    obj.set("version", Json::Num(msg.version.0 as f64));
+    obj.set("state", Json::Num(msg.state.0 as f64));
+    obj.set("ts_us", Json::Num(msg.ts_us as f64));
+    obj.set("payload", payload);
+    obj
+}
+
+/// Decode an incoming message; unknown attribute names are an error (the
+/// message and the registry are out of sync — a §3.4 condition).
+pub fn decode_in(text: &str, tree: &SchemaTree) -> Result<InMessage> {
+    let v = parse(text).context("invalid message JSON")?;
+    decode_in_json(&v, tree)
+}
+
+pub fn decode_in_json(v: &Json, tree: &SchemaTree) -> Result<InMessage> {
+    let schema = SchemaId(
+        v.get("schemaId")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow!("missing schemaId"))? as u32,
+    );
+    let version = VersionNo(
+        v.get("version")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow!("missing version"))? as u32,
+    );
+    let sv = tree
+        .version(schema, version)
+        .ok_or_else(|| anyhow!("unknown schema version {schema:?} v{}", version.0))?;
+    let payload = v
+        .get("payload")
+        .ok_or_else(|| anyhow!("missing payload"))?;
+    let members = match payload {
+        Json::Obj(m) => m,
+        _ => bail!("payload must be an object"),
+    };
+    let mut fields = Vec::with_capacity(members.len());
+    for (name, value) in members {
+        let attr = sv
+            .attrs
+            .iter()
+            .copied()
+            .find(|a| tree.attr(*a).name == *name)
+            .ok_or_else(|| {
+                anyhow!("attribute {name:?} not in schema {schema:?} v{}", version.0)
+            })?;
+        fields.push((attr, value.clone()));
+    }
+    Ok(InMessage {
+        key: v.get("key").and_then(Json::as_u64).unwrap_or(0),
+        schema,
+        version,
+        state: StateI(v.get("state").and_then(Json::as_u64).unwrap_or(0)),
+        ts_us: v.get("ts_us").and_then(Json::as_u64).unwrap_or(0),
+        fields,
+    })
+}
+
+/// Encode an outgoing CDM message. CDM attributes additionally surface the
+/// business description as the label (§3.1: "time" → "Time of the payment").
+pub fn encode_out(msg: &OutMessage, cdm: &CdmTree) -> Json {
+    let mut payload = Json::obj();
+    for (attr, value) in &msg.fields {
+        let a = cdm.attr(*attr);
+        let label = if a.description.is_empty() { &a.name } else { &a.description };
+        payload.set(label, value.clone());
+    }
+    let mut obj = Json::obj();
+    obj.set("key", Json::Num(msg.key as f64));
+    obj.set("entity", Json::Str(cdm.entity(msg.entity).name.clone()));
+    obj.set("entityId", Json::Num(msg.entity.0 as f64));
+    obj.set("version", Json::Num(msg.version.0 as f64));
+    obj.set("state", Json::Num(msg.state.0 as f64));
+    obj.set("ts_us", Json::Num(msg.ts_us as f64));
+    obj.set("payload", payload);
+    obj
+}
+
+/// Encode a full Debezium-style CDC envelope (fig 2).
+pub fn encode_cdc(ev: &CdcEvent, tree: &SchemaTree) -> Json {
+    let img = |m: &Option<InMessage>| match m {
+        None => Json::Null,
+        Some(msg) => encode_in(msg, tree),
+    };
+    let mut source = Json::obj();
+    source.set("connector", Json::Str(ev.source.connector.clone()));
+    source.set("db", Json::Str(ev.source.db.clone()));
+    source.set("table", Json::Str(ev.source.table.clone()));
+    let mut payload = Json::obj();
+    payload.set("before", img(&ev.before));
+    payload.set("after", img(&ev.after));
+    payload.set("source", source);
+    payload.set("op", Json::Str(ev.op.code().to_string()));
+    payload.set("ts_us", Json::Num(ev.ts_us as f64));
+    let mut obj = Json::obj();
+    obj.set("payload", payload);
+    obj
+}
+
+/// Decode a CDC envelope.
+pub fn decode_cdc(text: &str, tree: &SchemaTree) -> Result<CdcEvent> {
+    let v = parse(text).context("invalid CDC JSON")?;
+    let payload = v.get("payload").ok_or_else(|| anyhow!("missing payload"))?;
+    let op = payload
+        .get("op")
+        .and_then(Json::as_str)
+        .and_then(CdcOp::from_code)
+        .ok_or_else(|| anyhow!("missing/unknown op"))?;
+    let img = |key: &str| -> Result<Option<InMessage>> {
+        match payload.get(key) {
+            None | Some(Json::Null) => Ok(None),
+            Some(j) => Ok(Some(decode_in_json(j, tree)?)),
+        }
+    };
+    let source = payload
+        .get("source")
+        .ok_or_else(|| anyhow!("missing source"))?;
+    let s = |k: &str| {
+        source
+            .get(k)
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string()
+    };
+    Ok(CdcEvent {
+        op,
+        before: img("before")?,
+        after: img("after")?,
+        source: CdcSource { connector: s("connector"), db: s("db"), table: s("table") },
+        ts_us: payload.get("ts_us").and_then(Json::as_u64).unwrap_or(0),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schema::ExtractType;
+
+    fn tree() -> (SchemaTree, SchemaId, VersionNo) {
+        let mut t = SchemaTree::new();
+        let s = t.add_schema("payments.incoming", "fx.payments.incoming");
+        let v = t.add_version(
+            s,
+            &[
+                ("id".into(), ExtractType::Int64, false),
+                ("value".into(), ExtractType::Decimal, true),
+                ("currency".into(), ExtractType::Varchar, true),
+                ("time".into(), ExtractType::MicroTimestamp, true),
+            ],
+        );
+        (t, s, v)
+    }
+
+    fn sample(t: &SchemaTree, s: SchemaId, v: VersionNo) -> InMessage {
+        let sv = t.version(s, v).unwrap();
+        InMessage {
+            key: 32201,
+            schema: s,
+            version: v,
+            state: StateI(1),
+            ts_us: 1_634_052_484_031_131,
+            fields: vec![
+                (sv.attrs[0], Json::Num(32201.0)),
+                (sv.attrs[1], Json::Num(10.0)),
+                (sv.attrs[2], Json::Str("EUR".into())),
+                (sv.attrs[3], Json::Null),
+            ],
+        }
+    }
+
+    #[test]
+    fn in_message_roundtrip() {
+        let (t, s, v) = tree();
+        let msg = sample(&t, s, v);
+        let text = encode_in(&msg, &t).to_string();
+        let back = decode_in(&text, &t).unwrap();
+        assert_eq!(back, msg);
+    }
+
+    #[test]
+    fn unknown_attribute_is_sync_error() {
+        let (t, s, v) = tree();
+        let mut j = encode_in(&sample(&t, s, v), &t);
+        let payload = match &mut j {
+            Json::Obj(m) => m.iter_mut().find(|(k, _)| k == "payload").unwrap(),
+            _ => unreachable!(),
+        };
+        payload.1.set("ghost_column", Json::Num(1.0));
+        assert!(decode_in(&j.to_string(), &t).is_err());
+    }
+
+    #[test]
+    fn unknown_version_is_sync_error() {
+        let (t, s, v) = tree();
+        let msg = InMessage { version: VersionNo(9), ..sample(&t, s, v) };
+        let mut j = Json::obj();
+        j.set("schemaId", Json::Num(msg.schema.0 as f64));
+        j.set("version", Json::Num(9.0));
+        j.set("payload", Json::obj());
+        assert!(decode_in(&j.to_string(), &t).is_err());
+    }
+
+    #[test]
+    fn cdc_envelope_roundtrip() {
+        let (t, s, v) = tree();
+        let ev = CdcEvent {
+            op: CdcOp::Update,
+            before: Some(sample(&t, s, v)),
+            after: Some(sample(&t, s, v)),
+            source: CdcSource {
+                connector: "postgresql".into(),
+                db: "payments".into(),
+                table: "incoming".into(),
+            },
+            ts_us: 42,
+        };
+        let text = encode_cdc(&ev, &t).to_string();
+        let back = decode_cdc(&text, &t).unwrap();
+        assert_eq!(back, ev);
+    }
+
+    #[test]
+    fn create_envelope_has_null_before() {
+        let (t, s, v) = tree();
+        let ev = CdcEvent {
+            op: CdcOp::Create,
+            before: None,
+            after: Some(sample(&t, s, v)),
+            source: CdcSource {
+                connector: "postgresql".into(),
+                db: "payments".into(),
+                table: "incoming".into(),
+            },
+            ts_us: 42,
+        };
+        let j = encode_cdc(&ev, &t);
+        assert!(j.get("payload").unwrap().get("before").unwrap().is_null());
+        let back = decode_cdc(&j.to_string(), &t).unwrap();
+        assert_eq!(back, ev);
+    }
+
+    #[test]
+    fn out_message_uses_descriptions() {
+        let mut cdm = CdmTree::new();
+        let e = cdm.add_entity("Payment");
+        let w = cdm.add_version(
+            e,
+            &[(
+                "time".into(),
+                crate::cdm::CdmType::Timestamp,
+                "Time of the payment".into(),
+            )],
+        );
+        let q = cdm.version(e, w).unwrap().attrs[0];
+        let out = OutMessage {
+            key: 1,
+            entity: e,
+            version: w,
+            state: StateI(0),
+            ts_us: 0,
+            fields: vec![(q, Json::Num(1_634_052_484_031_131.0))],
+        };
+        let j = encode_out(&out, &cdm);
+        assert!(j
+            .get("payload")
+            .unwrap()
+            .get("Time of the payment")
+            .is_some());
+    }
+}

@@ -1,0 +1,165 @@
+//! Schematized Kafka messages and Debezium-style CDC envelopes (paper §3.1,
+//! fig 2), plus the JSON codec.
+//!
+//! Two payload disciplines exist in the paper:
+//! - **sparse** (baseline system, §4.2): every attribute of the schema
+//!   version is present, "null" objects included — `nad_p ∈ {0,1}` is
+//!   explicit;
+//! - **dense** (optimized system, §5.5): only non-"null" attributes are
+//!   present, and empty-payload messages are never emitted.
+
+pub mod cdc;
+pub mod codec;
+
+use crate::cdm::{CdmAttrId, CdmVersionNo, EntityId};
+use crate::schema::{AttrId, SchemaId, VersionNo};
+use crate::util::json::Json;
+
+/// The mapping-system state `i` a message is pinned to (paper §3.4: every
+/// core element inherits the state; components check sync and error out).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct StateI(pub u64);
+
+/// An incoming schematized Kafka message `ᵢMIn_v^o`: pairs of extracting
+/// attributes and data objects.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InMessage {
+    /// Partitioning key (row key of the source record).
+    pub key: u64,
+    pub schema: SchemaId,
+    pub version: VersionNo,
+    pub state: StateI,
+    /// Event time (µs since epoch, Debezium-style).
+    pub ts_us: u64,
+    /// Attribute/data-object pairs. Sparse messages include `Json::Null`
+    /// entries; dense messages omit them.
+    pub fields: Vec<(AttrId, Json)>,
+}
+
+impl InMessage {
+    /// `nad_p` of one attribute: number of data objects (0 or 1, §4.1).
+    pub fn nad(&self, attr: AttrId) -> u8 {
+        match self.fields.iter().find(|(a, _)| *a == attr) {
+            Some((_, v)) if !v.is_null() => 1,
+            _ => 0,
+        }
+    }
+
+    /// The data object `ad_p`, if present and non-null.
+    pub fn data_object(&self, attr: AttrId) -> Option<&Json> {
+        self.fields
+            .iter()
+            .find(|(a, v)| *a == attr && !v.is_null())
+            .map(|(_, v)| v)
+    }
+
+    /// Convert a sparse message to the dense discipline (§5.5): drop nulls.
+    pub fn to_dense(&self) -> InMessage {
+        InMessage {
+            fields: self
+                .fields
+                .iter()
+                .filter(|(_, v)| !v.is_null())
+                .cloned()
+                .collect(),
+            ..self.clone()
+        }
+    }
+
+    pub fn non_null_count(&self) -> usize {
+        self.fields.iter().filter(|(_, v)| !v.is_null()).count()
+    }
+}
+
+/// An outgoing CDM message `ᵢMOut_w^r`: pairs of CDM attributes and
+/// relabelled data objects.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OutMessage {
+    pub key: u64,
+    pub entity: EntityId,
+    pub version: CdmVersionNo,
+    pub state: StateI,
+    pub ts_us: u64,
+    pub fields: Vec<(CdmAttrId, Json)>,
+}
+
+impl OutMessage {
+    pub fn ncd(&self, attr: CdmAttrId) -> u8 {
+        match self.fields.iter().find(|(c, _)| *c == attr) {
+            Some((_, v)) if !v.is_null() => 1,
+            _ => 0,
+        }
+    }
+
+    pub fn non_null_count(&self) -> usize {
+        self.fields.iter().filter(|(_, v)| !v.is_null()).count()
+    }
+
+    /// Dense-discipline check (§5.5): no nulls, non-empty.
+    pub fn is_dense_valid(&self) -> bool {
+        !self.fields.is_empty() && self.fields.iter().all(|(_, v)| !v.is_null())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn msg() -> InMessage {
+        InMessage {
+            key: 7,
+            schema: SchemaId(0),
+            version: VersionNo(1),
+            state: StateI(3),
+            ts_us: 1_634_052_484_031_131,
+            fields: vec![
+                (AttrId(0), Json::Num(32201.0)),
+                (AttrId(1), Json::Null),
+                (AttrId(2), Json::Str("EUR".into())),
+            ],
+        }
+    }
+
+    #[test]
+    fn nad_reflects_null_formalization() {
+        let m = msg();
+        // ad_p = "null" <-> nad_p = 0 (paper §4.1)
+        assert_eq!(m.nad(AttrId(0)), 1);
+        assert_eq!(m.nad(AttrId(1)), 0);
+        assert_eq!(m.nad(AttrId(2)), 1);
+        assert_eq!(m.nad(AttrId(99)), 0); // absent == implicit null
+    }
+
+    #[test]
+    fn dense_conversion_drops_nulls_only() {
+        let m = msg().to_dense();
+        assert_eq!(m.fields.len(), 2);
+        assert_eq!(m.non_null_count(), 2);
+        assert_eq!(m.nad(AttrId(1)), 0);
+        assert_eq!(m.data_object(AttrId(2)).unwrap().as_str(), Some("EUR"));
+    }
+
+    #[test]
+    fn out_message_dense_validity() {
+        let empty = OutMessage {
+            key: 1,
+            entity: EntityId(0),
+            version: CdmVersionNo(1),
+            state: StateI(0),
+            ts_us: 0,
+            fields: vec![],
+        };
+        assert!(!empty.is_dense_valid());
+        let with_null = OutMessage {
+            fields: vec![(CdmAttrId(0), Json::Null)],
+            ..empty.clone()
+        };
+        assert!(!with_null.is_dense_valid());
+        let ok = OutMessage {
+            fields: vec![(CdmAttrId(0), Json::Num(1.0))],
+            ..empty
+        };
+        assert!(ok.is_dense_valid());
+        assert_eq!(ok.ncd(CdmAttrId(0)), 1);
+    }
+}

@@ -1,0 +1,206 @@
+//! Pipeline metrics + the fig-7 dashboard: "we record the number of
+//! transformations, the time they take and the storage requirements of the
+//! Caffeine cache" (§7).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::stats::{format_ns, LatencyRecorder, LogHistogram, Summary};
+
+/// A monotonically increasing counter, cache-line-padded so the hot-path
+/// counters of [`PipelineMetrics`] don't false-share under horizontal
+/// scaling (every event bumps three of them).
+#[derive(Debug, Default)]
+#[repr(align(64))]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Thread-safe latency channel (recorder + histogram), sharded to keep
+/// scaled instances off each other's locks (perf: EXPERIMENTS.md §Perf —
+/// a single Mutex here serialized the horizontally scaled pipeline).
+#[derive(Debug)]
+pub struct LatencyChannel {
+    shards: Vec<Shard>,
+}
+
+#[derive(Debug, Default)]
+#[repr(align(64))] // one cache line per shard
+struct Shard {
+    inner: Mutex<(LatencyRecorder, LogHistogram)>,
+}
+
+impl Default for LatencyChannel {
+    fn default() -> Self {
+        Self { shards: (0..16).map(|_| Shard::default()).collect() }
+    }
+}
+
+impl LatencyChannel {
+    fn shard(&self) -> &Shard {
+        // cheap per-thread affinity: hash the thread id
+        let id = std::thread::current().id();
+        let mut h = std::hash::DefaultHasher::new();
+        std::hash::Hash::hash(&id, &mut h);
+        let idx = std::hash::Hasher::finish(&h) as usize % self.shards.len();
+        &self.shards[idx]
+    }
+
+    pub fn record(&self, d: std::time::Duration) {
+        let mut g = self.shard().inner.lock().unwrap();
+        g.0.record(d);
+        g.1.record_ns(d.as_nanos() as u64);
+    }
+
+    fn merged(&self) -> LatencyRecorder {
+        let mut all = LatencyRecorder::new();
+        for s in &self.shards {
+            all.merge(&s.inner.lock().unwrap().0);
+        }
+        all
+    }
+
+    pub fn summary(&self) -> Summary {
+        self.merged().summary()
+    }
+
+    pub fn histogram(&self) -> String {
+        let mut merged = LogHistogram::new();
+        for s in &self.shards {
+            for &ns in s.inner.lock().unwrap().0.samples() {
+                merged.record_ns(ns as u64);
+            }
+        }
+        merged.render()
+    }
+
+    pub fn count(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.inner.lock().unwrap().0.len())
+            .sum()
+    }
+
+    pub fn samples(&self) -> Vec<f64> {
+        self.merged().samples().to_vec()
+    }
+}
+
+/// All counters/latencies of one METL deployment.
+#[derive(Debug, Default)]
+pub struct PipelineMetrics {
+    /// CDC events consumed from the source topics.
+    pub events_in: Counter,
+    /// Outgoing CDM messages produced.
+    pub messages_out: Counter,
+    /// Mapping operations (transformations) executed.
+    pub transformations: Counter,
+    /// Events routed to the dead-letter queue.
+    pub dead_letters: Counter,
+    /// State-sync retries (§3.4 out-of-sync, recovered).
+    pub sync_retries: Counter,
+    /// DMM updates applied (state transitions).
+    pub dmm_updates: Counter,
+    /// Events served through the XLA bulk lane.
+    pub bulk_events: Counter,
+    /// Per-event full mapping latency (the §7 headline metric).
+    pub map_latency: LatencyChannel,
+    /// End-to-end latency source-commit → DW-visible.
+    pub e2e_latency: LatencyChannel,
+}
+
+impl PipelineMetrics {
+    /// Render the fig-7 style text dashboard.
+    pub fn dashboard(&self, cache_bytes: usize, cache_hit_rate: f64) -> String {
+        let s = self.map_latency.summary();
+        let mut out = String::new();
+        out.push_str("+---------------- METL dashboard ----------------+\n");
+        out.push_str(&format!(
+            "| transformations   {:>12}  out msgs {:>9} |\n",
+            self.transformations.get(),
+            self.messages_out.get()
+        ));
+        out.push_str(&format!(
+            "| events in         {:>12}  bulk     {:>9} |\n",
+            self.events_in.get(),
+            self.bulk_events.get()
+        ));
+        out.push_str(&format!(
+            "| dead letters      {:>12}  retries  {:>9} |\n",
+            self.dead_letters.get(),
+            self.sync_retries.get()
+        ));
+        out.push_str(&format!(
+            "| dmm updates       {:>12}                     |\n",
+            self.dmm_updates.get()
+        ));
+        out.push_str(&format!(
+            "| map latency  mean {:>9} sigma {:>9} n={:<6} |\n",
+            format_ns(s.mean),
+            format_ns(s.std),
+            s.count
+        ));
+        out.push_str(&format!(
+            "|              p50  {:>9} p99   {:>9}          |\n",
+            format_ns(s.p50),
+            format_ns(s.p99)
+        ));
+        out.push_str(&format!(
+            "| cache    {:>8} bytes   hit-rate {:>6.2}%        |\n",
+            cache_bytes,
+            cache_hit_rate * 100.0
+        ));
+        out.push_str("+------------------------------------------------+\n");
+        out.push_str("map latency histogram:\n");
+        out.push_str(&self.map_latency.histogram());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn counters_accumulate() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn latency_channel_summary() {
+        let ch = LatencyChannel::default();
+        for ms in [1u64, 2, 3] {
+            ch.record(Duration::from_millis(ms));
+        }
+        let s = ch.summary();
+        assert_eq!(s.count, 3);
+        assert!((s.mean - 2e6).abs() < 1e3);
+        assert_eq!(ch.count(), 3);
+    }
+
+    #[test]
+    fn dashboard_renders() {
+        let m = PipelineMetrics::default();
+        m.events_in.add(1168);
+        m.transformations.add(1168);
+        m.map_latency.record(Duration::from_millis(39));
+        let d = m.dashboard(1024, 0.97);
+        assert!(d.contains("1168"));
+        assert!(d.contains("39.00ms"));
+        assert!(d.contains("97.00%"));
+    }
+}

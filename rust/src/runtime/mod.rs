@@ -1,0 +1,299 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas bulk-mapping kernels
+//! from `artifacts/` (HLO text, see python/compile/aot.py) and executes
+//! them from the coordinator's bulk lane. Python never runs here — the
+//! artifacts are self-contained XLA programs.
+//!
+//! The bulk lane exists for initial loads (paper §5.5/§6.4: horizontal
+//! scaling and extra parallelism are "reserve capacity ... for initial
+//! loads"): thousands of snapshot messages against one mapping block
+//! amortize a single compiled executable far better than per-message set
+//! lookups.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{parse, Json};
+
+/// One compiled shape variant of the bulk_map kernel.
+struct BulkVariant {
+    batch: usize,
+    p: usize,
+    q: usize,
+    /// "pallas" (the L1 tiled TPU schedule) or "jnp" (fused-dot layout,
+    /// preferred on the CPU PJRT backend; see EXPERIMENTS.md §Perf L2).
+    impl_name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT CPU runtime with all loaded executables.
+pub struct BulkRuntime {
+    variants: Vec<BulkVariant>,
+    pub platform: String,
+    preferred_impl: String,
+}
+
+/// Result of mapping one message through one block on the bulk lane:
+/// realized (q_local, p_local) pairs.
+pub type BulkMapped = Vec<(usize, usize)>;
+
+impl BulkRuntime {
+    /// Load every bulk_map variant listed in `artifacts/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<BulkRuntime> {
+        let dir = dir.as_ref();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("read {manifest_path:?} (run `make artifacts`)"))?;
+        let manifest =
+            parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let platform = client.platform_name();
+        let mut variants = Vec::new();
+        for entry in manifest
+            .get("bulk_map")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing bulk_map"))?
+        {
+            let file = entry
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("variant missing file"))?;
+            let num = |k: &str| -> Result<usize> {
+                Ok(entry
+                    .get(k)
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| anyhow!("variant missing {k}"))?
+                    as usize)
+            };
+            let path: PathBuf = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parse HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).context("compile bulk_map")?;
+            variants.push(BulkVariant {
+                batch: num("batch")?,
+                p: num("p")?,
+                q: num("q")?,
+                impl_name: entry
+                    .get("impl")
+                    .and_then(Json::as_str)
+                    .unwrap_or("pallas")
+                    .to_string(),
+                exe,
+            });
+        }
+        if variants.is_empty() {
+            bail!("manifest lists no bulk_map variants");
+        }
+        variants.sort_by_key(|v| v.batch);
+        // impl choice: the fused-dot "jnp" layout wins on the CPU backend,
+        // the pallas tile schedule on accelerators; METL_BULK_IMPL forces
+        // one for A/B benches.
+        let preferred_impl = std::env::var("METL_BULK_IMPL").unwrap_or_else(
+            |_| {
+                if platform == "cpu" { "jnp" } else { "pallas" }.to_string()
+            },
+        );
+        let preferred_impl = if variants.iter().any(|v| v.impl_name == preferred_impl) {
+            preferred_impl
+        } else {
+            variants[0].impl_name.clone()
+        };
+        Ok(BulkRuntime { variants, platform, preferred_impl })
+    }
+
+    /// The impl the chunk scheduler selects ("jnp" or "pallas").
+    pub fn preferred_impl(&self) -> &str {
+        &self.preferred_impl
+    }
+
+    /// Load if the artifacts exist; None otherwise (the coordinator then
+    /// serves everything through the Alg 6 lane).
+    pub fn try_load(dir: impl AsRef<Path>) -> Option<BulkRuntime> {
+        BulkRuntime::load(dir).ok()
+    }
+
+    /// Maximum (p, q) block dimensions the compiled variants accept.
+    pub fn block_dims(&self) -> (usize, usize) {
+        let v = self.preferred();
+        (v.p, v.q)
+    }
+
+    fn preferred(&self) -> &BulkVariant {
+        self.variants
+            .iter()
+            .find(|v| v.impl_name == self.preferred_impl)
+            .unwrap_or(&self.variants[0])
+    }
+
+    pub fn n_variants(&self) -> usize {
+        self.variants.len()
+    }
+
+    /// Map a batch of messages through one mapping block.
+    ///
+    /// `elements`: the block's permutation elements in *local* coordinates
+    /// (q_local < Q, p_local < P). `presence`: per message, the local
+    /// column indices carrying non-null data objects. Returns, per
+    /// message, the realized (q_local, p_local) pairs — the paper's
+    /// mapping function evaluated as one MXU-shaped matmul.
+    pub fn bulk_map_block(
+        &self,
+        elements: &[(usize, usize)],
+        presence: &[Vec<usize>],
+    ) -> Result<Vec<BulkMapped>> {
+        let (pmax, qmax) = self.block_dims();
+        for &(q, p) in elements {
+            if q >= qmax || p >= pmax {
+                bail!("block element ({q},{p}) exceeds compiled dims ({qmax},{pmax})");
+            }
+        }
+        // m tensor: (Q, P) row-major — one literal reused across chunks
+        let mut m_host = vec![0f32; qmax * pmax];
+        for &(q, p) in elements {
+            m_host[q * pmax + p] = 1.0;
+        }
+        let m_lit = xla::Literal::vec1(&m_host)
+            .reshape(&[qmax as i64, pmax as i64])?;
+        let mut out = Vec::with_capacity(presence.len());
+        // chunk the batch over the best-fitting variant
+        let mut start = 0;
+        while start < presence.len() {
+            let remaining = presence.len() - start;
+            let variant = self
+                .variants
+                .iter()
+                .find(|v| {
+                    v.impl_name == self.preferred_impl && v.batch >= remaining
+                })
+                .or_else(|| {
+                    self.variants
+                        .iter()
+                        .rev()
+                        .find(|v| v.impl_name == self.preferred_impl)
+                })
+                .unwrap_or_else(|| self.variants.last().unwrap());
+            let chunk = remaining.min(variant.batch);
+            let mapped = self.execute_chunk(
+                variant,
+                &m_lit,
+                &presence[start..start + chunk],
+            )?;
+            out.extend(mapped);
+            start += chunk;
+        }
+        Ok(out)
+    }
+
+    fn execute_chunk(
+        &self,
+        variant: &BulkVariant,
+        m_lit: &xla::Literal,
+        presence: &[Vec<usize>],
+    ) -> Result<Vec<BulkMapped>> {
+        let (b, p, q) = (variant.batch, variant.p, variant.q);
+        let mut x_host = vec![0f32; b * p];
+        for (i, msg) in presence.iter().enumerate() {
+            for &pi in msg {
+                if pi >= p {
+                    bail!("presence index {pi} exceeds compiled P={p}");
+                }
+                x_host[i * p + pi] = 1.0;
+            }
+        }
+        let x_lit = xla::Literal::vec1(&x_host).reshape(&[b as i64, p as i64])?;
+        let result = variant
+            .exe
+            .execute::<&xla::Literal>(&[m_lit, &x_lit])?[0][0]
+            .to_literal_sync()?;
+        let (presence_lit, src_lit) = result.to_tuple2()?;
+        let pres: Vec<f32> = presence_lit.to_vec()?;
+        let src: Vec<f32> = src_lit.to_vec()?;
+        let mut out = Vec::with_capacity(presence.len());
+        for (i, _) in presence.iter().enumerate() {
+            let mut mapped = Vec::new();
+            for qi in 0..q {
+                let v = pres[i * q + qi];
+                if v > 0.5 {
+                    let pi = src[i * q + qi];
+                    debug_assert!(pi >= 0.0);
+                    mapped.push((qi, pi as usize));
+                }
+            }
+            out.push(mapped);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn loads_manifest_and_executes_identity_block() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        };
+        let rt = BulkRuntime::load(dir).unwrap();
+        assert!(rt.n_variants() >= 1);
+        let (p, q) = rt.block_dims();
+        assert!(p >= 128 && q >= 128);
+        // identity-ish block: q_local i <- p_local i for i in 0..10
+        let elements: Vec<(usize, usize)> = (0..10).map(|i| (i, i)).collect();
+        let presence = vec![
+            vec![0, 1, 2],
+            vec![],
+            vec![9, 11], // 11 is unmapped
+        ];
+        let mapped = rt.bulk_map_block(&elements, &presence).unwrap();
+        assert_eq!(mapped[0], vec![(0, 0), (1, 1), (2, 2)]);
+        assert!(mapped[1].is_empty());
+        assert_eq!(mapped[2], vec![(9, 9)]);
+    }
+
+    #[test]
+    fn permuted_block_and_chunking() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        };
+        let rt = BulkRuntime::load(dir).unwrap();
+        // shifted permutation: q = p + 3
+        let elements: Vec<(usize, usize)> = (0..20).map(|i| (i + 3, i)).collect();
+        // 600 messages forces chunking over the 256 variant
+        let presence: Vec<Vec<usize>> =
+            (0..600).map(|i| vec![i % 20]).collect();
+        let mapped = rt.bulk_map_block(&elements, &presence).unwrap();
+        assert_eq!(mapped.len(), 600);
+        for (i, m) in mapped.iter().enumerate() {
+            assert_eq!(m, &vec![((i % 20) + 3, i % 20)]);
+        }
+    }
+
+    #[test]
+    fn rejects_oversized_blocks() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        };
+        let rt = BulkRuntime::load(dir).unwrap();
+        let (p, q) = rt.block_dims();
+        assert!(rt.bulk_map_block(&[(q, 0)], &[vec![0]]).is_err());
+        assert!(rt.bulk_map_block(&[(0, p)], &[vec![0]]).is_err());
+        assert!(rt.bulk_map_block(&[(0, 0)], &[vec![p]]).is_err());
+    }
+
+    #[test]
+    fn try_load_missing_dir_is_none() {
+        assert!(BulkRuntime::try_load("/nonexistent/path").is_none());
+    }
+}

@@ -1,0 +1,97 @@
+//! Attributes (`a_p`) of extracting schemata and their physical types.
+
+/// Global column index `p` of an attribute in the mapping matrix `ᵢM`.
+/// Allocated once per (schema, version, position) — attributes duplicated
+/// across versions get *fresh* ids linked by [`Attribute::equiv`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct AttrId(pub u32);
+
+impl AttrId {
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Physical types as produced by the Debezium-style connectors (fig 2:
+/// "int32", "int64" with semantic names like io.debezium.time.Date, ...).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ExtractType {
+    Int32,
+    Int64,
+    Float32,
+    Float64,
+    Boolean,
+    Varchar,
+    Bytes,
+    /// io.debezium.time.Date — days since epoch as int32.
+    DebeziumDate,
+    /// io.debezium.time.MicroTimestamp — micros since epoch as int64.
+    MicroTimestamp,
+    Decimal,
+    Uuid,
+}
+
+impl ExtractType {
+    /// The wire-name as it appears in the extracting JSON schema.
+    pub fn wire_name(self) -> &'static str {
+        match self {
+            ExtractType::Int32 => "int32",
+            ExtractType::Int64 => "int64",
+            ExtractType::Float32 => "float32",
+            ExtractType::Float64 => "float64",
+            ExtractType::Boolean => "boolean",
+            ExtractType::Varchar => "string",
+            ExtractType::Bytes => "bytes",
+            ExtractType::DebeziumDate => "io.debezium.time.Date",
+            ExtractType::MicroTimestamp => "io.debezium.time.MicroTimestamp",
+            ExtractType::Decimal => "decimal",
+            ExtractType::Uuid => "uuid",
+        }
+    }
+
+    pub fn all() -> &'static [ExtractType] {
+        &[
+            ExtractType::Int32,
+            ExtractType::Int64,
+            ExtractType::Float32,
+            ExtractType::Float64,
+            ExtractType::Boolean,
+            ExtractType::Varchar,
+            ExtractType::Bytes,
+            ExtractType::DebeziumDate,
+            ExtractType::MicroTimestamp,
+            ExtractType::Decimal,
+            ExtractType::Uuid,
+        ]
+    }
+}
+
+/// One attribute leaf `a_p` of a versioned extracting schema.
+#[derive(Debug, Clone)]
+pub struct Attribute {
+    pub id: AttrId,
+    pub name: String,
+    pub ty: ExtractType,
+    pub optional: bool,
+    /// Equivalence link `a_p ≡ a_p'` to the same-named attribute in the
+    /// *previous* version of the same schema (paper §5.4.1). Chains back
+    /// through all versions; `root` resolution follows it to the oldest
+    /// ancestor.
+    pub equiv: Option<AttrId>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_names_are_stable() {
+        assert_eq!(ExtractType::Int32.wire_name(), "int32");
+        assert_eq!(
+            ExtractType::MicroTimestamp.wire_name(),
+            "io.debezium.time.MicroTimestamp"
+        );
+        // all() covers every variant exactly once
+        assert_eq!(ExtractType::all().len(), 11);
+    }
+}

@@ -1,0 +1,241 @@
+//! Schema-evolution rules (paper §3.3): the registry enforces versioning
+//! discipline — forward/backward compatibility and the "one single changed
+//! attribute" rule for semi-automated update workflows.
+
+use super::attribute::ExtractType;
+
+/// Compatibility mode of a schema subject (Avro/Apicurio-style, §3.3:
+/// "one allows the deletions of attributes, the other one additions").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Compatibility {
+    /// New consumers read old data: additions only (with defaults/optional).
+    Backward,
+    /// Old consumers read new data: deletions only.
+    Forward,
+    /// Both: renames/retypes forbidden, additions must be optional.
+    Full,
+    /// No checking (used by tests and free-form sims).
+    None,
+}
+
+/// The diff between two consecutive schema versions.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct VersionDiff {
+    pub added: Vec<String>,
+    pub removed: Vec<String>,
+    pub retyped: Vec<(String, ExtractType, ExtractType)>,
+}
+
+impl VersionDiff {
+    pub fn compute(
+        prev: &[(String, ExtractType, bool)],
+        next: &[(String, ExtractType, bool)],
+    ) -> VersionDiff {
+        let mut diff = VersionDiff::default();
+        for (name, ty, _) in next {
+            match prev.iter().find(|(n, _, _)| n == name) {
+                None => diff.added.push(name.clone()),
+                Some((_, pty, _)) if pty != ty => {
+                    diff.retyped.push((name.clone(), *pty, *ty))
+                }
+                Some(_) => {}
+            }
+        }
+        for (name, _, _) in prev {
+            if !next.iter().any(|(n, _, _)| n == name) {
+                diff.removed.push(name.clone());
+            }
+        }
+        diff
+    }
+
+    /// Total number of changed attributes.
+    pub fn change_count(&self) -> usize {
+        self.added.len() + self.removed.len() + self.retyped.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.change_count() == 0
+    }
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum EvolutionError {
+    #[error("compatibility {mode:?} forbids removing attributes: {names:?}")]
+    RemovalForbidden { mode: &'static str, names: Vec<String> },
+    #[error("compatibility {mode:?} forbids adding attributes: {names:?}")]
+    AdditionForbidden { mode: &'static str, names: Vec<String> },
+    #[error("type changes are forbidden: {0:?}")]
+    RetypeForbidden(Vec<String>),
+    #[error("added attribute {0:?} must be optional under this mode")]
+    AddedMustBeOptional(String),
+    #[error(
+        "registry requires single-attribute changes (paper §3.3), got {0} changes"
+    )]
+    TooManyChanges(usize),
+    #[error("new version is identical to the previous one")]
+    NoChange,
+}
+
+/// Validate an evolution step under `mode`. `single_change` additionally
+/// enforces the paper's semi-automated workflow rule that a new version
+/// "may only contain one single changed attribute".
+pub fn validate(
+    mode: Compatibility,
+    prev: &[(String, ExtractType, bool)],
+    next: &[(String, ExtractType, bool)],
+    single_change: bool,
+) -> Result<VersionDiff, EvolutionError> {
+    let diff = VersionDiff::compute(prev, next);
+    if mode == Compatibility::None {
+        return Ok(diff);
+    }
+    if diff.is_empty() {
+        return Err(EvolutionError::NoChange);
+    }
+    if !diff.retyped.is_empty() {
+        return Err(EvolutionError::RetypeForbidden(
+            diff.retyped.iter().map(|(n, _, _)| n.clone()).collect(),
+        ));
+    }
+    match mode {
+        Compatibility::Backward => {
+            if !diff.removed.is_empty() {
+                return Err(EvolutionError::RemovalForbidden {
+                    mode: "backward",
+                    names: diff.removed.clone(),
+                });
+            }
+        }
+        Compatibility::Forward => {
+            if !diff.added.is_empty() {
+                return Err(EvolutionError::AdditionForbidden {
+                    mode: "forward",
+                    names: diff.added.clone(),
+                });
+            }
+        }
+        Compatibility::Full => {
+            for name in &diff.added {
+                let (_, _, optional) = next
+                    .iter()
+                    .find(|(n, _, _)| n == name)
+                    .expect("added attr in next");
+                if !optional {
+                    return Err(EvolutionError::AddedMustBeOptional(
+                        name.clone(),
+                    ));
+                }
+            }
+        }
+        Compatibility::None => unreachable!(),
+    }
+    if single_change && diff.change_count() > 1 {
+        return Err(EvolutionError::TooManyChanges(diff.change_count()));
+    }
+    Ok(diff)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f(name: &str, ty: ExtractType, opt: bool) -> (String, ExtractType, bool) {
+        (name.to_string(), ty, opt)
+    }
+
+    #[test]
+    fn diff_detects_everything() {
+        let prev = vec![
+            f("a", ExtractType::Int32, false),
+            f("b", ExtractType::Varchar, false),
+        ];
+        let next = vec![
+            f("a", ExtractType::Int64, false),
+            f("c", ExtractType::Boolean, true),
+        ];
+        let d = VersionDiff::compute(&prev, &next);
+        assert_eq!(d.added, vec!["c"]);
+        assert_eq!(d.removed, vec!["b"]);
+        assert_eq!(d.retyped.len(), 1);
+        assert_eq!(d.change_count(), 3);
+    }
+
+    #[test]
+    fn backward_allows_add_forbids_remove() {
+        let prev = vec![f("a", ExtractType::Int32, false)];
+        let add = vec![prev[0].clone(), f("b", ExtractType::Int32, true)];
+        assert!(validate(Compatibility::Backward, &prev, &add, true).is_ok());
+        let rem: Vec<_> = vec![];
+        assert!(matches!(
+            validate(Compatibility::Backward, &prev, &rem, true),
+            Err(EvolutionError::RemovalForbidden { .. })
+        ));
+    }
+
+    #[test]
+    fn forward_allows_remove_forbids_add() {
+        let prev = vec![
+            f("a", ExtractType::Int32, false),
+            f("b", ExtractType::Int32, false),
+        ];
+        let rem = vec![prev[0].clone()];
+        assert!(validate(Compatibility::Forward, &prev, &rem, true).is_ok());
+        let add = vec![
+            prev[0].clone(),
+            prev[1].clone(),
+            f("c", ExtractType::Int32, true),
+        ];
+        assert!(matches!(
+            validate(Compatibility::Forward, &prev, &add, true),
+            Err(EvolutionError::AdditionForbidden { .. })
+        ));
+    }
+
+    #[test]
+    fn full_requires_optional_additions() {
+        let prev = vec![f("a", ExtractType::Int32, false)];
+        let bad = vec![prev[0].clone(), f("b", ExtractType::Int32, false)];
+        assert!(matches!(
+            validate(Compatibility::Full, &prev, &bad, true),
+            Err(EvolutionError::AddedMustBeOptional(_))
+        ));
+        let good = vec![prev[0].clone(), f("b", ExtractType::Int32, true)];
+        assert!(validate(Compatibility::Full, &prev, &good, true).is_ok());
+    }
+
+    #[test]
+    fn single_change_rule() {
+        let prev = vec![f("a", ExtractType::Int32, false)];
+        let two = vec![
+            prev[0].clone(),
+            f("b", ExtractType::Int32, true),
+            f("c", ExtractType::Int32, true),
+        ];
+        assert_eq!(
+            validate(Compatibility::Backward, &prev, &two, true),
+            Err(EvolutionError::TooManyChanges(2))
+        );
+        assert!(validate(Compatibility::Backward, &prev, &two, false).is_ok());
+    }
+
+    #[test]
+    fn no_change_rejected() {
+        let prev = vec![f("a", ExtractType::Int32, false)];
+        assert_eq!(
+            validate(Compatibility::Backward, &prev, &prev.clone(), true),
+            Err(EvolutionError::NoChange)
+        );
+    }
+
+    #[test]
+    fn retype_rejected_under_checked_modes() {
+        let prev = vec![f("a", ExtractType::Int32, false)];
+        let next = vec![f("a", ExtractType::Varchar, false)];
+        assert!(matches!(
+            validate(Compatibility::Full, &prev, &next, true),
+            Err(EvolutionError::RetypeForbidden(_))
+        ));
+        assert!(validate(Compatibility::None, &prev, &next, true).is_ok());
+    }
+}

@@ -1,0 +1,22 @@
+//! The *domain* side of the paper's dynamic network: extracting schemata.
+//!
+//! The extracting-schema tree `ᵢD` (paper §4.1) has the root `ᵢd`, schema
+//! nodes `s_o` (one per extracted table/event stream), versioned child
+//! nodes `v_v`, and attribute leaves `a_p`. Every attribute carries a
+//! **global column index** `p` into the mapping matrix `ᵢM`; each version
+//! owns a contiguous column range so the matrix is block-scoped (fig 3).
+//!
+//! Versioning semantics follow §3.3: single-attribute-change evolution is
+//! enforced by the registry, and attributes duplicated across versions are
+//! linked by the equivalence relation `≡` (§5.4.1) that powers automated
+//! matrix updates.
+
+pub mod attribute;
+pub mod evolution;
+pub mod registry;
+pub mod tree;
+
+pub use attribute::{AttrId, Attribute, ExtractType};
+pub use evolution::{Compatibility, EvolutionError, VersionDiff};
+pub use registry::{Registry, RegistryEvent};
+pub use tree::{SchemaId, SchemaTree, SchemaVersion, VersionNo};

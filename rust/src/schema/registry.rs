@@ -1,0 +1,187 @@
+//! Apicurio-sim schema registry (paper §3 pillar 2): the single source of
+//! truth for extracting schemata, enforcing evolution rules and emitting
+//! change events that trigger the semi-automated DMM update workflow.
+
+use std::sync::{Mutex, RwLock};
+
+use super::attribute::ExtractType;
+use super::evolution::{self, Compatibility, EvolutionError, VersionDiff};
+use super::tree::{SchemaId, SchemaTree, VersionNo};
+
+/// A registry change event — the external trigger feeding Alg 5 (§3.5
+/// defines exactly these triggers for the extraction side).
+#[derive(Debug, Clone, PartialEq)]
+pub enum RegistryEvent {
+    SchemaCreated { schema: SchemaId },
+    VersionAdded { schema: SchemaId, version: VersionNo, diff: VersionDiff },
+    VersionDeleted { schema: SchemaId, version: VersionNo },
+}
+
+/// Thread-safe registry around the schema tree.
+#[derive(Debug)]
+pub struct Registry {
+    tree: RwLock<SchemaTree>,
+    compatibility: Compatibility,
+    /// Enforce "one single changed attribute" per version (paper §3.3).
+    single_change: bool,
+    events: Mutex<Vec<RegistryEvent>>,
+}
+
+impl Registry {
+    pub fn new(compatibility: Compatibility, single_change: bool) -> Self {
+        Self {
+            tree: RwLock::new(SchemaTree::new()),
+            compatibility,
+            single_change,
+            events: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Run a closure over the (read-locked) tree.
+    pub fn read<R>(&self, f: impl FnOnce(&SchemaTree) -> R) -> R {
+        f(&self.tree.read().unwrap())
+    }
+
+    /// Snapshot a clone of the tree (used by instances that must pin a
+    /// consistent state i while the registry keeps evolving).
+    pub fn snapshot(&self) -> SchemaTree {
+        self.tree.read().unwrap().clone()
+    }
+
+    pub fn create_schema(&self, name: &str, topic: &str) -> SchemaId {
+        let id = self.tree.write().unwrap().add_schema(name, topic);
+        self.push(RegistryEvent::SchemaCreated { schema: id });
+        id
+    }
+
+    /// Register a new version; validates evolution against the latest
+    /// version under the registry's compatibility mode.
+    pub fn register_version(
+        &self,
+        schema: SchemaId,
+        fields: &[(String, ExtractType, bool)],
+    ) -> Result<(VersionNo, VersionDiff), EvolutionError> {
+        let mut tree = self.tree.write().unwrap();
+        let prev_fields: Vec<(String, ExtractType, bool)> = tree
+            .latest_version(schema)
+            .and_then(|v| tree.version(schema, v).cloned())
+            .map(|sv| {
+                sv.attrs
+                    .iter()
+                    .map(|a| {
+                        let at = tree.attr(*a);
+                        (at.name.clone(), at.ty, at.optional)
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        let diff = if prev_fields.is_empty() {
+            // first version: no evolution check
+            VersionDiff {
+                added: fields.iter().map(|(n, _, _)| n.clone()).collect(),
+                ..Default::default()
+            }
+        } else {
+            evolution::validate(
+                self.compatibility,
+                &prev_fields,
+                fields,
+                self.single_change,
+            )?
+        };
+        let v = tree.add_version(schema, fields);
+        drop(tree);
+        self.push(RegistryEvent::VersionAdded {
+            schema,
+            version: v,
+            diff: diff.clone(),
+        });
+        Ok((v, diff))
+    }
+
+    pub fn delete_version(&self, schema: SchemaId, v: VersionNo) -> bool {
+        let ok = self.tree.write().unwrap().delete_version(schema, v);
+        if ok {
+            self.push(RegistryEvent::VersionDeleted { schema, version: v });
+        }
+        ok
+    }
+
+    fn push(&self, ev: RegistryEvent) {
+        self.events.lock().unwrap().push(ev);
+    }
+
+    /// Drain events recorded since the last drain (the pipeline's control
+    /// loop consumes these to drive DMM updates + cache eviction).
+    pub fn drain_events(&self) -> Vec<RegistryEvent> {
+        std::mem::take(&mut self.events.lock().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f(name: &str) -> (String, ExtractType, bool) {
+        (name.to_string(), ExtractType::Int64, true)
+    }
+
+    #[test]
+    fn register_and_evolve() {
+        let reg = Registry::new(Compatibility::Backward, true);
+        let s = reg.create_schema("payments", "fx.payments");
+        let (v1, _) = reg.register_version(s, &[f("id"), f("value")]).unwrap();
+        let (v2, diff) = reg
+            .register_version(s, &[f("id"), f("value"), f("currency")])
+            .unwrap();
+        assert_eq!((v1, v2), (VersionNo(1), VersionNo(2)));
+        assert_eq!(diff.added, vec!["currency"]);
+        let events = reg.drain_events();
+        assert_eq!(events.len(), 3);
+        assert!(matches!(events[2], RegistryEvent::VersionAdded { .. }));
+        assert!(reg.drain_events().is_empty());
+    }
+
+    #[test]
+    fn rejects_violating_evolution() {
+        let reg = Registry::new(Compatibility::Backward, true);
+        let s = reg.create_schema("s", "t");
+        reg.register_version(s, &[f("a"), f("b")]).unwrap();
+        // removal under backward compat
+        let err = reg.register_version(s, &[f("a")]).unwrap_err();
+        assert!(matches!(err, EvolutionError::RemovalForbidden { .. }));
+        // two changes at once under single-change rule
+        let err = reg
+            .register_version(s, &[f("a"), f("b"), f("c"), f("d")])
+            .unwrap_err();
+        assert!(matches!(err, EvolutionError::TooManyChanges(2)));
+        // tree unchanged by rejections
+        reg.read(|t| assert_eq!(t.versions_of(s).len(), 1));
+    }
+
+    #[test]
+    fn delete_emits_event() {
+        let reg = Registry::new(Compatibility::None, false);
+        let s = reg.create_schema("s", "t");
+        let (v1, _) = reg.register_version(s, &[f("a")]).unwrap();
+        reg.register_version(s, &[f("a"), f("b")]).unwrap();
+        assert!(reg.delete_version(s, v1));
+        assert!(!reg.delete_version(s, v1));
+        let events = reg.drain_events();
+        assert!(matches!(
+            events.last().unwrap(),
+            RegistryEvent::VersionDeleted { .. }
+        ));
+    }
+
+    #[test]
+    fn snapshot_is_isolated() {
+        let reg = Registry::new(Compatibility::None, false);
+        let s = reg.create_schema("s", "t");
+        reg.register_version(s, &[f("a")]).unwrap();
+        let snap = reg.snapshot();
+        reg.register_version(s, &[f("a"), f("b")]).unwrap();
+        assert_eq!(snap.versions_of(s).len(), 1);
+        reg.read(|t| assert_eq!(t.versions_of(s).len(), 2));
+    }
+}

@@ -1,0 +1,328 @@
+//! The extracting-schema tree `ᵢD` (paper §4.1): root → schemata `s_o` →
+//! versions `v_v` → attribute leaves `a_p`, plus the global attribute
+//! arena that maps every `AttrId` (matrix column) back to its path
+//! `ᵢd.s_o.v_v.a_p`.
+
+use std::collections::HashMap;
+
+use super::attribute::{AttrId, Attribute, ExtractType};
+
+/// Id of one extracting schema `s_o` (one per source table / event type).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SchemaId(pub u32);
+
+/// Version number `v` within a schema (1-based, ascending).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct VersionNo(pub u32);
+
+/// One versioned schema `ᵢD_v^o`: a block of attributes owning a contiguous
+/// column range of the mapping matrix.
+#[derive(Debug, Clone)]
+pub struct SchemaVersion {
+    pub schema: SchemaId,
+    pub version: VersionNo,
+    /// Global attribute ids, in field order. Contiguous ascending range.
+    pub attrs: Vec<AttrId>,
+}
+
+impl SchemaVersion {
+    /// First column index of this version's block in ᵢM.
+    pub fn col_start(&self) -> usize {
+        self.attrs.first().map(|a| a.index()).unwrap_or(0)
+    }
+
+    pub fn width(&self) -> usize {
+        self.attrs.len()
+    }
+
+    /// Local position of a global attribute id within this version.
+    pub fn local_of(&self, id: AttrId) -> Option<usize> {
+        // attrs are contiguous ascending
+        let start = self.attrs.first()?.0;
+        if id.0 >= start && ((id.0 - start) as usize) < self.attrs.len() {
+            Some((id.0 - start) as usize)
+        } else {
+            None
+        }
+    }
+}
+
+/// One schema node `s_o` with its version children.
+#[derive(Debug, Clone)]
+pub struct SchemaNode {
+    pub id: SchemaId,
+    pub name: String,
+    /// Source topic the connector publishes this schema's events on.
+    pub topic: String,
+    /// Versions in ascending `v` order (may be sparse after deletions).
+    pub versions: Vec<VersionNo>,
+}
+
+/// The full domain tree `ᵢD` plus the attribute arena.
+#[derive(Debug, Default, Clone)]
+pub struct SchemaTree {
+    schemas: Vec<SchemaNode>,
+    by_name: HashMap<String, SchemaId>,
+    versions: HashMap<(SchemaId, VersionNo), SchemaVersion>,
+    /// Arena of all attributes ever allocated, indexed by AttrId.
+    attrs: Vec<Attribute>,
+    /// AttrId -> (schema, version) owner.
+    attr_owner: Vec<(SchemaId, VersionNo)>,
+}
+
+impl SchemaTree {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Total number of matrix columns ever allocated (`|ᵢ𝒜|` upper bound;
+    /// deleted versions keep their ids — the matrix tracks liveness).
+    pub fn n_attr_ids(&self) -> usize {
+        self.attrs.len()
+    }
+
+    pub fn n_schemas(&self) -> usize {
+        self.schemas.len()
+    }
+
+    pub fn schemas(&self) -> impl Iterator<Item = &SchemaNode> {
+        self.schemas.iter()
+    }
+
+    pub fn add_schema(&mut self, name: &str, topic: &str) -> SchemaId {
+        debug_assert!(!self.by_name.contains_key(name), "duplicate schema {name}");
+        let id = SchemaId(self.schemas.len() as u32);
+        self.schemas.push(SchemaNode {
+            id,
+            name: name.to_string(),
+            topic: topic.to_string(),
+            versions: Vec::new(),
+        });
+        self.by_name.insert(name.to_string(), id);
+        id
+    }
+
+    pub fn schema(&self, id: SchemaId) -> &SchemaNode {
+        &self.schemas[id.0 as usize]
+    }
+
+    pub fn schema_by_name(&self, name: &str) -> Option<SchemaId> {
+        self.by_name.get(name).copied()
+    }
+
+    /// Add a version with the given field definitions. Equivalence links to
+    /// the previous version are resolved by (name, type) match. Returns the
+    /// new version number.
+    pub fn add_version(
+        &mut self,
+        schema: SchemaId,
+        fields: &[(String, ExtractType, bool)],
+    ) -> VersionNo {
+        let prev = self.latest_version(schema);
+        let v = VersionNo(prev.map(|p| p.0 + 1).unwrap_or(1));
+        let prev_attrs: Vec<Attribute> = prev
+            .map(|pv| {
+                self.versions[&(schema, pv)]
+                    .attrs
+                    .iter()
+                    .map(|a| self.attrs[a.index()].clone())
+                    .collect()
+            })
+            .unwrap_or_default();
+        let mut ids = Vec::with_capacity(fields.len());
+        for (name, ty, optional) in fields {
+            let id = AttrId(self.attrs.len() as u32);
+            let equiv = prev_attrs
+                .iter()
+                .find(|a| &a.name == name && a.ty == *ty)
+                .map(|a| a.id);
+            self.attrs.push(Attribute {
+                id,
+                name: name.clone(),
+                ty: *ty,
+                optional: *optional,
+                equiv,
+            });
+            self.attr_owner.push((schema, v));
+            ids.push(id);
+        }
+        self.versions.insert(
+            (schema, v),
+            SchemaVersion { schema, version: v, attrs: ids },
+        );
+        self.schemas[schema.0 as usize].versions.push(v);
+        v
+    }
+
+    /// Remove a version from the tree (its AttrIds remain allocated but
+    /// unreachable — matching the paper's matrix shrink semantics where the
+    /// DMM drops the column sets).
+    pub fn delete_version(&mut self, schema: SchemaId, v: VersionNo) -> bool {
+        if self.versions.remove(&(schema, v)).is_some() {
+            self.schemas[schema.0 as usize].versions.retain(|x| *x != v);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn latest_version(&self, schema: SchemaId) -> Option<VersionNo> {
+        self.schemas[schema.0 as usize].versions.iter().max().copied()
+    }
+
+    pub fn version(&self, schema: SchemaId, v: VersionNo) -> Option<&SchemaVersion> {
+        self.versions.get(&(schema, v))
+    }
+
+    pub fn versions_of(&self, schema: SchemaId) -> &[VersionNo] {
+        &self.schemas[schema.0 as usize].versions
+    }
+
+    pub fn attr(&self, id: AttrId) -> &Attribute {
+        &self.attrs[id.index()]
+    }
+
+    /// Owner (schema, version) of an attribute id.
+    pub fn owner_of(&self, id: AttrId) -> (SchemaId, VersionNo) {
+        self.attr_owner[id.index()]
+    }
+
+    /// Follow the `≡` chain to the oldest ancestor — the canonical
+    /// representative used to compare blocks across versions (DUSB) and to
+    /// copy values on updates (Alg 5).
+    pub fn equiv_root(&self, id: AttrId) -> AttrId {
+        let mut cur = id;
+        while let Some(prev) = self.attrs[cur.index()].equiv {
+            cur = prev;
+        }
+        cur
+    }
+
+    /// Find the attribute in (schema, v2) equivalent to `id` (an attribute
+    /// of an earlier version), if any: same equiv-root.
+    pub fn equivalent_in(
+        &self,
+        id: AttrId,
+        schema: SchemaId,
+        v2: VersionNo,
+    ) -> Option<AttrId> {
+        let root = self.equiv_root(id);
+        let sv = self.version(schema, v2)?;
+        sv.attrs
+            .iter()
+            .copied()
+            .find(|a| self.equiv_root(*a) == root)
+    }
+
+    /// Path string `d.s_o.v_v.a_p` (paper's short edge notation).
+    pub fn path_of(&self, id: AttrId) -> String {
+        let (s, v) = self.owner_of(id);
+        format!(
+            "d.{}.v{}.{}",
+            self.schema(s).name,
+            v.0,
+            self.attr(id).name
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fields(names: &[&str]) -> Vec<(String, ExtractType, bool)> {
+        names
+            .iter()
+            .map(|n| (n.to_string(), ExtractType::Int64, false))
+            .collect()
+    }
+
+    #[test]
+    fn versions_allocate_contiguous_fresh_ids() {
+        let mut t = SchemaTree::new();
+        let s = t.add_schema("payments.incoming", "fx.payments.incoming");
+        let v1 = t.add_version(s, &fields(&["id", "value", "time"]));
+        let v2 = t.add_version(s, &fields(&["id", "value", "time", "currency"]));
+        assert_eq!(v1, VersionNo(1));
+        assert_eq!(v2, VersionNo(2));
+        let sv1 = t.version(s, v1).unwrap();
+        let sv2 = t.version(s, v2).unwrap();
+        assert_eq!(sv1.attrs, vec![AttrId(0), AttrId(1), AttrId(2)]);
+        assert_eq!(sv2.attrs.len(), 4);
+        assert_eq!(sv2.col_start(), 3);
+        // fresh ids, not reused
+        assert_eq!(t.n_attr_ids(), 7);
+    }
+
+    #[test]
+    fn equivalences_link_same_name_same_type() {
+        let mut t = SchemaTree::new();
+        let s = t.add_schema("s1", "t1");
+        t.add_version(s, &fields(&["a", "b"]));
+        t.add_version(s, &fields(&["a", "b", "c"]));
+        let v3 = t.add_version(s, &fields(&["a", "c"]));
+        let sv3 = t.version(s, v3).unwrap();
+        let a_v3 = sv3.attrs[0];
+        // a chains v3 -> v2 -> v1
+        assert_eq!(t.equiv_root(a_v3), AttrId(0));
+        // c chains v3 -> v2 only
+        let c_v3 = sv3.attrs[1];
+        assert_eq!(t.equiv_root(c_v3), AttrId(4));
+    }
+
+    #[test]
+    fn type_change_breaks_equivalence() {
+        let mut t = SchemaTree::new();
+        let s = t.add_schema("s1", "t1");
+        t.add_version(s, &[("a".into(), ExtractType::Int32, false)]);
+        let v2 = t.add_version(s, &[("a".into(), ExtractType::Varchar, false)]);
+        let a_v2 = t.version(s, v2).unwrap().attrs[0];
+        assert_eq!(t.attr(a_v2).equiv, None);
+    }
+
+    #[test]
+    fn equivalent_in_finds_descendant() {
+        let mut t = SchemaTree::new();
+        let s = t.add_schema("s1", "t1");
+        let v1 = t.add_version(s, &fields(&["a", "b"]));
+        let v2 = t.add_version(s, &fields(&["b", "a"])); // reordered
+        let a_v1 = t.version(s, v1).unwrap().attrs[0];
+        let found = t.equivalent_in(a_v1, s, v2).unwrap();
+        assert_eq!(t.attr(found).name, "a");
+        assert_eq!(t.version(s, v2).unwrap().local_of(found), Some(1));
+    }
+
+    #[test]
+    fn delete_version_removes_reachability() {
+        let mut t = SchemaTree::new();
+        let s = t.add_schema("s1", "t1");
+        let v1 = t.add_version(s, &fields(&["a"]));
+        let _v2 = t.add_version(s, &fields(&["a", "b"]));
+        assert!(t.delete_version(s, v1));
+        assert!(t.version(s, v1).is_none());
+        assert_eq!(t.versions_of(s), &[VersionNo(2)]);
+        assert!(!t.delete_version(s, v1));
+        // ids remain allocated
+        assert_eq!(t.n_attr_ids(), 3);
+    }
+
+    #[test]
+    fn local_of_rejects_foreign_ids() {
+        let mut t = SchemaTree::new();
+        let s = t.add_schema("s1", "t1");
+        let v1 = t.add_version(s, &fields(&["a", "b"]));
+        let v2 = t.add_version(s, &fields(&["a", "b"]));
+        let sv1 = t.version(s, v1).unwrap();
+        let a_v2 = t.version(s, v2).unwrap().attrs[0];
+        assert_eq!(sv1.local_of(a_v2), None);
+    }
+
+    #[test]
+    fn path_notation() {
+        let mut t = SchemaTree::new();
+        let s = t.add_schema("payments", "fx.payments");
+        let v = t.add_version(s, &fields(&["time"]));
+        let a = t.version(s, v).unwrap().attrs[0];
+        assert_eq!(t.path_of(a), "d.payments.v1.time");
+    }
+}

@@ -1,0 +1,224 @@
+//! The two consumers of the CDM stream (paper fig 1): the data warehouse
+//! and the ML platform. Both consume `OutMessage`s from the CDM topics.
+
+use std::collections::HashMap;
+
+use crate::cdm::{CdmAttrId, CdmVersionNo, EntityId};
+use crate::message::cdc::CdcOp;
+use crate::message::OutMessage;
+use crate::util::json::Json;
+
+/// One DW table per (business entity, CDM version): upsert-by-key rows,
+/// delete tombstones, idempotent under at-least-once redelivery.
+#[derive(Debug, Default)]
+pub struct DwTable {
+    rows: HashMap<u64, Vec<(CdmAttrId, Json)>>,
+    pub upserts: u64,
+    pub deletes: u64,
+    /// Redeliveries observed (same key + identical payload).
+    pub duplicates: u64,
+}
+
+impl DwTable {
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn row(&self, key: u64) -> Option<&Vec<(CdmAttrId, Json)>> {
+        self.rows.get(&key)
+    }
+}
+
+/// The data-warehouse sink.
+#[derive(Debug, Default)]
+pub struct DwSink {
+    tables: HashMap<(EntityId, CdmVersionNo), DwTable>,
+}
+
+impl DwSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Apply one mapped message. `op` is the CDC op of the originating
+    /// event: deletes tombstone the row, everything else upserts.
+    pub fn apply(&mut self, msg: &OutMessage, op: CdcOp) {
+        let table = self
+            .tables
+            .entry((msg.entity, msg.version))
+            .or_default();
+        match op {
+            CdcOp::Delete => {
+                if table.rows.remove(&msg.key).is_some() {
+                    table.deletes += 1;
+                }
+            }
+            _ => {
+                let existing = table.rows.get(&msg.key);
+                if existing.is_some_and(|prev| *prev == msg.fields) {
+                    table.duplicates += 1; // at-least-once redelivery
+                } else {
+                    table.rows.insert(msg.key, msg.fields.clone());
+                    table.upserts += 1;
+                }
+            }
+        }
+    }
+
+    pub fn table(&self, entity: EntityId, w: CdmVersionNo) -> Option<&DwTable> {
+        self.tables.get(&(entity, w))
+    }
+
+    pub fn total_rows(&self) -> usize {
+        self.tables.values().map(|t| t.len()).sum()
+    }
+
+    pub fn total_upserts(&self) -> u64 {
+        self.tables.values().map(|t| t.upserts).sum()
+    }
+
+    pub fn total_duplicates(&self) -> u64 {
+        self.tables.values().map(|t| t.duplicates).sum()
+    }
+}
+
+/// Per-attribute running statistics (count/mean/M2 — Welford).
+#[derive(Debug, Default, Clone)]
+pub struct FeatureStat {
+    pub count: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl FeatureStat {
+    fn observe(&mut self, x: f64) {
+        self.count += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.count as f64;
+        self.m2 += delta * (x - self.mean);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.count < 2 {
+            0.0
+        } else {
+            self.m2 / self.count as f64
+        }
+    }
+}
+
+/// The ML-platform sink: accumulates numeric features per business entity
+/// (fig 1's "machine learning systems"; the paper's next-best-action
+/// models train on exactly this CDM stream).
+#[derive(Debug, Default)]
+pub struct MlSink {
+    features: HashMap<(EntityId, CdmAttrId), FeatureStat>,
+    pub observations: u64,
+}
+
+impl MlSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn observe(&mut self, msg: &OutMessage) {
+        self.observations += 1;
+        for (attr, value) in &msg.fields {
+            if let Some(x) = value.as_f64() {
+                self.features
+                    .entry((msg.entity, *attr))
+                    .or_default()
+                    .observe(x);
+            }
+        }
+    }
+
+    pub fn feature(&self, entity: EntityId, attr: CdmAttrId) -> Option<&FeatureStat> {
+        self.features.get(&(entity, attr))
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.features.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::message::StateI;
+
+    fn out(key: u64, value: f64) -> OutMessage {
+        OutMessage {
+            key,
+            entity: EntityId(0),
+            version: CdmVersionNo(1),
+            state: StateI(0),
+            ts_us: 0,
+            fields: vec![(CdmAttrId(0), Json::Num(value))],
+        }
+    }
+
+    #[test]
+    fn upsert_then_delete() {
+        let mut dw = DwSink::new();
+        dw.apply(&out(1, 10.0), CdcOp::Create);
+        dw.apply(&out(1, 11.0), CdcOp::Update);
+        assert_eq!(dw.total_rows(), 1);
+        let t = dw.table(EntityId(0), CdmVersionNo(1)).unwrap();
+        assert_eq!(t.row(1).unwrap()[0].1.as_f64(), Some(11.0));
+        assert_eq!(t.upserts, 2);
+        dw.apply(&out(1, 11.0), CdcOp::Delete);
+        assert_eq!(dw.total_rows(), 0);
+    }
+
+    #[test]
+    fn redelivery_is_idempotent() {
+        let mut dw = DwSink::new();
+        dw.apply(&out(1, 10.0), CdcOp::Create);
+        dw.apply(&out(1, 10.0), CdcOp::Create); // redelivered
+        let t = dw.table(EntityId(0), CdmVersionNo(1)).unwrap();
+        assert_eq!(t.upserts, 1);
+        assert_eq!(t.duplicates, 1);
+        assert_eq!(dw.total_rows(), 1);
+    }
+
+    #[test]
+    fn delete_of_missing_row_is_noop() {
+        let mut dw = DwSink::new();
+        dw.apply(&out(9, 1.0), CdcOp::Delete);
+        assert_eq!(dw.total_rows(), 0);
+        assert_eq!(dw.table(EntityId(0), CdmVersionNo(1)).unwrap().deletes, 0);
+    }
+
+    #[test]
+    fn ml_sink_accumulates_running_stats() {
+        let mut ml = MlSink::new();
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            ml.observe(&out(1, v));
+        }
+        let f = ml.feature(EntityId(0), CdmAttrId(0)).unwrap();
+        assert_eq!(f.count, 4);
+        assert!((f.mean() - 2.5).abs() < 1e-12);
+        assert!((f.variance() - 1.25).abs() < 1e-12);
+        assert_eq!(ml.observations, 4);
+        assert_eq!(ml.n_features(), 1);
+    }
+
+    #[test]
+    fn non_numeric_fields_ignored_by_ml() {
+        let mut ml = MlSink::new();
+        let mut m = out(1, 0.0);
+        m.fields = vec![(CdmAttrId(1), Json::Str("EUR".into()))];
+        ml.observe(&m);
+        assert_eq!(ml.n_features(), 0);
+        assert_eq!(ml.observations, 1);
+    }
+}

@@ -1,0 +1,410 @@
+//! Microservice database + Debezium-sim connector (paper §3, pillar 1).
+//!
+//! Substitution for the paper's 80-microservice FX system: each simulated
+//! service owns a database with tables whose *live schema* tracks a
+//! registered extracting-schema version. DML against a table produces CDC
+//! events shaped like fig 2 (before/after images); the connector publishes
+//! them to the broker in commit order and supports snapshot mode for
+//! initial loads.
+
+use std::collections::BTreeMap;
+
+use crate::broker::Topic;
+use crate::message::cdc::{CdcEvent, CdcOp, CdcSource};
+use crate::message::{InMessage, StateI};
+use crate::schema::{SchemaId, SchemaTree, VersionNo};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// A table row: values in schema-version field order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Row {
+    pub key: u64,
+    pub values: Vec<Json>,
+}
+
+/// One source table bound to an extracting schema.
+#[derive(Debug)]
+pub struct Table {
+    pub name: String,
+    pub schema: SchemaId,
+    /// The schema version new writes conform to (bumped on migrations).
+    pub live_version: VersionNo,
+    rows: BTreeMap<u64, Row>,
+}
+
+impl Table {
+    pub fn new(name: &str, schema: SchemaId, version: VersionNo) -> Self {
+        Self { name: name.to_string(), schema, live_version: version, rows: BTreeMap::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn row(&self, key: u64) -> Option<&Row> {
+        self.rows.get(&key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = u64> + '_ {
+        self.rows.keys().copied()
+    }
+}
+
+/// One microservice database.
+pub struct MicroserviceDb {
+    pub service: String,
+    pub db_name: String,
+    pub tables: Vec<Table>,
+}
+
+/// A DML operation against a table.
+#[derive(Debug, Clone)]
+pub enum Dml {
+    Insert { table: usize, row: Row },
+    Update { table: usize, row: Row },
+    Delete { table: usize, key: u64 },
+}
+
+impl MicroserviceDb {
+    pub fn new(service: &str, db_name: &str) -> Self {
+        Self { service: service.to_string(), db_name: db_name.to_string(), tables: Vec::new() }
+    }
+
+    pub fn add_table(&mut self, table: Table) -> usize {
+        self.tables.push(table);
+        self.tables.len() - 1
+    }
+
+    fn message_for(
+        &self,
+        tree: &SchemaTree,
+        table: &Table,
+        row: &Row,
+        state: StateI,
+        ts_us: u64,
+    ) -> InMessage {
+        let sv = tree
+            .version(table.schema, table.live_version)
+            .expect("live version registered");
+        debug_assert_eq!(sv.attrs.len(), row.values.len(), "row width matches live schema");
+        InMessage {
+            key: row.key,
+            schema: table.schema,
+            version: table.live_version,
+            state,
+            ts_us,
+            fields: sv.attrs.iter().copied().zip(row.values.iter().cloned()).collect(),
+        }
+    }
+
+    /// Apply one DML op, returning the CDC event it generates (fig 2
+    /// semantics: create has empty before, delete has empty after).
+    pub fn apply(
+        &mut self,
+        tree: &SchemaTree,
+        op: Dml,
+        state: StateI,
+        ts_us: u64,
+    ) -> Option<CdcEvent> {
+        let (table_idx, cdc_op, before_row, after_row) = match op {
+            Dml::Insert { table, row } => {
+                let prev = self.tables[table].rows.insert(row.key, row.clone());
+                if prev.is_some() {
+                    // primary-key violation: roll back, no event
+                    let prev = prev.unwrap();
+                    self.tables[table].rows.insert(prev.key, prev);
+                    return None;
+                }
+                (table, CdcOp::Create, None, Some(row))
+            }
+            Dml::Update { table, row } => {
+                match self.tables[table].rows.insert(row.key, row.clone()) {
+                    Some(prev) => (table, CdcOp::Update, Some(prev), Some(row)),
+                    None => {
+                        self.tables[table].rows.remove(&row.key);
+                        return None; // update of a missing row
+                    }
+                }
+            }
+            Dml::Delete { table, key } => {
+                match self.tables[table].rows.remove(&key) {
+                    Some(prev) => (table, CdcOp::Delete, Some(prev), None),
+                    None => return None,
+                }
+            }
+        };
+        let table = &self.tables[table_idx];
+        Some(CdcEvent {
+            op: cdc_op,
+            before: before_row.map(|r| self.message_for(tree, table, &r, state, ts_us)),
+            after: after_row.map(|r| self.message_for(tree, table, &r, state, ts_us)),
+            source: CdcSource {
+                connector: "postgresql".into(),
+                db: self.db_name.clone(),
+                table: table.name.clone(),
+            },
+            ts_us,
+        })
+    }
+
+    /// Migrate a table to a new live version; values for attributes absent
+    /// in the old version become Null (backward-compatible adds).
+    pub fn migrate_table(
+        &mut self,
+        tree: &SchemaTree,
+        table: usize,
+        new_version: VersionNo,
+    ) {
+        let t = &mut self.tables[table];
+        let old_sv = tree.version(t.schema, t.live_version).expect("old version");
+        let new_sv = tree.version(t.schema, new_version).expect("new version");
+        for row in t.rows.values_mut() {
+            let mut new_values = Vec::with_capacity(new_sv.attrs.len());
+            for &attr in &new_sv.attrs {
+                // carry values across equivalences; else null
+                let root = tree.equiv_root(attr);
+                let old_pos = old_sv
+                    .attrs
+                    .iter()
+                    .position(|a| tree.equiv_root(*a) == root);
+                new_values.push(
+                    old_pos.map(|i| row.values[i].clone()).unwrap_or(Json::Null),
+                );
+            }
+            row.values = new_values;
+        }
+        t.live_version = new_version;
+    }
+}
+
+/// Debezium-sim connector: publishes CDC events from a database to the
+/// broker's source topics in near real-time, and supports snapshot reads
+/// for initial loads.
+pub struct Connector {
+    pub prefix: String,
+}
+
+impl Connector {
+    pub fn new(prefix: &str) -> Self {
+        Self { prefix: prefix.to_string() }
+    }
+
+    pub fn topic_for(&self, db: &MicroserviceDb, table: &Table) -> String {
+        format!("{}.{}.{}", self.prefix, db.db_name, table.name)
+    }
+
+    /// Publish one event to its topic, keyed by row key.
+    pub fn publish(&self, topic: &Topic<std::sync::Arc<CdcEvent>>, ev: CdcEvent) {
+        let key = ev
+            .mapping_payload()
+            .map(|m| m.key)
+            .unwrap_or_default();
+        topic.produce(key, std::sync::Arc::new(ev));
+    }
+
+    /// Snapshot an entire table as SnapshotRead events (Debezium op "r") —
+    /// the initial-load path (§3.4, §6.4).
+    pub fn snapshot(
+        &self,
+        tree: &SchemaTree,
+        db: &MicroserviceDb,
+        table_idx: usize,
+        state: StateI,
+        ts_us: u64,
+    ) -> Vec<CdcEvent> {
+        let table = &db.tables[table_idx];
+        table
+            .rows
+            .values()
+            .map(|row| CdcEvent {
+                op: CdcOp::SnapshotRead,
+                before: None,
+                after: Some(db.message_for(tree, table, row, state, ts_us)),
+                source: CdcSource {
+                    connector: "postgresql".into(),
+                    db: db.db_name.clone(),
+                    table: table.name.clone(),
+                },
+                ts_us,
+            })
+            .collect()
+    }
+}
+
+/// Generate a random row for a schema version (used by workloads/tests).
+pub fn random_row(
+    tree: &SchemaTree,
+    schema: SchemaId,
+    version: VersionNo,
+    key: u64,
+    rng: &mut Rng,
+    null_prob: f64,
+) -> Row {
+    use crate::schema::ExtractType as T;
+    let sv = tree.version(schema, version).expect("version");
+    let values = sv
+        .attrs
+        .iter()
+        .map(|&a| {
+            let attr = tree.attr(a);
+            if attr.optional && rng.chance(null_prob) {
+                return Json::Null;
+            }
+            match attr.ty {
+                T::Int32 => Json::Num(rng.gen_range(1 << 20) as f64),
+                T::Int64 | T::MicroTimestamp => {
+                    Json::Num((1_600_000_000_000_000u64 + rng.gen_range(1 << 40)) as f64)
+                }
+                T::Float32 | T::Float64 | T::Decimal => {
+                    Json::Num((rng.gen_range(1_000_000) as f64) / 100.0)
+                }
+                T::Boolean => Json::Bool(rng.chance(0.5)),
+                T::Varchar => Json::Str(format!("v{}", rng.gen_range(100_000))),
+                T::Bytes => Json::Str(format!("{:016x}", rng.next_u64())),
+                T::DebeziumDate => Json::Num(rng.gen_range(20_000) as f64),
+                T::Uuid => Json::Str(format!(
+                    "{:08x}-{:04x}-4{:03x}-{:04x}-{:012x}",
+                    rng.gen_range(u32::MAX as u64),
+                    rng.gen_range(u16::MAX as u64),
+                    rng.gen_range(1 << 12),
+                    rng.gen_range(u16::MAX as u64),
+                    rng.gen_range(1u64 << 48),
+                )),
+            }
+        })
+        .collect();
+    Row { key, values }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schema::ExtractType;
+
+    fn setup() -> (SchemaTree, MicroserviceDb, usize) {
+        let mut tree = SchemaTree::new();
+        let s = tree.add_schema("payments.incoming", "src.payments.incoming");
+        let v = tree.add_version(
+            s,
+            &[
+                ("id".into(), ExtractType::Int64, false),
+                ("value".into(), ExtractType::Decimal, true),
+            ],
+        );
+        let mut db = MicroserviceDb::new("payments", "payments");
+        let t = db.add_table(Table::new("incoming", s, v));
+        (tree, db, t)
+    }
+
+    #[test]
+    fn insert_emits_create_with_empty_before() {
+        let (tree, mut db, t) = setup();
+        let row = Row { key: 1, values: vec![Json::Num(1.0), Json::Num(10.0)] };
+        let ev = db
+            .apply(&tree, Dml::Insert { table: t, row }, StateI(0), 5)
+            .unwrap();
+        assert_eq!(ev.op, CdcOp::Create);
+        assert!(ev.before.is_none());
+        assert!(ev.is_well_formed());
+        assert_eq!(db.tables[t].len(), 1);
+    }
+
+    #[test]
+    fn update_carries_both_images() {
+        let (tree, mut db, t) = setup();
+        let r1 = Row { key: 1, values: vec![Json::Num(1.0), Json::Num(10.0)] };
+        let r2 = Row { key: 1, values: vec![Json::Num(1.0), Json::Num(20.0)] };
+        db.apply(&tree, Dml::Insert { table: t, row: r1 }, StateI(0), 1);
+        let ev = db
+            .apply(&tree, Dml::Update { table: t, row: r2 }, StateI(0), 2)
+            .unwrap();
+        assert_eq!(ev.op, CdcOp::Update);
+        let before = ev.before.unwrap();
+        let after = ev.after.unwrap();
+        assert_eq!(before.fields[1].1.as_f64(), Some(10.0));
+        assert_eq!(after.fields[1].1.as_f64(), Some(20.0));
+    }
+
+    #[test]
+    fn delete_emits_before_image_only() {
+        let (tree, mut db, t) = setup();
+        let r1 = Row { key: 9, values: vec![Json::Num(9.0), Json::Null] };
+        db.apply(&tree, Dml::Insert { table: t, row: r1 }, StateI(0), 1);
+        let ev = db
+            .apply(&tree, Dml::Delete { table: t, key: 9 }, StateI(0), 2)
+            .unwrap();
+        assert_eq!(ev.op, CdcOp::Delete);
+        assert!(ev.after.is_none());
+        assert!(db.tables[t].is_empty());
+    }
+
+    #[test]
+    fn invalid_dml_produces_no_event() {
+        let (tree, mut db, t) = setup();
+        assert!(db
+            .apply(&tree, Dml::Delete { table: t, key: 1 }, StateI(0), 1)
+            .is_none());
+        let row = Row { key: 1, values: vec![Json::Num(1.0), Json::Null] };
+        assert!(db
+            .apply(&tree, Dml::Update { table: t, row }, StateI(0), 1)
+            .is_none());
+        // duplicate insert
+        let row = Row { key: 2, values: vec![Json::Num(2.0), Json::Null] };
+        db.apply(&tree, Dml::Insert { table: t, row: row.clone() }, StateI(0), 1)
+            .unwrap();
+        assert!(db
+            .apply(&tree, Dml::Insert { table: t, row }, StateI(0), 2)
+            .is_none());
+        assert_eq!(db.tables[t].len(), 1);
+    }
+
+    #[test]
+    fn snapshot_reads_all_rows() {
+        let (tree, mut db, t) = setup();
+        for k in 0..5 {
+            let row = Row { key: k, values: vec![Json::Num(k as f64), Json::Null] };
+            db.apply(&tree, Dml::Insert { table: t, row }, StateI(0), k);
+        }
+        let conn = Connector::new("src");
+        let snap = conn.snapshot(&tree, &db, t, StateI(0), 99);
+        assert_eq!(snap.len(), 5);
+        assert!(snap.iter().all(|e| e.op == CdcOp::SnapshotRead && e.is_well_formed()));
+    }
+
+    #[test]
+    fn migration_carries_equivalent_values() {
+        let (mut tree, mut db, t) = setup();
+        let s = db.tables[t].schema;
+        let row = Row { key: 1, values: vec![Json::Num(1.0), Json::Num(10.0)] };
+        db.apply(&tree, Dml::Insert { table: t, row }, StateI(0), 1);
+        // v2 adds "currency"
+        let v2 = tree.add_version(
+            s,
+            &[
+                ("id".into(), ExtractType::Int64, false),
+                ("value".into(), ExtractType::Decimal, true),
+                ("currency".into(), ExtractType::Varchar, true),
+            ],
+        );
+        db.migrate_table(&tree, t, v2);
+        assert_eq!(db.tables[t].live_version, v2);
+        let r = db.tables[t].row(1).unwrap();
+        assert_eq!(r.values[0].as_f64(), Some(1.0));
+        assert_eq!(r.values[1].as_f64(), Some(10.0));
+        assert!(r.values[2].is_null());
+    }
+
+    #[test]
+    fn random_rows_match_width() {
+        let (tree, db, t) = setup();
+        let mut rng = Rng::seed_from(1);
+        let table = &db.tables[t];
+        let row = random_row(&tree, table.schema, table.live_version, 7, &mut rng, 0.3);
+        assert_eq!(row.values.len(), 2);
+    }
+}

@@ -1,0 +1,172 @@
+//! Postgres-sim persistence of the hybrid strategy (paper §6.2): the
+//! strongly-compacted `ᵢ𝔇𝔘𝔖𝔅` is the stored representation; the
+//! in-memory `ᵢ𝔇𝔓𝔐` is recreated through the decompaction "view"
+//! (Alg 4 + Alg 2). An append-only update log stands in for the WAL and
+//! lets operators audit the state-i history.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::cdm::CdmTree;
+use crate::matrix::decompact::recreate_dpm;
+use crate::matrix::dpm::DpmSet;
+use crate::matrix::dusb::DusbSet;
+use crate::schema::SchemaTree;
+
+/// Directory-backed matrix store.
+pub struct MatrixStore {
+    dir: PathBuf,
+}
+
+impl MatrixStore {
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("create store dir {dir:?}"))?;
+        Ok(Self { dir })
+    }
+
+    fn dusb_path(&self) -> PathBuf {
+        self.dir.join("dusb.json")
+    }
+
+    fn log_path(&self) -> PathBuf {
+        self.dir.join("update_log.jsonl")
+    }
+
+    /// Persist the current `ᵢ𝔇𝔘𝔖𝔅` (atomic replace via temp file).
+    pub fn save_dusb(&self, dusb: &DusbSet) -> Result<()> {
+        let tmp = self.dir.join("dusb.json.tmp");
+        fs::write(&tmp, dusb.to_json().to_pretty())
+            .with_context(|| format!("write {tmp:?}"))?;
+        fs::rename(&tmp, self.dusb_path()).context("atomic replace")?;
+        Ok(())
+    }
+
+    /// Load the stored `ᵢ𝔇𝔘𝔖𝔅`, if any.
+    pub fn load_dusb(&self) -> Result<Option<DusbSet>> {
+        let path = self.dusb_path();
+        if !path.exists() {
+            return Ok(None);
+        }
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("read {path:?}"))?;
+        let json = crate::util::json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        Ok(Some(DusbSet::from_json(&json)?))
+    }
+
+    /// The "Postgres view" of §6.2: recreate the in-memory DPM from the
+    /// stored DUSB. Returns None when nothing is stored yet.
+    pub fn view_recreate_dpm(
+        &self,
+        tree: &SchemaTree,
+        cdm: &CdmTree,
+    ) -> Result<Option<DpmSet>> {
+        match self.load_dusb()? {
+            None => Ok(None),
+            Some(dusb) => {
+                let dpm = recreate_dpm(&dusb, tree, cdm)
+                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+                Ok(Some(dpm))
+            }
+        }
+    }
+
+    /// Append one line to the update log (WAL-style audit trail).
+    pub fn log_update(&self, line: &crate::util::json::Json) -> Result<()> {
+        use std::io::Write;
+        let mut f = fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(self.log_path())?;
+        writeln!(f, "{}", line.to_string())?;
+        Ok(())
+    }
+
+    /// Read back the update log.
+    pub fn read_log(&self) -> Result<Vec<crate::util::json::Json>> {
+        let path = self.log_path();
+        if !path.exists() {
+            return Ok(Vec::new());
+        }
+        fs::read_to_string(&path)?
+            .lines()
+            .filter(|l| !l.trim().is_empty())
+            .map(|l| {
+                crate::util::json::parse(l).map_err(|e| anyhow::anyhow!("{e}"))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::fixtures::{fig5_matrix, fig5_trees};
+    use crate::message::StateI;
+    use crate::util::json::Json;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join("metl-store-tests")
+            .join(format!("{name}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let (t, c) = fig5_trees();
+        let m = fig5_matrix(&t, &c);
+        let dusb = DusbSet::from_matrix(&m, &t, &c, StateI(4)).unwrap();
+        let store = MatrixStore::open(tmpdir("roundtrip")).unwrap();
+        store.save_dusb(&dusb).unwrap();
+        let back = store.load_dusb().unwrap().unwrap();
+        assert_eq!(back.state, StateI(4));
+        assert_eq!(back.n_elements(), dusb.n_elements());
+        assert_eq!(back.decompact(&t, &c), m);
+    }
+
+    #[test]
+    fn view_recreates_dpm() {
+        let (t, c) = fig5_trees();
+        let m = fig5_matrix(&t, &c);
+        let direct = DpmSet::from_matrix(&m, &t, &c, StateI(2)).unwrap();
+        let dusb = DusbSet::from_matrix(&m, &t, &c, StateI(2)).unwrap();
+        let store = MatrixStore::open(tmpdir("view")).unwrap();
+        store.save_dusb(&dusb).unwrap();
+        let restored = store.view_recreate_dpm(&t, &c).unwrap().unwrap();
+        assert!(direct.same_elements(&restored));
+        assert_eq!(restored.state, StateI(2));
+    }
+
+    #[test]
+    fn empty_store_returns_none() {
+        let (t, c) = fig5_trees();
+        let store = MatrixStore::open(tmpdir("empty")).unwrap();
+        assert!(store.load_dusb().unwrap().is_none());
+        assert!(store.view_recreate_dpm(&t, &c).unwrap().is_none());
+    }
+
+    #[test]
+    fn update_log_appends() {
+        let store = MatrixStore::open(tmpdir("log")).unwrap();
+        let mut e1 = Json::obj();
+        e1.set("state", Json::Num(1.0));
+        e1.set("case", Json::Str("added-schema-version".into()));
+        store.log_update(&e1).unwrap();
+        let mut e2 = Json::obj();
+        e2.set("state", Json::Num(2.0));
+        store.log_update(&e2).unwrap();
+        let log = store.read_log().unwrap();
+        assert_eq!(log.len(), 2);
+        assert_eq!(log[0].get("state").unwrap().as_u64(), Some(1));
+        assert_eq!(
+            log[0].get("case").unwrap().as_str(),
+            Some("added-schema-version")
+        );
+    }
+}

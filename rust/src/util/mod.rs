@@ -1,0 +1,25 @@
+//! From-scratch substrates the vendored-crate environment does not provide
+//! (no serde/serde_json, no rand, no rayon, no criterion offline): a JSON
+//! codec, deterministic PRNGs, latency statistics, and a thread pool.
+//!
+//! These are first-class parts of the reproduction: the paper's messages
+//! *are* JSON (fig 2), its evaluation *is* latency statistics (§7), and its
+//! mapping algorithm *is* thread-level parallelism (§5.5).
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+
+/// Monotonic id source used for message keys / event ids across the sim.
+#[derive(Debug, Default)]
+pub struct IdGen(std::sync::atomic::AtomicU64);
+
+impl IdGen {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn next(&self) -> u64 {
+        self.0.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+    }
+}

@@ -1,0 +1,225 @@
+//! Latency statistics — the measurement substrate for reproducing the
+//! paper's §7 evaluation (mean 39 ms, σ 51 ms over 1168 CDC events) and for
+//! the bench harness (no criterion offline).
+
+/// Summary statistics over a sample of f64 observations.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    /// Compute from a sample; empty samples produce an all-zero summary.
+    pub fn from(sample: &[f64]) -> Summary {
+        if sample.is_empty() {
+            return Summary {
+                count: 0,
+                mean: 0.0,
+                std: 0.0,
+                min: 0.0,
+                max: 0.0,
+                p50: 0.0,
+                p90: 0.0,
+                p99: 0.0,
+            };
+        }
+        let count = sample.len();
+        let mean = sample.iter().sum::<f64>() / count as f64;
+        let var = sample.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+            / count as f64;
+        let mut sorted = sample.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            count,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[count - 1],
+            p50: percentile(&sorted, 0.50),
+            p90: percentile(&sorted, 0.90),
+            p99: percentile(&sorted, 0.99),
+        }
+    }
+
+    /// Render one table row: `mean ± std [p50 p90 p99] (min..max) n=count`,
+    /// values formatted by `fmt` (e.g. `format_us`).
+    pub fn row(&self, fmt: impl Fn(f64) -> String) -> String {
+        format!(
+            "{} ± {} [p50 {} p90 {} p99 {}] (min {} max {}) n={}",
+            fmt(self.mean),
+            fmt(self.std),
+            fmt(self.p50),
+            fmt(self.p90),
+            fmt(self.p99),
+            fmt(self.min),
+            fmt(self.max),
+            self.count
+        )
+    }
+}
+
+/// Nearest-rank percentile on a pre-sorted sample.
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Format nanoseconds human-readably.
+pub fn format_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0}ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2}µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2}ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3}s", ns / 1_000_000_000.0)
+    }
+}
+
+/// A latency recorder accumulating nanosecond observations.
+#[derive(Debug, Default, Clone)]
+pub struct LatencyRecorder {
+    samples_ns: Vec<f64>,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, d: std::time::Duration) {
+        self.samples_ns.push(d.as_nanos() as f64);
+    }
+
+    pub fn record_ns(&mut self, ns: f64) {
+        self.samples_ns.push(ns);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples_ns.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples_ns.is_empty()
+    }
+
+    pub fn summary(&self) -> Summary {
+        Summary::from(&self.samples_ns)
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples_ns
+    }
+
+    pub fn merge(&mut self, other: &LatencyRecorder) {
+        self.samples_ns.extend_from_slice(&other.samples_ns);
+    }
+}
+
+/// Log-scaled histogram (base-2 buckets) for dashboard rendering.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    /// counts[i] counts samples in [2^i, 2^(i+1)) ns.
+    counts: Vec<u64>,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self { counts: vec![0; 64] }
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_ns(&mut self, ns: u64) {
+        let bucket = 63 - ns.max(1).leading_zeros() as usize;
+        self.counts[bucket] += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Render non-empty buckets as ASCII bars.
+    pub fn render(&self) -> String {
+        let total = self.total().max(1);
+        let mut out = String::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let lo = 1u64 << i;
+            let bar_len = (c * 40 / total).max(1) as usize;
+            out.push_str(&format!(
+                "{:>10} | {:<40} {}\n",
+                format_ns(lo as f64),
+                "#".repeat(bar_len),
+                c
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::from(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.count, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+        assert!((s.std - (2.0f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_summary_is_zero() {
+        let s = Summary::from(&[]);
+        assert_eq!(s.count, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn percentiles_monotone() {
+        let sample: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        let s = Summary::from(&sample);
+        assert!(s.p50 <= s.p90 && s.p90 <= s.p99 && s.p99 <= s.max);
+        assert!((s.p50 - 500.0).abs() <= 1.0);
+        assert!((s.p99 - 989.0).abs() <= 2.0);
+    }
+
+    #[test]
+    fn format_ns_scales() {
+        assert_eq!(format_ns(500.0), "500ns");
+        assert_eq!(format_ns(1_500.0), "1.50µs");
+        assert_eq!(format_ns(39_000_000.0), "39.00ms");
+        assert_eq!(format_ns(2_000_000_000.0), "2.000s");
+    }
+
+    #[test]
+    fn histogram_buckets() {
+        let mut h = LogHistogram::new();
+        h.record_ns(1);
+        h.record_ns(1024);
+        h.record_ns(1024);
+        assert_eq!(h.total(), 3);
+        let rendered = h.render();
+        assert!(rendered.contains("1ns"));
+        assert!(rendered.contains("1.02µs"));
+    }
+}

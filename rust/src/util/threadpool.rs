@@ -1,0 +1,183 @@
+//! A small fixed-size thread pool + scoped parallel-map helpers.
+//!
+//! This carries the paper's §5.5 parallelism: Alg 6 executes independent
+//! mapping elements / blocks / messages concurrently, and the horizontal
+//! scaler runs one coordinator instance per Kafka partition subset.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed pool of worker threads consuming a shared job queue.
+pub struct ThreadPool {
+    workers: Vec<thread::JoinHandle<()>>,
+    sender: Option<mpsc::Sender<Job>>,
+    in_flight: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let (sender, receiver) = mpsc::channel::<Job>();
+        let receiver = Arc::new(Mutex::new(receiver));
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let workers = (0..n)
+            .map(|i| {
+                let receiver = Arc::clone(&receiver);
+                let in_flight = Arc::clone(&in_flight);
+                thread::Builder::new()
+                    .name(format!("metl-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = receiver.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                in_flight.fetch_sub(1, Ordering::AcqRel);
+                            }
+                            Err(_) => break, // channel closed: shut down
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { workers, sender: Some(sender), in_flight }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a job for asynchronous execution.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.in_flight.fetch_add(1, Ordering::AcqRel);
+        self.sender
+            .as_ref()
+            .expect("pool alive")
+            .send(Box::new(job))
+            .expect("worker alive");
+    }
+
+    /// Busy-wait (with yielding) until all submitted jobs completed.
+    pub fn wait_idle(&self) {
+        while self.in_flight.load(Ordering::Acquire) != 0 {
+            thread::yield_now();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.sender.take()); // close channel, workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Scoped parallel map: split `items` into `n_threads` contiguous chunks and
+/// apply `f` to each item, preserving order. Falls back to sequential for
+/// tiny inputs where spawn overhead dominates (the same batching judgment
+/// the paper makes when it reserves horizontal scaling for initial loads).
+pub fn par_map<T: Sync, R: Send>(
+    n_threads: usize,
+    items: &[T],
+    f: impl Fn(&T) -> R + Sync,
+) -> Vec<R> {
+    let n_threads = n_threads.max(1).min(items.len().max(1));
+    if n_threads == 1 || items.len() < 2 {
+        return items.iter().map(&f).collect();
+    }
+    let chunk = items.len().div_ceil(n_threads);
+    let mut out: Vec<Option<R>> = Vec::with_capacity(items.len());
+    out.resize_with(items.len(), || None);
+    let out_slots: Vec<&mut [Option<R>]> = out.chunks_mut(chunk).collect();
+    thread::scope(|scope| {
+        for (slot, in_chunk) in out_slots.into_iter().zip(items.chunks(chunk)) {
+            let f = &f;
+            scope.spawn(move || {
+                for (o, item) in slot.iter_mut().zip(in_chunk) {
+                    *o = Some(f(item));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("filled")).collect()
+}
+
+/// Scoped parallel for-each over mutable chunks (used by the bulk lane to
+/// fill tensor buffers in place).
+pub fn par_chunks_mut<T: Send>(
+    n_threads: usize,
+    items: &mut [T],
+    f: impl Fn(usize, &mut [T]) + Sync,
+) {
+    let n_threads = n_threads.max(1);
+    if n_threads == 1 || items.len() < 2 {
+        f(0, items);
+        return;
+    }
+    let chunk = items.len().div_ceil(n_threads);
+    thread::scope(|scope| {
+        for (i, part) in items.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            scope.spawn(move || f(i * chunk, part));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn pool_shutdown_joins() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| {});
+        drop(pool); // must not hang
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let items: Vec<u64> = (0..1000).collect();
+        let out = par_map(8, &items, |x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_single_item() {
+        assert_eq!(par_map(8, &[5u64], |x| x + 1), vec![6]);
+        assert_eq!(par_map(8, &Vec::<u64>::new(), |x| x + 1), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn par_chunks_mut_covers_all() {
+        let mut v = vec![0u64; 97];
+        par_chunks_mut(4, &mut v, |base, chunk| {
+            for (i, x) in chunk.iter_mut().enumerate() {
+                *x = (base + i) as u64;
+            }
+        });
+        assert_eq!(v, (0..97).collect::<Vec<u64>>());
+    }
+}

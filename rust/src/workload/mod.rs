@@ -1,0 +1,420 @@
+//! Workload generation: the simulated EOS/FX landscape (schemata, CDM,
+//! databases, mapping matrix) and day traces of CDC events + schema-change
+//! storms — the substitute for the paper's production system (DESIGN.md
+//! §2, "EOS production traces" row).
+//!
+//! Everything is seeded and deterministic so paper-figure regenerations
+//! are reproducible.
+
+use crate::cdm::{CdmType, CdmTree};
+use crate::config::PipelineConfig;
+use crate::matrix::MappingMatrix;
+use crate::schema::{ExtractType, SchemaTree, VersionNo};
+use crate::source::{MicroserviceDb, Table};
+use crate::util::rng::Rng;
+
+/// A generated microservice landscape.
+pub struct Landscape {
+    pub tree: SchemaTree,
+    pub cdm: CdmTree,
+    /// One database per service; one table per database (table ↔ schema).
+    pub dbs: Vec<MicroserviceDb>,
+    /// Ground-truth mapping matrix `ᵢM`.
+    pub matrix: MappingMatrix,
+}
+
+const EXT_TYPES: &[ExtractType] = &[
+    ExtractType::Int32,
+    ExtractType::Int64,
+    ExtractType::Float64,
+    ExtractType::Varchar,
+    ExtractType::Boolean,
+    ExtractType::MicroTimestamp,
+    ExtractType::Decimal,
+];
+
+fn field_name(j: usize) -> String {
+    const NAMES: &[&str] = &[
+        "id", "value", "currency", "time", "status", "customer", "amount",
+        "rate", "due_date", "account", "region", "channel", "score",
+        "category", "flag",
+    ];
+    if j < NAMES.len() {
+        NAMES[j].to_string()
+    } else {
+        format!("col{j}")
+    }
+}
+
+/// Generate the full landscape for a config.
+pub fn generate(cfg: &PipelineConfig) -> Landscape {
+    let mut rng = Rng::seed_from(cfg.seed);
+    let mut tree = SchemaTree::new();
+    let mut cdm = CdmTree::new();
+
+    // --- CDM: business entities, one live version each -----------------
+    for e in 0..cfg.n_entities {
+        let id = cdm.add_entity(&format!("Entity{e}"));
+        let fields: Vec<(String, CdmType, String)> = (0..cfg.attrs_per_entity)
+            .map(|j| {
+                (
+                    format!("{}_{j}", field_name(j)),
+                    CdmType::generalize(EXT_TYPES[j % EXT_TYPES.len()]),
+                    format!("Business meaning of {} (entity {e})", field_name(j)),
+                )
+            })
+            .collect();
+        cdm.add_version(id, &fields);
+    }
+
+    // --- Extracting schemata with version histories ---------------------
+    for s in 0..cfg.n_services {
+        let service = format!("svc{s}");
+        let sid = tree.add_schema(
+            &format!("{service}.main"),
+            &format!("src.{service}.main"),
+        );
+        let mut fields: Vec<(String, ExtractType, bool)> = (0
+            ..cfg.attrs_per_schema)
+            .map(|j| {
+                (
+                    field_name(j),
+                    EXT_TYPES[rng.gen_range(EXT_TYPES.len() as u64) as usize],
+                    j != 0, // first field is the mandatory key
+                )
+            })
+            .collect();
+        tree.add_version(sid, &fields);
+        let mut next_fresh = cfg.attrs_per_schema;
+        for vi in 1..cfg.versions_per_schema {
+            // alternate: add a column / remove the last optional column —
+            // the single-attribute-change discipline of §3.3
+            if vi % 2 == 1 || fields.len() <= 2 {
+                fields.push((
+                    field_name(next_fresh),
+                    EXT_TYPES[rng.gen_range(EXT_TYPES.len() as u64) as usize],
+                    true,
+                ));
+                next_fresh += 1;
+            } else {
+                let victim = 1 + rng.gen_range(fields.len() as u64 - 1) as usize;
+                fields.remove(victim);
+            }
+            tree.add_version(sid, &fields);
+        }
+    }
+
+    // --- Mapping matrix --------------------------------------------------
+    let matrix = generate_matrix(&tree, &cdm, cfg, &mut rng);
+
+    // --- Databases (empty; populate() fills rows) ------------------------
+    let dbs = (0..cfg.n_services)
+        .map(|s| {
+            let service = format!("svc{s}");
+            let sid = tree.schema_by_name(&format!("{service}.main")).unwrap();
+            let live = tree.latest_version(sid).unwrap();
+            let mut db = MicroserviceDb::new(&service, &service);
+            db.add_table(Table::new("main", sid, live));
+            db
+        })
+        .collect();
+
+    Landscape { tree, cdm, dbs, matrix }
+}
+
+/// Build `ᵢM` for a generated tree pair: schema s maps to entity
+/// s % n_entities; v1 blocks are seeded 1:1 mappings, later versions copy
+/// their predecessor through `≡` (the duplication that makes the matrix
+/// both huge and compressible, §5.4.1).
+fn generate_matrix(
+    tree: &SchemaTree,
+    cdm: &CdmTree,
+    cfg: &PipelineConfig,
+    rng: &mut Rng,
+) -> MappingMatrix {
+    let mut m = MappingMatrix::new(cdm.n_attr_ids(), tree.n_attr_ids());
+    for (s_idx, schema) in tree.schemas().enumerate() {
+        let entity = cdm
+            .entity_by_name(&format!("Entity{}", s_idx % cfg.n_entities))
+            .unwrap();
+        let w = *cdm.versions_of(entity).last().unwrap();
+        let cv = cdm.version(entity, w).unwrap();
+        let versions: Vec<VersionNo> = schema.versions.clone();
+        for (vi, &v) in versions.iter().enumerate() {
+            let sv = tree.version(schema.id, v).unwrap();
+            if vi == 0 {
+                // seed block: attr j -> entity row j (1:1), filtered by
+                // mapped_fraction
+                for (j, &p) in sv.attrs.iter().enumerate() {
+                    if j < cv.attrs.len() && rng.chance(cfg.mapped_fraction) {
+                        m.set(cv.attrs[j].index(), p.index(), true);
+                    }
+                }
+            } else {
+                // copy previous version through equivalences (Alg 5 case 3
+                // re-applied as history); fresh attributes occasionally get
+                // a new free row (a user completing a semi-automated update)
+                let prev = tree.version(schema.id, versions[vi - 1]).unwrap();
+                let mut used_rows: Vec<usize> = Vec::new();
+                for &p_prev in &prev.attrs {
+                    if let Some(p_new) =
+                        tree.equivalent_in(p_prev, schema.id, v)
+                    {
+                        for &q in &cv.attrs {
+                            if m.get(q.index(), p_prev.index()) {
+                                m.set(q.index(), p_new.index(), true);
+                                used_rows.push(q.index());
+                            }
+                        }
+                    }
+                }
+                // most version updates only duplicate the pattern (§5.4.1);
+                // occasionally a user maps the fresh attribute too
+                for &p in &sv.attrs {
+                    let attr = tree.attr(p);
+                    if attr.equiv.is_none()
+                        && rng.chance(0.2 * cfg.mapped_fraction)
+                    {
+                        if let Some(q) = cv
+                            .attrs
+                            .iter()
+                            .map(|a| a.index())
+                            .find(|qi| !used_rows.contains(qi))
+                        {
+                            // ensure 1:1: the column is fresh by construction
+                            m.set(q, p.index(), true);
+                            used_rows.push(q);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    m
+}
+
+/// Populate every database table with `rows_per_table` random rows
+/// (without emitting CDC events — pre-existing data for snapshot tests).
+pub fn populate(landscape: &mut Landscape, rows_per_table: usize, rng: &mut Rng) {
+    for db in &mut landscape.dbs {
+        for t in 0..db.tables.len() {
+            let (schema, version) =
+                (db.tables[t].schema, db.tables[t].live_version);
+            for k in 0..rows_per_table {
+                let row = crate::source::random_row(
+                    &landscape.tree,
+                    schema,
+                    version,
+                    k as u64,
+                    rng,
+                    0.3,
+                );
+                // direct insert without CDC (historic data)
+                let ev = db.apply(
+                    &landscape.tree,
+                    crate::source::Dml::Insert { table: t, row },
+                    crate::message::StateI(0),
+                    0,
+                );
+                debug_assert!(ev.is_some());
+            }
+        }
+    }
+}
+
+/// One step of a generated day trace.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceOp {
+    /// A DML intent against a service's table; the pipeline resolves it
+    /// against current rows.
+    Dml { service: usize, kind: DmlKind },
+    /// A schema-change storm step: register a new version for the service
+    /// (the §3.3 semi-automated workflow trigger).
+    SchemaChange { service: usize },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DmlKind {
+    Insert,
+    Update,
+    Delete,
+}
+
+/// Generate the §7-style day trace: `trace_events` DML intents with a
+/// 70/25/5 insert/update/delete mix, interleaved with `schema_changes`
+/// evenly spaced storms (the paper: "the DMM-update is triggered several
+/// times a day, which evicts all caches").
+pub fn day_trace(cfg: &PipelineConfig, rng: &mut Rng) -> Vec<TraceOp> {
+    let mut ops = Vec::with_capacity(cfg.trace_events + cfg.schema_changes);
+    for _ in 0..cfg.trace_events {
+        let service = rng.gen_range(cfg.n_services as u64) as usize;
+        let roll = rng.f64();
+        let kind = if roll < 0.70 {
+            DmlKind::Insert
+        } else if roll < 0.95 {
+            DmlKind::Update
+        } else {
+            DmlKind::Delete
+        };
+        ops.push(TraceOp::Dml { service, kind });
+    }
+    // interleave schema changes at even spacing
+    if cfg.schema_changes > 0 {
+        let stride = ops.len().max(1) / (cfg.schema_changes + 1);
+        for c in 0..cfg.schema_changes {
+            let at = ((c + 1) * stride + c).min(ops.len());
+            let service = rng.gen_range(cfg.n_services as u64) as usize;
+            ops.insert(at, TraceOp::SchemaChange { service });
+        }
+    }
+    ops
+}
+
+/// Evolve one schema by a single attribute change (add a fresh column),
+/// returning the new field list — used to resolve `TraceOp::SchemaChange`.
+pub fn evolved_fields(
+    tree: &SchemaTree,
+    schema: crate::schema::SchemaId,
+) -> Vec<(String, ExtractType, bool)> {
+    let latest = tree.latest_version(schema).expect("schema has versions");
+    let sv = tree.version(schema, latest).expect("live");
+    let mut fields: Vec<(String, ExtractType, bool)> = sv
+        .attrs
+        .iter()
+        .map(|&a| {
+            let at = tree.attr(a);
+            (at.name.clone(), at.ty, at.optional)
+        })
+        .collect();
+    fields.push((
+        format!("evo{}", tree.n_attr_ids()),
+        ExtractType::Varchar,
+        true,
+    ));
+    fields
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::blocks;
+    use crate::matrix::dpm::DpmSet;
+    use crate::message::StateI;
+
+    #[test]
+    fn generate_is_deterministic() {
+        let cfg = PipelineConfig::small();
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a.matrix, b.matrix);
+        assert_eq!(a.tree.n_attr_ids(), b.tree.n_attr_ids());
+    }
+
+    #[test]
+    fn landscape_shape_matches_config() {
+        let cfg = PipelineConfig::small();
+        let l = generate(&cfg);
+        assert_eq!(l.tree.n_schemas(), cfg.n_services);
+        assert_eq!(l.cdm.n_entities(), cfg.n_entities);
+        assert_eq!(l.dbs.len(), cfg.n_services);
+        for s in l.tree.schemas() {
+            assert_eq!(s.versions.len(), cfg.versions_per_schema);
+        }
+    }
+
+    #[test]
+    fn matrix_respects_one_to_one_constraint() {
+        let cfg = PipelineConfig::small();
+        let l = generate(&cfg);
+        // Alg 2 would fail on any constraint violation
+        let dpm =
+            DpmSet::from_matrix(&l.matrix, &l.tree, &l.cdm, StateI(0)).unwrap();
+        assert!(dpm.n_elements() > 0);
+    }
+
+    #[test]
+    fn versioned_blocks_duplicate_patterns() {
+        // later versions must mostly repeat v1's pattern through ≡ —
+        // the compressibility the paper exploits
+        let cfg = PipelineConfig::small();
+        let l = generate(&cfg);
+        let dusb = crate::matrix::dusb::DusbSet::from_matrix(
+            &l.matrix, &l.tree, &l.cdm, StateI(0),
+        )
+        .unwrap();
+        let dpm =
+            DpmSet::from_matrix(&l.matrix, &l.tree, &l.cdm, StateI(0)).unwrap();
+        assert!(
+            dusb.n_elements() * 2 <= dpm.n_elements(),
+            "dusb {} vs dpm {}: version dedupe should save >=50%",
+            dusb.n_elements(),
+            dpm.n_elements()
+        );
+    }
+
+    #[test]
+    fn most_blocks_are_null() {
+        // the paper's 99% null-block deletion premise
+        let cfg = PipelineConfig::paper_day();
+        let l = generate(&cfg);
+        let keys = blocks::all_block_keys(&l.tree, &l.cdm);
+        let nonnull = keys
+            .iter()
+            .filter(|k| {
+                let ext = blocks::block_extent(&l.tree, &l.cdm, **k).unwrap();
+                !blocks::is_null_block(&l.matrix, &ext)
+            })
+            .count();
+        assert!(
+            (nonnull as f64) < keys.len() as f64 * 0.15,
+            "nonnull {nonnull}/{}",
+            keys.len()
+        );
+    }
+
+    #[test]
+    fn populate_fills_tables() {
+        let cfg = PipelineConfig::small();
+        let mut l = generate(&cfg);
+        let mut rng = Rng::seed_from(1);
+        populate(&mut l, 10, &mut rng);
+        assert!(l.dbs.iter().all(|db| db.tables[0].len() == 10));
+    }
+
+    #[test]
+    fn day_trace_mix_and_storms() {
+        let cfg = PipelineConfig::paper_day();
+        let mut rng = Rng::seed_from(cfg.seed);
+        let ops = day_trace(&cfg, &mut rng);
+        let dml = ops
+            .iter()
+            .filter(|o| matches!(o, TraceOp::Dml { .. }))
+            .count();
+        let changes = ops
+            .iter()
+            .filter(|o| matches!(o, TraceOp::SchemaChange { .. }))
+            .count();
+        assert_eq!(dml, cfg.trace_events);
+        assert_eq!(changes, cfg.schema_changes);
+        let inserts = ops
+            .iter()
+            .filter(|o| matches!(o, TraceOp::Dml { kind: DmlKind::Insert, .. }))
+            .count();
+        assert!(inserts as f64 > 0.6 * dml as f64);
+    }
+
+    #[test]
+    fn evolved_fields_adds_exactly_one() {
+        let cfg = PipelineConfig::small();
+        let l = generate(&cfg);
+        let schema = l.tree.schemas().next().unwrap().id;
+        let before = l
+            .tree
+            .version(schema, l.tree.latest_version(schema).unwrap())
+            .unwrap()
+            .attrs
+            .len();
+        let fields = evolved_fields(&l.tree, schema);
+        assert_eq!(fields.len(), before + 1);
+    }
+}

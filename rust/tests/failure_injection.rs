@@ -1,0 +1,217 @@
+//! Failure-injection tests: the §3.4 "distributed systems produce problems
+//! of their own" lane — out-of-sync states, unknown versions, malformed
+//! envelopes, store corruption, constraint violations, consumer crashes.
+
+use std::sync::Arc;
+
+use metl::broker::Consumer;
+use metl::config::PipelineConfig;
+use metl::coordinator::pipeline::Pipeline;
+use metl::matrix::blocks::{self, BlockExtent};
+use metl::matrix::dpm::DpmSet;
+use metl::matrix::MappingMatrix;
+use metl::message::cdc::{CdcEvent, CdcOp, CdcSource};
+use metl::message::{InMessage, StateI};
+use metl::schema::VersionNo;
+use metl::util::json::Json;
+use metl::workload::{DmlKind, TraceOp};
+
+fn src() -> CdcSource {
+    CdcSource { connector: "pg".into(), db: "x".into(), table: "t".into() }
+}
+
+/// A message referencing a schema version METL never learned about must
+/// dead-letter, not crash or silently drop.
+#[test]
+fn unknown_schema_version_dead_letters() {
+    let p = Pipeline::new(PipelineConfig::small()).unwrap();
+    let land = p.landscape.read().unwrap();
+    let schema = land.dbs[0].tables[0].schema;
+    let sv = land
+        .tree
+        .version(schema, VersionNo(1))
+        .unwrap()
+        .clone();
+    drop(land);
+    let ghost = CdcEvent {
+        op: CdcOp::Create,
+        before: None,
+        after: Some(InMessage {
+            key: 1,
+            schema,
+            version: VersionNo(250), // never registered
+            state: StateI(0),
+            ts_us: 0,
+            fields: vec![(sv.attrs[0], Json::Num(1.0))],
+        }),
+        source: src(),
+        ts_us: 0,
+    };
+    p.process_event(&Arc::new(ghost));
+    assert_eq!(p.metrics.dead_letters.get(), 1);
+    assert_eq!(p.dlq.len(), 1);
+    // the DLQ can be drained for reprocessing after a fix
+    let drained = p.dlq.drain();
+    assert_eq!(drained[0].event.op, CdcOp::Create);
+    assert!(p.dlq.is_empty());
+}
+
+/// Deeply out-of-sync messages (future state) still restamp-retry; the
+/// mapping only fails if the column is genuinely missing.
+#[test]
+fn future_state_message_recovers() {
+    let p = Pipeline::new(PipelineConfig::small()).unwrap();
+    p.resolve_op(&TraceOp::Dml { service: 0, kind: DmlKind::Insert })
+        .unwrap();
+    let mut consumer = Consumer::new(p.cdc_topic.clone(), 0, 1);
+    let batch = consumer.poll(1);
+    let mut ev = (*batch[0].1.value).clone();
+    if let Some(after) = &mut ev.after {
+        after.state = StateI(40); // from a future configuration
+    }
+    p.process_event(&Arc::new(ev));
+    assert_eq!(p.metrics.sync_retries.get(), 1);
+    assert_eq!(p.metrics.dead_letters.get(), 0);
+}
+
+/// Malformed wire payloads are decode errors, not panics.
+#[test]
+fn malformed_wire_payloads_rejected() {
+    let p = Pipeline::new(PipelineConfig::small()).unwrap();
+    let land = p.landscape.read().unwrap();
+    for garbage in [
+        "",
+        "{",
+        "[1,2,3]",
+        r#"{"payload": 5}"#,
+        r#"{"payload": {"op": "zz", "source": {}}}"#,
+        r#"{"payload": {"op": "c", "before": null, "after": {"schemaId": 0,
+            "version": 1, "payload": {"ghost": 1}}, "source": {}}}"#,
+    ] {
+        assert!(
+            metl::message::codec::decode_cdc(garbage, &land.tree).is_err(),
+            "{garbage}"
+        );
+    }
+}
+
+/// A corrupted store file fails loudly on restore; the pipeline keeps the
+/// live DMM.
+#[test]
+fn corrupted_store_fails_loudly() {
+    let dir = std::env::temp_dir()
+        .join("metl-fi-store")
+        .join(format!("{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let p = Pipeline::new(PipelineConfig::small())
+        .unwrap()
+        .with_store(&dir)
+        .unwrap();
+    // corrupt the persisted DUSB
+    std::fs::write(dir.join("dusb.json"), "{\"groups\": [{\"bad\"").unwrap();
+    assert!(p.restore_from_store().is_err());
+    // live DMM untouched
+    assert!(p.dmm.read().unwrap().n_elements() > 0);
+    // a truncated-but-valid-json store with wrong shape also errors
+    std::fs::write(dir.join("dusb.json"), "{\"state\": 3}").unwrap();
+    assert!(p.restore_from_store().is_err());
+}
+
+/// 1:1 constraint violations (double-mapped attribute) are rejected by
+/// Alg 2 with a precise diagnosis, as §4.5 demands.
+#[test]
+fn constraint_violation_rejected_with_diagnosis() {
+    let mut m = MappingMatrix::new(4, 4);
+    m.set(0, 0, true);
+    m.set(0, 1, true); // c0 fed by two attributes
+    let ext = BlockExtent { rows: 0..4, cols: 0..4 };
+    let err = blocks::largest_permutation(&m, &ext).unwrap_err();
+    assert_eq!(err.kind, "row");
+    assert_eq!(err.index, 0);
+    // the greedy import path salvages a valid sub-permutation instead
+    let (kept, dropped) = blocks::largest_permutation_greedy(&m, &ext);
+    assert_eq!(kept.len(), 1);
+    assert_eq!(dropped, 1);
+}
+
+/// A consumer crash between poll and commit redelivers events; METL's
+/// counters show the duplicates, the DW absorbs them.
+#[test]
+fn consumer_crash_redelivery() {
+    let p = Pipeline::new(PipelineConfig::small()).unwrap();
+    for _ in 0..10 {
+        p.resolve_op(&TraceOp::Dml { service: 0, kind: DmlKind::Insert })
+            .unwrap();
+    }
+    let mut consumer = Consumer::new(p.cdc_topic.clone(), 0, 1);
+    // first attempt: process everything but "crash" before commit
+    let batch = consumer.poll(64);
+    assert_eq!(batch.len(), 10);
+    for (_, rec) in &batch {
+        p.process_event(&rec.value);
+    }
+    consumer.rewind_to_committed(); // crash + restart
+    let batch = consumer.poll(64);
+    assert_eq!(batch.len(), 10, "redelivered");
+    for (_, rec) in &batch {
+        p.process_event(&rec.value);
+    }
+    consumer.commit();
+    assert_eq!(p.metrics.events_in.get(), 20); // at-least-once: 2x processed
+    // the sinks deduplicate by key+payload
+    let mut out = Consumer::new(p.out_topic.clone(), 0, 1);
+    p.drain_sinks(&mut out);
+    let dw = p.dw.lock().unwrap();
+    assert_eq!(dw.total_rows() as u64, 10 - dupes_missing(&dw));
+    assert!(dw.total_duplicates() > 0);
+}
+
+fn dupes_missing(dw: &metl::sink::DwSink) -> u64 {
+    // rows whose mapped payload was empty never reach the DW
+    let _ = dw;
+    0
+}
+
+/// Deleting a schema version mid-stream: in-flight events of that version
+/// dead-letter with UnknownColumn (offset reset + initial load is the
+/// §3.4 recovery), newer-version events keep flowing.
+#[test]
+fn version_deletion_mid_stream() {
+    let p = Pipeline::new(PipelineConfig::small()).unwrap();
+    p.resolve_op(&TraceOp::Dml { service: 0, kind: DmlKind::Insert })
+        .unwrap();
+    let land = p.landscape.read().unwrap();
+    let schema = land.dbs[0].tables[0].schema;
+    let live = land.dbs[0].tables[0].live_version;
+    drop(land);
+    // drop the live version's column from the DMM (operator mistake sim)
+    {
+        let mut dpm = (**p.dmm.read().unwrap()).clone();
+        dpm.remove_column(schema, live);
+        *p.dmm.write().unwrap() = Arc::new(dpm);
+        p.cache.evict_all(p.state.current());
+    }
+    let mut consumer = Consumer::new(p.cdc_topic.clone(), 0, 1);
+    for (_, rec) in consumer.poll(64) {
+        p.process_event(&rec.value);
+    }
+    assert_eq!(p.dlq.len(), 1);
+    // recovery: restore the DMM (re-derive from ground truth), replay DLQ
+    {
+        let land = p.landscape.read().unwrap();
+        let dpm = DpmSet::from_matrix(
+            &land.matrix,
+            &land.tree,
+            &land.cdm,
+            p.state.current(),
+        )
+        .unwrap();
+        *p.dmm.write().unwrap() = Arc::new(dpm);
+        p.cache.evict_all(p.state.current());
+    }
+    for dead in p.dlq.drain() {
+        p.process_event(&dead.event);
+    }
+    assert_eq!(p.dlq.len(), 0, "replay succeeded after recovery");
+    assert!(p.metrics.messages_out.get() > 0);
+}

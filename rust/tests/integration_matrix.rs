@@ -1,0 +1,202 @@
+//! Integration tests over the matrix subsystem: the paper's two worked
+//! figures end to end, and the compaction/update claims at profile scale.
+
+use metl::config::PipelineConfig;
+use metl::matrix::compaction::CompactionStats;
+use metl::matrix::decompact::recreate_dpm;
+use metl::matrix::dpm::DpmSet;
+use metl::matrix::dusb::DusbSet;
+use metl::matrix::fixtures::{
+    fig5_drop_old_cdm, fig5_matrix, fig5_trees, fig6_matrix, fig6_trees,
+};
+use metl::matrix::update::{auto_update, ChangeCase};
+use metl::message::StateI;
+use metl::schema::ExtractType;
+use metl::workload;
+
+/// Figure 5, exactly as printed: the 6x5 live matrix holds 30 elements;
+/// Alg 2 compacts to 7, Alg 3 to 5 plus one special null block.
+#[test]
+fn figure5_worked_example_exact() {
+    let (t, mut c) = fig5_trees();
+    fig5_drop_old_cdm(&mut c); // §5.1: outdated CDM version deleted
+    let m = fig5_matrix(&t, &c);
+    let dpm = DpmSet::from_matrix(&m, &t, &c, StateI(0)).unwrap();
+    let dusb = DusbSet::from_matrix(&m, &t, &c, StateI(0)).unwrap();
+    let stats = CompactionStats::measure(&m, &t, &c, &dpm, &dusb);
+    assert_eq!(stats.matrix_elements, 30, "fig 5: 30 live elements");
+    assert_eq!(stats.ones, 7);
+    assert_eq!(stats.dpm_elements, 7, "fig 5: Alg 2 -> 7 elements");
+    assert_eq!(stats.dusb_elements, 5, "fig 5: Alg 3 -> 5 elements");
+    assert_eq!(stats.dusb_special_nulls, 1, "fig 5: the special 6th element");
+    // both roundtrip to the same matrix
+    assert_eq!(dpm.decompact(m.n_rows(), m.n_cols()), m);
+    assert_eq!(dusb.decompact(&t, &c), m);
+}
+
+/// Figure 6, both update events in sequence, checked against the printed
+/// matrix values.
+#[test]
+fn figure6_worked_example_exact() {
+    let (mut t, mut c) = fig6_trees();
+    let m = fig6_matrix(&t, &c);
+    let mut dpm = DpmSet::from_matrix(&m, &t, &c, StateI(0)).unwrap();
+    assert_eq!(dpm.n_elements(), 6);
+
+    // event (1): added extracting version s1.v3 with a7 ≡ a4 ≡ a1
+    let s1 = t.schema_by_name("s1").unwrap();
+    let v3 = t.add_version(s1, &[("a1".into(), ExtractType::Int64, true)]);
+    let r1 = auto_update(
+        &mut dpm,
+        &t,
+        &c,
+        ChangeCase::AddedSchemaVersion { schema: s1, v: v3 },
+        StateI(1),
+    );
+    // fig 6 column s1.v3: only c1 = 1
+    assert_eq!(r1.elements_added, 1);
+    let col = dpm.column(s1, v3);
+    assert_eq!(col.len(), 1);
+    let e1 = c.entity_by_name("s1cdm").unwrap();
+    assert_eq!(col[0].key.entity, e1);
+    // c2's mapping (a6, no descendant in v3) shrank: notice raised
+    assert!(!r1.notices.is_empty());
+
+    // event (2): added CDM version (c3≡c1, c4≡c2); old version rows deleted
+    let w2 = c.add_version(
+        e1,
+        &[
+            ("c1".into(), metl::cdm::CdmType::Integer, String::new()),
+            ("c2".into(), metl::cdm::CdmType::Integer, String::new()),
+        ],
+    );
+    let r2 = auto_update(
+        &mut dpm,
+        &t,
+        &c,
+        ChangeCase::AddedCdmVersion { entity: e1, w: w2 },
+        StateI(2),
+    );
+    // fig 6: rows c3/c4 carry the copied values of c1/c2 across all three
+    // column blocks; v1 rows deleted (red)
+    assert_eq!(r2.blocks_added, 3);
+    assert_eq!(r2.elements_added, 5); // (a1,a3) + (a4,a6) + (a7)
+    assert_eq!(r2.blocks_removed, 3);
+    assert!(dpm.row(e1, metl::cdm::CdmVersionNo(1)).is_empty());
+    let new_rows: usize = dpm.row(e1, w2).iter().map(|b| b.rank()).sum();
+    assert_eq!(new_rows, 5);
+    // the untouched entity survives
+    let e2 = c.entity_by_name("s2cdm").unwrap();
+    assert_eq!(
+        dpm.row(e2, metl::cdm::CdmVersionNo(1))
+            .iter()
+            .map(|b| b.rank())
+            .sum::<usize>(),
+        2
+    );
+}
+
+/// Paper claim (§5.3): >99% compaction for the standard use case, with the
+/// aggressive strategy at least as good, at paper_day scale.
+#[test]
+fn compaction_claims_at_paper_scale() {
+    let cfg = PipelineConfig::paper_day();
+    let land = workload::generate(&cfg);
+    let dpm =
+        DpmSet::from_matrix(&land.matrix, &land.tree, &land.cdm, StateI(0))
+            .unwrap();
+    let dusb =
+        DusbSet::from_matrix(&land.matrix, &land.tree, &land.cdm, StateI(0))
+            .unwrap();
+    let stats = CompactionStats::measure(
+        &land.matrix, &land.tree, &land.cdm, &dpm, &dusb,
+    );
+    assert!(stats.dpm_ratio() > 0.99, "DPM ratio {}", stats.dpm_ratio());
+    assert!(stats.dusb_ratio() > 0.99, "DUSB ratio {}", stats.dusb_ratio());
+    assert!(stats.dusb_ratio() >= stats.dpm_ratio());
+    assert!(stats.null_block_ratio() > 0.9, "most blocks are null");
+}
+
+/// The hybrid restore path is exact at scale: DUSB -> M -> DPM equals the
+/// directly-built DPM (the §6.2 restart invariant).
+#[test]
+fn restore_path_exact_at_scale() {
+    let cfg = PipelineConfig::paper_day();
+    let land = workload::generate(&cfg);
+    let direct =
+        DpmSet::from_matrix(&land.matrix, &land.tree, &land.cdm, StateI(3))
+            .unwrap();
+    let dusb =
+        DusbSet::from_matrix(&land.matrix, &land.tree, &land.cdm, StateI(3))
+            .unwrap();
+    // DUSB decompacts to the very matrix it was built from
+    assert_eq!(dusb.decompact(&land.tree, &land.cdm), land.matrix);
+    let restored = recreate_dpm(&dusb, &land.tree, &land.cdm).unwrap();
+    assert!(direct.same_elements(&restored));
+}
+
+/// A storm of version additions applied through Alg 5 must leave the DMM
+/// identical to a from-scratch recompute of the equivalently-updated
+/// ground-truth matrix.
+#[test]
+fn update_storm_equals_recompute() {
+    let cfg = PipelineConfig::small();
+    let mut land = workload::generate(&cfg);
+    let mut dpm =
+        DpmSet::from_matrix(&land.matrix, &land.tree, &land.cdm, StateI(0))
+            .unwrap();
+    for (i, s_idx) in [0usize, 1, 2, 3, 0, 1].iter().enumerate() {
+        let schema = land.tree.schemas().nth(*s_idx).unwrap().id;
+        let fields = workload::evolved_fields(&land.tree, schema);
+        let v = land.tree.add_version(schema, &fields);
+        auto_update(
+            &mut dpm,
+            &land.tree,
+            &land.cdm,
+            ChangeCase::AddedSchemaVersion { schema, v },
+            StateI(i as u64 + 1),
+        );
+        // mirror into ground truth exactly like the pipeline does
+        let (nr, nc) = (land.cdm.n_attr_ids(), land.tree.n_attr_ids());
+        land.matrix.grow(nr, nc);
+        for block in dpm.column(schema, v) {
+            for &(q, p) in &block.elements {
+                land.matrix.set(q.index(), p.index(), true);
+            }
+        }
+    }
+    let recomputed =
+        DpmSet::from_matrix(&land.matrix, &land.tree, &land.cdm, StateI(6))
+            .unwrap();
+    assert!(dpm.same_elements(&recomputed));
+}
+
+/// Version deletions through Alg 5 equal recompute on the cleared matrix.
+#[test]
+fn deletion_equals_recompute() {
+    let cfg = PipelineConfig::small();
+    let mut land = workload::generate(&cfg);
+    let mut dpm =
+        DpmSet::from_matrix(&land.matrix, &land.tree, &land.cdm, StateI(0))
+            .unwrap();
+    let schema = land.tree.schemas().next().unwrap().id;
+    let v1 = metl::schema::VersionNo(1);
+    auto_update(
+        &mut dpm,
+        &land.tree,
+        &land.cdm,
+        ChangeCase::DeletedSchemaVersion { schema, v: v1 },
+        StateI(1),
+    );
+    // ground truth: clear the column range and delete the version
+    let sv = land.tree.version(schema, v1).unwrap().clone();
+    land.matrix.clear_block(
+        0..land.matrix.n_rows(),
+        sv.col_start()..sv.col_start() + sv.width(),
+    );
+    land.tree.delete_version(schema, v1);
+    let recomputed =
+        DpmSet::from_matrix(&land.matrix, &land.tree, &land.cdm, StateI(1))
+            .unwrap();
+    assert!(dpm.same_elements(&recomputed));
+}

@@ -1,0 +1,133 @@
+//! Integration tests over the PJRT runtime: the XLA bulk lane must be
+//! output-equivalent to the Alg-6 lane on randomized landscapes (the
+//! cross-layer contract between L1/L2 kernels and the L3 coordinator).
+//!
+//! All tests skip gracefully when `artifacts/` is absent (run
+//! `make artifacts` first); `make test` always builds artifacts.
+
+use std::path::PathBuf;
+
+use metl::broker::Consumer;
+use metl::config::PipelineConfig;
+use metl::coordinator::batcher::InitialLoader;
+use metl::coordinator::pipeline::Pipeline;
+use metl::runtime::BulkRuntime;
+use metl::util::rng::Rng;
+use metl::workload;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(dir) => dir,
+            None => {
+                eprintln!("skipping: no artifacts (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn manifest_loads_all_variants() {
+    let dir = require_artifacts!();
+    let rt = BulkRuntime::load(&dir).unwrap();
+    assert!(rt.n_variants() >= 2, "256 and 1024 batch variants");
+    let (p, q) = rt.block_dims();
+    assert_eq!((p, q), (128, 128));
+    assert_eq!(rt.platform, "cpu");
+}
+
+/// The mapping function on the MXU path: presence = M·x and src indices
+/// match a host-side evaluation for random sub-permutations.
+#[test]
+fn bulk_map_matches_host_reference() {
+    let dir = require_artifacts!();
+    let rt = BulkRuntime::load(&dir).unwrap();
+    let mut rng = Rng::seed_from(42);
+    for trial in 0..5 {
+        // random sub-permutation within 128x128
+        let rank = 1 + rng.gen_range(40) as usize;
+        let mut qs: Vec<usize> = (0..128).collect();
+        let mut ps: Vec<usize> = (0..128).collect();
+        rng.shuffle(&mut qs);
+        rng.shuffle(&mut ps);
+        let elements: Vec<(usize, usize)> =
+            qs.iter().zip(&ps).take(rank).map(|(&q, &p)| (q, p)).collect();
+        // random presence lists
+        let presence: Vec<Vec<usize>> = (0..300)
+            .map(|_| {
+                let n = rng.gen_range(20) as usize;
+                rng.sample_indices(128, n)
+            })
+            .collect();
+        let mapped = rt.bulk_map_block(&elements, &presence).unwrap();
+        for (msg, got) in presence.iter().zip(&mapped) {
+            let mut expect: Vec<(usize, usize)> = elements
+                .iter()
+                .copied()
+                .filter(|(_, p)| msg.contains(p))
+                .collect();
+            expect.sort();
+            let mut got = got.clone();
+            got.sort();
+            assert_eq!(got, expect, "trial {trial}");
+        }
+    }
+}
+
+/// End-to-end lane equivalence: the XLA bulk initial load and the Alg-6
+/// fallback produce identical DW contents over random landscapes.
+#[test]
+fn bulk_lane_equivalent_to_alg6_lane() {
+    let dir = require_artifacts!();
+    let mut meta = Rng::seed_from(0xB011);
+    for trial in 0..3 {
+        let mut cfg = PipelineConfig::small();
+        cfg.seed = meta.next_u64();
+        cfg.attrs_per_schema = 4 + meta.gen_range(8) as usize;
+        let build = |cfg: &PipelineConfig| {
+            let mut land = workload::generate(cfg);
+            let mut rng = Rng::seed_from(cfg.seed ^ 2);
+            workload::populate(&mut land, 150, &mut rng);
+            Pipeline::from_landscape(cfg.clone(), land).unwrap()
+        };
+        let p_bulk = build(&cfg);
+        let p_fall = build(&cfg);
+        let bulk = InitialLoader { runtime: BulkRuntime::try_load(&dir) };
+        let fall = InitialLoader { runtime: None };
+        for service in 0..2 {
+            let rb = bulk.initial_load(&p_bulk, service).unwrap();
+            let rf = fall.initial_load(&p_fall, service).unwrap();
+            assert!(rb.used_bulk, "trial {trial}");
+            assert!(!rf.used_bulk);
+            assert_eq!(rb.rows, rf.rows);
+            assert_eq!(rb.out_messages, rf.out_messages, "trial {trial}");
+        }
+        let mut cb = Consumer::new(p_bulk.out_topic.clone(), 0, 1);
+        let mut cf = Consumer::new(p_fall.out_topic.clone(), 0, 1);
+        p_bulk.drain_sinks(&mut cb);
+        p_fall.drain_sinks(&mut cf);
+        let dwb = p_bulk.dw.lock().unwrap();
+        let dwf = p_fall.dw.lock().unwrap();
+        assert_eq!(dwb.total_rows(), dwf.total_rows(), "trial {trial}");
+        assert_eq!(dwb.total_upserts(), dwf.total_upserts());
+    }
+}
+
+/// Empty blocks and empty batches are handled without executing garbage.
+#[test]
+fn bulk_map_degenerate_inputs() {
+    let dir = require_artifacts!();
+    let rt = BulkRuntime::load(&dir).unwrap();
+    // empty element set: everything unmapped
+    let mapped = rt.bulk_map_block(&[], &[vec![0, 1], vec![]]).unwrap();
+    assert!(mapped.iter().all(|m| m.is_empty()));
+    // empty batch
+    let mapped = rt.bulk_map_block(&[(0, 0)], &[]).unwrap();
+    assert!(mapped.is_empty());
+}

@@ -1,0 +1,272 @@
+//! Property-based tests (own harness — proptest is unavailable offline):
+//! randomized landscapes/matrices across many seeds, asserting the
+//! system's core invariants.
+
+use std::sync::Arc;
+
+use metl::cache::DcpmCache;
+use metl::config::PipelineConfig;
+use metl::mapper::baseline::BaselineMapper;
+use metl::mapper::parallel::ParallelMapper;
+use metl::matrix::decompact::recreate_dpm;
+use metl::matrix::dpm::DpmSet;
+use metl::matrix::dusb::DusbSet;
+use metl::matrix::update::{auto_update, ChangeCase};
+use metl::message::{InMessage, OutMessage, StateI};
+use metl::util::json::Json;
+use metl::util::rng::Rng;
+use metl::workload;
+
+/// Randomized config within paper-plausible bounds.
+fn random_cfg(rng: &mut Rng) -> PipelineConfig {
+    let mut cfg = PipelineConfig::small();
+    cfg.n_services = 2 + rng.gen_range(6) as usize;
+    cfg.attrs_per_schema = 3 + rng.gen_range(8) as usize;
+    cfg.versions_per_schema = 1 + rng.gen_range(6) as usize;
+    cfg.n_entities = 1 + rng.gen_range(4) as usize;
+    cfg.attrs_per_entity = 3 + rng.gen_range(10) as usize;
+    cfg.mapped_fraction = 0.2 + rng.f64() * 0.7;
+    cfg.seed = rng.next_u64();
+    cfg
+}
+
+/// Invariant: both compaction strategies decompact back to the exact
+/// matrix, for any generated landscape.
+#[test]
+fn prop_compaction_roundtrips() {
+    let mut meta = Rng::seed_from(0xC0FFEE);
+    for trial in 0..30 {
+        let cfg = random_cfg(&mut meta);
+        let land = workload::generate(&cfg);
+        let dpm = DpmSet::from_matrix(
+            &land.matrix, &land.tree, &land.cdm, StateI(0),
+        )
+        .unwrap_or_else(|e| panic!("trial {trial}: {e}"));
+        let dusb = DusbSet::from_matrix(
+            &land.matrix, &land.tree, &land.cdm, StateI(0),
+        )
+        .unwrap();
+        assert_eq!(
+            dpm.decompact(land.matrix.n_rows(), land.matrix.n_cols()),
+            land.matrix,
+            "trial {trial}: DPM roundtrip"
+        );
+        assert_eq!(
+            dusb.decompact(&land.tree, &land.cdm),
+            land.matrix,
+            "trial {trial}: DUSB roundtrip (seed {})",
+            cfg.seed
+        );
+        // aggressive strategy never stores more
+        assert!(dusb.n_elements() <= dpm.n_elements());
+        // the restore view equals the direct build
+        let restored = recreate_dpm(&dusb, &land.tree, &land.cdm).unwrap();
+        assert!(dpm.same_elements(&restored), "trial {trial}: restore");
+    }
+}
+
+/// Invariant: DUSB JSON serialization is lossless.
+#[test]
+fn prop_dusb_json_roundtrip() {
+    let mut meta = Rng::seed_from(0xD05A);
+    for _ in 0..20 {
+        let cfg = random_cfg(&mut meta);
+        let land = workload::generate(&cfg);
+        let dusb = DusbSet::from_matrix(
+            &land.matrix, &land.tree, &land.cdm, StateI(9),
+        )
+        .unwrap();
+        let parsed =
+            metl::util::json::parse(&dusb.to_json().to_string()).unwrap();
+        let back = DusbSet::from_json(&parsed).unwrap();
+        assert_eq!(back.decompact(&land.tree, &land.cdm), land.matrix);
+        assert_eq!(back.n_special_nulls(), dusb.n_special_nulls());
+    }
+}
+
+/// Invariant: Alg 6 outputs equal Alg 1 outputs after densification, for
+/// random messages over random landscapes.
+#[test]
+fn prop_alg6_equals_dense_alg1() {
+    let mut meta = Rng::seed_from(0xA161);
+    for trial in 0..15 {
+        let cfg = random_cfg(&mut meta);
+        let land = workload::generate(&cfg);
+        let dpm = Arc::new(
+            DpmSet::from_matrix(&land.matrix, &land.tree, &land.cdm, StateI(0))
+                .unwrap(),
+        );
+        let cache = Arc::new(DcpmCache::new(StateI(0)));
+        let fast = ParallelMapper::new(dpm, cache);
+        let slow = BaselineMapper::new(
+            &land.matrix, &land.tree, &land.cdm, StateI(0),
+        );
+        let mut rng = Rng::seed_from(cfg.seed ^ 1);
+        for k in 0..20u64 {
+            let s_idx = rng.gen_range(cfg.n_services as u64) as usize;
+            let node = land.tree.schemas().nth(s_idx).unwrap();
+            let v = *rng.choose(&node.versions).unwrap();
+            let sv = land.tree.version(node.id, v).unwrap();
+            let row = metl::source::random_row(
+                &land.tree, node.id, v, k, &mut rng, 0.4,
+            );
+            let sparse = InMessage {
+                key: k,
+                schema: node.id,
+                version: v,
+                state: StateI(0),
+                ts_us: 0,
+                fields: sv.attrs.iter().copied().zip(row.values).collect(),
+            };
+            // a version with zero mapped blocks is UnknownColumn on the
+            // dense lane; Alg 1 produces all-null outputs there — both
+            // mean "nothing reaches the CDM"
+            let mut fast_outs = match fast.map(&sparse.to_dense()) {
+                Ok(outs) => outs,
+                Err(metl::mapper::MapError::UnknownColumn { .. }) => vec![],
+                Err(e) => panic!("trial {trial}: {e}"),
+            };
+            let mut slow_outs: Vec<OutMessage> = slow
+                .map(&sparse)
+                .unwrap()
+                .into_iter()
+                .map(|o| OutMessage {
+                    fields: o
+                        .fields
+                        .into_iter()
+                        .filter(|(_, val)| !val.is_null())
+                        .collect(),
+                    ..o
+                })
+                .filter(|o| !o.fields.is_empty())
+                .collect();
+            fast_outs.sort_by_key(|o| (o.entity, o.version));
+            slow_outs.sort_by_key(|o| (o.entity, o.version));
+            assert_eq!(fast_outs, slow_outs, "trial {trial} msg {k}");
+        }
+    }
+}
+
+/// Invariant: Alg 5 incremental updates equal recompute-from-scratch for
+/// random version-addition storms.
+#[test]
+fn prop_update_equals_recompute() {
+    let mut meta = Rng::seed_from(0x5EED);
+    for trial in 0..12 {
+        let cfg = random_cfg(&mut meta);
+        let mut land = workload::generate(&cfg);
+        let mut dpm = DpmSet::from_matrix(
+            &land.matrix, &land.tree, &land.cdm, StateI(0),
+        )
+        .unwrap();
+        let storms = 1 + meta.gen_range(4) as usize;
+        for i in 0..storms {
+            let s_idx = meta.gen_range(cfg.n_services as u64) as usize;
+            let schema = land.tree.schemas().nth(s_idx).unwrap().id;
+            let fields = workload::evolved_fields(&land.tree, schema);
+            let v = land.tree.add_version(schema, &fields);
+            auto_update(
+                &mut dpm,
+                &land.tree,
+                &land.cdm,
+                ChangeCase::AddedSchemaVersion { schema, v },
+                StateI(i as u64 + 1),
+            );
+            let (nr, nc) = (land.cdm.n_attr_ids(), land.tree.n_attr_ids());
+            land.matrix.grow(nr, nc);
+            for block in dpm.column(schema, v) {
+                for &(q, p) in &block.elements {
+                    land.matrix.set(q.index(), p.index(), true);
+                }
+            }
+        }
+        let recomputed = DpmSet::from_matrix(
+            &land.matrix, &land.tree, &land.cdm, StateI(99),
+        )
+        .unwrap();
+        assert!(dpm.same_elements(&recomputed), "trial {trial}");
+    }
+}
+
+/// Invariant: JSON codec roundtrips arbitrary values built from the sim's
+/// value constructors.
+#[test]
+fn prop_json_roundtrip() {
+    let mut rng = Rng::seed_from(0x1503);
+    for _ in 0..200 {
+        let v = random_json(&mut rng, 3);
+        let text = v.to_string();
+        let back = metl::util::json::parse(&text).unwrap();
+        assert_eq!(back, v, "{text}");
+        let pretty = v.to_pretty();
+        assert_eq!(metl::util::json::parse(&pretty).unwrap(), v);
+    }
+}
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.gen_range(4) } else { rng.gen_range(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.chance(0.5)),
+        2 => Json::Num((rng.gen_range(2_000_001) as f64 - 1e6) / 8.0),
+        3 => {
+            let n = rng.gen_range(12) as usize;
+            Json::Str(
+                (0..n)
+                    .map(|_| {
+                        let c = rng.gen_range(96) as u8 + 32;
+                        c as char
+                    })
+                    .collect(),
+            )
+        }
+        4 => Json::Arr(
+            (0..rng.gen_range(4)).map(|_| random_json(rng, depth - 1)).collect(),
+        ),
+        _ => Json::Obj(
+            (0..rng.gen_range(4))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+/// Invariant: the state-sync check fires for every skewed state, never
+/// for matching states (mapper-level §3.4 contract).
+#[test]
+fn prop_state_sync_contract() {
+    let mut meta = Rng::seed_from(77);
+    let cfg = random_cfg(&mut meta);
+    let land = workload::generate(&cfg);
+    for state in 0..5u64 {
+        let dpm = Arc::new(
+            DpmSet::from_matrix(
+                &land.matrix, &land.tree, &land.cdm, StateI(state),
+            )
+            .unwrap(),
+        );
+        let cache = Arc::new(DcpmCache::new(StateI(state)));
+        let mapper = ParallelMapper::new(dpm, cache);
+        let node = land.tree.schemas().next().unwrap();
+        let v = *node.versions.last().unwrap();
+        let sv = land.tree.version(node.id, v).unwrap();
+        for msg_state in 0..5u64 {
+            let msg = InMessage {
+                key: 1,
+                schema: node.id,
+                version: v,
+                state: StateI(msg_state),
+                ts_us: 0,
+                fields: vec![(sv.attrs[0], Json::Num(1.0))],
+            };
+            let result = mapper.map(&msg);
+            if msg_state == state {
+                assert!(result.is_ok());
+            } else {
+                assert!(matches!(
+                    result,
+                    Err(metl::mapper::MapError::StateMismatch { .. })
+                ));
+            }
+        }
+    }
+}
