@@ -113,7 +113,7 @@ fn main() -> anyhow::Result<()> {
         "-- restart -- store restore: {} in {:?} (state {})",
         restored,
         t0.elapsed(),
-        pipeline.dmm.read().unwrap().state.0
+        pipeline.dmm.snapshot().state.0
     );
 
     // initial load through the XLA bulk lane (reserve capacity, §6.4)

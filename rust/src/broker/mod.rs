@@ -75,6 +75,37 @@ impl<V: Clone> Topic<V> {
         (partition, offset)
     }
 
+    /// Keyed batch produce — the sharded lane's ordered commit: records
+    /// are grouped by target partition first, then appended with one lock
+    /// acquisition per touched partition, preserving the input order
+    /// within each partition (and therefore per key). Returns the number
+    /// of records produced.
+    pub fn produce_batch(
+        &self,
+        records: impl IntoIterator<Item = (u64, V)>,
+    ) -> usize {
+        let n_parts = self.inner.partitions.len();
+        let mut by_partition: Vec<Vec<(u64, V)>> =
+            (0..n_parts).map(|_| Vec::new()).collect();
+        let mut n = 0;
+        for (key, value) in records {
+            let p = (fxhash(key) % n_parts as u64) as usize;
+            by_partition[p].push((key, value));
+            n += 1;
+        }
+        for (p, batch) in by_partition.into_iter().enumerate() {
+            if batch.is_empty() {
+                continue;
+            }
+            let mut part = self.inner.partitions[p].lock().unwrap();
+            for (key, value) in batch {
+                let offset = part.log.len() as u64;
+                part.log.push(Record { offset, key, value });
+            }
+        }
+        n
+    }
+
     /// Read up to `max` records from `partition` starting at `offset`.
     pub fn fetch(&self, partition: usize, offset: u64, max: usize) -> Vec<Record<V>> {
         let part = self.inner.partitions[partition].lock().unwrap();
@@ -230,6 +261,25 @@ mod tests {
         assert!(recs.windows(2).all(|w| w[0].offset + 1 == w[1].offset));
         assert_eq!(recs.iter().map(|r| r.value).collect::<Vec<_>>(),
                    (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn produce_batch_matches_single_produces() {
+        let single: Topic<u64> = Topic::new(4);
+        let batched: Topic<u64> = Topic::new(4);
+        let records: Vec<(u64, u64)> =
+            (0..40).map(|i| (i % 7, i)).collect();
+        for &(k, v) in &records {
+            single.produce(k, v);
+        }
+        assert_eq!(batched.produce_batch(records.clone()), 40);
+        for p in 0..4 {
+            let a: Vec<u64> =
+                single.fetch(p, 0, 100).into_iter().map(|r| r.value).collect();
+            let b: Vec<u64> =
+                batched.fetch(p, 0, 100).into_iter().map(|r| r.value).collect();
+            assert_eq!(a, b, "partition {p} order must match");
+        }
     }
 
     #[test]

@@ -61,12 +61,13 @@ impl DcpmCache {
             return Arc::clone(col);
         }
         self.stats.misses.fetch_add(1, Ordering::Relaxed);
+        // build OUTSIDE the write lock (a large column must not stall
+        // concurrent hits), then double-check on insert: racing builders
+        // agree on the first inserted Arc and drop their duplicate.
         let built: Column = Arc::new(dpm.column(schema, version));
-        self.columns
-            .write()
-            .unwrap()
-            .insert((schema, version), Arc::clone(&built));
-        built
+        let mut columns = self.columns.write().unwrap();
+        let entry = columns.entry((schema, version)).or_insert(built);
+        Arc::clone(entry)
     }
 
     /// Evict everything and move to a new state (§6.2: on every update of

@@ -27,6 +27,9 @@ pub struct PipelineConfig {
     pub partitions: usize,
     /// Worker threads for the parallel mapper.
     pub threads: usize,
+    /// Worker shards of the sharded mapping lane (0 = use
+    /// `available_parallelism`).
+    pub shards: usize,
     /// CDC events for a generated day trace (paper: 1168 on 2022-02-13).
     pub trace_events: usize,
     /// Schema-change storms per day trace (paper: "a few times a day").
@@ -58,6 +61,7 @@ impl PipelineConfig {
             null_prob: 0.2,
             partitions: 4,
             threads: 4,
+            shards: 0,
             trace_events: 200,
             schema_changes: 2,
             seed: 42,
@@ -79,6 +83,7 @@ impl PipelineConfig {
             null_prob: 0.25,
             partitions: 8,
             threads: 8,
+            shards: 0,
             trace_events: 1168,
             schema_changes: 3,
             seed: 20220213,
@@ -100,6 +105,7 @@ impl PipelineConfig {
             null_prob: 0.25,
             partitions: 16,
             threads: 8,
+            shards: 0,
             trace_events: 10_000,
             schema_changes: 5,
             seed: 7,
@@ -139,6 +145,7 @@ impl PipelineConfig {
         num!("sim.seed", cfg.seed);
         num!("runtime.partitions", cfg.partitions);
         num!("runtime.threads", cfg.threads);
+        num!("runtime.shards", cfg.shards);
         num!("runtime.bulk_threshold", cfg.bulk_threshold);
         if let Some(v) = kv.get("runtime.artifacts_dir") {
             cfg.artifacts_dir =
@@ -190,12 +197,14 @@ mod tests {
             seed = 99
             [runtime]
             threads = 2
+            shards = 3
             artifacts_dir = ""
         "#;
         let cfg = PipelineConfig::parse(text).unwrap();
         assert_eq!(cfg.n_services, 10);
         assert_eq!(cfg.seed, 99);
         assert_eq!(cfg.threads, 2);
+        assert_eq!(cfg.shards, 3);
         assert_eq!(cfg.artifacts_dir, None);
         // untouched fields come from paper_day
         assert_eq!(cfg.trace_events, 1168);

@@ -67,7 +67,7 @@ impl InitialLoader {
 
         let schema = db.tables[0].schema;
         let version = db.tables[0].live_version;
-        let dpm = std::sync::Arc::clone(&pipeline.dmm.read().unwrap());
+        let dpm = pipeline.dmm.snapshot();
         let column = dpm.column(schema, version);
 
         // decide lane

@@ -9,9 +9,10 @@ pub mod inspect;
 pub mod pipeline;
 pub mod recovery;
 pub mod scaler;
+pub mod shard;
 pub mod state;
 pub mod workflow;
 
 pub use errors::DeadLetter;
 pub use pipeline::Pipeline;
-pub use state::StateManager;
+pub use state::{EpochDmm, StateManager};

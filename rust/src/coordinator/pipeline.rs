@@ -1,6 +1,39 @@
 //! The wired METL pipeline (paper fig 1): Debezium-sim sources → Kafka-sim
 //! CDC topic → METL (DMM mapping, Alg 6) → CDM topic → DW + ML sinks, with
 //! the state-i update workflow and error management in the control lane.
+//!
+//! # Sharded mapping lane
+//!
+//! The live `ᵢ𝔇𝔓𝔐` is an immutable `Arc<DpmSet>` behind an epoch pointer
+//! ([`EpochDmm`]). The §5.5 scale-out path ([`super::shard`]) partitions
+//! the CDC stream **by source schema id** into N worker shards; each shard
+//! maps against the snapshot it currently holds and refreshes it when the
+//! epoch advances (one atomic load per micro-batch).
+//!
+//! ## Epoch-swap protocol
+//!
+//! 1. An Alg-5 trigger bumps state i and builds `ᵢ₊₁𝔇𝔓𝔐` *off to the
+//!    side* ([`crate::matrix::update::prepare_update`]) — in-flight
+//!    mapping keeps reading the old snapshot, so schema-change storms
+//!    never stall the stream.
+//! 2. The new set is published with a single pointer swap
+//!    ([`EpochDmm::publish`]), which bumps the epoch *after* the swap: a
+//!    worker that observes the new epoch is guaranteed to read the new
+//!    snapshot.
+//! 3. A worker holding a stale snapshot self-heals: a state-mismatched or
+//!    unknown-column event triggers one snapshot refresh, then the §3.4
+//!    restamp retry; only persistent failures dead-letter.
+//!
+//! ## Ordering guarantees
+//!
+//! Every message maps against exactly one snapshot (never a mixed old/new
+//! view — the snapshot is a frozen `Arc`). Per-key CDC order is preserved
+//! end to end: a key lives in one CDC partition (keyed produce), one
+//! partition is dispatched to exactly one shard (a schema's events share a
+//! shard), a shard processes its queue in FIFO order, and the ordered
+//! commit ([`crate::broker::Topic::produce_batch`]) appends outputs to the
+//! keyed CDM partitions in processing order. Cross-key order across shards
+//! is not defined, exactly like Kafka across partitions.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
@@ -9,7 +42,7 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use super::errors::{Dlq, RetryPolicy};
-use super::state::StateManager;
+use super::state::{EpochDmm, StateManager};
 use super::workflow::{NoticePolicy, WorkflowOutcome};
 use crate::broker::{Consumer, Topic};
 use crate::cache::DcpmCache;
@@ -18,7 +51,7 @@ use crate::mapper::parallel::ParallelMapper;
 use crate::mapper::MapError;
 use crate::matrix::dpm::DpmSet;
 use crate::matrix::dusb::DusbSet;
-use crate::matrix::update::{auto_update, ChangeCase, UpdateReport};
+use crate::matrix::update::{prepare_update, ChangeCase, UpdateReport};
 use crate::message::cdc::{CdcEvent, CdcOp};
 use crate::message::{OutMessage, StateI};
 use crate::metrics::PipelineMetrics;
@@ -43,7 +76,8 @@ pub struct Pipeline {
     pub cdc_topic: Topic<Arc<CdcEvent>>,
     /// The outgoing CDM stream — "the API of the microservice system".
     pub out_topic: Topic<OutRecord>,
-    pub dmm: RwLock<Arc<DpmSet>>,
+    /// The live DMM snapshot behind the epoch pointer (see module docs).
+    pub dmm: EpochDmm,
     pub cache: Arc<DcpmCache>,
     pub store: Option<MatrixStore>,
     pub state: StateManager,
@@ -99,7 +133,7 @@ impl Pipeline {
             landscape: RwLock::new(landscape),
             cdc_topic,
             out_topic,
-            dmm: RwLock::new(Arc::new(dpm)),
+            dmm: EpochDmm::new(Arc::new(dpm)),
             cache: Arc::new(DcpmCache::new(StateI(0))),
             store: None,
             state,
@@ -231,11 +265,11 @@ impl Pipeline {
             dbs[service].migrate_table(tree, 0, v);
         }
 
-        // Alg 5 on a cloned DMM snapshot, then atomic swap
+        // Alg 5 off to the side of the live snapshot, then one epoch swap:
+        // in-flight mapping keeps the old snapshot until `publish`.
         let new_state = self.state.bump();
-        let mut dpm = (**self.dmm.read().unwrap()).clone();
-        let report = auto_update(
-            &mut dpm,
+        let (dpm, report) = prepare_update(
+            &self.dmm.snapshot(),
             &land.tree,
             &land.cdm,
             ChangeCase::AddedSchemaVersion { schema, v },
@@ -249,7 +283,8 @@ impl Pipeline {
                 land.matrix.set(q.index(), p.index(), true);
             }
         }
-        *self.dmm.write().unwrap() = Arc::new(dpm);
+        let epoch = self.dmm.publish(Arc::new(dpm));
+        self.metrics.dmm_epoch.set(epoch);
         self.cache.evict_all(new_state);
         self.metrics.dmm_updates.inc();
 
@@ -285,19 +320,12 @@ impl Pipeline {
         };
         // no to_dense() copy: Alg 6 skips null fields itself, so the
         // sparse payload maps identically (perf: see EXPERIMENTS.md §Perf)
-        let dpm = Arc::clone(&self.dmm.read().unwrap());
-        let mapper = self.mapper_for(dpm);
-        match mapper.map(payload) {
-            Ok(outs) => Ok(outs.into_iter().map(|o| (ev.op, o)).collect()),
-            Err(MapError::StateMismatch { .. }) => {
-                self.metrics.sync_retries.inc();
-                let mut restamped = payload.clone();
-                restamped.state = mapper.state();
-                let outs = mapper.map(&restamped)?;
-                Ok(outs.into_iter().map(|o| (ev.op, o)).collect())
-            }
-            Err(e) => Err(e),
+        let mapper = self.mapper_for(self.dmm.snapshot());
+        let (outs, retried) = mapper.map_or_restamp(payload)?;
+        if retried {
+            self.metrics.sync_retries.inc();
         }
+        Ok(outs.into_iter().map(|o| (ev.op, o)).collect())
     }
 
     fn mapper_for(&self, dpm: Arc<DpmSet>) -> ParallelMapper {
@@ -397,11 +425,22 @@ impl Pipeline {
             None => Ok(false),
             Some(dpm) => {
                 let state = dpm.state;
-                *self.dmm.write().unwrap() = Arc::new(dpm);
+                let epoch = self.dmm.publish(Arc::new(dpm));
+                self.metrics.dmm_epoch.set(epoch);
                 self.cache.evict_all(state);
                 Ok(true)
             }
         }
+    }
+
+    /// Run a trace through the sharded mapping lane (see module docs and
+    /// [`super::shard`]); `shards == 0` uses `available_parallelism`.
+    pub fn run_trace_sharded(
+        &self,
+        ops: &[TraceOp],
+        shards: usize,
+    ) -> Result<TraceReport> {
+        super::shard::run_sharded_trace(self, ops, shards)
     }
 
     /// Fig-7 dashboard snapshot.
@@ -477,9 +516,9 @@ mod tests {
             .unwrap();
         // bump DMM state without touching the queued message
         {
-            let mut dpm = (**p.dmm.read().unwrap()).clone();
+            let mut dpm = (*p.dmm.snapshot()).clone();
             dpm.state = StateI(1);
-            *p.dmm.write().unwrap() = Arc::new(dpm);
+            p.dmm.publish(Arc::new(dpm));
             p.cache.evict_all(StateI(1));
         }
         let mut consumer = Consumer::new(p.cdc_topic.clone(), 0, 1);
@@ -500,9 +539,9 @@ mod tests {
             let land = p.landscape.read().unwrap();
             let schema = land.dbs[0].tables[0].schema;
             let v = land.dbs[0].tables[0].live_version;
-            let mut dpm = (**p.dmm.read().unwrap()).clone();
+            let mut dpm = (*p.dmm.snapshot()).clone();
             dpm.remove_column(schema, v);
-            *p.dmm.write().unwrap() = Arc::new(dpm);
+            p.dmm.publish(Arc::new(dpm));
             p.cache.evict_all(StateI(0));
         }
         let mut consumer = Consumer::new(p.cdc_topic.clone(), 0, 1);
@@ -524,15 +563,15 @@ mod tests {
             .unwrap()
             .with_store(&dir)
             .unwrap();
-        let before = p.dmm.read().unwrap().n_elements();
+        let before = p.dmm.snapshot().n_elements();
         p.apply_schema_change(0).unwrap();
-        let after = p.dmm.read().unwrap().n_elements();
+        let after = p.dmm.snapshot().n_elements();
         assert!(after >= before);
         // wipe in-memory DMM, restore from store
-        *p.dmm.write().unwrap() = Arc::new(DpmSet::new(StateI(999)));
+        p.dmm.publish(Arc::new(DpmSet::new(StateI(999))));
         assert!(p.restore_from_store().unwrap());
-        assert_eq!(p.dmm.read().unwrap().n_elements(), after);
-        assert_eq!(p.dmm.read().unwrap().state, StateI(1));
+        assert_eq!(p.dmm.snapshot().n_elements(), after);
+        assert_eq!(p.dmm.snapshot().state, StateI(1));
         // audit log recorded the update
         let log = p.store.as_ref().unwrap().read_log().unwrap();
         assert_eq!(log.len(), 1);

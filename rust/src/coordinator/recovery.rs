@@ -47,7 +47,8 @@ pub fn repair_dmm_from_truth(pipeline: &Pipeline) -> Result<()> {
     )
     .map_err(|e| anyhow::anyhow!("{e}"))?;
     drop(land);
-    *pipeline.dmm.write().unwrap() = Arc::new(dpm);
+    let epoch = pipeline.dmm.publish(Arc::new(dpm));
+    pipeline.metrics.dmm_epoch.set(epoch);
     pipeline.cache.evict_all(pipeline.state.current());
     Ok(())
 }
@@ -145,9 +146,9 @@ mod tests {
             let land = p.landscape.read().unwrap();
             let schema = land.dbs[0].tables[0].schema;
             let v = land.dbs[0].tables[0].live_version;
-            let mut dpm = (**p.dmm.read().unwrap()).clone();
+            let mut dpm = (*p.dmm.snapshot()).clone();
             dpm.remove_column(schema, v);
-            *p.dmm.write().unwrap() = Arc::new(dpm);
+            p.dmm.publish(Arc::new(dpm));
             p.cache.evict_all(StateI(0));
         }
         let mut c = Consumer::new(p.cdc_topic.clone(), 0, 1);

@@ -40,6 +40,9 @@ pub fn run_scaled(pipeline: &Pipeline, instances: usize) -> ScaleReport {
     std::thread::scope(|scope| {
         for member in 0..instances {
             let counters = &counters;
+            // NOTE: per-instance counts stay in this report; the
+            // `metrics.shard` registry is reserved for the sharded mapping
+            // lane (`super::shard`) so the two scale-out axes never mix.
             scope.spawn(move || {
                 let mut consumer: Consumer<std::sync::Arc<CdcEvent>> =
                     Consumer::new(pipeline.cdc_topic.clone(), member, instances);

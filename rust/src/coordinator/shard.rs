@@ -1,0 +1,349 @@
+//! The sharded mapping lane (paper §5.5, Alg 6 at the stream level): the
+//! CDC stream is partitioned **by source schema id** into N worker shards,
+//! each mapping against an immutable `ᵢ𝔇𝔓𝔐` snapshot behind the epoch
+//! pointer ([`super::state::EpochDmm`]). Alg-5 updates are built off to
+//! the side and published with one pointer swap, so schema-change storms
+//! never stall in-flight mapping — the property the paper's "automated
+//! updates" promise (§5.4) and DOD-ETL's distributed workers deliver.
+//!
+//! Ordering: a schema's events all land on one shard and are processed in
+//! dispatch order; since every key belongs to exactly one schema, per-key
+//! CDC order is preserved through the shard queue and the ordered commit
+//! ([`crate::broker::Topic::produce_batch`]) into the keyed CDM topic.
+//! See the `pipeline` module docs for the full epoch-swap protocol.
+//!
+//! The shard channels are unbounded `mpsc` queues — backpressure is out of
+//! scope for the simulation (the dispatcher is far cheaper than mapping).
+
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::pipeline::{OutRecord, Pipeline, TraceReport};
+use crate::broker::Consumer;
+use crate::cache::DcpmCache;
+use crate::mapper::parallel::ParallelMapper;
+use crate::mapper::MapError;
+use crate::message::cdc::{CdcEvent, CdcOp};
+use crate::message::OutMessage;
+use crate::workload::TraceOp;
+
+/// Largest number of queued events a worker folds into one mapping
+/// micro-batch (one epoch check + one ordered commit per batch).
+const MICRO_BATCH: usize = 256;
+
+/// Report of one sharded run.
+#[derive(Debug, Clone)]
+pub struct ShardReport {
+    pub shards: usize,
+    pub processed: u64,
+    /// Events mapped per shard, in shard order.
+    pub per_shard: Vec<u64>,
+    pub wall: std::time::Duration,
+}
+
+impl ShardReport {
+    pub fn throughput_eps(&self) -> f64 {
+        self.processed as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+}
+
+/// Resolve the effective worker count (`0` = `available_parallelism`, the
+/// `PipelineConfig::shards` default).
+pub fn effective_shards(requested: usize) -> usize {
+    if requested > 0 {
+        requested
+    } else {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+    }
+}
+
+/// Shard routing: all versions of one schema share a shard, so per-key
+/// order survives (a key belongs to exactly one schema).
+fn shard_of(ev: &CdcEvent, shards: usize) -> usize {
+    ev.mapping_payload()
+        .map(|m| m.schema.0 as usize)
+        .unwrap_or(0)
+        % shards
+}
+
+/// Run a whole trace through the sharded lane: this thread resolves ops
+/// (publishing new snapshots mid-stream on schema changes, without
+/// stalling the workers) and dispatches CDC events to the shards; the
+/// sinks are drained at the end exactly like `Pipeline::run_trace`.
+pub fn run_sharded_trace(
+    pipeline: &Pipeline,
+    ops: &[TraceOp],
+    shards: usize,
+) -> Result<TraceReport> {
+    let n = effective_shards(shards);
+    let start = Instant::now();
+    let (_per_shard, driven) = with_shard_pool(pipeline, n, |consumer, txs| {
+        for op in ops {
+            pipeline.resolve_op(op)?;
+            dispatch_available(consumer, txs, n);
+        }
+        dispatch_available(consumer, txs, n);
+        Ok(())
+    });
+    driven?;
+    let mut out_consumer: Consumer<OutRecord> =
+        Consumer::new(pipeline.out_topic.clone(), 0, 1);
+    pipeline.drain_sinks(&mut out_consumer);
+    Ok(TraceReport {
+        events: pipeline.metrics.events_in.get(),
+        out_messages: pipeline.metrics.messages_out.get(),
+        dead_letters: pipeline.metrics.dead_letters.get(),
+        dmm_updates: pipeline.metrics.dmm_updates.get(),
+        wall: start.elapsed(),
+    })
+}
+
+/// Drain everything currently in the CDC topic through N shards (the bench
+/// path). Like `scaler::run_scaled`, the caller coordinates updates — but
+/// unlike the scaler, an `apply_schema_change` racing this drain is safe:
+/// workers pick up the new snapshot at the next epoch check or via the
+/// refresh-retry, they never block on the update.
+pub fn run_sharded_drain(pipeline: &Pipeline, shards: usize) -> ShardReport {
+    let n = effective_shards(shards);
+    let start = Instant::now();
+    let (per_shard, ()) = with_shard_pool(pipeline, n, |consumer, txs| {
+        dispatch_available(consumer, txs, n);
+    });
+    ShardReport {
+        shards: n,
+        processed: per_shard.iter().sum(),
+        per_shard,
+        wall: start.elapsed(),
+    }
+}
+
+/// Shared worker-pool scaffolding: spawn N workers, hand the dispatcher
+/// consumer + shard queues to `drive`, then close the queues and join.
+/// Returns (events processed per shard, `drive`'s result).
+fn with_shard_pool<R>(
+    pipeline: &Pipeline,
+    n: usize,
+    drive: impl FnOnce(&mut Consumer<Arc<CdcEvent>>, &[Sender<Arc<CdcEvent>>]) -> R,
+) -> (Vec<u64>, R) {
+    std::thread::scope(|scope| {
+        let mut txs: Vec<Sender<Arc<CdcEvent>>> = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for shard_idx in 0..n {
+            let (tx, rx) = mpsc::channel::<Arc<CdcEvent>>();
+            txs.push(tx);
+            handles.push(scope.spawn(move || run_worker(pipeline, shard_idx, rx)));
+        }
+        let mut consumer: Consumer<Arc<CdcEvent>> =
+            Consumer::new(pipeline.cdc_topic.clone(), 0, 1);
+        let result = drive(&mut consumer, &txs);
+        drop(txs); // close the queues: workers drain and exit
+        let per_shard = handles
+            .into_iter()
+            .map(|h| h.join().expect("shard worker"))
+            .collect();
+        (per_shard, result)
+    })
+}
+
+/// Forward every currently fetchable CDC event to its shard queue.
+fn dispatch_available(
+    consumer: &mut Consumer<Arc<CdcEvent>>,
+    txs: &[Sender<Arc<CdcEvent>>],
+    shards: usize,
+) {
+    loop {
+        let batch = consumer.poll(MICRO_BATCH);
+        if batch.is_empty() {
+            break;
+        }
+        for (_, rec) in batch {
+            let shard = shard_of(&rec.value, shards);
+            // a closed queue means the worker already exited (only possible
+            // after the driver dropped the senders) — unreachable here
+            let _ = txs[shard].send(rec.value);
+        }
+        consumer.commit();
+    }
+}
+
+/// One shard worker: an epoch-cached mapper over a worker-local column
+/// cache (eviction storms stay shard-local), FIFO over the shard queue,
+/// ordered batch commit into the CDM topic. Returns events processed.
+fn run_worker(
+    pipeline: &Pipeline,
+    shard_idx: usize,
+    rx: Receiver<Arc<CdcEvent>>,
+) -> u64 {
+    let shard_counters = pipeline.metrics.shard.shard(shard_idx);
+    let cache = Arc::new(DcpmCache::new(pipeline.dmm.snapshot().state));
+    let mut epoch = pipeline.dmm.epoch();
+    let mut mapper =
+        ParallelMapper::with_threads(pipeline.dmm.snapshot(), Arc::clone(&cache), 1);
+    let mut processed = 0u64;
+    let mut outs_buf: Vec<(u64, OutRecord)> = Vec::new();
+    while let Ok(first) = rx.recv() {
+        let mut batch = vec![first];
+        while batch.len() < MICRO_BATCH {
+            match rx.try_recv() {
+                Ok(ev) => batch.push(ev),
+                Err(_) => break,
+            }
+        }
+        // one epoch check per micro-batch; a swap racing the batch is
+        // caught by the refresh-retry below
+        let current = pipeline.dmm.epoch();
+        if current != epoch {
+            epoch = current;
+            mapper.replace_dpm(pipeline.dmm.snapshot());
+        }
+        for ev in &batch {
+            pipeline.metrics.events_in.inc();
+            shard_counters.events.inc();
+            processed += 1;
+            let t0 = Instant::now();
+            match map_on_shard(pipeline, &mut mapper, &mut epoch, ev) {
+                Ok(outs) => {
+                    pipeline.metrics.transformations.inc();
+                    pipeline.metrics.map_latency.record(t0.elapsed());
+                    for out in outs {
+                        outs_buf.push((out.1.key, Arc::new(out)));
+                    }
+                }
+                Err(e) => {
+                    pipeline.metrics.dead_letters.inc();
+                    pipeline.dlq.push(
+                        Arc::clone(ev),
+                        e.to_string(),
+                        pipeline.retry.max_attempts,
+                    );
+                }
+            }
+        }
+        if !outs_buf.is_empty() {
+            let n = pipeline.out_topic.produce_batch(outs_buf.drain(..));
+            pipeline.metrics.messages_out.add(n as u64);
+            shard_counters.out.add(n as u64);
+        }
+    }
+    processed
+}
+
+/// Map one event on a shard: try the held snapshot; on any failure refresh
+/// it once if the epoch moved (the snapshot was stale), then fall back to
+/// the §3.4 restamp retry. Only persistent failures reach the DLQ.
+fn map_on_shard(
+    pipeline: &Pipeline,
+    mapper: &mut ParallelMapper,
+    epoch: &mut u64,
+    ev: &CdcEvent,
+) -> Result<Vec<(CdcOp, OutMessage)>, MapError> {
+    let Some(payload) = ev.mapping_payload() else {
+        return Ok(Vec::new());
+    };
+    match mapper.map(payload) {
+        Ok(outs) => Ok(pair(ev.op, outs)),
+        Err(first_err) => {
+            // refresh once if the epoch moved under us, without repeating
+            // a map already known to fail against the same snapshot
+            let err = {
+                let current = pipeline.dmm.epoch();
+                if current != *epoch {
+                    *epoch = current;
+                    mapper.replace_dpm(pipeline.dmm.snapshot());
+                    match mapper.map(payload) {
+                        Ok(outs) => return Ok(pair(ev.op, outs)),
+                        Err(e) => e,
+                    }
+                } else {
+                    first_err
+                }
+            };
+            match err {
+                MapError::StateMismatch { .. } => {
+                    pipeline.metrics.sync_retries.inc();
+                    let mut restamped = payload.clone();
+                    restamped.state = mapper.state();
+                    Ok(pair(ev.op, mapper.map(&restamped)?))
+                }
+                e => Err(e),
+            }
+        }
+    }
+}
+
+fn pair(op: CdcOp, outs: Vec<OutMessage>) -> Vec<(CdcOp, OutMessage)> {
+    outs.into_iter().map(|o| (op, o)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PipelineConfig;
+    use crate::workload::{DmlKind, TraceOp};
+
+    fn pipeline_with_backlog(n: usize) -> Pipeline {
+        let p = Pipeline::new(PipelineConfig::small()).unwrap();
+        for i in 0..n {
+            p.resolve_op(&TraceOp::Dml {
+                service: i % 4,
+                kind: DmlKind::Insert,
+            })
+            .unwrap();
+        }
+        p
+    }
+
+    #[test]
+    fn sharded_drain_processes_everything_once() {
+        let p = pipeline_with_backlog(200);
+        let report = run_sharded_drain(&p, 4);
+        assert_eq!(report.shards, 4);
+        assert_eq!(report.processed, 200);
+        assert_eq!(report.per_shard.iter().sum::<u64>(), 200);
+        assert_eq!(p.metrics.events_in.get(), 200);
+        assert_eq!(p.metrics.dead_letters.get(), 0);
+        // the small profile has 4 services: every shard saw one schema
+        assert!(report.per_shard.iter().all(|&c| c > 0));
+        assert_eq!(p.metrics.shard.events_per_shard(), report.per_shard);
+    }
+
+    #[test]
+    fn schema_sharding_is_stable_per_schema() {
+        let p = pipeline_with_backlog(40);
+        let mut consumer: Consumer<Arc<CdcEvent>> =
+            Consumer::new(p.cdc_topic.clone(), 0, 1);
+        for (_, rec) in consumer.poll(64) {
+            let s = shard_of(&rec.value, 4);
+            let again = shard_of(&rec.value, 4);
+            assert_eq!(s, again);
+            assert!(s < 4);
+        }
+    }
+
+    #[test]
+    fn update_mid_drain_does_not_dead_letter() {
+        let p = pipeline_with_backlog(150);
+        let report = std::thread::scope(|scope| {
+            let handle = scope.spawn(|| run_sharded_drain(&p, 2));
+            // race an Alg-5 update against the drain: the epoch swap must
+            // not stall or poison the in-flight mapping
+            p.apply_schema_change(0).unwrap();
+            handle.join().unwrap()
+        });
+        assert_eq!(report.processed, 150);
+        assert_eq!(p.metrics.dead_letters.get(), 0);
+        assert_eq!(p.metrics.dmm_updates.get(), 1);
+        assert!(p.metrics.dmm_epoch.get() >= 1);
+    }
+
+    #[test]
+    fn effective_shards_resolves_zero() {
+        assert!(effective_shards(0) >= 1);
+        assert_eq!(effective_shards(3), 3);
+    }
+}

@@ -2,9 +2,17 @@
 //! element — message, schema snapshot, DMM, cache — inherits the state;
 //! transitions happen only through the update workflow, and components
 //! check sync at their boundaries.
+//!
+//! [`EpochDmm`] is the epoch pointer of the sharded mapping lane: the live
+//! `ᵢ𝔇𝔓𝔐` is always an immutable `Arc` snapshot, Alg-5 updates build the
+//! next set off to the side, and publication is a single pointer swap that
+//! bumps a monotonically increasing epoch. Mapping workers poll the epoch
+//! (one relaxed atomic load) instead of holding the lock across mapping.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
 
+use crate::matrix::dpm::DpmSet;
 use crate::message::StateI;
 
 /// The pipeline-wide state counter.
@@ -29,6 +37,47 @@ impl StateManager {
     }
 }
 
+/// Epoch-swapped pointer to the live immutable `ᵢ𝔇𝔓𝔐` snapshot.
+///
+/// Readers take O(1) `Arc` clones and map against a frozen set; writers
+/// publish a fully built successor with one swap. The epoch counter lets
+/// shard workers detect a swap without re-reading the pointer, and the
+/// swap-before-bump order guarantees that any reader observing epoch `e`
+/// sees a snapshot at least as new as the one published at `e`.
+#[derive(Debug)]
+pub struct EpochDmm {
+    current: RwLock<Arc<DpmSet>>,
+    epoch: AtomicU64,
+}
+
+impl EpochDmm {
+    pub fn new(dpm: Arc<DpmSet>) -> Self {
+        Self { current: RwLock::new(dpm), epoch: AtomicU64::new(0) }
+    }
+
+    /// The live snapshot: an O(1) pointer clone, safe to map against while
+    /// an Alg-5 update builds the next set off to the side.
+    pub fn snapshot(&self) -> Arc<DpmSet> {
+        Arc::clone(&self.current.read().unwrap())
+    }
+
+    /// Publish the next snapshot with a single pointer swap; returns the
+    /// new epoch. The bump happens while the write lock is still held so
+    /// concurrent publishers get epochs that correspond to their swap
+    /// order (a reader observing epoch e always sees the snapshot
+    /// published at e or newer).
+    pub fn publish(&self, next: Arc<DpmSet>) -> u64 {
+        let mut current = self.current.write().unwrap();
+        *current = next;
+        self.epoch.fetch_add(1, Ordering::AcqRel) + 1
+    }
+
+    /// Current epoch (bumped once per publish).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -40,6 +89,19 @@ mod tests {
         assert_eq!(s.bump(), StateI(1));
         assert_eq!(s.bump(), StateI(2));
         assert_eq!(s.current(), StateI(2));
+    }
+
+    #[test]
+    fn epoch_dmm_swap_bumps_epoch() {
+        let dmm = EpochDmm::new(Arc::new(DpmSet::new(StateI(0))));
+        assert_eq!(dmm.epoch(), 0);
+        assert_eq!(dmm.snapshot().state, StateI(0));
+        let first = dmm.snapshot();
+        assert_eq!(dmm.publish(Arc::new(DpmSet::new(StateI(1)))), 1);
+        assert_eq!(dmm.epoch(), 1);
+        assert_eq!(dmm.snapshot().state, StateI(1));
+        // the old snapshot stays valid for readers that still hold it
+        assert_eq!(first.state, StateI(0));
     }
 
     #[test]

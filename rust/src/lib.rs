@@ -38,6 +38,7 @@ pub mod source;
 pub mod store;
 pub mod util;
 pub mod workload;
+pub mod xla_stub;
 
 /// Convenience prelude for examples and benches.
 pub mod prelude {

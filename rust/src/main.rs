@@ -357,7 +357,7 @@ fn cmd_dashboard(cfg: PipelineConfig) -> Result<()> {
     let pipeline = Pipeline::new(small)?;
     pipeline.run_trace(&ops)?;
     println!("{}", pipeline.dashboard());
-    let dmm = Arc::clone(&pipeline.dmm.read().unwrap());
+    let dmm = pipeline.dmm.snapshot();
     println!(
         "dmm: {} blocks, {} elements, state {}",
         dmm.n_blocks(),

@@ -18,14 +18,28 @@ use crate::message::StateI;
 use crate::schema::{SchemaId, VersionNo};
 
 /// Mapping failures surfaced to the coordinator's error management.
-#[derive(Debug, Clone, thiserror::Error, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum MapError {
     /// §3.4: "a new schema version has been pulled from the registry for a
     /// Kafka-message, but this version is not known to METL yet."
-    #[error("message state {message:?} out of sync with DMM state {dmm:?}")]
     StateMismatch { message: StateI, dmm: StateI },
     /// The message's schema version has no mapping column (not registered
     /// or all blocks deleted).
-    #[error("no mapping column for schema {schema:?} v{}", version.0)]
     UnknownColumn { schema: SchemaId, version: VersionNo },
 }
+
+impl std::fmt::Display for MapError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MapError::StateMismatch { message, dmm } => write!(
+                f,
+                "message state {message:?} out of sync with DMM state {dmm:?}"
+            ),
+            MapError::UnknownColumn { schema, version } => {
+                write!(f, "no mapping column for schema {schema:?} v{}", version.0)
+            }
+        }
+    }
+}
+
+impl std::error::Error for MapError {}

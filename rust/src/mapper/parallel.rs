@@ -116,6 +116,26 @@ impl ParallelMapper {
         })
     }
 
+    /// Map with the §3.4 state-sync retry folded in: on a state mismatch
+    /// the message is restamped to this snapshot's state and mapped once
+    /// more. Returns the outputs plus whether a restamp happened (the
+    /// caller owns the `sync_retries` metric). Used by the single lane and
+    /// by every shard worker of the sharded mapping lane.
+    pub fn map_or_restamp(
+        &self,
+        msg: &InMessage,
+    ) -> Result<(Vec<OutMessage>, bool), MapError> {
+        match self.map(msg) {
+            Ok(outs) => Ok((outs, false)),
+            Err(MapError::StateMismatch { .. }) => {
+                let mut restamped = msg.clone();
+                restamped.state = self.state();
+                Ok((self.map(&restamped)?, true))
+            }
+            Err(e) => Err(e),
+        }
+    }
+
     /// Map a batch of messages in parallel (the stream level of §5.5).
     /// Per-message results keep input order; errors are per-message.
     pub fn map_batch(

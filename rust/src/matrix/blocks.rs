@@ -66,13 +66,24 @@ pub fn is_null_block(m: &MappingMatrix, ext: &BlockExtent) -> bool {
 
 /// Violation of the 1:1 mapping constraint (§4.5: "we restrain the blocks
 /// to 1:1 attribute mappings").
-#[derive(Debug, thiserror::Error, PartialEq)]
-#[error("block violates 1:1 mapping: {kind} {index} has {degree} ones")]
+#[derive(Debug, PartialEq)]
 pub struct ConstraintViolation {
     pub kind: &'static str,
     pub index: usize,
     pub degree: usize,
 }
+
+impl std::fmt::Display for ConstraintViolation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "block violates 1:1 mapping: {} {} has {} ones",
+            self.kind, self.index, self.degree
+        )
+    }
+}
+
+impl std::error::Error for ConstraintViolation {}
 
 /// Extract the largest permutation matrix of a block as global (q, p)
 /// element pairs. Errors if the block is not a valid 1:1 mapping.

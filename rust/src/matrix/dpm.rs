@@ -194,6 +194,27 @@ impl DpmSet {
         m
     }
 
+    /// Check the permutation property across every block: within one block
+    /// each `q` and each `p` occurs at most once (§4.5). Returns the first
+    /// violating block key, if any — the invariant the property suite
+    /// asserts after every Alg-5 update.
+    pub fn verify_one_to_one(&self) -> Result<(), BlockKey> {
+        for block in self.blocks.values() {
+            let mut qs: Vec<u32> =
+                block.elements.iter().map(|&(q, _)| q.0).collect();
+            qs.sort_unstable();
+            let mut ps: Vec<u32> =
+                block.elements.iter().map(|&(_, p)| p.0).collect();
+            ps.sort_unstable();
+            if qs.windows(2).any(|w| w[0] == w[1])
+                || ps.windows(2).any(|w| w[0] == w[1])
+            {
+                return Err(block.key);
+            }
+        }
+        Ok(())
+    }
+
     /// Structural equality ignoring state (used by restore tests).
     pub fn same_elements(&self, other: &DpmSet) -> bool {
         if self.blocks.len() != other.blocks.len() {

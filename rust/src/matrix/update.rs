@@ -166,6 +166,23 @@ pub fn auto_update(
     report
 }
 
+/// Epoch-swap variant of [`auto_update`]: build `ᵢ₊₁𝔇𝔓𝔐` off to the side
+/// from an immutable snapshot. The live set keeps serving Alg 6 unchanged
+/// while this runs; the caller publishes the returned set with a single
+/// pointer swap (see `coordinator::state::EpochDmm`), so schema-change
+/// storms never stall in-flight mapping.
+pub fn prepare_update(
+    current: &DpmSet,
+    tree: &SchemaTree,
+    cdm: &CdmTree,
+    change: ChangeCase,
+    new_state: StateI,
+) -> (DpmSet, UpdateReport) {
+    let mut next = current.clone();
+    let report = auto_update(&mut next, tree, cdm, change, new_state);
+    (next, report)
+}
+
 fn remove_counted(
     dpm: &mut DpmSet,
     report: &mut UpdateReport,

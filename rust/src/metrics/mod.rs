@@ -3,7 +3,7 @@
 //! Caffeine cache" (§7).
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, RwLock};
 
 use crate::util::stats::{format_ns, LatencyRecorder, LogHistogram, Summary};
 
@@ -23,6 +23,61 @@ impl Counter {
     }
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-value gauge (e.g. the published DMM epoch).
+#[derive(Debug, Default)]
+#[repr(align(64))]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Counters of one worker shard of the sharded mapping lane.
+#[derive(Debug, Default)]
+pub struct ShardCounter {
+    /// CDC events this shard consumed.
+    pub events: Counter,
+    /// CDM messages this shard produced.
+    pub out: Counter,
+}
+
+/// Per-shard counter registry. Shards register lazily so
+/// [`PipelineMetrics`] stays `Default` while the shard count is a runtime
+/// knob (`PipelineConfig::shards`).
+#[derive(Debug, Default)]
+pub struct ShardCounters {
+    shards: RwLock<Vec<Arc<ShardCounter>>>,
+}
+
+impl ShardCounters {
+    /// Counter handle for shard `idx`, growing the registry as needed.
+    pub fn shard(&self, idx: usize) -> Arc<ShardCounter> {
+        if let Some(c) = self.shards.read().unwrap().get(idx) {
+            return Arc::clone(c);
+        }
+        let mut shards = self.shards.write().unwrap();
+        while shards.len() <= idx {
+            shards.push(Arc::new(ShardCounter::default()));
+        }
+        Arc::clone(&shards[idx])
+    }
+
+    /// Events consumed per shard, in shard order.
+    pub fn events_per_shard(&self) -> Vec<u64> {
+        self.shards
+            .read()
+            .unwrap()
+            .iter()
+            .map(|c| c.events.get())
+            .collect()
     }
 }
 
@@ -50,7 +105,7 @@ impl LatencyChannel {
     fn shard(&self) -> &Shard {
         // cheap per-thread affinity: hash the thread id
         let id = std::thread::current().id();
-        let mut h = std::hash::DefaultHasher::new();
+        let mut h = std::collections::hash_map::DefaultHasher::new();
         std::hash::Hash::hash(&id, &mut h);
         let idx = std::hash::Hasher::finish(&h) as usize % self.shards.len();
         &self.shards[idx]
@@ -113,6 +168,10 @@ pub struct PipelineMetrics {
     pub dmm_updates: Counter,
     /// Events served through the XLA bulk lane.
     pub bulk_events: Counter,
+    /// Published DMM epoch (bumped on every snapshot swap).
+    pub dmm_epoch: Gauge,
+    /// Per-shard counters of the sharded mapping lane.
+    pub shard: ShardCounters,
     /// Per-event full mapping latency (the §7 headline metric).
     pub map_latency: LatencyChannel,
     /// End-to-end latency source-commit → DW-visible.
@@ -141,8 +200,9 @@ impl PipelineMetrics {
             self.sync_retries.get()
         ));
         out.push_str(&format!(
-            "| dmm updates       {:>12}                     |\n",
-            self.dmm_updates.get()
+            "| dmm updates       {:>12}  epoch    {:>9} |\n",
+            self.dmm_updates.get(),
+            self.dmm_epoch.get()
         ));
         out.push_str(&format!(
             "| map latency  mean {:>9} sigma {:>9} n={:<6} |\n",
@@ -178,6 +238,28 @@ mod tests {
         c.inc();
         c.add(4);
         assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn gauge_holds_last_value() {
+        let g = Gauge::default();
+        assert_eq!(g.get(), 0);
+        g.set(7);
+        g.set(3);
+        assert_eq!(g.get(), 3);
+    }
+
+    #[test]
+    fn shard_counters_register_lazily() {
+        let s = ShardCounters::default();
+        s.shard(2).events.add(5);
+        s.shard(0).events.inc();
+        // shard 1 was implicitly created at zero
+        assert_eq!(s.events_per_shard(), vec![1, 0, 5]);
+        // handles are stable
+        let h = s.shard(2);
+        h.out.add(4);
+        assert_eq!(s.shard(2).out.get(), 4);
     }
 
     #[test]

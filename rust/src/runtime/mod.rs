@@ -13,7 +13,11 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+// The build image has no native XLA/PJRT library; the stub mirrors the
+// bindings' API and fails at client construction, so `try_load` yields
+// None and the coordinator serves everything through the Alg-6 lane.
 use crate::util::json::{parse, Json};
+use crate::xla_stub as xla;
 
 /// One compiled shape variant of the bulk_map kernel.
 struct BulkVariant {

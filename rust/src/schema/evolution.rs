@@ -59,23 +59,45 @@ impl VersionDiff {
     }
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum EvolutionError {
-    #[error("compatibility {mode:?} forbids removing attributes: {names:?}")]
     RemovalForbidden { mode: &'static str, names: Vec<String> },
-    #[error("compatibility {mode:?} forbids adding attributes: {names:?}")]
     AdditionForbidden { mode: &'static str, names: Vec<String> },
-    #[error("type changes are forbidden: {0:?}")]
     RetypeForbidden(Vec<String>),
-    #[error("added attribute {0:?} must be optional under this mode")]
     AddedMustBeOptional(String),
-    #[error(
-        "registry requires single-attribute changes (paper §3.3), got {0} changes"
-    )]
     TooManyChanges(usize),
-    #[error("new version is identical to the previous one")]
     NoChange,
 }
+
+impl std::fmt::Display for EvolutionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EvolutionError::RemovalForbidden { mode, names } => write!(
+                f,
+                "compatibility {mode:?} forbids removing attributes: {names:?}"
+            ),
+            EvolutionError::AdditionForbidden { mode, names } => write!(
+                f,
+                "compatibility {mode:?} forbids adding attributes: {names:?}"
+            ),
+            EvolutionError::RetypeForbidden(names) => {
+                write!(f, "type changes are forbidden: {names:?}")
+            }
+            EvolutionError::AddedMustBeOptional(name) => {
+                write!(f, "added attribute {name:?} must be optional under this mode")
+            }
+            EvolutionError::TooManyChanges(n) => write!(
+                f,
+                "registry requires single-attribute changes (paper §3.3), got {n} changes"
+            ),
+            EvolutionError::NoChange => {
+                write!(f, "new version is identical to the previous one")
+            }
+        }
+    }
+}
+
+impl std::error::Error for EvolutionError {}
 
 /// Validate an evolution step under `mode`. `single_change` additionally
 /// enforces the paper's semi-automated workflow rule that a new version

@@ -194,12 +194,19 @@ fn write_escaped(s: &str, out: &mut String) {
 }
 
 /// Parse error with byte offset context.
-#[derive(Debug, thiserror::Error, PartialEq)]
-#[error("json parse error at byte {at}: {msg}")]
+#[derive(Debug, PartialEq)]
 pub struct ParseError {
     pub at: usize,
     pub msg: String,
 }
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.at, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 /// Parse a complete JSON document (trailing whitespace allowed).
 pub fn parse(input: &str) -> Result<Json, ParseError> {

@@ -1,0 +1,127 @@
+//! Offline stand-in for the `xla` (PJRT) bindings used by [`crate::runtime`].
+//!
+//! The build image carries no native XLA/PJRT library, so this module
+//! mirrors the exact API surface `runtime/mod.rs` consumes and fails at the
+//! client-construction boundary: [`PjRtClient::cpu`] returns an error,
+//! which makes `BulkRuntime::try_load` yield `None` and routes every load
+//! through the Alg-6 fallback lane. All artifact-gated tests already skip
+//! when `artifacts/manifest.json` is absent, so the stub keeps the crate
+//! compiling and the test suite green without the accelerator toolchain.
+//! Swapping in the real bindings is a one-line change in `runtime/mod.rs`.
+
+use anyhow::{bail, Result};
+
+const UNAVAILABLE: &str =
+    "PJRT runtime unavailable: metl was built without native XLA bindings";
+
+/// PJRT client handle. Construction always fails in the stub.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        bail!("{UNAVAILABLE}")
+    }
+}
+
+/// Parsed HLO module (never constructible offline).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        bail!("{UNAVAILABLE}: cannot parse HLO text")
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// A compiled executable (never constructible offline).
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        bail!("{UNAVAILABLE}")
+    }
+}
+
+/// A device buffer returned by execution.
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        bail!("{UNAVAILABLE}")
+    }
+}
+
+/// Host-side literal. Constructible (the loader builds inputs before it
+/// learns the client is unavailable); all read-back paths error.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    _priv: (),
+}
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal { _priv: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal { _priv: () })
+    }
+
+    pub fn to_tuple2(&self) -> Result<(Literal, Literal)> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        bail!("{UNAVAILABLE}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_fails_cleanly() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("PJRT runtime unavailable"));
+    }
+
+    #[test]
+    fn literals_build_but_never_read_back() {
+        let lit = Literal::vec1(&[1.0, 2.0]).reshape(&[2, 1]).unwrap();
+        assert!(lit.to_tuple2().is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+}

@@ -1,0 +1,199 @@
+//! Golden-fixture tests for the wire codec (`message/codec.rs`): the
+//! checked-in `fixtures/cdc_golden.json` pins the exact envelope shape
+//! (fig 2) for a create, an update and a delete tombstone, including null
+//! data objects, plus one CDM out-message with business descriptions. Any
+//! unintentional wire-format change trips the structural comparison; the
+//! roundtrip half proves decode(encode(x)) == x on the same payloads.
+
+use metl::message::cdc::{CdcEvent, CdcOp, CdcSource};
+use metl::message::{codec, InMessage, OutMessage, StateI};
+use metl::schema::{ExtractType, SchemaId, SchemaTree, VersionNo};
+use metl::util::json::{parse, Json};
+
+const GOLDEN: &str = include_str!("fixtures/cdc_golden.json");
+
+fn tree() -> (SchemaTree, SchemaId, VersionNo) {
+    let mut t = SchemaTree::new();
+    let s = t.add_schema("payments.incoming", "fx.payments.incoming");
+    let v = t.add_version(
+        s,
+        &[
+            ("id".into(), ExtractType::Int64, false),
+            ("value".into(), ExtractType::Decimal, true),
+            ("currency".into(), ExtractType::Varchar, true),
+            ("time".into(), ExtractType::MicroTimestamp, true),
+        ],
+    );
+    (t, s, v)
+}
+
+fn cdm() -> metl::cdm::CdmTree {
+    let mut c = metl::cdm::CdmTree::new();
+    let e = c.add_entity("Payment");
+    c.add_version(
+        e,
+        &[
+            (
+                "amount".into(),
+                metl::cdm::CdmType::Number,
+                "Payment amount".into(),
+            ),
+            (
+                "time".into(),
+                metl::cdm::CdmType::Timestamp,
+                "Time of the payment".into(),
+            ),
+        ],
+    );
+    c
+}
+
+fn source() -> CdcSource {
+    CdcSource {
+        connector: "postgresql".into(),
+        db: "payments".into(),
+        table: "incoming".into(),
+    }
+}
+
+/// The row image before the update: one null data object ("time").
+fn image_v1(t: &SchemaTree, s: SchemaId, v: VersionNo) -> InMessage {
+    let sv = t.version(s, v).unwrap();
+    InMessage {
+        key: 32201,
+        schema: s,
+        version: v,
+        state: StateI(0),
+        ts_us: 1_700_000_000_000_001,
+        fields: vec![
+            (sv.attrs[0], Json::Num(32201.0)),
+            (sv.attrs[1], Json::Num(10.5)),
+            (sv.attrs[2], Json::Str("EUR".into())),
+            (sv.attrs[3], Json::Null),
+        ],
+    }
+}
+
+/// The row image after the update: "currency" went null, "time" filled.
+fn image_v2(t: &SchemaTree, s: SchemaId, v: VersionNo) -> InMessage {
+    let sv = t.version(s, v).unwrap();
+    InMessage {
+        ts_us: 1_700_000_000_000_002,
+        fields: vec![
+            (sv.attrs[0], Json::Num(32201.0)),
+            (sv.attrs[1], Json::Num(11.0)),
+            (sv.attrs[2], Json::Null),
+            (sv.attrs[3], Json::Num(1_700_000_000_000_000.0)),
+        ],
+        ..image_v1(t, s, v)
+    }
+}
+
+fn golden_events(t: &SchemaTree, s: SchemaId, v: VersionNo) -> Vec<CdcEvent> {
+    vec![
+        CdcEvent {
+            op: CdcOp::Create,
+            before: None,
+            after: Some(image_v1(t, s, v)),
+            source: source(),
+            ts_us: 11,
+        },
+        CdcEvent {
+            op: CdcOp::Update,
+            before: Some(image_v1(t, s, v)),
+            after: Some(image_v2(t, s, v)),
+            source: source(),
+            ts_us: 12,
+        },
+        // the tombstone: empty "after", the before image maps the key
+        CdcEvent {
+            op: CdcOp::Delete,
+            before: Some(image_v2(t, s, v)),
+            after: None,
+            source: source(),
+            ts_us: 13,
+        },
+    ]
+}
+
+fn golden_out(c: &metl::cdm::CdmTree) -> OutMessage {
+    let e = c.entity_by_name("Payment").unwrap();
+    let w = metl::cdm::CdmVersionNo(1);
+    let cv = c.version(e, w).unwrap();
+    OutMessage {
+        key: 32201,
+        entity: e,
+        version: w,
+        state: StateI(0),
+        ts_us: 1_700_000_000_000_002,
+        fields: vec![
+            (cv.attrs[0], Json::Num(11.0)),
+            (cv.attrs[1], Json::Num(1_700_000_000_000_000.0)),
+        ],
+    }
+}
+
+#[test]
+fn encoding_matches_checked_in_golden_fixture() {
+    let (t, s, v) = tree();
+    let c = cdm();
+    let mut expected = Json::obj();
+    expected.set(
+        "cdc",
+        Json::Arr(
+            golden_events(&t, s, v)
+                .iter()
+                .map(|ev| codec::encode_cdc(ev, &t))
+                .collect(),
+        ),
+    );
+    expected.set("out", codec::encode_out(&golden_out(&c), &c));
+    let golden = parse(GOLDEN).expect("golden fixture parses");
+    assert_eq!(golden, expected, "wire format drifted from the fixture");
+}
+
+#[test]
+fn golden_fixture_decodes_to_the_same_events() {
+    let (t, s, v) = tree();
+    let golden = parse(GOLDEN).unwrap();
+    let entries = golden.get("cdc").and_then(Json::as_arr).unwrap();
+    let expected = golden_events(&t, s, v);
+    assert_eq!(entries.len(), expected.len());
+    for (entry, want) in entries.iter().zip(&expected) {
+        let decoded = codec::decode_cdc(&entry.to_string(), &t).unwrap();
+        assert_eq!(&decoded, want);
+    }
+}
+
+#[test]
+fn cdc_roundtrip_including_tombstone_and_nulls() {
+    let (t, s, v) = tree();
+    for ev in golden_events(&t, s, v) {
+        let wire = codec::encode_cdc(&ev, &t).to_string();
+        let back = codec::decode_cdc(&wire, &t).unwrap();
+        assert_eq!(back, ev);
+        assert!(back.is_well_formed());
+    }
+    // the tombstone maps its before image (DW tombstones by key)
+    let delete = &golden_events(&t, s, v)[2];
+    assert_eq!(delete.mapping_payload().unwrap().key, 32201);
+    // null data objects survive the trip as explicit nulls
+    let update = &golden_events(&t, s, v)[1];
+    let wire = codec::encode_cdc(update, &t).to_string();
+    let back = codec::decode_cdc(&wire, &t).unwrap();
+    let after = back.after.unwrap();
+    let sv = t.version(s, v).unwrap();
+    assert!(after.data_object(sv.attrs[2]).is_none(), "currency is null");
+    assert_eq!(after.nad(sv.attrs[2]), 0);
+    assert_eq!(after.non_null_count(), 3);
+}
+
+#[test]
+fn in_message_roundtrip_through_wire() {
+    let (t, s, v) = tree();
+    for msg in [image_v1(&t, s, v), image_v2(&t, s, v)] {
+        let wire = codec::encode_in(&msg, &t).to_string();
+        let back = codec::decode_in(&wire, &t).unwrap();
+        assert_eq!(back, msg);
+    }
+}

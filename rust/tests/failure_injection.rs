@@ -111,7 +111,7 @@ fn corrupted_store_fails_loudly() {
     std::fs::write(dir.join("dusb.json"), "{\"groups\": [{\"bad\"").unwrap();
     assert!(p.restore_from_store().is_err());
     // live DMM untouched
-    assert!(p.dmm.read().unwrap().n_elements() > 0);
+    assert!(p.dmm.snapshot().n_elements() > 0);
     // a truncated-but-valid-json store with wrong shape also errors
     std::fs::write(dir.join("dusb.json"), "{\"state\": 3}").unwrap();
     assert!(p.restore_from_store().is_err());
@@ -186,9 +186,9 @@ fn version_deletion_mid_stream() {
     drop(land);
     // drop the live version's column from the DMM (operator mistake sim)
     {
-        let mut dpm = (**p.dmm.read().unwrap()).clone();
+        let mut dpm = (*p.dmm.snapshot()).clone();
         dpm.remove_column(schema, live);
-        *p.dmm.write().unwrap() = Arc::new(dpm);
+        p.dmm.publish(Arc::new(dpm));
         p.cache.evict_all(p.state.current());
     }
     let mut consumer = Consumer::new(p.cdc_topic.clone(), 0, 1);
@@ -206,7 +206,7 @@ fn version_deletion_mid_stream() {
             p.state.current(),
         )
         .unwrap();
-        *p.dmm.write().unwrap() = Arc::new(dpm);
+        p.dmm.publish(Arc::new(dpm));
         p.cache.evict_all(p.state.current());
     }
     for dead in p.dlq.drain() {

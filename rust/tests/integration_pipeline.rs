@@ -149,12 +149,11 @@ fn store_restart_reproduces_dmm() {
     let p = Pipeline::new(cfg).unwrap().with_store(&dir).unwrap();
     p.apply_schema_change(0).unwrap();
     p.apply_schema_change(1).unwrap();
-    let live = Arc::clone(&p.dmm.read().unwrap());
+    let live = p.dmm.snapshot();
     // simulate restart: wipe, restore from store
-    *p.dmm.write().unwrap() =
-        Arc::new(metl::matrix::dpm::DpmSet::new(StateI(0)));
+    p.dmm.publish(Arc::new(metl::matrix::dpm::DpmSet::new(StateI(0))));
     assert!(p.restore_from_store().unwrap());
-    let restored = Arc::clone(&p.dmm.read().unwrap());
+    let restored = p.dmm.snapshot();
     assert!(live.same_elements(&restored));
     assert_eq!(restored.state, StateI(2));
     // audit trail has both updates
@@ -191,7 +190,7 @@ fn inspection_views_on_live_pipeline() {
     let p = Pipeline::new(cfg).unwrap();
     p.apply_schema_change(0).unwrap();
     let land = p.landscape.read().unwrap();
-    let dpm = Arc::clone(&p.dmm.read().unwrap());
+    let dpm = p.dmm.snapshot();
     let entity = land.cdm.entities().next().unwrap().id;
     let w = *land.cdm.versions_of(entity).last().unwrap();
     let text = metl::coordinator::inspect::reverse_search(

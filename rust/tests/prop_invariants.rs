@@ -6,16 +6,17 @@ use std::sync::Arc;
 
 use metl::cache::DcpmCache;
 use metl::config::PipelineConfig;
+use metl::coordinator::EpochDmm;
 use metl::mapper::baseline::BaselineMapper;
 use metl::mapper::parallel::ParallelMapper;
 use metl::matrix::decompact::recreate_dpm;
 use metl::matrix::dpm::DpmSet;
 use metl::matrix::dusb::DusbSet;
-use metl::matrix::update::{auto_update, ChangeCase};
+use metl::matrix::update::{auto_update, prepare_update, ChangeCase};
 use metl::message::{InMessage, OutMessage, StateI};
 use metl::util::json::Json;
 use metl::util::rng::Rng;
-use metl::workload;
+use metl::workload::{self, Landscape};
 
 /// Randomized config within paper-plausible bounds.
 fn random_cfg(rng: &mut Rng) -> PipelineConfig {
@@ -186,6 +187,311 @@ fn prop_update_equals_recompute() {
         .unwrap();
         assert!(dpm.same_elements(&recomputed), "trial {trial}");
     }
+}
+
+/// Map every (schema, version) live in the tree through both sets and
+/// require identical outputs — the observable half of the update/map
+/// commutativity invariant. Both sets must carry the same state.
+fn assert_mapping_equal(land: &Landscape, a: &DpmSet, b: &DpmSet, seed: u64) {
+    assert_eq!(a.state, b.state, "commutativity needs matching states");
+    let fast_a = ParallelMapper::new(
+        Arc::new(a.clone()),
+        Arc::new(DcpmCache::new(a.state)),
+    );
+    let fast_b = ParallelMapper::new(
+        Arc::new(b.clone()),
+        Arc::new(DcpmCache::new(b.state)),
+    );
+    let map_sorted = |mapper: &ParallelMapper, msg: &InMessage| -> Vec<OutMessage> {
+        match mapper.map(msg) {
+            Ok(mut outs) => {
+                outs.sort_by_key(|o| (o.entity, o.version));
+                outs
+            }
+            // a version whose column vanished entirely maps to nothing
+            Err(metl::mapper::MapError::UnknownColumn { .. }) => Vec::new(),
+            Err(e) => panic!("unexpected map error: {e}"),
+        }
+    };
+    let mut rng = Rng::seed_from(seed);
+    for node in land.tree.schemas() {
+        for &v in &node.versions {
+            let sv = land.tree.version(node.id, v).unwrap();
+            for k in 0..3u64 {
+                let row = metl::source::random_row(
+                    &land.tree, node.id, v, k, &mut rng, 0.3,
+                );
+                let msg = InMessage {
+                    key: k,
+                    schema: node.id,
+                    version: v,
+                    state: a.state,
+                    ts_us: 0,
+                    fields: sv
+                        .attrs
+                        .iter()
+                        .copied()
+                        .zip(row.values)
+                        .collect(),
+                }
+                .to_dense();
+                assert_eq!(
+                    map_sorted(&fast_a, &msg),
+                    map_sorted(&fast_b, &msg),
+                    "schema {:?} v{} msg {k}",
+                    node.id,
+                    v.0
+                );
+            }
+        }
+    }
+}
+
+/// Satellite invariant: **update/map commutativity** across all four Alg-5
+/// triggers. For seeded landscapes, mapping through the incrementally
+/// updated `ᵢ₊₁𝔇𝔓𝔐` must equal mapping through a from-scratch rebuild of
+/// the equivalently updated ground-truth matrix.
+#[test]
+fn prop_update_map_commutes_with_recompute() {
+    let mut meta = Rng::seed_from(0xC0AA17);
+    for trial in 0..8 {
+        let cfg = random_cfg(&mut meta);
+        let msg_seed = meta.next_u64();
+
+        // --- case 3: added extracting version ---------------------------
+        {
+            let mut land = workload::generate(&cfg);
+            let mut dpm = DpmSet::from_matrix(
+                &land.matrix, &land.tree, &land.cdm, StateI(0),
+            )
+            .unwrap();
+            let schema = land.tree.schemas().next().unwrap().id;
+            let fields = workload::evolved_fields(&land.tree, schema);
+            let v = land.tree.add_version(schema, &fields);
+            auto_update(
+                &mut dpm,
+                &land.tree,
+                &land.cdm,
+                ChangeCase::AddedSchemaVersion { schema, v },
+                StateI(1),
+            );
+            dpm.verify_one_to_one()
+                .unwrap_or_else(|k| panic!("trial {trial}: 1:1 broken at {k:?}"));
+            land.matrix
+                .grow(land.cdm.n_attr_ids(), land.tree.n_attr_ids());
+            for block in dpm.column(schema, v) {
+                for &(q, p) in &block.elements {
+                    land.matrix.set(q.index(), p.index(), true);
+                }
+            }
+            let rebuilt = DpmSet::from_matrix(
+                &land.matrix, &land.tree, &land.cdm, StateI(1),
+            )
+            .unwrap();
+            assert!(dpm.same_elements(&rebuilt), "trial {trial}: case 3");
+            assert_mapping_equal(&land, &dpm, &rebuilt, msg_seed ^ 3);
+        }
+
+        // --- case 1: deleted extracting version -------------------------
+        {
+            let mut land = workload::generate(&cfg);
+            let mut dpm = DpmSet::from_matrix(
+                &land.matrix, &land.tree, &land.cdm, StateI(0),
+            )
+            .unwrap();
+            let schema = land.tree.schemas().next().unwrap().id;
+            let v = metl::schema::VersionNo(1);
+            auto_update(
+                &mut dpm,
+                &land.tree,
+                &land.cdm,
+                ChangeCase::DeletedSchemaVersion { schema, v },
+                StateI(1),
+            );
+            let sv = land.tree.version(schema, v).unwrap().clone();
+            land.matrix.clear_block(
+                0..land.matrix.n_rows(),
+                sv.col_start()..sv.col_start() + sv.width(),
+            );
+            land.tree.delete_version(schema, v);
+            let rebuilt = DpmSet::from_matrix(
+                &land.matrix, &land.tree, &land.cdm, StateI(1),
+            )
+            .unwrap();
+            assert!(dpm.same_elements(&rebuilt), "trial {trial}: case 1");
+            assert_mapping_equal(&land, &dpm, &rebuilt, msg_seed ^ 1);
+        }
+
+        // --- case 2: deleted CDM version --------------------------------
+        {
+            let mut land = workload::generate(&cfg);
+            let mut dpm = DpmSet::from_matrix(
+                &land.matrix, &land.tree, &land.cdm, StateI(0),
+            )
+            .unwrap();
+            let entity = land.cdm.entities().next().unwrap().id;
+            let w = metl::cdm::CdmVersionNo(1);
+            auto_update(
+                &mut dpm,
+                &land.tree,
+                &land.cdm,
+                ChangeCase::DeletedCdmVersion { entity, w },
+                StateI(1),
+            );
+            let cv = land.cdm.version(entity, w).unwrap().clone();
+            land.matrix.clear_block(
+                cv.row_start()..cv.row_start() + cv.height(),
+                0..land.matrix.n_cols(),
+            );
+            land.cdm.delete_version(entity, w);
+            let rebuilt = DpmSet::from_matrix(
+                &land.matrix, &land.tree, &land.cdm, StateI(1),
+            )
+            .unwrap();
+            assert!(dpm.same_elements(&rebuilt), "trial {trial}: case 2");
+            assert_mapping_equal(&land, &dpm, &rebuilt, msg_seed ^ 2);
+        }
+
+        // --- case 4: added CDM version (plus §5.4.3 cleanup) ------------
+        {
+            let mut land = workload::generate(&cfg);
+            let mut dpm = DpmSet::from_matrix(
+                &land.matrix, &land.tree, &land.cdm, StateI(0),
+            )
+            .unwrap();
+            let entity = land.cdm.entities().next().unwrap().id;
+            let w1 = metl::cdm::CdmVersionNo(1);
+            let cv1 = land.cdm.version(entity, w1).unwrap().clone();
+            let fields: Vec<(String, metl::cdm::CdmType, String)> = cv1
+                .attrs
+                .iter()
+                .map(|&q| {
+                    let a = land.cdm.attr(q);
+                    (a.name.clone(), a.ty, a.description.clone())
+                })
+                .collect();
+            let w2 = land.cdm.add_version(entity, &fields);
+            auto_update(
+                &mut dpm,
+                &land.tree,
+                &land.cdm,
+                ChangeCase::AddedCdmVersion { entity, w: w2 },
+                StateI(1),
+            );
+            dpm.verify_one_to_one()
+                .unwrap_or_else(|k| panic!("trial {trial}: 1:1 broken at {k:?}"));
+            land.matrix
+                .grow(land.cdm.n_attr_ids(), land.tree.n_attr_ids());
+            for block in dpm.row(entity, w2) {
+                for &(q, p) in &block.elements {
+                    land.matrix.set(q.index(), p.index(), true);
+                }
+            }
+            // §5.4.3: the previous CDM version's rows are deleted
+            land.matrix.clear_block(
+                cv1.row_start()..cv1.row_start() + cv1.height(),
+                0..land.matrix.n_cols(),
+            );
+            let rebuilt = DpmSet::from_matrix(
+                &land.matrix, &land.tree, &land.cdm, StateI(1),
+            )
+            .unwrap();
+            assert!(dpm.same_elements(&rebuilt), "trial {trial}: case 4");
+            assert_mapping_equal(&land, &dpm, &rebuilt, msg_seed ^ 4);
+        }
+    }
+}
+
+/// Satellite invariant: an epoch swap mid-stream never yields a message
+/// mapped by a mixed old/new snapshot — every mapped result equals the
+/// pure-old or pure-new output, under a publisher thread swapping
+/// continuously.
+#[test]
+fn prop_epoch_swap_never_mixes_snapshots() {
+    let cfg = PipelineConfig::small();
+    let mut land = workload::generate(&cfg);
+    let old =
+        DpmSet::from_matrix(&land.matrix, &land.tree, &land.cdm, StateI(0))
+            .unwrap();
+    // build the successor off to the side (a case-3 storm), like Alg 5;
+    // pick a schema whose v1 column is live so the probes must map
+    let schema = land
+        .tree
+        .schemas()
+        .map(|s| s.id)
+        .find(|&s| !old.column(s, metl::schema::VersionNo(1)).is_empty())
+        .expect("a schema with a mapped v1 column");
+    let fields = workload::evolved_fields(&land.tree, schema);
+    let v = land.tree.add_version(schema, &fields);
+    let (new, _report) = prepare_update(
+        &old,
+        &land.tree,
+        &land.cdm,
+        ChangeCase::AddedSchemaVersion { schema, v },
+        StateI(1),
+    );
+    // a probe message per state, plus its expected pure output
+    let probe = |dpm: &DpmSet, version| {
+        let sv = land.tree.version(schema, version).unwrap();
+        let mut rng = Rng::seed_from(9);
+        let row =
+            metl::source::random_row(&land.tree, schema, version, 1, &mut rng, 0.0);
+        let msg = InMessage {
+            key: 1,
+            schema,
+            version,
+            state: dpm.state,
+            ts_us: 0,
+            fields: sv.attrs.iter().copied().zip(row.values).collect(),
+        }
+        .to_dense();
+        let mapper = ParallelMapper::new(
+            Arc::new(dpm.clone()),
+            Arc::new(DcpmCache::new(dpm.state)),
+        );
+        let mut outs = mapper.map(&msg).unwrap();
+        outs.sort_by_key(|o| (o.entity, o.version));
+        (msg, outs)
+    };
+    let live_v = metl::schema::VersionNo(1);
+    let (msg_old, outs_old) = probe(&old, live_v);
+    let (msg_new, outs_new) = probe(&new, live_v);
+    let epoch = EpochDmm::new(Arc::new(old.clone()));
+    let stop = std::sync::atomic::AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let epoch_ref = &epoch;
+        let stop_ref = &stop;
+        let old_ref = &old;
+        let new_ref = &new;
+        scope.spawn(move || {
+            let mut flip = false;
+            while !stop_ref.load(std::sync::atomic::Ordering::Relaxed) {
+                let next =
+                    if flip { old_ref.clone() } else { new_ref.clone() };
+                epoch_ref.publish(Arc::new(next));
+                flip = !flip;
+            }
+        });
+        for _ in 0..500 {
+            let snap = epoch_ref.snapshot();
+            // the snapshot is immutable: its state and blocks must always
+            // belong to the same published set
+            let (msg, expected) = if snap.state == StateI(0) {
+                (&msg_old, &outs_old)
+            } else {
+                (&msg_new, &outs_new)
+            };
+            let mapper = ParallelMapper::with_threads(
+                Arc::clone(&snap),
+                Arc::new(DcpmCache::new(snap.state)),
+                1,
+            );
+            let mut outs = mapper.map(msg).unwrap();
+            outs.sort_by_key(|o| (o.entity, o.version));
+            assert_eq!(&outs, expected, "mixed old/new snapshot observed");
+        }
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    });
 }
 
 /// Invariant: JSON codec roundtrips arbitrary values built from the sim's

@@ -1,0 +1,142 @@
+//! Offline stand-in for the `anyhow` error crate, implementing exactly the
+//! subset the metl crate uses: [`Error`], [`Result`], the [`Context`]
+//! extension trait, and the `anyhow!` / `bail!` macros. No registry access
+//! is available in the build image (see DESIGN.md §2), so this vendored
+//! path dependency keeps `use anyhow::...` call sites source-compatible.
+//!
+//! Differences from the real crate: the error is a flattened message (the
+//! source chain is folded into the string at construction) and `Context`
+//! accepts any `Display` error, which is a superset of the real bound.
+
+use std::fmt;
+
+/// A flattened, message-carrying error value.
+pub struct Error(String);
+
+impl Error {
+    /// Construct from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error(message.to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+// `?` conversion from any standard error. `Error` itself deliberately does
+// not implement `std::error::Error`, exactly like the real anyhow, so this
+// blanket impl cannot overlap the reflexive `From<T> for T`.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error(e.to_string())
+    }
+}
+
+/// `anyhow::Result<T>`: a `std::result::Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors and empty options.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a fixed context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Wrap with a lazily computed context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error(format!("{context}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return with an [`Error`] built like `anyhow!`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_num(s: &str) -> Result<u32> {
+        let n: u32 = s.parse().context("not a number")?;
+        if n == 0 {
+            bail!("zero is not allowed (got {s:?})");
+        }
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_and_context() {
+        assert_eq!(parse_num("7").unwrap(), 7);
+        let err = parse_num("x").unwrap_err();
+        assert!(err.to_string().starts_with("not a number:"));
+        let err = parse_num("0").unwrap_err();
+        assert!(err.to_string().contains("zero is not allowed"));
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u8> = None;
+        assert_eq!(none.context("missing").unwrap_err().to_string(), "missing");
+        assert_eq!(Some(3u8).with_context(|| "unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn macro_forms() {
+        assert_eq!(anyhow!("plain").to_string(), "plain");
+        assert_eq!(anyhow!("x = {}", 5).to_string(), "x = 5");
+        let k = "key";
+        assert_eq!(anyhow!("missing {k}").to_string(), "missing key");
+    }
+
+    #[test]
+    fn context_on_anyhow_result() {
+        let inner: Result<()> = Err(anyhow!("inner"));
+        let outer = inner.context("outer").unwrap_err();
+        assert_eq!(outer.to_string(), "outer: inner");
+    }
+}
