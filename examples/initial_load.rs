@@ -19,7 +19,9 @@ fn loaded_pipeline(cfg: &PipelineConfig) -> anyhow::Result<Pipeline> {
     let mut land = workload::generate(cfg);
     let mut rng = Rng::seed_from(cfg.seed ^ 0x10AD);
     workload::populate(&mut land, ROWS, &mut rng);
-    Ok(Pipeline::from_landscape(cfg.clone(), land)?)
+    // connector-API wiring: config-driven sinks (runtime.sinks) ride on
+    // the builder; the landscape is pre-populated for the load
+    Pipeline::builder(cfg.clone()).landscape(land).build()
 }
 
 fn main() -> anyhow::Result<()> {

@@ -14,6 +14,8 @@ use metl::config::PipelineConfig;
 use metl::coordinator::batcher::InitialLoader;
 use metl::coordinator::pipeline::Pipeline;
 use metl::matrix::compaction::CompactionStats;
+use metl::sink::{AuditMirrorSink, DwSink, JsonlSink, MlSink};
+use metl::source::Connector;
 use metl::matrix::dpm::DpmSet;
 use metl::matrix::dusb::DusbSet;
 use metl::message::StateI;
@@ -43,11 +45,22 @@ fn main() -> anyhow::Result<()> {
         CompactionStats::measure(&land.matrix, &land.tree, &land.cdm, &dpm, &dusb);
     println!("\n-- compaction --\n{}", stats.row());
 
-    // the pipeline with the hybrid store attached
+    // the pipeline with the hybrid store attached, wired through the
+    // connector-API builder: explicit source + four sink backends, each
+    // with its own consumer group over the CDM topic
     let store_dir = std::env::temp_dir().join("metl-e2e-store");
     let _ = std::fs::remove_dir_all(&store_dir);
-    let pipeline =
-        Pipeline::from_landscape(cfg.clone(), land)?.with_store(&store_dir)?;
+    let jsonl_path = std::env::temp_dir().join("metl-e2e-cdm.jsonl");
+    let _ = std::fs::remove_file(&jsonl_path);
+    let pipeline = Pipeline::builder(cfg.clone())
+        .landscape(land)
+        .source(Connector::new("src"))
+        .sink(DwSink::new())
+        .sink(MlSink::new())
+        .sink(JsonlSink::new().with_path(&jsonl_path))
+        .sink(AuditMirrorSink::new(64))
+        .store(&store_dir)
+        .build()?;
 
     // day trace (paper: 1168 CDC events on 13 Feb 2022)
     let ops = workload::day_trace(&cfg, &mut rng);
@@ -88,21 +101,36 @@ fn main() -> anyhow::Result<()> {
         format_ns(warm_summary.max)
     );
 
-    println!("\n-- sinks --");
-    let dw = pipeline.dw.lock().unwrap();
-    let ml = pipeline.ml.lock().unwrap();
+    println!("\n-- sinks (one consumer group each) --");
+    let (rows, upserts, dupes) = pipeline
+        .with_sink("dw", |dw: &DwSink| {
+            (dw.total_rows(), dw.total_upserts(), dw.total_duplicates())
+        })
+        .unwrap();
+    println!("DW:    {rows} rows, {upserts} upserts, {dupes} duplicates (at-least-once)");
+    let (observations, features) = pipeline
+        .with_sink("ml", |ml: &MlSink| (ml.observations, ml.n_features()))
+        .unwrap();
+    println!("ML:    {observations} observations, {features} features tracked");
+    let jsonl_lines = pipeline
+        .with_sink("jsonl", |j: &JsonlSink| j.len())
+        .unwrap();
     println!(
-        "DW: {} rows, {} upserts, {} duplicates (at-least-once)",
-        dw.total_rows(),
-        dw.total_upserts(),
-        dw.total_duplicates()
+        "JSONL: {} lines appended to {}",
+        jsonl_lines,
+        jsonl_path.display()
     );
-    println!(
-        "ML: {} observations, {} features tracked",
-        ml.observations,
-        ml.n_features()
-    );
-    drop((dw, ml));
+    let (mirrored, tombstones) = pipeline
+        .with_sink("audit", |a: &AuditMirrorSink| (a.mirrored, a.tombstones))
+        .unwrap();
+    println!("audit: {mirrored} mirrored, {tombstones} tombstones ledgered");
+    for handle in &pipeline.sinks {
+        assert_eq!(handle.lag(), 0, "sink {} fully drained", handle.name());
+    }
+    assert_eq!(jsonl_lines as u64, pipeline.metrics.messages_out.get());
+    // the JSONL file is the flushed mirror of the in-memory log
+    let flushed = std::fs::read_to_string(&jsonl_path)?.lines().count();
+    assert_eq!(flushed, jsonl_lines);
 
     println!("\n-- dashboard (fig 7) --\n{}", pipeline.dashboard());
 

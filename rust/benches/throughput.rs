@@ -1,9 +1,10 @@
 //! Bench: §5.5 parallelism — end-to-end pipeline throughput across the
 //! three lanes (Alg 1 baseline, Alg 6 DMM, XLA bulk), horizontal scaling
 //! 1→8 instances over the partitioned CDC backlog (the paper's
-//! initial-load scale-out), and the sharded mapping lane with
-//! epoch-swapped DMM snapshots (`--shards N` pins one shard count;
-//! default sweeps 1/2/4 and races an Alg-5 update against the drain).
+//! initial-load scale-out), the sharded mapping lane with epoch-swapped
+//! DMM snapshots (`--shards N` pins one shard count; default sweeps 1/2/4
+//! and races an Alg-5 update against the drain), and egress fan-out drain
+//! throughput at 1/2/4 registered sinks (`--sinks N` pins one count).
 
 #[path = "harness.rs"]
 mod harness;
@@ -214,5 +215,50 @@ fn main() {
         stormy_p99 <= steady_p99 * 2.0 + 2_000_000.0,
         "Alg-5 update stalled the sharded lane: p99 {stormy_p99}ns vs steady {steady_p99}ns"
     );
+
+    section("egress fan-out (per-sink consumer groups over the CDM topic)");
+    let sink_axis: Vec<usize> = std::env::args()
+        .skip_while(|a| a != "--sinks")
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .map(|n| vec![n])
+        .unwrap_or_else(|| vec![1, 2, 4]);
+    const SINK_NAMES: [&str; 4] = ["dw", "ml", "jsonl", "audit"];
+    println!(
+        "  {:>10} {:>14} {:>12} {:>10}",
+        "sinks", "records/s", "wall", "applied"
+    );
+    for &requested in &sink_axis {
+        // sink names must be unique; the axis is capped at the four
+        // built-in backends
+        let n_sinks = requested.clamp(1, SINK_NAMES.len());
+        let mut fan_cfg = cfg.clone();
+        fan_cfg.sinks = SINK_NAMES
+            .iter()
+            .take(n_sinks)
+            .map(|s| s.to_string())
+            .collect();
+        let p = backlog_pipeline(&fan_cfg);
+        // fill the CDM topic once; each sink then drains its own group
+        let mapped = scaler::run_scaled(&p, 1);
+        assert_eq!(mapped.processed as usize, BACKLOG);
+        let t0 = std::time::Instant::now();
+        let applied = p.drain_sinks();
+        let wall = t0.elapsed();
+        let rps = applied as f64 / wall.as_secs_f64().max(1e-9);
+        println!(
+            "  {:>10} {:>14.0} {:>12?} {:>10}",
+            n_sinks, rps, wall, applied
+        );
+        assert_eq!(
+            applied as u64,
+            p.out_topic.total_records() * n_sinks as u64,
+            "every sink drains the whole CDM topic"
+        );
+        for handle in &p.sinks {
+            assert_eq!(handle.lag(), 0, "sink {}", handle.name());
+        }
+    }
+
     println!("\nthroughput bench OK");
 }

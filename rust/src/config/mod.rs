@@ -40,6 +40,12 @@ pub struct PipelineConfig {
     pub bulk_threshold: usize,
     /// artifacts/ directory for the PJRT runtime (None disables the lane).
     pub artifacts_dir: Option<String>,
+    /// Sink backends registered on the pipeline, each with its own
+    /// consumer group over the CDM topic
+    /// (`runtime.sinks = ["dw","ml","jsonl"]`; see `sink::from_config_name`).
+    pub sinks: Vec<String>,
+    /// Append path for the JSONL lakehouse sink (None = in-memory log).
+    pub jsonl_path: Option<String>,
 }
 
 impl Default for PipelineConfig {
@@ -67,6 +73,8 @@ impl PipelineConfig {
             seed: 42,
             bulk_threshold: 64,
             artifacts_dir: None,
+            sinks: default_sinks(),
+            jsonl_path: None,
         }
     }
 
@@ -89,6 +97,8 @@ impl PipelineConfig {
             seed: 20220213,
             bulk_threshold: 128,
             artifacts_dir: Some("artifacts".into()),
+            sinks: default_sinks(),
+            jsonl_path: None,
         }
     }
 
@@ -111,6 +121,8 @@ impl PipelineConfig {
             seed: 7,
             bulk_threshold: 256,
             artifacts_dir: Some("artifacts".into()),
+            sinks: default_sinks(),
+            jsonl_path: None,
         }
     }
 
@@ -151,8 +163,32 @@ impl PipelineConfig {
             cfg.artifacts_dir =
                 if v.is_empty() { None } else { Some(v.clone()) };
         }
+        if let Some(v) = kv.get("runtime.sinks") {
+            cfg.sinks = parse_string_list(v);
+        }
+        if let Some(v) = kv.get("runtime.jsonl_path") {
+            cfg.jsonl_path =
+                if v.is_empty() { None } else { Some(v.clone()) };
+        }
         Ok(cfg)
     }
+}
+
+/// The paper's fig-1 consumers: data warehouse + ML platform.
+fn default_sinks() -> Vec<String> {
+    vec!["dw".to_string(), "ml".to_string()]
+}
+
+/// Parse a `["a", "b"]` (or bare `a, b`) list value into its items —
+/// shared by the config file (`runtime.sinks`) and the `--sinks` CLI flag.
+pub fn parse_string_list(v: &str) -> Vec<String> {
+    v.trim()
+        .trim_start_matches('[')
+        .trim_end_matches(']')
+        .split(',')
+        .map(|item| item.trim().trim_matches('"').to_string())
+        .filter(|item| !item.is_empty())
+        .collect()
 }
 
 /// Parse `key = value` lines with `[section]` prefixes and `#` comments.
@@ -221,6 +257,30 @@ mod tests {
         assert!(PipelineConfig::parse("novalue").is_err());
         assert!(PipelineConfig::parse("profile = \"nope\"").is_err());
         assert!(PipelineConfig::parse("[sim]\nservices = abc").is_err());
+    }
+
+    #[test]
+    fn default_profiles_register_paper_consumers() {
+        assert_eq!(PipelineConfig::small().sinks, vec!["dw", "ml"]);
+        assert_eq!(PipelineConfig::paper_day().jsonl_path, None);
+    }
+
+    #[test]
+    fn parses_sink_lists() {
+        let text = r#"
+            [runtime]
+            sinks = ["dw", "jsonl", "audit"]
+            jsonl_path = "/tmp/cdm.jsonl"
+        "#;
+        let cfg = PipelineConfig::parse(text).unwrap();
+        assert_eq!(cfg.sinks, vec!["dw", "jsonl", "audit"]);
+        assert_eq!(cfg.jsonl_path.as_deref(), Some("/tmp/cdm.jsonl"));
+        // bare comma lists work too (CLI-style)
+        let cfg = PipelineConfig::parse("[runtime]\nsinks = ml,dw").unwrap();
+        assert_eq!(cfg.sinks, vec!["ml", "dw"]);
+        // an explicitly empty list disables all egress
+        let cfg = PipelineConfig::parse("[runtime]\nsinks = []").unwrap();
+        assert!(cfg.sinks.is_empty());
     }
 
     #[test]

@@ -212,12 +212,12 @@ mod tests {
         assert_eq!(rb.rows, rf.rows);
         assert_eq!(rb.out_messages, rf.out_messages);
         // drain both sinks and compare DW contents
-        let mut cb = crate::broker::Consumer::new(p_bulk.out_topic.clone(), 0, 1);
-        let mut cf = crate::broker::Consumer::new(p_fall.out_topic.clone(), 0, 1);
-        p_bulk.drain_sinks(&mut cb);
-        p_fall.drain_sinks(&mut cf);
-        let dwb = p_bulk.dw.lock().unwrap();
-        let dwf = p_fall.dw.lock().unwrap();
-        assert_eq!(dwb.total_rows(), dwf.total_rows());
+        p_bulk.drain_sinks();
+        p_fall.drain_sinks();
+        let rows = |p: &Pipeline| {
+            p.with_sink("dw", |dw: &crate::sink::DwSink| dw.total_rows())
+                .unwrap()
+        };
+        assert_eq!(rows(&p_bulk), rows(&p_fall));
     }
 }

@@ -1,0 +1,132 @@
+//! Per-sink egress lanes: every registered [`SinkConnector`] backend gets
+//! its **own consumer group** over the CDM topic, with independent
+//! offsets, commits and lag — one slow or stalled backend never blocks
+//! the others (the fig-1 fan-out property; DOD-ETL's pluggable stage
+//! boundaries applied to the load side).
+//!
+//! A [`SinkHandle`] bundles the backend, its single-member consumer group
+//! and its metrics. Draining is at-least-once: records are applied, then
+//! the offset commits; a crash in between re-delivers on the next drain
+//! and the backend's idempotent `apply` absorbs the duplicates.
+
+use std::any::Any;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use super::pipeline::OutRecord;
+use crate::broker::Consumer;
+use crate::metrics::SinkMetrics;
+use crate::sink::{SinkConnector, SinkStats};
+
+/// Batch size of one egress poll round.
+const DRAIN_BATCH: usize = 256;
+
+/// One registered sink backend plus its own consumer group + metrics.
+pub struct SinkHandle {
+    name: String,
+    sink: Mutex<Box<dyn SinkConnector>>,
+    consumer: Mutex<Consumer<OutRecord>>,
+    metrics: Arc<SinkMetrics>,
+}
+
+impl SinkHandle {
+    pub(crate) fn new(
+        sink: Box<dyn SinkConnector>,
+        consumer: Consumer<OutRecord>,
+        metrics: Arc<SinkMetrics>,
+    ) -> Self {
+        Self {
+            name: sink.name().to_string(),
+            sink: Mutex::new(sink),
+            consumer: Mutex::new(consumer),
+            metrics,
+        }
+    }
+
+    /// Backend name (`"dw"`, `"ml"`, ... — `Pipeline::sink` lookup key).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// This sink's metrics (drained/duplicates/dropped/lag/flush errors).
+    pub fn metrics(&self) -> &SinkMetrics {
+        &self.metrics
+    }
+
+    /// Drain this sink's consumer group: poll → apply → flush → commit
+    /// until the CDM topic is exhausted, then refresh the metrics gauges.
+    /// Returns records durably drained this round.
+    ///
+    /// Durability before progress: the backend flushes **before** the
+    /// offsets commit. A failed flush rewinds to the last commit and
+    /// stops the round (counted in `flush_errors`, visible as lag) — the
+    /// next drain redelivers the batch once the backend recovers, and the
+    /// at-least-once contract means backends absorb the re-applies.
+    pub fn drain(&self) -> usize {
+        let mut consumer = self.consumer.lock().unwrap();
+        let mut sink = self.sink.lock().unwrap();
+        let mut n = 0;
+        loop {
+            let batch = consumer.poll(DRAIN_BATCH);
+            if batch.is_empty() {
+                break;
+            }
+            for (_, rec) in &batch {
+                let (op, msg) = &*rec.value;
+                sink.apply(msg, *op);
+            }
+            if sink.flush().is_err() {
+                self.metrics.flush_errors.inc();
+                consumer.rewind_to_committed();
+                break;
+            }
+            consumer.commit();
+            n += batch.len();
+        }
+        self.metrics.drained.add(n as u64);
+        let stats = sink.snapshot_stats();
+        self.metrics.duplicates.set(stats.duplicates);
+        self.metrics.dropped.set(stats.dropped);
+        self.metrics.lag.set(consumer.lag());
+        n
+    }
+
+    /// Current consumer lag (CDM records this backend has not consumed);
+    /// also refreshes the lag gauge.
+    pub fn lag(&self) -> u64 {
+        let lag = self.consumer.lock().unwrap().lag();
+        self.metrics.lag.set(lag);
+        lag
+    }
+
+    /// Backend counters snapshot.
+    pub fn stats(&self) -> SinkStats {
+        self.sink.lock().unwrap().snapshot_stats()
+    }
+
+    /// Flush the backend's buffered state.
+    pub fn flush(&self) -> Result<()> {
+        self.sink.lock().unwrap().flush()
+    }
+
+    /// Reset this group's offsets to the beginning of the CDM topic — the
+    /// §3.4 "set back Kafka-offsets" fallback, per sink (idempotent
+    /// backends absorb the re-deliveries).
+    pub fn reset_to_beginning(&self) {
+        self.consumer.lock().unwrap().reset_to_beginning();
+    }
+
+    /// Abandon uncommitted progress (crash simulation: next drain
+    /// re-delivers everything past the last commit).
+    pub fn rewind_to_committed(&self) {
+        self.consumer.lock().unwrap().rewind_to_committed();
+    }
+
+    /// Backend-specific view: run `f` against the concrete sink type, if
+    /// this handle's backend is a `T`.
+    pub fn with<T: Any, R>(&self, f: impl FnOnce(&T) -> R) -> Option<R> {
+        let sink = self.sink.lock().unwrap();
+        sink.as_any().downcast_ref::<T>().map(f)
+    }
+}

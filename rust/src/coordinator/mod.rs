@@ -4,6 +4,7 @@
 //! the DMM core.
 
 pub mod batcher;
+pub mod egress;
 pub mod errors;
 pub mod inspect;
 pub mod pipeline;
@@ -13,6 +14,7 @@ pub mod shard;
 pub mod state;
 pub mod workflow;
 
+pub use egress::SinkHandle;
 pub use errors::DeadLetter;
-pub use pipeline::Pipeline;
+pub use pipeline::{Pipeline, PipelineBuilder};
 pub use state::{EpochDmm, StateManager};

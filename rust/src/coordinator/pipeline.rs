@@ -1,6 +1,31 @@
 //! The wired METL pipeline (paper fig 1): Debezium-sim sources → Kafka-sim
-//! CDC topic → METL (DMM mapping, Alg 6) → CDM topic → DW + ML sinks, with
-//! the state-i update workflow and error management in the control lane.
+//! CDC topic → METL (DMM mapping, Alg 6) → CDM topic → pluggable sink
+//! backends, with the state-i update workflow and error management in the
+//! control lane.
+//!
+//! # Pluggable connectors + per-sink consumer groups
+//!
+//! Ingress and egress are trait seams, not struct fields: the pipeline
+//! holds a boxed [`SourceConnector`] and a list of [`SinkHandle`]s, each
+//! wrapping a [`crate::sink::SinkConnector`] backend with its **own
+//! consumer group** over the CDM topic. Wiring happens through
+//! [`PipelineBuilder`]:
+//!
+//! ```ignore
+//! let p = Pipeline::builder(cfg)
+//!     .source(Connector::new("src"))
+//!     .sink(DwSink::new())
+//!     .sink(JsonlSink::new().with_path("cdm.jsonl"))
+//!     .build()?;
+//! p.run_trace(&ops)?;
+//! let rows = p.with_sink("dw", |dw: &DwSink| dw.total_rows());
+//! ```
+//!
+//! With no explicit `.sink(...)` calls the backends come from
+//! `PipelineConfig::sinks` (`runtime.sinks = ["dw","ml","jsonl"]`), so
+//! deployments select backends from config alone. Because every sink
+//! tracks its own offsets/commits/lag, a slow warehouse no longer blocks
+//! the ML feed (see [`super::egress`]).
 //!
 //! # Sharded mapping lane
 //!
@@ -41,6 +66,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use super::egress::SinkHandle;
 use super::errors::{Dlq, RetryPolicy};
 use super::state::{EpochDmm, StateManager};
 use super::workflow::{NoticePolicy, WorkflowOutcome};
@@ -56,8 +82,8 @@ use crate::message::cdc::{CdcEvent, CdcOp};
 use crate::message::{OutMessage, StateI};
 use crate::metrics::PipelineMetrics;
 use crate::schema::evolution::{self, Compatibility};
-use crate::sink::{DwSink, MlSink};
-use crate::source::{Connector, Dml};
+use crate::sink::SinkConnector;
+use crate::source::{Connector, Dml, SourceConnector};
 use crate::store::MatrixStore;
 use crate::util::rng::Rng;
 use crate::util::IdGen;
@@ -85,9 +111,10 @@ pub struct Pipeline {
     pub dlq: Dlq,
     pub retry: RetryPolicy,
     pub notice_policy: NoticePolicy,
-    pub dw: Mutex<DwSink>,
-    pub ml: Mutex<MlSink>,
-    connector: Connector,
+    /// Registered egress backends, each with its own consumer group (see
+    /// [`super::egress`]). Order is registration order.
+    pub sinks: Vec<SinkHandle>,
+    source: Box<dyn SourceConnector>,
     rng: Mutex<Rng>,
     next_key: IdGen,
     /// Simulated µs clock (1 ms per produced event).
@@ -104,17 +131,52 @@ pub struct TraceReport {
     pub wall: std::time::Duration,
 }
 
-impl Pipeline {
-    /// Build a pipeline over a freshly generated landscape.
-    pub fn new(cfg: PipelineConfig) -> Result<Pipeline> {
-        let landscape = workload::generate(&cfg);
-        Self::from_landscape(cfg, landscape)
+/// Fluent wiring for [`Pipeline`]: landscape, source connector, sink
+/// backends and the hybrid store. With no explicit sinks the backends come
+/// from `PipelineConfig::sinks`; with no explicit source the Debezium-sim
+/// [`Connector`] is used.
+pub struct PipelineBuilder {
+    cfg: PipelineConfig,
+    landscape: Option<Landscape>,
+    source: Option<Box<dyn SourceConnector>>,
+    sinks: Vec<Box<dyn SinkConnector>>,
+    store_dir: Option<std::path::PathBuf>,
+}
+
+impl PipelineBuilder {
+    /// Use a pre-built landscape instead of generating one from the
+    /// config (benches/tests that pre-populate tables).
+    pub fn landscape(mut self, landscape: Landscape) -> Self {
+        self.landscape = Some(landscape);
+        self
     }
 
-    pub fn from_landscape(
-        cfg: PipelineConfig,
-        landscape: Landscape,
-    ) -> Result<Pipeline> {
+    /// Replace the default Debezium-sim source connector.
+    pub fn source(mut self, source: impl SourceConnector + 'static) -> Self {
+        self.source = Some(Box::new(source));
+        self
+    }
+
+    /// Register one sink backend. Each registered sink gets its own
+    /// consumer group over the CDM topic. Registering any sink disables
+    /// the config-driven default set.
+    pub fn sink(mut self, sink: impl SinkConnector + 'static) -> Self {
+        self.sinks.push(Box::new(sink));
+        self
+    }
+
+    /// Attach the Postgres-sim store (hybrid §6.2 persistence).
+    pub fn store(mut self, dir: impl AsRef<std::path::Path>) -> Self {
+        self.store_dir = Some(dir.as_ref().to_path_buf());
+        self
+    }
+
+    /// Wire everything into a runnable [`Pipeline`].
+    pub fn build(self) -> Result<Pipeline> {
+        let PipelineBuilder { cfg, landscape, source, mut sinks, store_dir } =
+            self;
+        let landscape =
+            landscape.unwrap_or_else(|| workload::generate(&cfg));
         let state = StateManager::new(StateI(0));
         let dpm = DpmSet::from_matrix(
             &landscape.matrix,
@@ -127,8 +189,40 @@ impl Pipeline {
         let cdc_topic = broker.create_topic("fx.cdc", cfg.partitions);
         let out_broker = crate::broker::Broker::new(cfg.partitions);
         let out_topic = out_broker.create_topic("cdm.out", cfg.partitions);
+        let metrics = Arc::new(PipelineMetrics::default());
+        if sinks.is_empty() {
+            for name in &cfg.sinks {
+                sinks.push(crate::sink::from_config_name(name, &cfg)?);
+            }
+        }
+        // sink names key consumer groups, metrics rows and `sink(name)`
+        // lookup — duplicates would silently shadow each other
+        let mut seen = std::collections::HashSet::new();
+        for sink in &sinks {
+            if !seen.insert(sink.name().to_string()) {
+                anyhow::bail!(
+                    "duplicate sink backend name {:?}: sink names must be unique",
+                    sink.name()
+                );
+            }
+        }
+        let handles: Vec<SinkHandle> = sinks
+            .into_iter()
+            .map(|sink| {
+                let sink_metrics = metrics.sinks.register(sink.name());
+                SinkHandle::new(
+                    sink,
+                    Consumer::new(out_topic.clone(), 0, 1),
+                    sink_metrics,
+                )
+            })
+            .collect();
+        let source: Box<dyn SourceConnector> = match source {
+            Some(source) => source,
+            None => Box::new(Connector::new("src")),
+        };
         let seed = cfg.seed;
-        Ok(Pipeline {
+        let pipeline = Pipeline {
             cfg,
             landscape: RwLock::new(landscape),
             cdc_topic,
@@ -137,17 +231,47 @@ impl Pipeline {
             cache: Arc::new(DcpmCache::new(StateI(0))),
             store: None,
             state,
-            metrics: Arc::new(PipelineMetrics::default()),
+            metrics,
             dlq: Dlq::default(),
             retry: RetryPolicy::default(),
             notice_policy: NoticePolicy::AutoConfirm,
-            dw: Mutex::new(DwSink::new()),
-            ml: Mutex::new(MlSink::new()),
-            connector: Connector::new("src"),
+            sinks: handles,
+            source,
             rng: Mutex::new(Rng::seed_from(seed ^ 0xE05)),
             next_key: IdGen::new(),
             clock_us: AtomicU64::new(1_600_000_000_000_000),
-        })
+        };
+        match store_dir {
+            Some(dir) => pipeline.with_store(dir),
+            None => Ok(pipeline),
+        }
+    }
+}
+
+impl Pipeline {
+    /// Start wiring a pipeline (see [`PipelineBuilder`]).
+    pub fn builder(cfg: PipelineConfig) -> PipelineBuilder {
+        PipelineBuilder {
+            cfg,
+            landscape: None,
+            source: None,
+            sinks: Vec::new(),
+            store_dir: None,
+        }
+    }
+
+    /// Build a pipeline over a freshly generated landscape with the
+    /// config-driven sink set.
+    pub fn new(cfg: PipelineConfig) -> Result<Pipeline> {
+        Self::builder(cfg).build()
+    }
+
+    /// Build over a pre-built landscape with the config-driven sink set.
+    pub fn from_landscape(
+        cfg: PipelineConfig,
+        landscape: Landscape,
+    ) -> Result<Pipeline> {
+        Self::builder(cfg).landscape(landscape).build()
     }
 
     /// Attach the Postgres-sim store (hybrid §6.2 persistence).
@@ -173,16 +297,15 @@ impl Pipeline {
         self.clock_us.fetch_add(1_000, Ordering::Relaxed)
     }
 
-    /// Resolve one trace op: apply DML → CDC event → topic, or run the
-    /// schema-change workflow.
+    /// Resolve one trace op: apply DML → CDC event → the source connector
+    /// publishes it (keyed, commit order), or run the schema-change
+    /// workflow.
     pub fn resolve_op(&self, op: &TraceOp) -> Result<()> {
         match op {
             TraceOp::Dml { service, kind } => {
                 let ev = self.apply_dml(*service, *kind)?;
                 if let Some(ev) = ev {
-                    let key =
-                        ev.mapping_payload().map(|m| m.key).unwrap_or_default();
-                    self.cdc_topic.produce(key, Arc::new(ev));
+                    self.source.publish(&self.cdc_topic, ev);
                 }
                 Ok(())
             }
@@ -361,28 +484,25 @@ impl Pipeline {
         }
     }
 
-    /// Drain the CDM topic into the DW + ML sinks.
-    pub fn drain_sinks(&self, consumer: &mut Consumer<OutRecord>) -> usize {
-        let mut n = 0;
-        loop {
-            let batch = consumer.poll(256);
-            if batch.is_empty() {
-                break;
-            }
-            let mut dw = self.dw.lock().unwrap();
-            let mut ml = self.ml.lock().unwrap();
-            for (_, rec) in &batch {
-                let (op, msg) = &*rec.value;
-                dw.apply(msg, *op);
-                if *op != CdcOp::Delete {
-                    ml.observe(msg);
-                }
-                n += 1;
-            }
-            drop((dw, ml));
-            consumer.commit();
-        }
-        n
+    /// Drain the CDM topic into every registered sink, each through its
+    /// own consumer group. Returns total records applied across sinks.
+    pub fn drain_sinks(&self) -> usize {
+        self.sinks.iter().map(|handle| handle.drain()).sum()
+    }
+
+    /// The registered sink named `name`, if any.
+    pub fn sink(&self, name: &str) -> Option<&SinkHandle> {
+        self.sinks.iter().find(|handle| handle.name() == name)
+    }
+
+    /// Backend-specific view: run `f` against the concrete type of the
+    /// sink named `name` (None if the name or type doesn't match).
+    pub fn with_sink<T: std::any::Any, R>(
+        &self,
+        name: &str,
+        f: impl FnOnce(&T) -> R,
+    ) -> Option<R> {
+        self.sink(name)?.with(f)
     }
 
     /// Run a whole trace single-instance: resolve ops, consume the CDC
@@ -391,8 +511,6 @@ impl Pipeline {
         let start = Instant::now();
         let mut consumer: Consumer<Arc<CdcEvent>> =
             Consumer::new(self.cdc_topic.clone(), 0, 1);
-        let mut out_consumer: Consumer<OutRecord> =
-            Consumer::new(self.out_topic.clone(), 0, 1);
         for op in ops {
             self.resolve_op(op)?;
             loop {
@@ -405,7 +523,7 @@ impl Pipeline {
                 }
                 consumer.commit();
             }
-            self.drain_sinks(&mut out_consumer);
+            self.drain_sinks();
         }
         Ok(TraceReport {
             events: self.metrics.events_in.get(),
@@ -443,21 +561,25 @@ impl Pipeline {
         super::shard::run_sharded_trace(self, ops, shards)
     }
 
-    /// Fig-7 dashboard snapshot.
+    /// Fig-7 dashboard snapshot (per-sink lag gauges refreshed first).
     pub fn dashboard(&self) -> String {
+        for handle in &self.sinks {
+            handle.lag();
+        }
         self.metrics
             .dashboard(self.cache.approx_bytes(), self.cache.hit_rate())
     }
 
-    /// Debezium connector reference (snapshot/initial-load paths).
-    pub fn connector(&self) -> &Connector {
-        &self.connector
+    /// The source connector (snapshot/initial-load paths).
+    pub fn connector(&self) -> &dyn SourceConnector {
+        &*self.source
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sink::{DwSink, JsonlSink, MlSink};
 
     fn small_pipeline() -> Pipeline {
         Pipeline::new(PipelineConfig::small()).unwrap()
@@ -471,7 +593,76 @@ mod tests {
         assert_eq!(report.events, 1);
         assert!(report.out_messages >= 1);
         assert_eq!(report.dead_letters, 0);
-        assert!(p.dw.lock().unwrap().total_rows() >= 1);
+        assert!(p.with_sink("dw", |dw: &DwSink| dw.total_rows()).unwrap() >= 1);
+        // streaming DML went through the source connector seam
+        assert_eq!(p.connector().snapshot_stats().published, 1);
+    }
+
+    #[test]
+    fn duplicate_sink_names_rejected() {
+        let err = Pipeline::builder(PipelineConfig::small())
+            .sink(JsonlSink::new())
+            .sink(JsonlSink::new())
+            .build();
+        assert!(err.is_err());
+        assert!(err.unwrap_err().to_string().contains("duplicate sink"));
+    }
+
+    #[test]
+    fn config_sinks_register_by_name() {
+        let mut cfg = PipelineConfig::small();
+        cfg.sinks = vec!["dw".into(), "jsonl".into()];
+        let p = Pipeline::new(cfg).unwrap();
+        let names: Vec<&str> =
+            p.sinks.iter().map(|handle| handle.name()).collect();
+        assert_eq!(names, vec!["dw", "jsonl"]);
+        assert!(p.sink("ml").is_none());
+        let mut cfg = PipelineConfig::small();
+        cfg.sinks = vec!["bigquery".into()];
+        assert!(Pipeline::new(cfg).is_err());
+    }
+
+    #[test]
+    fn builder_sinks_override_config_set() {
+        let p = Pipeline::builder(PipelineConfig::small())
+            .sink(JsonlSink::new())
+            .build()
+            .unwrap();
+        assert_eq!(p.sinks.len(), 1);
+        assert!(p.sink("jsonl").is_some());
+        assert!(p.sink("dw").is_none());
+        let ops = vec![TraceOp::Dml { service: 1, kind: DmlKind::Insert }];
+        p.run_trace(&ops).unwrap();
+        let applied =
+            p.with_sink("jsonl", |j: &JsonlSink| j.len()).unwrap() as u64;
+        assert_eq!(applied, p.metrics.messages_out.get());
+    }
+
+    #[test]
+    fn per_sink_groups_have_independent_offsets() {
+        let p = small_pipeline();
+        let ops: Vec<TraceOp> = (0..10)
+            .map(|i| TraceOp::Dml { service: i % 4, kind: DmlKind::Insert })
+            .collect();
+        for op in &ops {
+            p.resolve_op(op).unwrap();
+        }
+        let mut consumer = Consumer::new(p.cdc_topic.clone(), 0, 1);
+        for (_, rec) in consumer.poll(usize::MAX) {
+            p.process_event(&rec.value);
+        }
+        let total = p.out_topic.total_records();
+        assert!(total > 0);
+        // drain only the DW: its group commits, the ML group stays put
+        p.sink("dw").unwrap().drain();
+        assert_eq!(p.sink("dw").unwrap().lag(), 0);
+        assert_eq!(p.sink("ml").unwrap().lag(), total);
+        p.sink("ml").unwrap().drain();
+        assert_eq!(p.sink("ml").unwrap().lag(), 0);
+        assert_eq!(
+            p.with_sink("ml", |ml: &MlSink| ml.observations).unwrap(),
+            total
+        );
     }
 
     #[test]
@@ -505,7 +696,7 @@ mod tests {
         let report = p.run_trace(&ops).unwrap();
         assert_eq!(report.events, 3);
         // row deleted again: DW empty (the delete tombstones by key)
-        assert_eq!(p.dw.lock().unwrap().total_rows(), 0);
+        assert_eq!(p.with_sink("dw", |dw: &DwSink| dw.total_rows()).unwrap(), 0);
     }
 
     #[test]

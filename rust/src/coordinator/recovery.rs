@@ -217,9 +217,10 @@ mod tests {
         assert_eq!(n, 8);
         assert_eq!(p.metrics.events_in.get(), 16);
         // sinks stay consistent
-        let mut out = Consumer::new(p.out_topic.clone(), 0, 1);
-        p.drain_sinks(&mut out);
-        let dw = p.dw.lock().unwrap();
-        assert!(dw.total_duplicates() > 0);
+        p.drain_sinks();
+        let dupes = p
+            .with_sink("dw", |dw: &crate::sink::DwSink| dw.total_duplicates())
+            .unwrap();
+        assert!(dupes > 0);
     }
 }

@@ -74,7 +74,8 @@ fn shard_of(ev: &CdcEvent, shards: usize) -> usize {
 /// Run a whole trace through the sharded lane: this thread resolves ops
 /// (publishing new snapshots mid-stream on schema changes, without
 /// stalling the workers) and dispatches CDC events to the shards; the
-/// sinks are drained at the end exactly like `Pipeline::run_trace`.
+/// per-sink consumer groups are drained at the end exactly like
+/// `Pipeline::run_trace`.
 pub fn run_sharded_trace(
     pipeline: &Pipeline,
     ops: &[TraceOp],
@@ -91,9 +92,7 @@ pub fn run_sharded_trace(
         Ok(())
     });
     driven?;
-    let mut out_consumer: Consumer<OutRecord> =
-        Consumer::new(pipeline.out_topic.clone(), 0, 1);
-    pipeline.drain_sinks(&mut out_consumer);
+    pipeline.drain_sinks();
     Ok(TraceReport {
         events: pipeline.metrics.events_in.get(),
         out_messages: pipeline.metrics.messages_out.get(),

@@ -15,10 +15,14 @@
 //!   decompaction (Alg 4), and automated updates (Alg 5).
 //! - [`mapper`] — the baseline sequential mapper (Alg 1) and the parallel
 //!   dense mapper (Alg 6).
-//! - [`broker`] / [`source`] / [`sink`] — the Kafka / Debezium / DW+ML
-//!   simulation substrates.
-//! - [`coordinator`] — the METL app: pipeline wiring, state-i sync,
-//!   update workflows, error management, horizontal scaling, bulk lane.
+//! - [`broker`] / [`source`] / [`sink`] — the Kafka simulation substrate
+//!   and the pluggable connector API: [`source::SourceConnector`] for
+//!   ingress, [`sink::SinkConnector`] for egress backends (DW, ML, JSONL
+//!   lakehouse, audit mirror — and yours).
+//! - [`coordinator`] — the METL app: pipeline wiring via
+//!   [`coordinator::pipeline::PipelineBuilder`], per-sink consumer
+//!   groups, state-i sync, update workflows, error management,
+//!   horizontal scaling, bulk lane.
 //! - [`runtime`] — PJRT loader executing the AOT-compiled JAX/Pallas bulk
 //!   mapping kernels from `artifacts/`.
 
@@ -44,6 +48,11 @@ pub mod xla_stub;
 pub mod prelude {
     pub use crate::broker::{Broker, Consumer, Topic};
     pub use crate::cdm::{CdmAttrId, CdmTree, CdmType, CdmVersionNo, EntityId};
+    pub use crate::coordinator::pipeline::{Pipeline, PipelineBuilder};
+    pub use crate::sink::{
+        AuditMirrorSink, DwSink, JsonlSink, MlSink, SinkConnector, SinkStats,
+    };
+    pub use crate::source::{Connector, SourceConnector, SourceStats};
     pub use crate::mapper::{baseline::BaselineMapper, parallel::ParallelMapper};
     pub use crate::matrix::{
         dpm::DpmSet, dusb::DusbSet, BlockKey, MappingMatrix,

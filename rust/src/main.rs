@@ -8,8 +8,6 @@
 //!   bulk       run an initial load through the XLA bulk lane
 //!   dashboard  run a short trace and print the fig-7 dashboard
 
-use std::sync::Arc;
-
 use anyhow::{bail, Context, Result};
 
 use metl::config::PipelineConfig;
@@ -26,6 +24,7 @@ use metl::workload;
 fn usage() -> ! {
     eprintln!(
         "usage: metl <command> [--profile small|paper_day|eos_scale] [--config FILE]\n\
+         \x20                   [--sinks dw,ml,jsonl,audit]\n\
          \n\
          commands:\n\
            run        [--instances N]   simulate a day trace end to end\n\
@@ -79,17 +78,22 @@ impl Args {
 }
 
 fn load_config(args: &Args) -> Result<PipelineConfig> {
-    if let Some(path) = args.get("config") {
+    let mut cfg = if let Some(path) = args.get("config") {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("read config {path}"))?;
-        return PipelineConfig::parse(&text);
+        PipelineConfig::parse(&text)?
+    } else {
+        match args.get("profile") {
+            None | Some("small") => PipelineConfig::small(),
+            Some("paper_day") => PipelineConfig::paper_day(),
+            Some("eos_scale") => PipelineConfig::eos_scale(),
+            Some(other) => bail!("unknown profile {other}"),
+        }
+    };
+    if let Some(list) = args.get("sinks") {
+        cfg.sinks = metl::config::parse_string_list(list);
     }
-    Ok(match args.get("profile") {
-        None | Some("small") => PipelineConfig::small(),
-        Some("paper_day") => PipelineConfig::paper_day(),
-        Some("eos_scale") => PipelineConfig::eos_scale(),
-        Some(other) => bail!("unknown profile {other}"),
-    })
+    Ok(cfg)
 }
 
 fn main() -> Result<()> {
@@ -122,7 +126,6 @@ fn cmd_serve(args: &Args, cfg: PipelineConfig) -> Result<()> {
         + std::time::Duration::from_secs(seconds as u64);
     let mut rng = Rng::seed_from(pipeline.cfg.seed ^ 0x5E21E);
     let mut consumer = Consumer::new(pipeline.cdc_topic.clone(), 0, 1);
-    let mut out_consumer = Consumer::new(pipeline.out_topic.clone(), 0, 1);
     let mut last_dash = std::time::Instant::now();
     let mut tick = 0u64;
     println!("serving for {seconds}s (ctrl-c to stop)...");
@@ -157,7 +160,7 @@ fn cmd_serve(args: &Args, cfg: PipelineConfig) -> Result<()> {
             }
             consumer.commit();
         }
-        pipeline.drain_sinks(&mut out_consumer);
+        pipeline.drain_sinks();
         if last_dash.elapsed() >= std::time::Duration::from_secs(1) {
             println!("{}", pipeline.dashboard());
             last_dash = std::time::Instant::now();
@@ -171,6 +174,18 @@ fn cmd_serve(args: &Args, cfg: PipelineConfig) -> Result<()> {
         pipeline.metrics.dmm_updates.get(),
         pipeline.dlq.len()
     );
+    for handle in &pipeline.sinks {
+        let stats = handle.stats();
+        println!(
+            "  sink {:<7} accepted={} duplicates={} dropped={} lag={} flush_errors={}",
+            handle.name(),
+            stats.applied,
+            stats.duplicates,
+            stats.dropped,
+            handle.lag(),
+            handle.metrics().flush_errors.get()
+        );
+    }
     Ok(())
 }
 

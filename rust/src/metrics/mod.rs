@@ -81,6 +81,84 @@ impl ShardCounters {
     }
 }
 
+/// Counters/gauges of one registered sink backend (its consumer group
+/// over the CDM topic): records drained into it, sink-reported
+/// duplicates/drops, current consumer lag.
+#[derive(Debug, Default)]
+pub struct SinkMetrics {
+    /// Records delivered to the sink by its drain loop (at-least-once:
+    /// includes redeliveries; the backend's own accepted count is
+    /// `SinkStats::applied`).
+    pub drained: Counter,
+    /// At-least-once redeliveries the sink deduplicated (last snapshot).
+    pub duplicates: Gauge,
+    /// Records the sink intentionally skipped (last snapshot).
+    pub dropped: Gauge,
+    /// CDM-topic records not yet consumed by this sink's group.
+    pub lag: Gauge,
+    /// Failed flush attempts (buffered backends).
+    pub flush_errors: Counter,
+}
+
+/// One dashboard row of a sink's metrics.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SinkMetricsRow {
+    pub name: String,
+    pub drained: u64,
+    pub duplicates: u64,
+    pub dropped: u64,
+    pub lag: u64,
+    pub flush_errors: u64,
+}
+
+/// Per-sink metrics registry. Sinks register lazily at pipeline build so
+/// [`PipelineMetrics`] stays `Default` while the sink set is a runtime
+/// knob (`PipelineConfig::sinks` / `PipelineBuilder::sink`).
+#[derive(Debug, Default)]
+pub struct SinkMetricsRegistry {
+    sinks: RwLock<Vec<(String, Arc<SinkMetrics>)>>,
+}
+
+impl SinkMetricsRegistry {
+    /// Metrics handle for `name`, registering it on first use. Sinks
+    /// sharing a name share a handle.
+    pub fn register(&self, name: &str) -> Arc<SinkMetrics> {
+        if let Some((_, m)) = self
+            .sinks
+            .read()
+            .unwrap()
+            .iter()
+            .find(|(n, _)| n == name)
+        {
+            return Arc::clone(m);
+        }
+        let mut sinks = self.sinks.write().unwrap();
+        if let Some((_, m)) = sinks.iter().find(|(n, _)| n == name) {
+            return Arc::clone(m);
+        }
+        let m = Arc::new(SinkMetrics::default());
+        sinks.push((name.to_string(), Arc::clone(&m)));
+        m
+    }
+
+    /// Dashboard rows in registration order.
+    pub fn rows(&self) -> Vec<SinkMetricsRow> {
+        self.sinks
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(name, m)| SinkMetricsRow {
+                name: name.clone(),
+                drained: m.drained.get(),
+                duplicates: m.duplicates.get(),
+                dropped: m.dropped.get(),
+                lag: m.lag.get(),
+                flush_errors: m.flush_errors.get(),
+            })
+            .collect()
+    }
+}
+
 /// Thread-safe latency channel (recorder + histogram), sharded to keep
 /// scaled instances off each other's locks (perf: EXPERIMENTS.md §Perf —
 /// a single Mutex here serialized the horizontally scaled pipeline).
@@ -172,6 +250,8 @@ pub struct PipelineMetrics {
     pub dmm_epoch: Gauge,
     /// Per-shard counters of the sharded mapping lane.
     pub shard: ShardCounters,
+    /// Per-sink counters/gauges of the registered egress backends.
+    pub sinks: SinkMetricsRegistry,
     /// Per-event full mapping latency (the §7 headline metric).
     pub map_latency: LatencyChannel,
     /// End-to-end latency source-commit → DW-visible.
@@ -220,6 +300,18 @@ impl PipelineMetrics {
             cache_bytes,
             cache_hit_rate * 100.0
         ));
+        for row in self.sinks.rows() {
+            out.push_str(&format!(
+                "| sink {:<7} drained {:>9} dup {:>5} lag {:>5} |\n",
+                row.name, row.drained, row.duplicates, row.lag
+            ));
+            if row.flush_errors > 0 {
+                out.push_str(&format!(
+                    "|      {:<7} FLUSH ERRORS {:>24} |\n",
+                    row.name, row.flush_errors
+                ));
+            }
+        }
         out.push_str("+------------------------------------------------+\n");
         out.push_str("map latency histogram:\n");
         out.push_str(&self.map_latency.histogram());
@@ -260,6 +352,29 @@ mod tests {
         let h = s.shard(2);
         h.out.add(4);
         assert_eq!(s.shard(2).out.get(), 4);
+    }
+
+    #[test]
+    fn sink_registry_registers_once_and_reports_rows() {
+        let m = PipelineMetrics::default();
+        let dw = m.sinks.register("dw");
+        dw.drained.add(7);
+        dw.lag.set(2);
+        // re-registration returns the same handle
+        m.sinks.register("dw").drained.inc();
+        m.sinks.register("ml").dropped.set(3);
+        m.sinks.register("ml").flush_errors.inc();
+        let rows = m.sinks.rows();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].name, "dw");
+        assert_eq!(rows[0].drained, 8);
+        assert_eq!(rows[0].lag, 2);
+        assert_eq!(rows[1].dropped, 3);
+        assert_eq!(rows[1].flush_errors, 1);
+        let dash = m.dashboard(0, 0.0);
+        assert!(dash.contains("sink dw"));
+        assert!(dash.contains("sink ml"));
+        assert!(dash.contains("FLUSH ERRORS"));
     }
 
     #[test]

@@ -1,0 +1,192 @@
+//! Auditing mirror sink: a lightweight egress-side error-management lane
+//! (paper §3.4 "additional error-management procedures") that shadows the
+//! CDM stream without storing payloads.
+//!
+//! It keeps per-op counters, a bounded ring of the most recent records,
+//! and two audit ledgers:
+//!
+//! - **tombstones** — every delete that went out to the consumers (the
+//!   records a warehouse reload must re-tombstone after an offset reset);
+//! - **anomalies** — records violating the dense-discipline CDM contract
+//!   (§5.5: no nulls, non-empty), which indicate a mapper regression and
+//!   would otherwise only surface as corrupt downstream tables.
+
+use std::any::Any;
+use std::collections::VecDeque;
+
+use super::{SinkConnector, SinkStats};
+use crate::cdm::{CdmVersionNo, EntityId};
+use crate::message::cdc::CdcOp;
+use crate::message::OutMessage;
+
+/// Payload-free fingerprint of one mirrored record.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AuditRecord {
+    pub op: CdcOp,
+    pub key: u64,
+    pub entity: EntityId,
+    pub version: CdmVersionNo,
+    pub ts_us: u64,
+}
+
+/// The auditing mirror (backend name `"audit"`).
+#[derive(Debug)]
+pub struct AuditMirrorSink {
+    capacity: usize,
+    recent: VecDeque<AuditRecord>,
+    per_op: [u64; 4],
+    pub mirrored: u64,
+    pub tombstones: u64,
+    /// Most recent dense-contract violation descriptions (upsert payload
+    /// empty or carrying nulls), bounded by the ring capacity; the
+    /// lifetime total is [`Self::anomaly_count`].
+    pub anomalies: Vec<String>,
+    /// Total dense-contract violations observed.
+    pub anomaly_count: u64,
+}
+
+impl AuditMirrorSink {
+    /// Mirror with a ring of the `capacity` most recent records.
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity: capacity.max(1),
+            recent: VecDeque::new(),
+            per_op: [0; 4],
+            mirrored: 0,
+            tombstones: 0,
+            anomalies: Vec::new(),
+            anomaly_count: 0,
+        }
+    }
+
+    fn op_index(op: CdcOp) -> usize {
+        match op {
+            CdcOp::Create => 0,
+            CdcOp::Update => 1,
+            CdcOp::Delete => 2,
+            CdcOp::SnapshotRead => 3,
+        }
+    }
+
+    /// Mirrored records of one CDC op kind.
+    pub fn count_of(&self, op: CdcOp) -> u64 {
+        self.per_op[Self::op_index(op)]
+    }
+
+    /// Most recent records, oldest first (bounded by the ring capacity).
+    pub fn recent(&self) -> impl Iterator<Item = &AuditRecord> {
+        self.recent.iter()
+    }
+}
+
+impl SinkConnector for AuditMirrorSink {
+    fn name(&self) -> &str {
+        "audit"
+    }
+
+    fn apply(&mut self, msg: &OutMessage, op: CdcOp) {
+        self.mirrored += 1;
+        self.per_op[Self::op_index(op)] += 1;
+        if op == CdcOp::Delete {
+            self.tombstones += 1;
+        } else if !msg.is_dense_valid() {
+            self.anomaly_count += 1;
+            // bounded like `recent`: a misbehaving mapper must not grow
+            // the auditor without bound in a long-running deployment
+            if self.anomalies.len() == self.capacity {
+                self.anomalies.remove(0);
+            }
+            self.anomalies.push(format!(
+                "dense-contract violation: key {} entity {} w{} at ts {}",
+                msg.key, msg.entity.0, msg.version.0, msg.ts_us
+            ));
+        }
+        if self.recent.len() == self.capacity {
+            self.recent.pop_front();
+        }
+        self.recent.push_back(AuditRecord {
+            op,
+            key: msg.key,
+            entity: msg.entity,
+            version: msg.version,
+            ts_us: msg.ts_us,
+        });
+    }
+
+    fn snapshot_stats(&self) -> SinkStats {
+        SinkStats {
+            applied: self.mirrored,
+            duplicates: 0,
+            dropped: self.anomaly_count,
+        }
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cdm::CdmAttrId;
+    use crate::message::StateI;
+    use crate::util::json::Json;
+
+    fn out(key: u64, fields: Vec<(CdmAttrId, Json)>) -> OutMessage {
+        OutMessage {
+            key,
+            entity: EntityId(1),
+            version: CdmVersionNo(1),
+            state: StateI(0),
+            ts_us: key * 10,
+            fields,
+        }
+    }
+
+    #[test]
+    fn mirrors_ops_and_ledgers_tombstones() {
+        let mut audit = AuditMirrorSink::new(8);
+        let dense = vec![(CdmAttrId(0), Json::Num(1.0))];
+        audit.apply(&out(1, dense.clone()), CdcOp::Create);
+        audit.apply(&out(1, dense.clone()), CdcOp::Update);
+        audit.apply(&out(1, dense), CdcOp::Delete);
+        assert_eq!(audit.mirrored, 3);
+        assert_eq!(audit.count_of(CdcOp::Create), 1);
+        assert_eq!(audit.count_of(CdcOp::Delete), 1);
+        assert_eq!(audit.tombstones, 1);
+        assert!(audit.anomalies.is_empty());
+        assert_eq!(audit.snapshot_stats().applied, 3);
+    }
+
+    #[test]
+    fn flags_dense_contract_violations() {
+        let mut audit = AuditMirrorSink::new(8);
+        audit.apply(&out(2, vec![(CdmAttrId(0), Json::Null)]), CdcOp::Create);
+        audit.apply(&out(3, Vec::new()), CdcOp::Update);
+        assert_eq!(audit.anomalies.len(), 2);
+        assert_eq!(audit.anomaly_count, 2);
+        assert_eq!(audit.snapshot_stats().dropped, 2);
+        // the description ledger is bounded, the total is not
+        let mut bounded = AuditMirrorSink::new(2);
+        for k in 0..5 {
+            bounded.apply(&out(k, Vec::new()), CdcOp::Create);
+        }
+        assert_eq!(bounded.anomalies.len(), 2);
+        assert_eq!(bounded.anomaly_count, 5);
+    }
+
+    #[test]
+    fn recent_ring_is_bounded() {
+        let mut audit = AuditMirrorSink::new(2);
+        for k in 0..5 {
+            audit.apply(
+                &out(k, vec![(CdmAttrId(0), Json::Num(k as f64))]),
+                CdcOp::Create,
+            );
+        }
+        let recent: Vec<u64> = audit.recent().map(|r| r.key).collect();
+        assert_eq!(recent, vec![3, 4]);
+        assert_eq!(audit.mirrored, 5);
+    }
+}

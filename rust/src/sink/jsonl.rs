@@ -1,0 +1,258 @@
+//! JSONL file/lakehouse sink: an append-only log of the CDM stream, one
+//! self-contained JSON object per record — the open-table-format shape
+//! (bronze-layer lakehouse ingestion) that downstream batch engines read
+//! without access to METL's in-memory trees.
+//!
+//! Records are buffered in memory (so tests and the dashboard can inspect
+//! them) and appended to the configured file on [`SinkConnector::flush`];
+//! with no path configured the sink is a pure in-memory log. Tombstones
+//! are appended like every other record (`"op": "d"`) — an append log
+//! never loses history, compaction is the lakehouse's job.
+
+use std::any::Any;
+use std::io::Write;
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use super::{SinkConnector, SinkStats};
+use crate::message::cdc::CdcOp;
+use crate::message::OutMessage;
+use crate::util::json::Json;
+
+/// The JSONL lakehouse sink (backend name `"jsonl"`).
+///
+/// In-memory mode (no path) retains every record for inspection. File
+/// mode appends to the path on flush and then drops the written records
+/// from memory, so a long-running pipeline's footprint stays bounded by
+/// one drain round.
+#[derive(Debug, Default)]
+pub struct JsonlSink {
+    path: Option<PathBuf>,
+    /// Buffered append handle, opened lazily on the first flush and kept
+    /// open (drains flush every round — reopening per flush is wasteful).
+    file: Option<std::io::BufWriter<std::fs::File>>,
+    /// (partition key, serialized line) buffered in apply order. File
+    /// mode drains this on flush; in-memory mode retains everything.
+    records: Vec<(u64, String)>,
+    /// Write progress within the current flush attempt (reset when the
+    /// buffer drains on success or drops on failure).
+    flushed: usize,
+    /// Total records ever applied (survives the file-mode buffer drain).
+    applied: u64,
+}
+
+impl JsonlSink {
+    /// In-memory-only log (no file until [`Self::with_path`]).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append flushed records to `path` (created on first flush).
+    pub fn with_path(mut self, path: impl Into<PathBuf>) -> Self {
+        self.path = Some(path.into());
+        self.file = None;
+        self
+    }
+
+    /// Total records applied over the sink's lifetime.
+    pub fn len(&self) -> usize {
+        self.applied as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.applied == 0
+    }
+
+    /// Buffered records as (partition key, JSON line): everything applied
+    /// in in-memory mode, the unflushed tail in file mode.
+    pub fn records(&self) -> &[(u64, String)] {
+        &self.records
+    }
+
+    /// Buffered serialized lines in apply order (see [`Self::records`]).
+    pub fn lines(&self) -> impl Iterator<Item = &str> {
+        self.records.iter().map(|(_, line)| line.as_str())
+    }
+
+    /// Write the unflushed records through the buffered handle, then
+    /// flush the buffer to the OS (one syscall burst per drain round).
+    fn write_tail(&mut self) -> Result<()> {
+        let path = self.path.clone().expect("flush checked file mode");
+        if self.file.is_none() {
+            let file = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(&path)
+                .with_context(|| format!("open jsonl sink {}", path.display()))?;
+            self.file = Some(std::io::BufWriter::new(file));
+        }
+        let file = self.file.as_mut().expect("jsonl file opened above");
+        while self.flushed < self.records.len() {
+            let line = &self.records[self.flushed].1;
+            writeln!(file, "{line}")
+                .with_context(|| format!("append jsonl sink {}", path.display()))?;
+            self.flushed += 1;
+        }
+        file.flush()
+            .with_context(|| format!("flush jsonl sink {}", path.display()))
+    }
+
+    /// One record as a self-contained JSON object. CDM attribute ids are
+    /// written as `"c<id>"` keys — stable without the CDM tree at hand.
+    fn encode(msg: &OutMessage, op: CdcOp) -> String {
+        let mut fields = Json::obj();
+        for (attr, value) in &msg.fields {
+            fields.set(&format!("c{}", attr.0), value.clone());
+        }
+        let mut line = Json::obj();
+        line.set("op", Json::Str(op.code().to_string()));
+        line.set("key", Json::Num(msg.key as f64));
+        line.set("entity", Json::Num(msg.entity.0 as f64));
+        line.set("w", Json::Num(msg.version.0 as f64));
+        line.set("state", Json::Num(msg.state.0 as f64));
+        line.set("ts_us", Json::Num(msg.ts_us as f64));
+        line.set("fields", fields);
+        line.to_string()
+    }
+}
+
+impl SinkConnector for JsonlSink {
+    fn name(&self) -> &str {
+        "jsonl"
+    }
+
+    fn apply(&mut self, msg: &OutMessage, op: CdcOp) {
+        self.records.push((msg.key, Self::encode(msg, op)));
+        self.applied += 1;
+    }
+
+    /// Append the buffered records to the configured file, if any.
+    ///
+    /// On failure the **whole** buffer is dropped and the lifetime count
+    /// rolled back: the egress drain rewinds to its last commit when a
+    /// flush fails, so the entire uncommitted batch is re-applied on the
+    /// next drain — keeping anything buffered would double-append and
+    /// double-count it on retry. Lines that already reached the file
+    /// before the failure reappear as redelivered duplicates — the
+    /// at-least-once artifact of an append log; readers dedupe by
+    /// (key, ts, op) or tolerate duplicates.
+    fn flush(&mut self) -> Result<()> {
+        if self.path.is_none() {
+            self.flushed = self.records.len();
+            return Ok(());
+        }
+        if self.flushed == self.records.len() {
+            return Ok(());
+        }
+        match self.write_tail() {
+            Ok(()) => {
+                // everything is durable: drop the written buffer (file
+                // mode keeps memory bounded by one drain round)
+                self.records.clear();
+                self.flushed = 0;
+                Ok(())
+            }
+            Err(e) => {
+                self.applied -= self.records.len() as u64;
+                self.records.clear();
+                self.flushed = 0;
+                Err(e)
+            }
+        }
+    }
+
+    fn snapshot_stats(&self) -> SinkStats {
+        SinkStats { applied: self.applied, duplicates: 0, dropped: 0 }
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cdm::{CdmAttrId, CdmVersionNo, EntityId};
+    use crate::message::StateI;
+    use crate::util::json;
+
+    fn out(key: u64, value: f64) -> OutMessage {
+        OutMessage {
+            key,
+            entity: EntityId(3),
+            version: CdmVersionNo(2),
+            state: StateI(1),
+            ts_us: 77,
+            fields: vec![(CdmAttrId(5), Json::Num(value))],
+        }
+    }
+
+    #[test]
+    fn lines_are_valid_self_contained_json() {
+        let mut sink = JsonlSink::new();
+        sink.apply(&out(9, 1.5), CdcOp::Create);
+        sink.apply(&out(9, 2.5), CdcOp::Delete);
+        assert_eq!(sink.len(), 2);
+        let lines: Vec<&str> = sink.lines().collect();
+        let first = json::parse(lines[0]).unwrap();
+        assert_eq!(first.get("op").and_then(|v| v.as_str()), Some("c"));
+        assert_eq!(first.get("key").and_then(|v| v.as_f64()), Some(9.0));
+        assert_eq!(first.get("entity").and_then(|v| v.as_f64()), Some(3.0));
+        assert_eq!(
+            first.get("fields").and_then(|f| f.get("c5")).and_then(|v| v.as_f64()),
+            Some(1.5)
+        );
+        // tombstones are appended, never dropped
+        let second = json::parse(lines[1]).unwrap();
+        assert_eq!(second.get("op").and_then(|v| v.as_str()), Some("d"));
+        assert_eq!(sink.snapshot_stats().applied, 2);
+    }
+
+    #[test]
+    fn flush_appends_to_file_once_and_drains_buffer() {
+        let dir = std::env::temp_dir()
+            .join("metl-jsonl-sink")
+            .join(format!("{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cdm.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let mut sink = JsonlSink::new().with_path(&path);
+        sink.apply(&out(1, 1.0), CdcOp::Create);
+        let first_line = sink.lines().next().unwrap().to_string();
+        sink.flush().unwrap();
+        // file mode drains the written buffer but keeps the total count
+        assert!(sink.records().is_empty());
+        assert_eq!(sink.len(), 1);
+        sink.flush().unwrap(); // watermark: no duplicate append
+        sink.apply(&out(2, 2.0), CdcOp::Update);
+        sink.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[0], first_line);
+        assert_eq!(sink.len(), 2);
+        assert_eq!(sink.snapshot_stats().applied, 2);
+    }
+
+    /// At-least-once: a failed flush drops the un-durable tail and rolls
+    /// back the count, so the egress redelivery re-applies cleanly
+    /// instead of double-appending.
+    #[test]
+    fn failed_flush_drops_undurable_tail_for_redelivery() {
+        let dir = std::env::temp_dir()
+            .join("metl-jsonl-sink-err")
+            .join(format!("{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // the "file" is a directory: opening for append fails
+        let mut sink = JsonlSink::new().with_path(&dir);
+        sink.apply(&out(1, 1.0), CdcOp::Create);
+        assert!(sink.flush().is_err());
+        assert_eq!(sink.len(), 0, "rolled back, awaiting redelivery");
+        assert!(sink.records().is_empty());
+        // the redelivered apply counts exactly once
+        sink.apply(&out(1, 1.0), CdcOp::Create);
+        assert_eq!(sink.len(), 1);
+    }
+}

@@ -1,12 +1,113 @@
-//! The two consumers of the CDM stream (paper fig 1): the data warehouse
-//! and the ML platform. Both consume `OutMessage`s from the CDM topics.
+//! Egress connector API: the consumers of the CDM stream (paper fig 1).
+//!
+//! # The `SinkConnector` trait
+//!
+//! The paper's fig-1 pipeline fans the CDM stream out to "an increasing
+//! number of systems" — a data warehouse and ML platform today, more
+//! backends tomorrow. Every backend implements the object-safe
+//! [`SinkConnector`] trait and is registered on the pipeline through
+//! [`PipelineBuilder::sink`](crate::coordinator::pipeline::PipelineBuilder::sink)
+//! (or by name in `PipelineConfig::sinks`, the `runtime.sinks` config key).
+//! The coordinator wraps each registered sink in its **own consumer group**
+//! over the CDM topic ([`crate::coordinator::egress::SinkHandle`]), so each
+//! backend tracks independent offsets/commits/lag and one slow backend
+//! never blocks the others.
+//!
+//! Contract for implementors:
+//!
+//! - [`SinkConnector::apply`] receives every mapped CDM record together
+//!   with the originating CDC op. Delivery is **at-least-once**: a record
+//!   may be re-applied after a crash between poll and commit, so applies
+//!   must be idempotent (upsert/dedup by key + payload, like [`DwSink`]).
+//! - [`SinkConnector::flush`] is called after every drain round; buffered
+//!   backends (files, network batches) persist there.
+//! - [`SinkConnector::snapshot_stats`] is a cheap counters snapshot the
+//!   dashboard polls; it must not block on I/O.
+//! - [`SinkConnector::as_any`] enables backend-specific inspection
+//!   (`Pipeline::with_sink::<DwSink, _>("dw", ...)`) without widening the
+//!   trait.
+//!
+//! Built-in backends: [`DwSink`] (`"dw"`), [`MlSink`] (`"ml"`),
+//! [`JsonlSink`] (`"jsonl"`, file/lakehouse append log) and
+//! [`AuditMirrorSink`] (`"audit"`, tombstone/contract auditing mirror).
+//! [`from_config_name`] is the name → backend factory used for
+//! config-driven selection.
 
+pub mod audit;
+pub mod jsonl;
+
+use std::any::Any;
 use std::collections::HashMap;
 
+use anyhow::{bail, Result};
+
 use crate::cdm::{CdmAttrId, CdmVersionNo, EntityId};
+use crate::config::PipelineConfig;
 use crate::message::cdc::CdcOp;
 use crate::message::OutMessage;
 use crate::util::json::Json;
+
+pub use audit::{AuditMirrorSink, AuditRecord};
+pub use jsonl::JsonlSink;
+
+/// Cheap counters snapshot of one sink backend (dashboard/metrics feed).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SinkStats {
+    /// Records the backend accepted and reflected in its state.
+    pub applied: u64,
+    /// At-least-once redeliveries the backend deduplicated.
+    pub duplicates: u64,
+    /// Records the backend intentionally skipped (e.g. delete tombstones
+    /// at the ML sink, deletes of missing rows at the DW).
+    pub dropped: u64,
+}
+
+/// An egress backend of the CDM stream. Object-safe; see the module docs
+/// for the implementor contract.
+pub trait SinkConnector: Send {
+    /// Stable backend name — used for consumer-group naming, metrics rows
+    /// and `Pipeline::sink(name)` lookup.
+    fn name(&self) -> &str;
+
+    /// Apply one mapped CDM record; `op` is the CDC op of the originating
+    /// event (deletes tombstone, everything else upserts/observes).
+    fn apply(&mut self, msg: &OutMessage, op: CdcOp);
+
+    /// Persist buffered state (called after every drain round). The
+    /// default is a no-op for purely in-memory backends.
+    fn flush(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    /// Counters snapshot; must be cheap and non-blocking.
+    fn snapshot_stats(&self) -> SinkStats;
+
+    /// Downcast support for backend-specific views.
+    fn as_any(&self) -> &dyn Any;
+}
+
+/// Name → backend factory for config-driven sink selection
+/// (`runtime.sinks = ["dw","ml","jsonl"]`).
+pub fn from_config_name(
+    name: &str,
+    cfg: &PipelineConfig,
+) -> Result<Box<dyn SinkConnector>> {
+    Ok(match name {
+        "dw" => Box::new(DwSink::new()),
+        "ml" => Box::new(MlSink::new()),
+        "jsonl" => {
+            let mut sink = JsonlSink::new();
+            if let Some(path) = &cfg.jsonl_path {
+                sink = sink.with_path(path);
+            }
+            Box::new(sink)
+        }
+        "audit" => Box::new(AuditMirrorSink::new(256)),
+        other => bail!(
+            "unknown sink backend {other:?} (known: dw, ml, jsonl, audit)"
+        ),
+    })
+}
 
 /// One DW table per (business entity, CDM version): upsert-by-key rows,
 /// delete tombstones, idempotent under at-least-once redelivery.
@@ -33,40 +134,17 @@ impl DwTable {
     }
 }
 
-/// The data-warehouse sink.
+/// The data-warehouse sink (backend name `"dw"`).
 #[derive(Debug, Default)]
 pub struct DwSink {
     tables: HashMap<(EntityId, CdmVersionNo), DwTable>,
+    /// Deletes of rows the DW never held (no-ops, kept for audits).
+    pub noop_deletes: u64,
 }
 
 impl DwSink {
     pub fn new() -> Self {
         Self::default()
-    }
-
-    /// Apply one mapped message. `op` is the CDC op of the originating
-    /// event: deletes tombstone the row, everything else upserts.
-    pub fn apply(&mut self, msg: &OutMessage, op: CdcOp) {
-        let table = self
-            .tables
-            .entry((msg.entity, msg.version))
-            .or_default();
-        match op {
-            CdcOp::Delete => {
-                if table.rows.remove(&msg.key).is_some() {
-                    table.deletes += 1;
-                }
-            }
-            _ => {
-                let existing = table.rows.get(&msg.key);
-                if existing.is_some_and(|prev| *prev == msg.fields) {
-                    table.duplicates += 1; // at-least-once redelivery
-                } else {
-                    table.rows.insert(msg.key, msg.fields.clone());
-                    table.upserts += 1;
-                }
-            }
-        }
     }
 
     pub fn table(&self, entity: EntityId, w: CdmVersionNo) -> Option<&DwTable> {
@@ -81,8 +159,57 @@ impl DwSink {
         self.tables.values().map(|t| t.upserts).sum()
     }
 
+    pub fn total_deletes(&self) -> u64 {
+        self.tables.values().map(|t| t.deletes).sum()
+    }
+
     pub fn total_duplicates(&self) -> u64 {
         self.tables.values().map(|t| t.duplicates).sum()
+    }
+}
+
+impl SinkConnector for DwSink {
+    fn name(&self) -> &str {
+        "dw"
+    }
+
+    /// Deletes tombstone the row, everything else upserts; identical
+    /// redeliveries are deduplicated (at-least-once absorption).
+    fn apply(&mut self, msg: &OutMessage, op: CdcOp) {
+        let table = self
+            .tables
+            .entry((msg.entity, msg.version))
+            .or_default();
+        match op {
+            CdcOp::Delete => {
+                if table.rows.remove(&msg.key).is_some() {
+                    table.deletes += 1;
+                } else {
+                    self.noop_deletes += 1;
+                }
+            }
+            _ => {
+                let existing = table.rows.get(&msg.key);
+                if existing.is_some_and(|prev| *prev == msg.fields) {
+                    table.duplicates += 1; // at-least-once redelivery
+                } else {
+                    table.rows.insert(msg.key, msg.fields.clone());
+                    table.upserts += 1;
+                }
+            }
+        }
+    }
+
+    fn snapshot_stats(&self) -> SinkStats {
+        SinkStats {
+            applied: self.total_upserts() + self.total_deletes(),
+            duplicates: self.total_duplicates(),
+            dropped: self.noop_deletes,
+        }
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
     }
 }
 
@@ -115,13 +242,16 @@ impl FeatureStat {
     }
 }
 
-/// The ML-platform sink: accumulates numeric features per business entity
-/// (fig 1's "machine learning systems"; the paper's next-best-action
-/// models train on exactly this CDM stream).
+/// The ML-platform sink (backend name `"ml"`): accumulates numeric
+/// features per business entity (fig 1's "machine learning systems"; the
+/// paper's next-best-action models train on exactly this CDM stream).
 #[derive(Debug, Default)]
 pub struct MlSink {
     features: HashMap<(EntityId, CdmAttrId), FeatureStat>,
     pub observations: u64,
+    /// Delete tombstones skipped — a deleted row's before-image is not a
+    /// training observation and must not move feature means/variances.
+    pub deletes_skipped: u64,
 }
 
 impl MlSink {
@@ -129,6 +259,9 @@ impl MlSink {
         Self::default()
     }
 
+    /// Fold one upsert payload into the running feature statistics.
+    /// Callers routing raw CDC traffic must go through
+    /// [`SinkConnector::apply`], which screens out delete tombstones.
     pub fn observe(&mut self, msg: &OutMessage) {
         self.observations += 1;
         for (attr, value) in &msg.fields {
@@ -147,6 +280,35 @@ impl MlSink {
 
     pub fn n_features(&self) -> usize {
         self.features.len()
+    }
+}
+
+impl SinkConnector for MlSink {
+    fn name(&self) -> &str {
+        "ml"
+    }
+
+    /// A delete carries the row's before-image so the DW can tombstone —
+    /// observing it would pollute the feature means/variances, so the ML
+    /// sink skips deletes entirely.
+    fn apply(&mut self, msg: &OutMessage, op: CdcOp) {
+        if op == CdcOp::Delete {
+            self.deletes_skipped += 1;
+            return;
+        }
+        self.observe(msg);
+    }
+
+    fn snapshot_stats(&self) -> SinkStats {
+        SinkStats {
+            applied: self.observations,
+            duplicates: 0,
+            dropped: self.deletes_skipped,
+        }
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
     }
 }
 
@@ -177,6 +339,7 @@ mod tests {
         assert_eq!(t.upserts, 2);
         dw.apply(&out(1, 11.0), CdcOp::Delete);
         assert_eq!(dw.total_rows(), 0);
+        assert_eq!(dw.total_deletes(), 1);
     }
 
     #[test]
@@ -188,6 +351,10 @@ mod tests {
         assert_eq!(t.upserts, 1);
         assert_eq!(t.duplicates, 1);
         assert_eq!(dw.total_rows(), 1);
+        assert_eq!(
+            dw.snapshot_stats(),
+            SinkStats { applied: 1, duplicates: 1, dropped: 0 }
+        );
     }
 
     #[test]
@@ -196,13 +363,15 @@ mod tests {
         dw.apply(&out(9, 1.0), CdcOp::Delete);
         assert_eq!(dw.total_rows(), 0);
         assert_eq!(dw.table(EntityId(0), CdmVersionNo(1)).unwrap().deletes, 0);
+        assert_eq!(dw.noop_deletes, 1);
+        assert_eq!(dw.snapshot_stats().dropped, 1);
     }
 
     #[test]
     fn ml_sink_accumulates_running_stats() {
         let mut ml = MlSink::new();
         for v in [1.0, 2.0, 3.0, 4.0] {
-            ml.observe(&out(1, v));
+            ml.apply(&out(1, v), CdcOp::Create);
         }
         let f = ml.feature(EntityId(0), CdmAttrId(0)).unwrap();
         assert_eq!(f.count, 4);
@@ -212,13 +381,47 @@ mod tests {
         assert_eq!(ml.n_features(), 1);
     }
 
+    /// Regression: a delete tombstone carries the row's before-image; the
+    /// ML sink must skip it, not fold it into the running moments.
+    #[test]
+    fn ml_sink_skips_delete_tombstones() {
+        let mut ml = MlSink::new();
+        for v in [1.0, 3.0] {
+            ml.apply(&out(1, v), CdcOp::Create);
+        }
+        let before = ml.feature(EntityId(0), CdmAttrId(0)).unwrap().clone();
+        // the tombstone replays the last value — observing it would drag
+        // the mean toward 3.0 and shrink the variance
+        ml.apply(&out(1, 3.0), CdcOp::Delete);
+        let after = ml.feature(EntityId(0), CdmAttrId(0)).unwrap();
+        assert_eq!(after.count, before.count);
+        assert!((after.mean() - before.mean()).abs() < 1e-12);
+        assert!((after.variance() - before.variance()).abs() < 1e-12);
+        assert_eq!(ml.observations, 2);
+        assert_eq!(ml.deletes_skipped, 1);
+        assert_eq!(
+            ml.snapshot_stats(),
+            SinkStats { applied: 2, duplicates: 0, dropped: 1 }
+        );
+    }
+
     #[test]
     fn non_numeric_fields_ignored_by_ml() {
         let mut ml = MlSink::new();
         let mut m = out(1, 0.0);
         m.fields = vec![(CdmAttrId(1), Json::Str("EUR".into()))];
-        ml.observe(&m);
+        ml.apply(&m, CdcOp::Create);
         assert_eq!(ml.n_features(), 0);
         assert_eq!(ml.observations, 1);
+    }
+
+    #[test]
+    fn factory_builds_known_backends_and_rejects_unknown() {
+        let cfg = PipelineConfig::small();
+        for name in ["dw", "ml", "jsonl", "audit"] {
+            let sink = from_config_name(name, &cfg).unwrap();
+            assert_eq!(sink.name(), name);
+        }
+        assert!(from_config_name("bigquery", &cfg).is_err());
     }
 }

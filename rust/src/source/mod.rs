@@ -1,4 +1,5 @@
-//! Microservice database + Debezium-sim connector (paper §3, pillar 1).
+//! Microservice database + Debezium-sim connector (paper §3, pillar 1),
+//! and the ingress half of the pluggable connector API.
 //!
 //! Substitution for the paper's 80-microservice FX system: each simulated
 //! service owns a database with tables whose *live schema* tracks a
@@ -6,8 +7,22 @@
 //! events shaped like fig 2 (before/after images); the connector publishes
 //! them to the broker in commit order and supports snapshot mode for
 //! initial loads.
+//!
+//! # The `SourceConnector` trait
+//!
+//! [`SourceConnector`] is the ingress mirror of
+//! [`crate::sink::SinkConnector`]: an object-safe seam the coordinator
+//! holds instead of a concrete connector type, so a Debezium-sim, a file
+//! replayer, or a real CDC client plug into the pipeline through
+//! [`PipelineBuilder::source`](crate::coordinator::pipeline::PipelineBuilder::source)
+//! without touching the coordinator core. Implementors publish CDC events
+//! in commit order (per-key order is the contract the whole mapping lane
+//! rests on), serve table snapshots for initial loads (§3.4/§6.4), and
+//! expose cheap counters via [`SourceConnector::snapshot_stats`].
+//! [`Connector`] is the built-in Debezium-sim implementation.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::broker::Topic;
 use crate::message::cdc::{CdcEvent, CdcOp, CdcSource};
@@ -182,34 +197,81 @@ impl MicroserviceDb {
     }
 }
 
+/// Cheap counters snapshot of one source connector.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SourceStats {
+    /// CDC events published to source topics.
+    pub published: u64,
+    /// Rows emitted through snapshot reads (initial loads).
+    pub snapshot_rows: u64,
+}
+
+/// An ingress backend: extracts CDC events from source systems and serves
+/// snapshot reads for initial loads. Object-safe; see the module docs.
+pub trait SourceConnector: Send + Sync {
+    /// Stable connector name (topic prefix for the Debezium-sim).
+    fn name(&self) -> &str;
+
+    /// Source-topic name for one table (Debezium `prefix.db.table`).
+    fn topic_for(&self, db: &MicroserviceDb, table: &Table) -> String;
+
+    /// Publish one event to its topic, keyed by row key (per-key order is
+    /// the contract: same key → same partition → commit order preserved).
+    fn publish(&self, topic: &Topic<std::sync::Arc<CdcEvent>>, ev: CdcEvent);
+
+    /// Snapshot an entire table as SnapshotRead events (Debezium op "r")
+    /// — the initial-load path (§3.4, §6.4).
+    fn snapshot(
+        &self,
+        tree: &SchemaTree,
+        db: &MicroserviceDb,
+        table_idx: usize,
+        state: StateI,
+        ts_us: u64,
+    ) -> Vec<CdcEvent>;
+
+    /// Counters snapshot; must be cheap and non-blocking.
+    fn snapshot_stats(&self) -> SourceStats;
+}
+
 /// Debezium-sim connector: publishes CDC events from a database to the
 /// broker's source topics in near real-time, and supports snapshot reads
 /// for initial loads.
 pub struct Connector {
     pub prefix: String,
+    published: AtomicU64,
+    snapshot_rows: AtomicU64,
 }
 
 impl Connector {
     pub fn new(prefix: &str) -> Self {
-        Self { prefix: prefix.to_string() }
+        Self {
+            prefix: prefix.to_string(),
+            published: AtomicU64::new(0),
+            snapshot_rows: AtomicU64::new(0),
+        }
+    }
+}
+
+impl SourceConnector for Connector {
+    fn name(&self) -> &str {
+        &self.prefix
     }
 
-    pub fn topic_for(&self, db: &MicroserviceDb, table: &Table) -> String {
+    fn topic_for(&self, db: &MicroserviceDb, table: &Table) -> String {
         format!("{}.{}.{}", self.prefix, db.db_name, table.name)
     }
 
-    /// Publish one event to its topic, keyed by row key.
-    pub fn publish(&self, topic: &Topic<std::sync::Arc<CdcEvent>>, ev: CdcEvent) {
+    fn publish(&self, topic: &Topic<std::sync::Arc<CdcEvent>>, ev: CdcEvent) {
         let key = ev
             .mapping_payload()
             .map(|m| m.key)
             .unwrap_or_default();
         topic.produce(key, std::sync::Arc::new(ev));
+        self.published.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Snapshot an entire table as SnapshotRead events (Debezium op "r") —
-    /// the initial-load path (§3.4, §6.4).
-    pub fn snapshot(
+    fn snapshot(
         &self,
         tree: &SchemaTree,
         db: &MicroserviceDb,
@@ -218,7 +280,7 @@ impl Connector {
         ts_us: u64,
     ) -> Vec<CdcEvent> {
         let table = &db.tables[table_idx];
-        table
+        let events: Vec<CdcEvent> = table
             .rows
             .values()
             .map(|row| CdcEvent {
@@ -232,7 +294,17 @@ impl Connector {
                 },
                 ts_us,
             })
-            .collect()
+            .collect();
+        self.snapshot_rows
+            .fetch_add(events.len() as u64, Ordering::Relaxed);
+        events
+    }
+
+    fn snapshot_stats(&self) -> SourceStats {
+        SourceStats {
+            published: self.published.load(Ordering::Relaxed),
+            snapshot_rows: self.snapshot_rows.load(Ordering::Relaxed),
+        }
     }
 }
 
@@ -374,6 +446,11 @@ mod tests {
         let snap = conn.snapshot(&tree, &db, t, StateI(0), 99);
         assert_eq!(snap.len(), 5);
         assert!(snap.iter().all(|e| e.op == CdcOp::SnapshotRead && e.is_well_formed()));
+        assert_eq!(
+            conn.snapshot_stats(),
+            SourceStats { published: 0, snapshot_rows: 5 }
+        );
+        assert_eq!(conn.topic_for(&db, &db.tables[t]), "src.payments.incoming");
     }
 
     #[test]

@@ -6,6 +6,7 @@ use std::sync::Arc;
 
 use metl::broker::Consumer;
 use metl::config::PipelineConfig;
+use metl::sink::{DwSink, MlSink};
 use metl::coordinator::pipeline::Pipeline;
 use metl::coordinator::scaler;
 use metl::message::codec;
@@ -32,8 +33,8 @@ fn full_day_trace_paper_shape() {
     assert_eq!(report.dead_letters, 0);
     assert_eq!(p.state.current(), StateI(3));
     // sinks saw data
-    assert!(p.dw.lock().unwrap().total_rows() > 0);
-    assert!(p.ml.lock().unwrap().observations > 0);
+    assert!(p.with_sink("dw", |dw: &DwSink| dw.total_rows()).unwrap() > 0);
+    assert!(p.with_sink("ml", |ml: &MlSink| ml.observations).unwrap() > 0);
     // the mapping latency channel recorded every transformation
     assert_eq!(p.metrics.map_latency.count(), 400);
 }
@@ -59,18 +60,25 @@ fn at_least_once_redelivery_is_idempotent() {
         }
         consumer.commit();
     }
-    // sink consumer crashes mid-way: polls, applies, never commits
-    let mut out_consumer = Consumer::new(p.out_topic.clone(), 0, 1);
-    let first = p.drain_sinks(&mut out_consumer);
+    // the DW's own consumer group crashes after applying: offsets reset,
+    // everything re-delivers, idempotent upserts absorb it — while the ML
+    // group's offsets are untouched by the DW replay
+    let dw_handle = p.sink("dw").unwrap();
+    let first = dw_handle.drain();
     assert!(first > 0);
-    let rows_after_first = p.dw.lock().unwrap().total_rows();
-    // "restart": rewind to committed (nothing), re-deliver everything
-    out_consumer.reset_to_beginning();
-    let second = p.drain_sinks(&mut out_consumer);
+    let rows_after_first =
+        p.with_sink("dw", |dw: &DwSink| dw.total_rows()).unwrap();
+    // "restart": reset this group to the beginning, re-deliver everything
+    dw_handle.reset_to_beginning();
+    let second = dw_handle.drain();
     assert_eq!(first, second, "full redelivery");
-    let dw = p.dw.lock().unwrap();
-    assert_eq!(dw.total_rows(), rows_after_first, "idempotent upserts");
-    assert_eq!(dw.total_duplicates() as usize, second, "all re-applies deduped");
+    let (rows, dupes) = p
+        .with_sink("dw", |dw: &DwSink| (dw.total_rows(), dw.total_duplicates()))
+        .unwrap();
+    assert_eq!(rows, rows_after_first, "idempotent upserts");
+    assert_eq!(dupes as usize, second, "all re-applies deduped");
+    // the ML group still has the full topic ahead of it
+    assert_eq!(p.sink("ml").unwrap().lag(), p.out_topic.total_records());
 }
 
 /// Horizontal scaling must be semantically transparent: same outputs
@@ -93,18 +101,17 @@ fn scaled_processing_equivalent_to_single() {
     let p4 = build();
     scaler::run_scaled(&p1, 1);
     scaler::run_scaled(&p4, 4);
-    let mut c1 = Consumer::new(p1.out_topic.clone(), 0, 1);
-    let mut c4 = Consumer::new(p4.out_topic.clone(), 0, 1);
-    p1.drain_sinks(&mut c1);
-    p4.drain_sinks(&mut c4);
+    p1.drain_sinks();
+    p4.drain_sinks();
     assert_eq!(
         p1.metrics.messages_out.get(),
         p4.metrics.messages_out.get()
     );
-    let dw1 = p1.dw.lock().unwrap();
-    let dw4 = p4.dw.lock().unwrap();
-    assert_eq!(dw1.total_rows(), dw4.total_rows());
-    assert_eq!(dw1.total_upserts(), dw4.total_upserts());
+    let dw_state = |p: &Pipeline| {
+        p.with_sink("dw", |dw: &DwSink| (dw.total_rows(), dw.total_upserts()))
+            .unwrap()
+    };
+    assert_eq!(dw_state(&p1), dw_state(&p4));
 }
 
 /// §3.4: events extracted under state i are still mappable after the DMM

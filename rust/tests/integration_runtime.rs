@@ -7,7 +7,6 @@
 
 use std::path::PathBuf;
 
-use metl::broker::Consumer;
 use metl::config::PipelineConfig;
 use metl::coordinator::batcher::InitialLoader;
 use metl::coordinator::pipeline::Pipeline;
@@ -108,14 +107,15 @@ fn bulk_lane_equivalent_to_alg6_lane() {
             assert_eq!(rb.rows, rf.rows);
             assert_eq!(rb.out_messages, rf.out_messages, "trial {trial}");
         }
-        let mut cb = Consumer::new(p_bulk.out_topic.clone(), 0, 1);
-        let mut cf = Consumer::new(p_fall.out_topic.clone(), 0, 1);
-        p_bulk.drain_sinks(&mut cb);
-        p_fall.drain_sinks(&mut cf);
-        let dwb = p_bulk.dw.lock().unwrap();
-        let dwf = p_fall.dw.lock().unwrap();
-        assert_eq!(dwb.total_rows(), dwf.total_rows(), "trial {trial}");
-        assert_eq!(dwb.total_upserts(), dwf.total_upserts());
+        p_bulk.drain_sinks();
+        p_fall.drain_sinks();
+        let dw_state = |p: &Pipeline| {
+            p.with_sink("dw", |dw: &metl::sink::DwSink| {
+                (dw.total_rows(), dw.total_upserts())
+            })
+            .unwrap()
+        };
+        assert_eq!(dw_state(&p_bulk), dw_state(&p_fall), "trial {trial}");
     }
 }
 
