@@ -1,6 +1,7 @@
 //! Schema evolution walkthrough: the paper's §3.3 semi-automated workflow
 //! and the figure-6 worked update example, end to end — registry rules,
-//! the four Alg-5 trigger cases, notices, and the inspection views.
+//! the four Alg-5 trigger cases, notices, the inspection views, and the
+//! online evolution lane applying a live change to a running pipeline.
 //!
 //! Run with: `cargo run --release --example schema_evolution`
 
@@ -111,6 +112,32 @@ fn main() -> anyhow::Result<()> {
         before,
         dpm.n_elements()
     );
+
+    // ---- 5. The online evolution lane on a live pipeline ----------------
+    println!("\n== online evolution lane (live pipeline) ==");
+    let p = Pipeline::new(metl::config::PipelineConfig::small())?;
+    let schema = p.landscape.read().unwrap().dbs[0].tables[0].schema;
+    let mut fields = {
+        let land = p.landscape.read().unwrap();
+        let latest = land.tree.latest_version(schema).unwrap();
+        land.tree.field_list(schema, latest).unwrap()
+    };
+    fields.push(("observed_on_the_wire".into(), ExtractType::Varchar, true));
+    // a Debezium-style DDL event arrives on the schema-change source...
+    p.evolution
+        .source()
+        .publish_change(SchemaChangeEvent::add_version(schema, fields, 0));
+    // ...and the lane validates + applies it: one epoch swap, targeted
+    // cache eviction, zero interruption of the mapping lanes
+    let outcomes = p.evolution.pump(&p);
+    println!(
+        "applied {} live change(s): epoch {}, state {}, update latency n={}",
+        outcomes.iter().filter(|o| o.is_applied()).count(),
+        p.metrics.dmm_epoch.get(),
+        p.state.current().0,
+        p.metrics.update_latency.count()
+    );
+
     println!("\nschema_evolution OK");
     Ok(())
 }

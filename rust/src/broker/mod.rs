@@ -7,6 +7,12 @@
 //! reset offsets for a new initial load (§3.4), and at-least-once delivery
 //! (§5.5: "the ETL pipeline with the DMM system ensures an 'at least once'
 //! approach").
+//!
+//! Two topics matter in the wired pipeline (`ARCHITECTURE.md`): the CDC
+//! ingress topic consumed partition-parallel by the mapping lanes, and
+//! the CDM egress topic where every registered sink runs its **own**
+//! [`Consumer`] group ([`crate::coordinator::egress::SinkHandle`]) so a
+//! stalled backend never blocks the others.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, RwLock};

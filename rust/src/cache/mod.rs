@@ -3,6 +3,16 @@
 //! them accessible in O(1). We evict the cache every time a business
 //! entity, schema or mapping is updated" — the eviction that produces the
 //! §7 latency spikes.
+//!
+//! The spike is avoidable: an Alg-5 update touches a handful of mapping
+//! columns while the rest of the `ᵢ𝔇𝔓𝔐` blocks are shared `Arc`s with the
+//! previous snapshot, so every unaffected cached column is still correct.
+//! [`DcpmCache::advance`] therefore supports **targeted eviction**
+//! ([`EvictMode::Targeted`], the default): given the changed-column list
+//! from the epoch journal ([`crate::coordinator::EpochDmm::affected_between`]),
+//! only those columns drop and the warm remainder survives the state
+//! transition. [`EvictMode::Full`] restores the paper's evict-everything
+//! behaviour (the `--evict full` fallback).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -14,33 +24,82 @@ use crate::schema::{SchemaId, VersionNo};
 
 type Column = Arc<Vec<Arc<DpmBlock>>>;
 
+/// Eviction policy applied on a state transition with a known diff
+/// (`runtime.evict` config key / `--evict` CLI flag).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EvictMode {
+    /// Drop only the mapping columns the update changed (default).
+    #[default]
+    Targeted,
+    /// Drop every cached column on every update — the paper's §6.2
+    /// behaviour, kept as a fallback and as the bench baseline.
+    Full,
+}
+
+impl std::str::FromStr for EvictMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "targeted" => Ok(EvictMode::Targeted),
+            "full" => Ok(EvictMode::Full),
+            other => {
+                Err(format!("unknown evict mode {other:?} (targeted|full)"))
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for EvictMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EvictMode::Targeted => write!(f, "targeted"),
+            EvictMode::Full => write!(f, "full"),
+        }
+    }
+}
+
 /// Cache statistics surfaced on the dashboard (fig 7 records "the storage
 /// requirements of the Caffeine cache").
 #[derive(Debug, Default)]
 pub struct CacheStats {
     pub hits: AtomicU64,
     pub misses: AtomicU64,
+    /// Full evictions (everything dropped).
     pub evictions: AtomicU64,
+    /// Targeted evictions (only affected columns dropped).
+    pub targeted_evictions: AtomicU64,
 }
 
 /// The `ᵢ𝒟𝒞𝒫𝓜` column cache.
 pub struct DcpmCache {
     state: RwLock<StateI>,
     columns: RwLock<HashMap<(SchemaId, VersionNo), Column>>,
+    mode: EvictMode,
     pub stats: CacheStats,
 }
 
 impl DcpmCache {
     pub fn new(state: StateI) -> Self {
+        Self::with_mode(state, EvictMode::default())
+    }
+
+    /// Construct with an explicit eviction mode (`PipelineConfig::evict`).
+    pub fn with_mode(state: StateI, mode: EvictMode) -> Self {
         Self {
             state: RwLock::new(state),
             columns: RwLock::new(HashMap::new()),
+            mode,
             stats: CacheStats::default(),
         }
     }
 
     pub fn state(&self) -> StateI {
         *self.state.read().unwrap()
+    }
+
+    pub fn mode(&self) -> EvictMode {
+        self.mode
     }
 
     /// O(1) column lookup; populates from `dpm` on miss. A `dpm` whose
@@ -78,6 +137,35 @@ impl DcpmCache {
             self.stats.evictions.fetch_add(1, Ordering::Relaxed);
         }
         columns.clear();
+        *self.state.write().unwrap() = new_state;
+    }
+
+    /// Advance to `new_state` after an epoch swap. With a known
+    /// changed-column list under [`EvictMode::Targeted`], only those
+    /// columns drop and every other warm column survives; with an unknown
+    /// diff (`None`) or under [`EvictMode::Full`] this degrades to
+    /// [`DcpmCache::evict_all`] — always safe, never stale.
+    ///
+    /// The caller must not run this concurrently with lookups against the
+    /// *previous* snapshot on the same cache (the pipeline upholds this:
+    /// the single lane is sequential and every shard worker owns its
+    /// cache and refreshes it itself).
+    pub fn advance(
+        &self,
+        new_state: StateI,
+        affected: Option<&[(SchemaId, VersionNo)]>,
+    ) {
+        let Some(keys) = affected else {
+            return self.evict_all(new_state);
+        };
+        if self.mode == EvictMode::Full {
+            return self.evict_all(new_state);
+        }
+        let mut columns = self.columns.write().unwrap();
+        for key in keys {
+            columns.remove(key);
+        }
+        self.stats.targeted_evictions.fetch_add(1, Ordering::Relaxed);
         *self.state.write().unwrap() = new_state;
     }
 
@@ -178,5 +266,68 @@ mod tests {
         assert!(col.is_empty());
         cache.column(&dpm, s1, VersionNo(99));
         assert_eq!(cache.stats.hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn targeted_advance_drops_only_affected_columns() {
+        let (mut dpm, cache, s1) = setup();
+        let warm = cache.column(&dpm, s1, VersionNo(2));
+        cache.column(&dpm, s1, VersionNo(1));
+        assert_eq!(cache.len(), 2);
+        // the update touched only (s1, v1)
+        cache.advance(StateI(1), Some(&[(s1, VersionNo(1))]));
+        assert_eq!(cache.state(), StateI(1));
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.stats.targeted_evictions.load(Ordering::Relaxed), 1);
+        assert_eq!(cache.stats.evictions.load(Ordering::Relaxed), 0);
+        // the unaffected column survives warm across the transition:
+        // same Arc, served as a hit under the new state
+        dpm.state = StateI(1);
+        let hits_before = cache.stats.hits.load(Ordering::Relaxed);
+        let still_warm = cache.column(&dpm, s1, VersionNo(2));
+        assert!(Arc::ptr_eq(&warm, &still_warm));
+        assert_eq!(cache.stats.hits.load(Ordering::Relaxed), hits_before + 1);
+        // the affected column misses and rebuilds from the new snapshot
+        let misses_before = cache.stats.misses.load(Ordering::Relaxed);
+        cache.column(&dpm, s1, VersionNo(1));
+        assert_eq!(
+            cache.stats.misses.load(Ordering::Relaxed),
+            misses_before + 1
+        );
+    }
+
+    #[test]
+    fn advance_without_diff_falls_back_to_full_eviction() {
+        let (dpm, cache, s1) = setup();
+        cache.column(&dpm, s1, VersionNo(1));
+        cache.column(&dpm, s1, VersionNo(2));
+        cache.advance(StateI(1), None);
+        assert!(cache.is_empty());
+        assert_eq!(cache.state(), StateI(1));
+        assert_eq!(cache.stats.evictions.load(Ordering::Relaxed), 1);
+        assert_eq!(cache.stats.targeted_evictions.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn full_mode_ignores_targeted_diffs() {
+        let (dpm, _, s1) = setup();
+        let cache = DcpmCache::with_mode(StateI(0), EvictMode::Full);
+        assert_eq!(cache.mode(), EvictMode::Full);
+        cache.column(&dpm, s1, VersionNo(1));
+        cache.column(&dpm, s1, VersionNo(2));
+        cache.advance(StateI(1), Some(&[(s1, VersionNo(1))]));
+        // --evict=full: everything drops even though the diff was known
+        assert!(cache.is_empty());
+        assert_eq!(cache.stats.evictions.load(Ordering::Relaxed), 1);
+        assert_eq!(cache.stats.targeted_evictions.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn evict_mode_parses() {
+        assert_eq!("targeted".parse::<EvictMode>(), Ok(EvictMode::Targeted));
+        assert_eq!("full".parse::<EvictMode>(), Ok(EvictMode::Full));
+        assert!("caffeine".parse::<EvictMode>().is_err());
+        assert_eq!(EvictMode::Targeted.to_string(), "targeted");
+        assert_eq!(EvictMode::Full.to_string(), "full");
     }
 }

@@ -6,6 +6,9 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
 
+use crate::cache::EvictMode;
+use crate::schema::Compatibility;
+
 /// Full pipeline configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PipelineConfig {
@@ -46,6 +49,17 @@ pub struct PipelineConfig {
     pub sinks: Vec<String>,
     /// Append path for the JSONL lakehouse sink (None = in-memory log).
     pub jsonl_path: Option<String>,
+    /// Compatibility mode the online evolution lane validates schema
+    /// changes against (`runtime.evolution.compatibility =
+    /// "backward"|"forward"|"full"|"none"`; §3.3).
+    pub evolution_compatibility: Compatibility,
+    /// Enforce the §3.3 "one single changed attribute" rule per accepted
+    /// change (`runtime.evolution.single_change`).
+    pub evolution_single_change: bool,
+    /// Cache-eviction policy on DMM updates (`runtime.evict` / `--evict`):
+    /// targeted (default — only affected columns drop) or full (the
+    /// paper's §6.2 evict-everything behaviour).
+    pub evict: EvictMode,
 }
 
 impl Default for PipelineConfig {
@@ -75,6 +89,9 @@ impl PipelineConfig {
             artifacts_dir: None,
             sinks: default_sinks(),
             jsonl_path: None,
+            evolution_compatibility: Compatibility::Full,
+            evolution_single_change: true,
+            evict: EvictMode::Targeted,
         }
     }
 
@@ -99,6 +116,9 @@ impl PipelineConfig {
             artifacts_dir: Some("artifacts".into()),
             sinks: default_sinks(),
             jsonl_path: None,
+            evolution_compatibility: Compatibility::Full,
+            evolution_single_change: true,
+            evict: EvictMode::Targeted,
         }
     }
 
@@ -123,6 +143,9 @@ impl PipelineConfig {
             artifacts_dir: Some("artifacts".into()),
             sinks: default_sinks(),
             jsonl_path: None,
+            evolution_compatibility: Compatibility::Full,
+            evolution_single_change: true,
+            evict: EvictMode::Targeted,
         }
     }
 
@@ -169,6 +192,18 @@ impl PipelineConfig {
         if let Some(v) = kv.get("runtime.jsonl_path") {
             cfg.jsonl_path =
                 if v.is_empty() { None } else { Some(v.clone()) };
+        }
+        if let Some(v) = kv.get("runtime.evolution.compatibility") {
+            cfg.evolution_compatibility =
+                v.parse::<Compatibility>().map_err(|e| anyhow::anyhow!(e))?;
+        }
+        num!(
+            "runtime.evolution.single_change",
+            cfg.evolution_single_change
+        );
+        if let Some(v) = kv.get("runtime.evict") {
+            cfg.evict =
+                v.parse::<EvictMode>().map_err(|e| anyhow::anyhow!(e))?;
         }
         Ok(cfg)
     }
@@ -281,6 +316,32 @@ mod tests {
         // an explicitly empty list disables all egress
         let cfg = PipelineConfig::parse("[runtime]\nsinks = []").unwrap();
         assert!(cfg.sinks.is_empty());
+    }
+
+    #[test]
+    fn parses_evolution_knobs() {
+        let text = r#"
+            [runtime]
+            evict = "full"
+            [runtime.evolution]
+            compatibility = "backward"
+            single_change = false
+        "#;
+        let cfg = PipelineConfig::parse(text).unwrap();
+        assert_eq!(cfg.evict, EvictMode::Full);
+        assert_eq!(cfg.evolution_compatibility, Compatibility::Backward);
+        assert!(!cfg.evolution_single_change);
+        // defaults: targeted eviction under full compatibility
+        let cfg = PipelineConfig::parse("").unwrap();
+        assert_eq!(cfg.evict, EvictMode::Targeted);
+        assert_eq!(cfg.evolution_compatibility, Compatibility::Full);
+        assert!(cfg.evolution_single_change);
+        // bad values are rejected
+        assert!(PipelineConfig::parse("[runtime]\nevict = caffeine").is_err());
+        assert!(PipelineConfig::parse(
+            "[runtime.evolution]\ncompatibility = sideways"
+        )
+        .is_err());
     }
 
     #[test]

@@ -1,0 +1,531 @@
+//! The **online schema-evolution lane** (paper §3.3/§5.4, the "automation
+//! of updates of the matrix in response to changes in the extraction
+//! sources" of §3.5) — the runtime path from a schema change observed on
+//! the wire to a new DMM epoch, while mapping continues.
+//!
+//! Two signals feed the lane:
+//!
+//! 1. **Control stream**: Debezium-style DDL/registry events arrive on a
+//!    [`SchemaChangeSource`]; [`EvolutionController::pump`] drains and
+//!    applies them between mapping batches.
+//! 2. **In-band detection**: a CDC record whose `(SchemaId, VersionNo)`
+//!    has no mapping column means the source migrated before the registry
+//!    event reached METL. [`EvolutionController::on_unknown_version`]
+//!    patches the DMM from the registered tree version (Alg-5 case 3) so
+//!    the record maps instead of dead-lettering.
+//!
+//! Per accepted change the lane: validates against the registry's
+//! [`Compatibility`] rules (incompatible changes are **rejected without
+//! touching the epoch** — the `rejected_changes` counter records them),
+//! registers the version and migrates the bound tables, builds
+//! `ᵢ₊₁𝔇𝔓𝔐` off to the side ([`prepare_update`]), publishes it with one
+//! epoch swap ([`EpochDmm::publish_targeted`]) and evicts **only the
+//! affected cache columns** ([`crate::cache::DcpmCache::advance`]) — the
+//! targeted default that removes the §7 full-evict latency spike
+//! (`--evict full` restores the old behaviour). Update latency and the
+//! pending-event backlog are surfaced as `update_latency` / `epoch_lag`
+//! metrics.
+//!
+//! [`EpochDmm::publish_targeted`]: super::state::EpochDmm::publish_targeted
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::pipeline::Pipeline;
+use super::workflow::WorkflowOutcome;
+use crate::matrix::dusb::DusbSet;
+use crate::matrix::update::{prepare_update, ChangeCase, UpdateReport};
+use crate::message::StateI;
+use crate::schema::evolution::{self, Compatibility};
+use crate::schema::{ExtractType, SchemaId, VersionNo};
+use crate::source::{SchemaChange, SchemaChangeEvent, SchemaChangeSource};
+use crate::workload::Landscape;
+
+/// Result of applying one schema-change event.
+#[derive(Debug)]
+pub enum ChangeOutcome {
+    /// The change passed validation and is live: the DMM swapped to
+    /// `epoch`, only the listed columns were evicted.
+    Applied {
+        schema: SchemaId,
+        v: VersionNo,
+        epoch: u64,
+        report: UpdateReport,
+    },
+    /// The change violated the compatibility rules (or referenced an
+    /// unknown/live version) and was dropped — state and epoch untouched.
+    Rejected { schema: SchemaId, reason: String },
+    /// The change reached the live DMM (the epoch may already have
+    /// swapped) but persistence/audit failed — an infrastructure fault
+    /// the operator must look at, not a validation rejection.
+    Faulted { schema: SchemaId, error: String },
+}
+
+impl ChangeOutcome {
+    pub fn is_applied(&self) -> bool {
+        matches!(self, ChangeOutcome::Applied { .. })
+    }
+}
+
+/// The evolution-lane controller: owns the change source and the
+/// validation policy; applies accepted changes end to end against a
+/// [`Pipeline`].
+pub struct EvolutionController {
+    compatibility: Compatibility,
+    single_change: bool,
+    source: Box<dyn SchemaChangeSource>,
+    /// Epoch bumps triggered by in-band unknown-version detection.
+    in_band_updates: AtomicU64,
+}
+
+impl EvolutionController {
+    pub fn new(
+        compatibility: Compatibility,
+        single_change: bool,
+        source: Box<dyn SchemaChangeSource>,
+    ) -> Self {
+        Self {
+            compatibility,
+            single_change,
+            source,
+            in_band_updates: AtomicU64::new(0),
+        }
+    }
+
+    /// The schema-change ingress (publish events here; `pump` drains it).
+    pub fn source(&self) -> &dyn SchemaChangeSource {
+        &*self.source
+    }
+
+    pub fn compatibility(&self) -> Compatibility {
+        self.compatibility
+    }
+
+    /// Epoch bumps triggered by in-band unknown-version detection.
+    pub fn in_band_updates(&self) -> u64 {
+        self.in_band_updates.load(Ordering::Relaxed)
+    }
+
+    /// Drain every pending change event and apply it. Returns one outcome
+    /// per event, in arrival order — validation failures come back as
+    /// [`ChangeOutcome::Rejected`], infrastructure failures (store I/O
+    /// after the epoch swapped) as [`ChangeOutcome::Faulted`]. One faulty
+    /// event never swallows the events drained after it; the `epoch_lag`
+    /// gauge is refreshed at the end of every pump.
+    pub fn pump(&self, p: &Pipeline) -> Vec<ChangeOutcome> {
+        let events = self.source.poll_changes();
+        let mut outcomes = Vec::with_capacity(events.len());
+        for ev in events {
+            outcomes.push(self.apply(p, &ev));
+        }
+        p.metrics.epoch_lag.set(self.source.pending() as u64);
+        outcomes
+    }
+
+    /// Apply one schema-change event end to end (validate → register →
+    /// migrate → Alg 5 off to the side → epoch swap → targeted eviction
+    /// → persist/audit). Every failure is classified: validation failures
+    /// are [`ChangeOutcome::Rejected`]; persistence failures after the
+    /// swap are [`ChangeOutcome::Faulted`] (also logged to stderr, since
+    /// production loops pump fire-and-forget).
+    pub fn apply(&self, p: &Pipeline, ev: &SchemaChangeEvent) -> ChangeOutcome {
+        let t0 = Instant::now();
+        let result = match &ev.change {
+            SchemaChange::AddVersion { fields } => {
+                self.apply_add(p, ev.schema, fields, t0)
+            }
+            SchemaChange::DropVersion { v } => {
+                self.apply_drop(p, ev.schema, *v, t0)
+            }
+        };
+        result.unwrap_or_else(|e| {
+            // the only fallible step is persistence, which runs after the
+            // epoch swap: the change is live but not durable
+            eprintln!(
+                "evolution: change for schema {:?} applied but failed to \
+                 persist: {e}",
+                ev.schema
+            );
+            ChangeOutcome::Faulted { schema: ev.schema, error: e.to_string() }
+        })
+    }
+
+    fn reject(
+        &self,
+        p: &Pipeline,
+        schema: SchemaId,
+        reason: String,
+    ) -> ChangeOutcome {
+        p.metrics.rejected_changes.inc();
+        ChangeOutcome::Rejected { schema, reason }
+    }
+
+    /// A new version arrived (full field list): validate the evolution
+    /// step, register it, migrate the bound tables, patch the DMM column.
+    fn apply_add(
+        &self,
+        p: &Pipeline,
+        schema: SchemaId,
+        fields: &[(String, ExtractType, bool)],
+        t0: Instant,
+    ) -> Result<ChangeOutcome> {
+        let mut land = p.landscape.write().unwrap();
+        let Some(latest) = land.tree.latest_version(schema) else {
+            // pre-validation failure: nothing swapped, nothing persisted
+            return Ok(self.reject(
+                p,
+                schema,
+                "schema has no registered versions".to_string(),
+            ));
+        };
+        let prev_fields =
+            land.tree.field_list(schema, latest).expect("latest registered");
+        if let Err(e) = evolution::validate(
+            self.compatibility,
+            &prev_fields,
+            fields,
+            self.single_change,
+        ) {
+            return Ok(self.reject(p, schema, e.to_string()));
+        }
+        let v = land.tree.add_version(schema, fields);
+        {
+            // the sources migrate with the registry: new writes conform to
+            // the new live version (values carried across ≡, else null)
+            let Landscape { tree, dbs, .. } = &mut *land;
+            for db in dbs.iter_mut() {
+                for t in 0..db.tables.len() {
+                    if db.tables[t].schema == schema {
+                        db.migrate_table(tree, t, v);
+                    }
+                }
+            }
+        }
+        let (new_state, epoch, report) = self.swap_in(
+            p,
+            &mut land,
+            ChangeCase::AddedSchemaVersion { schema, v },
+            (schema, v),
+            t0,
+        );
+        drop(land);
+        self.persist(p, new_state, &report, "added-schema-version")?;
+        Ok(ChangeOutcome::Applied { schema, v, epoch, report })
+    }
+
+    /// A version retirement: drop the column set (Alg-5 case 1) and the
+    /// tree node. The live version of a bound table cannot be dropped.
+    fn apply_drop(
+        &self,
+        p: &Pipeline,
+        schema: SchemaId,
+        v: VersionNo,
+        t0: Instant,
+    ) -> Result<ChangeOutcome> {
+        let mut land = p.landscape.write().unwrap();
+        let Some(sv) = land.tree.version(schema, v) else {
+            return Ok(self.reject(
+                p,
+                schema,
+                format!("cannot drop unregistered version v{}", v.0),
+            ));
+        };
+        let (col_start, width) = (sv.col_start(), sv.width());
+        let still_live = land.dbs.iter().any(|db| {
+            db.tables
+                .iter()
+                .any(|t| t.schema == schema && t.live_version == v)
+        });
+        if still_live {
+            return Ok(self.reject(
+                p,
+                schema,
+                format!("cannot drop live version v{}", v.0),
+            ));
+        }
+        let n_rows = land.matrix.n_rows();
+        land.matrix.clear_block(0..n_rows, col_start..col_start + width);
+        land.tree.delete_version(schema, v);
+        let (new_state, epoch, report) = self.swap_in(
+            p,
+            &mut land,
+            ChangeCase::DeletedSchemaVersion { schema, v },
+            (schema, v),
+            t0,
+        );
+        drop(land);
+        self.persist(p, new_state, &report, "deleted-schema-version")?;
+        Ok(ChangeOutcome::Applied { schema, v, epoch, report })
+    }
+
+    /// The in-memory tail of every accepted change: bump state i, build
+    /// `ᵢ₊₁𝔇𝔓𝔐` off to the side, mirror the ground-truth matrix, publish
+    /// with one epoch swap, evict only the affected cache column, record
+    /// metrics. Infallible; persistence runs afterwards *outside* the
+    /// landscape write lock (see [`EvolutionController::apply`] — the
+    /// in-band path must not hold the global lock across store I/O).
+    fn swap_in(
+        &self,
+        p: &Pipeline,
+        land: &mut Landscape,
+        case: ChangeCase,
+        affected: (SchemaId, VersionNo),
+        t0: Instant,
+    ) -> (StateI, u64, UpdateReport) {
+        let new_state = p.state.bump();
+        let (dpm, report) =
+            prepare_update(&p.dmm.snapshot(), &land.tree, &land.cdm, case, new_state);
+        // mirror into the ground-truth matrix (kept for benches/invariants)
+        if let ChangeCase::AddedSchemaVersion { schema, v } = case {
+            let (n_rows, n_cols) =
+                (land.cdm.n_attr_ids(), land.tree.n_attr_ids());
+            land.matrix.grow(n_rows, n_cols);
+            for block in dpm.column(schema, v) {
+                for &(q, pp) in &block.elements {
+                    land.matrix.set(q.index(), pp.index(), true);
+                }
+            }
+        }
+        let epoch = p.dmm.publish_targeted(Arc::new(dpm), vec![affected]);
+        p.metrics.dmm_epoch.set(epoch);
+        p.cache.advance(new_state, Some(&[affected]));
+        p.metrics.dmm_updates.inc();
+        p.metrics.update_latency.record(t0.elapsed());
+        (new_state, epoch, report)
+    }
+
+    /// Persist the post-change `ᵢ𝔇𝔘𝔖𝔅` and append the audit line, under
+    /// a fresh *read* lock. A change racing in between simply persists
+    /// its own newer DUSB afterwards — last writer wins, exactly like the
+    /// store's replace semantics.
+    fn persist(
+        &self,
+        p: &Pipeline,
+        new_state: StateI,
+        report: &UpdateReport,
+        audit_case: &str,
+    ) -> Result<()> {
+        let Some(store) = &p.store else { return Ok(()) };
+        let outcome = WorkflowOutcome::evaluate(
+            p.notice_policy,
+            new_state,
+            report.clone(),
+        );
+        let land = p.landscape.read().unwrap();
+        let dusb = DusbSet::from_matrix(
+            &land.matrix,
+            &land.tree,
+            &land.cdm,
+            p.state.current(),
+        )
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+        store.save_dusb(&dusb)?;
+        store.log_update(&outcome.audit_json(audit_case))?;
+        Ok(())
+    }
+
+    /// Would Alg-5 case 3 produce a non-empty column for `(schema,
+    /// version)`? The copy source is the shared
+    /// [`case3_source`](crate::matrix::update::case3_source); the check
+    /// applies [`auto_update`](crate::matrix::update::auto_update)'s
+    /// `≡`-copy predicate without building anything.
+    fn patchable(
+        dmm: &crate::matrix::dpm::DpmSet,
+        tree: &crate::schema::SchemaTree,
+        schema: SchemaId,
+        version: VersionNo,
+    ) -> bool {
+        let Some(prev) =
+            crate::matrix::update::case3_source(dmm, schema, version)
+        else {
+            return false;
+        };
+        dmm.column(schema, prev).iter().any(|block| {
+            block.elements.iter().any(|&(_, attr)| {
+                tree.equivalent_in(attr, schema, version).is_some()
+            })
+        })
+    }
+
+    /// In-band detection: a CDC record arrived with a `(schema, version)`
+    /// the DMM has no column for. If the registry (tree) already knows the
+    /// version — the source migrated before the control event landed — the
+    /// Alg-5 case-3 patch is applied immediately and `true` is returned so
+    /// the caller retries the map against the fresh epoch. `false` means
+    /// the version is genuinely unknown (or has nothing to copy from) and
+    /// the record belongs in the DLQ. Unpatchable records never move the
+    /// state or epoch, and the unregistered-version check runs under a
+    /// read lock so a rogue-traffic storm does not serialize the workers.
+    pub fn on_unknown_version(
+        &self,
+        p: &Pipeline,
+        schema: SchemaId,
+        version: VersionNo,
+    ) -> bool {
+        // fast path: a racing worker already patched it
+        if !p.dmm.snapshot().column(schema, version).is_empty() {
+            return true;
+        }
+        {
+            // cheap read-locked screen for the common dead-letter cases
+            let land = p.landscape.read().unwrap();
+            if land.tree.version(schema, version).is_none() {
+                return false; // not registered: a real mapping error
+            }
+            if !Self::patchable(&p.dmm.snapshot(), &land.tree, schema, version)
+            {
+                return false; // nothing to copy from: would stay empty
+            }
+        }
+        let mut land = p.landscape.write().unwrap();
+        // re-check everything under the write lock (patch races serialize
+        // here; a concurrent drop may have retired the version meanwhile)
+        if !p.dmm.snapshot().column(schema, version).is_empty() {
+            return true;
+        }
+        if land.tree.version(schema, version).is_none() {
+            return false;
+        }
+        if !Self::patchable(&p.dmm.snapshot(), &land.tree, schema, version) {
+            return false;
+        }
+        let t0 = Instant::now();
+        let (new_state, _epoch, report) = self.swap_in(
+            p,
+            &mut land,
+            ChangeCase::AddedSchemaVersion { schema, v: version },
+            (schema, version),
+            t0,
+        );
+        // release the global lock BEFORE persistence: store I/O on the
+        // per-event mapping path must not stall every other worker
+        drop(land);
+        if let Err(e) =
+            self.persist(p, new_state, &report, "in-band-schema-version")
+        {
+            // the patched column is already live — surface the store
+            // fault without dead-lettering a perfectly mappable record
+            eprintln!(
+                "evolution: in-band patch for schema {schema:?} v{} \
+                 published but failed to persist: {e}",
+                version.0
+            );
+        }
+        self.in_band_updates.fetch_add(1, Ordering::Relaxed);
+        !p.dmm.snapshot().column(schema, version).is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PipelineConfig;
+    use crate::message::StateI;
+    use crate::source::SchemaChangeEvent;
+
+    fn pipeline() -> Pipeline {
+        Pipeline::new(PipelineConfig::small()).unwrap()
+    }
+
+    fn latest_fields(
+        p: &Pipeline,
+        schema: SchemaId,
+    ) -> Vec<(String, ExtractType, bool)> {
+        let land = p.landscape.read().unwrap();
+        let latest = land.tree.latest_version(schema).unwrap();
+        land.tree.field_list(schema, latest).unwrap()
+    }
+
+    #[test]
+    fn accepted_add_bumps_epoch_and_migrates() {
+        let p = pipeline();
+        let schema = p.landscape.read().unwrap().dbs[0].tables[0].schema;
+        let mut fields = latest_fields(&p, schema);
+        fields.push(("evolved".into(), ExtractType::Varchar, true));
+        p.evolution.source().publish_change(SchemaChangeEvent::add_version(
+            schema,
+            fields.clone(),
+            1,
+        ));
+        let outcomes = p.evolution.pump(&p);
+        assert_eq!(outcomes.len(), 1);
+        assert!(outcomes[0].is_applied());
+        assert_eq!(p.metrics.dmm_epoch.get(), 1);
+        assert_eq!(p.state.current(), StateI(1));
+        assert_eq!(p.metrics.dmm_updates.get(), 1);
+        assert_eq!(p.metrics.update_latency.count(), 1);
+        assert_eq!(p.metrics.epoch_lag.get(), 0);
+        // the bound table migrated to the new live version
+        let land = p.landscape.read().unwrap();
+        let live = land.dbs[0].tables[0].live_version;
+        assert_eq!(land.tree.version(schema, live).unwrap().width(), fields.len());
+    }
+
+    #[test]
+    fn retype_is_rejected_without_epoch_bump() {
+        let p = pipeline();
+        let schema = p.landscape.read().unwrap().dbs[0].tables[0].schema;
+        let before = latest_fields(&p, schema);
+        let mut fields = before.clone();
+        fields[0].1 = if fields[0].1 == ExtractType::Varchar {
+            ExtractType::Int64
+        } else {
+            ExtractType::Varchar
+        };
+        p.evolution.source().publish_change(SchemaChangeEvent::add_version(
+            schema, fields, 1,
+        ));
+        let outcomes = p.evolution.pump(&p);
+        assert!(matches!(&outcomes[0], ChangeOutcome::Rejected { reason, .. }
+            if reason.contains("type changes")));
+        assert_eq!(p.metrics.rejected_changes.get(), 1);
+        assert_eq!(p.metrics.dmm_epoch.get(), 0);
+        assert_eq!(p.state.current(), StateI(0));
+        assert_eq!(p.metrics.dmm_updates.get(), 0);
+        // the tree is untouched by the rejection
+        assert_eq!(latest_fields(&p, schema), before);
+    }
+
+    #[test]
+    fn drop_of_live_version_is_rejected() {
+        let p = pipeline();
+        let (schema, live) = {
+            let land = p.landscape.read().unwrap();
+            let t = &land.dbs[0].tables[0];
+            (t.schema, t.live_version)
+        };
+        p.evolution.source().publish_change(SchemaChangeEvent::drop_version(
+            schema, live, 1,
+        ));
+        let outcomes = p.evolution.pump(&p);
+        assert!(matches!(&outcomes[0], ChangeOutcome::Rejected { reason, .. }
+            if reason.contains("live version")));
+        assert_eq!(p.metrics.dmm_epoch.get(), 0);
+    }
+
+    #[test]
+    fn drop_of_old_version_evicts_its_column() {
+        let p = pipeline();
+        let schema = p.landscape.read().unwrap().dbs[0].tables[0].schema;
+        // v1 is never the live version in the small profile (3 versions)
+        p.evolution.source().publish_change(SchemaChangeEvent::drop_version(
+            schema,
+            VersionNo(1),
+            1,
+        ));
+        let outcomes = p.evolution.pump(&p);
+        assert!(outcomes[0].is_applied());
+        assert!(p.dmm.snapshot().column(schema, VersionNo(1)).is_empty());
+        assert!(p
+            .landscape
+            .read()
+            .unwrap()
+            .tree
+            .version(schema, VersionNo(1))
+            .is_none());
+        assert_eq!(p.metrics.dmm_epoch.get(), 1);
+    }
+}

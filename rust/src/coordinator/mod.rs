@@ -6,6 +6,7 @@
 pub mod batcher;
 pub mod egress;
 pub mod errors;
+pub mod evolution;
 pub mod inspect;
 pub mod pipeline;
 pub mod recovery;
@@ -16,5 +17,6 @@ pub mod workflow;
 
 pub use egress::SinkHandle;
 pub use errors::DeadLetter;
+pub use evolution::{ChangeOutcome, EvolutionController};
 pub use pipeline::{Pipeline, PipelineBuilder};
 pub use state::{EpochDmm, StateManager};

@@ -49,6 +49,20 @@
 //!    unknown-column event triggers one snapshot refresh, then the §3.4
 //!    restamp retry; only persistent failures dead-letter.
 //!
+//! # Online schema evolution
+//!
+//! Schema changes flow through the evolution lane ([`super::evolution`]):
+//! Debezium-style DDL/registry events arrive on a
+//! [`crate::source::SchemaChangeSource`], are validated against the
+//! registry's compatibility rules (incompatible changes are rejected
+//! without touching the epoch), and each accepted change becomes one
+//! epoch swap with **targeted** cache eviction — only the affected
+//! `(schema, version)` columns drop, so the §7 full-evict latency spike
+//! disappears (`--evict full` restores the old behaviour). A CDC record
+//! arriving with an unknown `(SchemaId, VersionNo)` that the registry
+//! already knows triggers the same patch in-band instead of
+//! dead-lettering.
+//!
 //! ## Ordering guarantees
 //!
 //! Every message maps against exactly one snapshot (never a mixed old/new
@@ -64,12 +78,13 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use super::egress::SinkHandle;
 use super::errors::{Dlq, RetryPolicy};
+use super::evolution::{ChangeOutcome, EvolutionController};
 use super::state::{EpochDmm, StateManager};
-use super::workflow::{NoticePolicy, WorkflowOutcome};
+use super::workflow::NoticePolicy;
 use crate::broker::{Consumer, Topic};
 use crate::cache::DcpmCache;
 use crate::config::PipelineConfig;
@@ -77,13 +92,15 @@ use crate::mapper::parallel::ParallelMapper;
 use crate::mapper::MapError;
 use crate::matrix::dpm::DpmSet;
 use crate::matrix::dusb::DusbSet;
-use crate::matrix::update::{prepare_update, ChangeCase, UpdateReport};
+use crate::matrix::update::UpdateReport;
 use crate::message::cdc::{CdcEvent, CdcOp};
 use crate::message::{OutMessage, StateI};
 use crate::metrics::PipelineMetrics;
-use crate::schema::evolution::{self, Compatibility};
 use crate::sink::SinkConnector;
-use crate::source::{Connector, Dml, SourceConnector};
+use crate::source::{
+    Connector, DdlQueue, Dml, SchemaChangeEvent, SchemaChangeSource,
+    SourceConnector,
+};
 use crate::store::MatrixStore;
 use crate::util::rng::Rng;
 use crate::util::IdGen;
@@ -114,6 +131,10 @@ pub struct Pipeline {
     /// Registered egress backends, each with its own consumer group (see
     /// [`super::egress`]). Order is registration order.
     pub sinks: Vec<SinkHandle>,
+    /// The online schema-evolution lane (see [`super::evolution`]):
+    /// consumes schema-change events and in-band unknown-version signals,
+    /// publishes new DMM epochs with targeted cache eviction.
+    pub evolution: EvolutionController,
     source: Box<dyn SourceConnector>,
     rng: Mutex<Rng>,
     next_key: IdGen,
@@ -139,6 +160,7 @@ pub struct PipelineBuilder {
     cfg: PipelineConfig,
     landscape: Option<Landscape>,
     source: Option<Box<dyn SourceConnector>>,
+    schema_changes: Option<Box<dyn SchemaChangeSource>>,
     sinks: Vec<Box<dyn SinkConnector>>,
     store_dir: Option<std::path::PathBuf>,
 }
@@ -154,6 +176,16 @@ impl PipelineBuilder {
     /// Replace the default Debezium-sim source connector.
     pub fn source(mut self, source: impl SourceConnector + 'static) -> Self {
         self.source = Some(Box::new(source));
+        self
+    }
+
+    /// Replace the default queue-backed schema-change source (the ingress
+    /// of the online evolution lane; see [`super::evolution`]).
+    pub fn schema_changes(
+        mut self,
+        source: impl SchemaChangeSource + 'static,
+    ) -> Self {
+        self.schema_changes = Some(Box::new(source));
         self
     }
 
@@ -173,8 +205,14 @@ impl PipelineBuilder {
 
     /// Wire everything into a runnable [`Pipeline`].
     pub fn build(self) -> Result<Pipeline> {
-        let PipelineBuilder { cfg, landscape, source, mut sinks, store_dir } =
-            self;
+        let PipelineBuilder {
+            cfg,
+            landscape,
+            source,
+            schema_changes,
+            mut sinks,
+            store_dir,
+        } = self;
         let landscape =
             landscape.unwrap_or_else(|| workload::generate(&cfg));
         let state = StateManager::new(StateI(0));
@@ -221,14 +259,20 @@ impl PipelineBuilder {
             Some(source) => source,
             None => Box::new(Connector::new("src")),
         };
+        let evolution = EvolutionController::new(
+            cfg.evolution_compatibility,
+            cfg.evolution_single_change,
+            schema_changes.unwrap_or_else(|| Box::new(DdlQueue::new())),
+        );
         let seed = cfg.seed;
+        let evict = cfg.evict;
         let pipeline = Pipeline {
             cfg,
             landscape: RwLock::new(landscape),
             cdc_topic,
             out_topic,
             dmm: EpochDmm::new(Arc::new(dpm)),
-            cache: Arc::new(DcpmCache::new(StateI(0))),
+            cache: Arc::new(DcpmCache::with_mode(StateI(0), evict)),
             store: None,
             state,
             metrics,
@@ -236,6 +280,7 @@ impl PipelineBuilder {
             retry: RetryPolicy::default(),
             notice_policy: NoticePolicy::AutoConfirm,
             sinks: handles,
+            evolution,
             source,
             rng: Mutex::new(Rng::seed_from(seed ^ 0xE05)),
             next_key: IdGen::new(),
@@ -255,6 +300,7 @@ impl Pipeline {
             cfg,
             landscape: None,
             source: None,
+            schema_changes: None,
             sinks: Vec::new(),
             store_dir: None,
         }
@@ -360,80 +406,37 @@ impl Pipeline {
         Ok(db.apply(tree, dml, state, ts))
     }
 
-    /// The §3.3 semi-automated workflow: register an evolved schema
-    /// version, migrate the table, run Alg 5, bump state i, evict the
-    /// cache, persist, audit.
+    /// The §3.3 semi-automated workflow, routed through the online
+    /// evolution lane: build a registry-style change event (add one fresh
+    /// attribute to the service's schema) and apply it directly — the
+    /// lane validates it, migrates the table, builds `ᵢ₊₁𝔇𝔓𝔐` off to the
+    /// side and swaps the epoch (see [`super::evolution`]). Events queued
+    /// on the schema-change source by other publishers are untouched;
+    /// they belong to the wire lane's `pump`.
     pub fn apply_schema_change(&self, service: usize) -> Result<UpdateReport> {
-        let mut land = self.landscape.write().unwrap();
-        let schema = land.dbs[service].tables[0].schema;
-        let fields = workload::evolved_fields(&land.tree, schema);
-        // registry-style evolution validation (backward compatible adds)
-        let latest = land.tree.latest_version(schema).context("has versions")?;
-        let prev_fields: Vec<_> = land
-            .tree
-            .version(schema, latest)
-            .unwrap()
-            .attrs
-            .iter()
-            .map(|&a| {
-                let at = land.tree.attr(a);
-                (at.name.clone(), at.ty, at.optional)
-            })
-            .collect();
-        evolution::validate(Compatibility::Backward, &prev_fields, &fields, true)
-            .map_err(|e| anyhow::anyhow!("evolution rejected: {e}"))?;
-        let v = land.tree.add_version(schema, &fields);
-        {
-            let Landscape { tree, dbs, .. } = &mut *land;
-            dbs[service].migrate_table(tree, 0, v);
-        }
-
-        // Alg 5 off to the side of the live snapshot, then one epoch swap:
-        // in-flight mapping keeps the old snapshot until `publish`.
-        let new_state = self.state.bump();
-        let (dpm, report) = prepare_update(
-            &self.dmm.snapshot(),
-            &land.tree,
-            &land.cdm,
-            ChangeCase::AddedSchemaVersion { schema, v },
-            new_state,
-        );
-        // mirror into the ground-truth matrix (kept for benches/invariants)
-        let (n_rows, n_cols) = (land.cdm.n_attr_ids(), land.tree.n_attr_ids());
-        land.matrix.grow(n_rows, n_cols);
-        for block in dpm.column(schema, v) {
-            for &(q, p) in &block.elements {
-                land.matrix.set(q.index(), p.index(), true);
+        let (schema, fields) = {
+            let land = self.landscape.read().unwrap();
+            let schema = land.dbs[service].tables[0].schema;
+            (schema, workload::evolved_fields(&land.tree, schema))
+        };
+        let ev = SchemaChangeEvent::add_version(schema, fields, self.now_us());
+        match self.evolution.apply(self, &ev) {
+            ChangeOutcome::Applied { report, .. } => Ok(report),
+            ChangeOutcome::Rejected { reason, .. } => {
+                Err(anyhow::anyhow!("evolution rejected: {reason}"))
             }
+            ChangeOutcome::Faulted { error, .. } => Err(anyhow::anyhow!(
+                "schema change applied but failed to persist: {error}"
+            )),
         }
-        let epoch = self.dmm.publish(Arc::new(dpm));
-        self.metrics.dmm_epoch.set(epoch);
-        self.cache.evict_all(new_state);
-        self.metrics.dmm_updates.inc();
-
-        let outcome = WorkflowOutcome::evaluate(
-            self.notice_policy,
-            new_state,
-            report.clone(),
-        );
-        if let Some(store) = &self.store {
-            let dusb = DusbSet::from_matrix(
-                &land.matrix,
-                &land.tree,
-                &land.cdm,
-                new_state,
-            )
-            .map_err(|e| anyhow::anyhow!("{e}"))?;
-            store.save_dusb(&dusb)?;
-            store.log_update(&outcome.audit_json("added-schema-version"))?;
-        }
-        Ok(report)
     }
 
     /// Map one CDC event through the DMM (Alg 6 lane), with the §3.4
     /// state-sync retry: an out-of-sync message is restamped against the
     /// current DMM state once; persistent failures go to the DLQ by the
-    /// caller.
+    /// caller. An unknown `(schema, version)` first consults the in-band
+    /// evolution lane — if the registry already knows the version the DMM
+    /// is patched and the event maps against the fresh epoch.
     pub fn map_event(
         &self,
         ev: &CdcEvent,
@@ -444,7 +447,17 @@ impl Pipeline {
         // no to_dense() copy: Alg 6 skips null fields itself, so the
         // sparse payload maps identically (perf: see EXPERIMENTS.md §Perf)
         let mapper = self.mapper_for(self.dmm.snapshot());
-        let (outs, retried) = mapper.map_or_restamp(payload)?;
+        let (outs, retried) = match mapper.map_or_restamp(payload) {
+            Ok(mapped) => mapped,
+            Err(MapError::UnknownColumn { schema, version })
+                if self.evolution.on_unknown_version(self, schema, version) =>
+            {
+                // the in-band patch published a new epoch: map against it
+                let mapper = self.mapper_for(self.dmm.snapshot());
+                mapper.map_or_restamp(payload)?
+            }
+            Err(e) => return Err(e),
+        };
         if retried {
             self.metrics.sync_retries.inc();
         }
@@ -506,12 +519,15 @@ impl Pipeline {
     }
 
     /// Run a whole trace single-instance: resolve ops, consume the CDC
-    /// topic, map, feed the sinks. Returns the §7-style report.
+    /// topic, map, feed the sinks; the evolution lane's control stream is
+    /// pumped between ops so wire-observed schema changes apply inline.
+    /// Returns the §7-style report.
     pub fn run_trace(&self, ops: &[TraceOp]) -> Result<TraceReport> {
         let start = Instant::now();
         let mut consumer: Consumer<Arc<CdcEvent>> =
             Consumer::new(self.cdc_topic.clone(), 0, 1);
         for op in ops {
+            self.evolution.pump(self);
             self.resolve_op(op)?;
             loop {
                 let batch = consumer.poll(64);
@@ -525,6 +541,9 @@ impl Pipeline {
             }
             self.drain_sinks();
         }
+        // trailing pump: a change observed during the last op's batch is
+        // applied before the trace returns (nothing left behind)
+        self.evolution.pump(self);
         Ok(TraceReport {
             events: self.metrics.events_in.get(),
             out_messages: self.metrics.messages_out.get(),
@@ -721,11 +740,13 @@ mod tests {
     }
 
     #[test]
-    fn unknown_column_goes_to_dlq() {
+    fn unknown_registered_version_heals_in_band() {
+        // the live version's column vanished from the DMM while the
+        // registry still knows the version: the in-band lane patches the
+        // column back (Alg-5 case 3) instead of dead-lettering
         let p = small_pipeline();
         p.resolve_op(&TraceOp::Dml { service: 0, kind: DmlKind::Insert })
             .unwrap();
-        // drop every block of the schema's live version from the DMM
         {
             let land = p.landscape.read().unwrap();
             let schema = land.dbs[0].tables[0].schema;
@@ -739,9 +760,54 @@ mod tests {
         for (_, rec) in consumer.poll(10) {
             p.process_event(&rec.value);
         }
+        assert_eq!(p.metrics.dead_letters.get(), 0);
+        assert_eq!(p.dlq.len(), 0);
+        assert!(p.metrics.messages_out.get() >= 1);
+        assert_eq!(p.evolution.in_band_updates(), 1);
+        // the patch is one ordinary epoch swap + state transition
+        assert_eq!(p.metrics.dmm_epoch.get(), 2); // manual publish + patch
+        assert_eq!(p.state.current(), StateI(1));
+        {
+            let land = p.landscape.read().unwrap();
+            let schema = land.dbs[0].tables[0].schema;
+            let v = land.dbs[0].tables[0].live_version;
+            assert!(!p.dmm.snapshot().column(schema, v).is_empty());
+        }
+    }
+
+    #[test]
+    fn unregistered_version_goes_to_dlq() {
+        use crate::message::cdc::CdcSource;
+        use crate::message::InMessage;
+        use crate::schema::{AttrId, VersionNo};
+        let p = small_pipeline();
+        let schema = p.landscape.read().unwrap().dbs[0].tables[0].schema;
+        // a wire event stamped with a version the registry never saw
+        let ev = Arc::new(CdcEvent {
+            op: CdcOp::Create,
+            before: None,
+            after: Some(InMessage {
+                key: 7,
+                schema,
+                version: VersionNo(99),
+                state: p.state.current(),
+                ts_us: 1,
+                fields: vec![(AttrId(0), crate::util::json::Json::Num(1.0))],
+            }),
+            source: CdcSource {
+                connector: "postgresql".into(),
+                db: "svc0".into(),
+                table: "main".into(),
+            },
+            ts_us: 1,
+        });
+        p.process_event(&ev);
         assert_eq!(p.metrics.dead_letters.get(), 1);
         assert_eq!(p.dlq.len(), 1);
         assert!(p.dlq.snapshot()[0].error.contains("no mapping column"));
+        // no epoch or state movement for a genuinely unknown version
+        assert_eq!(p.metrics.dmm_epoch.get(), 0);
+        assert_eq!(p.state.current(), StateI(0));
     }
 
     #[test]

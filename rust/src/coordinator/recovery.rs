@@ -136,7 +136,10 @@ mod tests {
     use crate::workload::{DmlKind, TraceOp};
 
     fn poisoned_pipeline() -> Pipeline {
-        // a pipeline whose DMM lost a live column → events dead-letter
+        // a pipeline whose DMM lost EVERY column of a schema → events
+        // dead-letter (with only the live column gone the in-band
+        // evolution lane would re-derive it from the previous version;
+        // with the whole lineage gone there is nothing to copy from)
         let p = Pipeline::new(PipelineConfig::small()).unwrap();
         for _ in 0..5 {
             p.resolve_op(&TraceOp::Dml { service: 0, kind: DmlKind::Insert })
@@ -145,9 +148,10 @@ mod tests {
         {
             let land = p.landscape.read().unwrap();
             let schema = land.dbs[0].tables[0].schema;
-            let v = land.dbs[0].tables[0].live_version;
             let mut dpm = (*p.dmm.snapshot()).clone();
-            dpm.remove_column(schema, v);
+            for &v in land.tree.versions_of(schema) {
+                dpm.remove_column(schema, v);
+            }
             p.dmm.publish(Arc::new(dpm));
             p.cache.evict_all(StateI(0));
         }

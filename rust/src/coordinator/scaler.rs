@@ -5,6 +5,10 @@
 //! subset, all sharing one DMM snapshot/state i. Schema changes are
 //! disabled during the scaled window, exactly as the paper prescribes for
 //! initial loads.
+//!
+//! This is the *frozen-state* scale-out axis; its complement is the
+//! sharded mapping lane ([`super::shard`]), which tolerates live epoch
+//! swaps from the evolution lane ([`super::evolution`]) mid-drain.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;

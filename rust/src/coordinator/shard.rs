@@ -14,6 +14,13 @@
 //!
 //! The shard channels are unbounded `mpsc` queues — backpressure is out of
 //! scope for the simulation (the dispatcher is far cheaper than mapping).
+//!
+//! On an epoch swap each worker consults the epoch journal
+//! ([`super::state::EpochDmm::affected_between`]) and evicts only the
+//! mapping columns the update touched from its worker-local cache
+//! (targeted eviction, the default) instead of wiping it; unknown
+//! versions observed on the wire route through the in-band evolution
+//! lane ([`super::evolution`]) before they can dead-letter.
 
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::Arc;
@@ -85,9 +92,12 @@ pub fn run_sharded_trace(
     let start = Instant::now();
     let (_per_shard, driven) = with_shard_pool(pipeline, n, |consumer, txs| {
         for op in ops {
+            // wire-observed schema changes apply between trace ops
+            pipeline.evolution.pump(pipeline);
             pipeline.resolve_op(op)?;
             dispatch_available(consumer, txs, n);
         }
+        pipeline.evolution.pump(pipeline);
         dispatch_available(consumer, txs, n);
         Ok(())
     });
@@ -108,17 +118,47 @@ pub fn run_sharded_trace(
 /// workers pick up the new snapshot at the next epoch check or via the
 /// refresh-retry, they never block on the update.
 pub fn run_sharded_drain(pipeline: &Pipeline, shards: usize) -> ShardReport {
+    let (report, ()) = run_sharded_session(pipeline, shards, |_| {});
+    report
+}
+
+/// Run a custom driver against a live shard pool. `drive` receives a
+/// `dispatch` callback that forwards everything currently fetchable in
+/// the CDC topic to the shard workers; the driver can interleave event
+/// production, schema changes (which land mid-stream while workers are
+/// still mapping previously dispatched events) and dispatch rounds. A
+/// final dispatch runs automatically before the pool winds down, so
+/// nothing produced by the driver is left behind.
+pub fn run_sharded_session<R>(
+    pipeline: &Pipeline,
+    shards: usize,
+    drive: impl FnOnce(&mut dyn FnMut()) -> R,
+) -> (ShardReport, R) {
     let n = effective_shards(shards);
     let start = Instant::now();
-    let (per_shard, ()) = with_shard_pool(pipeline, n, |consumer, txs| {
+    let (per_shard, result) = with_shard_pool(pipeline, n, |consumer, txs| {
+        let result = {
+            let mut dispatch = || {
+                // drain the control stream first: wire-observed schema
+                // changes land before the next data batch is dispatched
+                pipeline.evolution.pump(pipeline);
+                dispatch_available(&mut *consumer, txs, n);
+            };
+            drive(&mut dispatch)
+        };
+        pipeline.evolution.pump(pipeline);
         dispatch_available(consumer, txs, n);
+        result
     });
-    ShardReport {
-        shards: n,
-        processed: per_shard.iter().sum(),
-        per_shard,
-        wall: start.elapsed(),
-    }
+    (
+        ShardReport {
+            shards: n,
+            processed: per_shard.iter().sum(),
+            per_shard,
+            wall: start.elapsed(),
+        },
+        result,
+    )
 }
 
 /// Shared worker-pool scaffolding: spawn N workers, hand the dispatcher
@@ -170,6 +210,34 @@ fn dispatch_available(
     }
 }
 
+/// Refresh a worker's snapshot to the current epoch. The epoch journal
+/// ([`super::state::EpochDmm::affected_between`]) tells the worker which
+/// mapping columns changed between the snapshot it held and the one it
+/// now takes; with a known diff only those columns are evicted from the
+/// worker-local cache and the warm remainder survives the swap (the
+/// targeted-eviction default — `--evict full` restores the §7
+/// wipe-everything behaviour).
+fn refresh_worker(
+    pipeline: &Pipeline,
+    mapper: &mut ParallelMapper,
+    cache: &DcpmCache,
+    epoch: &mut u64,
+) {
+    // read the epoch BEFORE the snapshot: the snapshot is then at least
+    // as new, so a racing publish is re-detected at the next check
+    *epoch = pipeline.dmm.epoch();
+    let next = pipeline.dmm.snapshot();
+    if Arc::ptr_eq(&next, mapper.dpm()) {
+        // a publish raced our previous refresh: we already hold this
+        // exact snapshot, so there is nothing to evict (ptr equality is
+        // the safe test — same-state republishes carry different Arcs)
+        return;
+    }
+    let affected = pipeline.dmm.affected_between(mapper.state(), next.state);
+    cache.advance(next.state, affected.as_deref());
+    mapper.replace_dpm(next);
+}
+
 /// One shard worker: an epoch-cached mapper over a worker-local column
 /// cache (eviction storms stay shard-local), FIFO over the shard queue,
 /// ordered batch commit into the CDM topic. Returns events processed.
@@ -179,7 +247,10 @@ fn run_worker(
     rx: Receiver<Arc<CdcEvent>>,
 ) -> u64 {
     let shard_counters = pipeline.metrics.shard.shard(shard_idx);
-    let cache = Arc::new(DcpmCache::new(pipeline.dmm.snapshot().state));
+    let cache = Arc::new(DcpmCache::with_mode(
+        pipeline.dmm.snapshot().state,
+        pipeline.cfg.evict,
+    ));
     let mut epoch = pipeline.dmm.epoch();
     let mut mapper =
         ParallelMapper::with_threads(pipeline.dmm.snapshot(), Arc::clone(&cache), 1);
@@ -195,17 +266,15 @@ fn run_worker(
         }
         // one epoch check per micro-batch; a swap racing the batch is
         // caught by the refresh-retry below
-        let current = pipeline.dmm.epoch();
-        if current != epoch {
-            epoch = current;
-            mapper.replace_dpm(pipeline.dmm.snapshot());
+        if pipeline.dmm.epoch() != epoch {
+            refresh_worker(pipeline, &mut mapper, &cache, &mut epoch);
         }
         for ev in &batch {
             pipeline.metrics.events_in.inc();
             shard_counters.events.inc();
             processed += 1;
             let t0 = Instant::now();
-            match map_on_shard(pipeline, &mut mapper, &mut epoch, ev) {
+            match map_on_shard(pipeline, &mut mapper, &cache, &mut epoch, ev) {
                 Ok(outs) => {
                     pipeline.metrics.transformations.inc();
                     pipeline.metrics.map_latency.record(t0.elapsed());
@@ -233,11 +302,13 @@ fn run_worker(
 }
 
 /// Map one event on a shard: try the held snapshot; on any failure refresh
-/// it once if the epoch moved (the snapshot was stale), then fall back to
-/// the §3.4 restamp retry. Only persistent failures reach the DLQ.
+/// it once if the epoch moved (the snapshot was stale), then consult the
+/// in-band evolution lane for unknown versions, then fall back to the
+/// §3.4 restamp retry. Only persistent failures reach the DLQ.
 fn map_on_shard(
     pipeline: &Pipeline,
     mapper: &mut ParallelMapper,
+    cache: &DcpmCache,
     epoch: &mut u64,
     ev: &CdcEvent,
 ) -> Result<Vec<(CdcOp, OutMessage)>, MapError> {
@@ -250,10 +321,8 @@ fn map_on_shard(
             // refresh once if the epoch moved under us, without repeating
             // a map already known to fail against the same snapshot
             let err = {
-                let current = pipeline.dmm.epoch();
-                if current != *epoch {
-                    *epoch = current;
-                    mapper.replace_dpm(pipeline.dmm.snapshot());
+                if pipeline.dmm.epoch() != *epoch {
+                    refresh_worker(pipeline, mapper, cache, epoch);
                     match mapper.map(payload) {
                         Ok(outs) => return Ok(pair(ev.op, outs)),
                         Err(e) => e,
@@ -262,12 +331,46 @@ fn map_on_shard(
                     first_err
                 }
             };
+            // in-band evolution: a version the registry knows but the DMM
+            // does not yet is patched into a fresh epoch, then retried
+            let err = match err {
+                MapError::UnknownColumn { schema, version }
+                    if pipeline
+                        .evolution
+                        .on_unknown_version(pipeline, schema, version) =>
+                {
+                    refresh_worker(pipeline, mapper, cache, epoch);
+                    match mapper.map(payload) {
+                        Ok(outs) => return Ok(pair(ev.op, outs)),
+                        Err(e) => e,
+                    }
+                }
+                e => e,
+            };
             match err {
                 MapError::StateMismatch { .. } => {
                     pipeline.metrics.sync_retries.inc();
                     let mut restamped = payload.clone();
                     restamped.state = mapper.state();
-                    Ok(pair(ev.op, mapper.map(&restamped)?))
+                    match mapper.map(&restamped) {
+                        Ok(outs) => Ok(pair(ev.op, outs)),
+                        // the restamp can itself surface an unknown
+                        // version (the state moved for an unrelated
+                        // schema while this one migrated early) — give
+                        // the in-band lane the same chance it gets on
+                        // the first attempt
+                        Err(MapError::UnknownColumn { schema, version })
+                            if pipeline
+                                .evolution
+                                .on_unknown_version(pipeline, schema, version) =>
+                        {
+                            refresh_worker(pipeline, mapper, cache, epoch);
+                            let mut restamped = payload.clone();
+                            restamped.state = mapper.state();
+                            Ok(pair(ev.op, mapper.map(&restamped)?))
+                        }
+                        Err(e) => Err(e),
+                    }
                 }
                 e => Err(e),
             }

@@ -8,12 +8,23 @@
 //! next set off to the side, and publication is a single pointer swap that
 //! bumps a monotonically increasing epoch. Mapping workers poll the epoch
 //! (one relaxed atomic load) instead of holding the lock across mapping.
+//!
+//! The pointer also keeps an **epoch journal**: every publish records
+//! which mapping columns `(SchemaId, VersionNo)` changed relative to its
+//! predecessor (when the publisher knows — the online evolution lane
+//! does). A reader that held the snapshot at state `i` and refreshes to
+//! state `j` asks [`EpochDmm::affected_between`] for the union of columns
+//! changed in `(i, j]` and evicts only those from its `DcpmCache` instead
+//! of wiping it — the targeted-eviction path that removes the §7
+//! full-evict latency spike (see [`crate::cache::DcpmCache::advance`]).
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 
 use crate::matrix::dpm::DpmSet;
 use crate::message::StateI;
+use crate::schema::{SchemaId, VersionNo};
 
 /// The pipeline-wide state counter.
 #[derive(Debug, Default)]
@@ -37,6 +48,34 @@ impl StateManager {
     }
 }
 
+/// Journal entries kept; old entries fall off and force a full eviction
+/// for readers that lag further than this many publishes.
+const JOURNAL_CAP: usize = 64;
+
+/// One epoch-journal record: the state a publish installed and the mapping
+/// columns it changed relative to its predecessor (`None` = unknown diff,
+/// e.g. a store restore or a test swapping in an arbitrary set).
+#[derive(Debug)]
+struct JournalEntry {
+    state: StateI,
+    affected: Option<Vec<(SchemaId, VersionNo)>>,
+}
+
+/// The epoch journal proper: entries plus the poison floor guarding
+/// against *non-advancing* publishes. A publish whose state does not move
+/// forward (a repair republishing at the current state) changes snapshot
+/// content without changing the state number, so a reader identifying its
+/// old snapshot by state alone can no longer tell which content it held —
+/// every range starting at or below the floor must fully evict.
+#[derive(Debug, Default)]
+struct Journal {
+    entries: VecDeque<JournalEntry>,
+    /// Highest snapshot state ever published (including the initial one).
+    max_state: StateI,
+    /// Ranges with `old <= floor` are not reconstructible.
+    poison_floor: Option<StateI>,
+}
+
 /// Epoch-swapped pointer to the live immutable `ᵢ𝔇𝔓𝔐` snapshot.
 ///
 /// Readers take O(1) `Arc` clones and map against a frozen set; writers
@@ -48,11 +87,20 @@ impl StateManager {
 pub struct EpochDmm {
     current: RwLock<Arc<DpmSet>>,
     epoch: AtomicU64,
+    journal: Mutex<Journal>,
 }
 
 impl EpochDmm {
     pub fn new(dpm: Arc<DpmSet>) -> Self {
-        Self { current: RwLock::new(dpm), epoch: AtomicU64::new(0) }
+        let initial = dpm.state;
+        Self {
+            current: RwLock::new(dpm),
+            epoch: AtomicU64::new(0),
+            journal: Mutex::new(Journal {
+                max_state: initial,
+                ..Journal::default()
+            }),
+        }
     }
 
     /// The live snapshot: an O(1) pointer clone, safe to map against while
@@ -66,8 +114,51 @@ impl EpochDmm {
     /// concurrent publishers get epochs that correspond to their swap
     /// order (a reader observing epoch e always sees the snapshot
     /// published at e or newer).
+    ///
+    /// The diff against the predecessor is recorded as *unknown*, so
+    /// readers crossing this publish fall back to a full cache eviction.
+    /// Publishers that know the changed columns (the evolution lane)
+    /// use [`EpochDmm::publish_targeted`] instead.
     pub fn publish(&self, next: Arc<DpmSet>) -> u64 {
+        self.publish_entry(next, None)
+    }
+
+    /// [`EpochDmm::publish`] plus a journal record of exactly which
+    /// mapping columns changed, enabling targeted cache eviction in
+    /// readers (see [`EpochDmm::affected_between`]).
+    pub fn publish_targeted(
+        &self,
+        next: Arc<DpmSet>,
+        affected: Vec<(SchemaId, VersionNo)>,
+    ) -> u64 {
+        self.publish_entry(next, Some(affected))
+    }
+
+    fn publish_entry(
+        &self,
+        next: Arc<DpmSet>,
+        affected: Option<Vec<(SchemaId, VersionNo)>>,
+    ) -> u64 {
+        let state = next.state;
         let mut current = self.current.write().unwrap();
+        {
+            let mut journal = self.journal.lock().unwrap();
+            if state <= journal.max_state {
+                // non-advancing publish: content changed without a new
+                // state number — poison every range that starts at or
+                // below the current maximum (see [`Journal`])
+                let floor = journal.max_state;
+                journal.poison_floor = Some(
+                    journal.poison_floor.map_or(floor, |f| f.max(floor)),
+                );
+            } else {
+                journal.max_state = state;
+            }
+            journal.entries.push_back(JournalEntry { state, affected });
+            while journal.entries.len() > JOURNAL_CAP {
+                journal.entries.pop_front();
+            }
+        }
         *current = next;
         self.epoch.fetch_add(1, Ordering::AcqRel) + 1
     }
@@ -75,6 +166,49 @@ impl EpochDmm {
     /// Current epoch (bumped once per publish).
     pub fn epoch(&self) -> u64 {
         self.epoch.load(Ordering::Acquire)
+    }
+
+    /// The union of mapping columns changed between the snapshot at state
+    /// `old` and the snapshot at state `new`, if the journal covers every
+    /// transition in `(old, new]` with a known diff. `None` means the
+    /// range is not reconstructible (journal truncated, an unknown-diff
+    /// publish in between, or a non-advancing state) and the caller must
+    /// fall back to a full cache eviction — always safe, never stale.
+    pub fn affected_between(
+        &self,
+        old: StateI,
+        new: StateI,
+    ) -> Option<Vec<(SchemaId, VersionNo)>> {
+        if new <= old {
+            return None;
+        }
+        let journal = self.journal.lock().unwrap();
+        if journal.poison_floor.is_some_and(|floor| old <= floor) {
+            // a non-advancing publish changed content under this reader's
+            // state number — only a full eviction is safe
+            return None;
+        }
+        let mut out: Vec<(SchemaId, VersionNo)> = Vec::new();
+        let mut covered: Vec<u64> = Vec::new();
+        for entry in journal.entries.iter() {
+            if entry.state <= old || entry.state > new {
+                continue;
+            }
+            let cols = entry.affected.as_ref()?;
+            for &c in cols {
+                if !out.contains(&c) {
+                    out.push(c);
+                }
+            }
+            if !covered.contains(&entry.state.0) {
+                covered.push(entry.state.0);
+            }
+        }
+        if covered.len() as u64 == new.0 - old.0 {
+            Some(out)
+        } else {
+            None
+        }
     }
 }
 
@@ -120,5 +254,79 @@ mod tests {
         all.dedup();
         assert_eq!(all.len(), 800);
         assert_eq!(s.current(), StateI(800));
+    }
+
+    #[test]
+    fn journal_reconstructs_targeted_ranges() {
+        let dmm = EpochDmm::new(Arc::new(DpmSet::new(StateI(0))));
+        let s1 = (SchemaId(1), VersionNo(4));
+        let s2 = (SchemaId(2), VersionNo(1));
+        dmm.publish_targeted(Arc::new(DpmSet::new(StateI(1))), vec![s1]);
+        dmm.publish_targeted(Arc::new(DpmSet::new(StateI(2))), vec![s2, s1]);
+        // single step
+        assert_eq!(
+            dmm.affected_between(StateI(1), StateI(2)),
+            Some(vec![s2, s1])
+        );
+        // two-step union, deduplicated
+        assert_eq!(
+            dmm.affected_between(StateI(0), StateI(2)),
+            Some(vec![s1, s2])
+        );
+        // non-advancing or reversed ranges are unknown
+        assert_eq!(dmm.affected_between(StateI(2), StateI(2)), None);
+        assert_eq!(dmm.affected_between(StateI(2), StateI(0)), None);
+        // a gap the journal never saw is unknown
+        assert_eq!(dmm.affected_between(StateI(0), StateI(9)), None);
+    }
+
+    #[test]
+    fn unknown_diff_publish_poisons_the_range() {
+        let dmm = EpochDmm::new(Arc::new(DpmSet::new(StateI(0))));
+        let s1 = (SchemaId(1), VersionNo(1));
+        dmm.publish_targeted(Arc::new(DpmSet::new(StateI(1))), vec![s1]);
+        // a restore-style publish with no diff information
+        dmm.publish(Arc::new(DpmSet::new(StateI(2))));
+        dmm.publish_targeted(Arc::new(DpmSet::new(StateI(3))), vec![s1]);
+        assert_eq!(dmm.affected_between(StateI(0), StateI(1)), Some(vec![s1]));
+        assert_eq!(dmm.affected_between(StateI(2), StateI(3)), Some(vec![s1]));
+        // any range crossing the unknown publish must full-evict
+        assert_eq!(dmm.affected_between(StateI(1), StateI(2)), None);
+        assert_eq!(dmm.affected_between(StateI(0), StateI(3)), None);
+    }
+
+    #[test]
+    fn non_advancing_publish_poisons_older_readers() {
+        let dmm = EpochDmm::new(Arc::new(DpmSet::new(StateI(0))));
+        let c = (SchemaId(1), VersionNo(1));
+        dmm.publish_targeted(Arc::new(DpmSet::new(StateI(1))), vec![c]);
+        // a repair republishes at the SAME state: content may differ while
+        // the state number does not
+        dmm.publish(Arc::new(DpmSet::new(StateI(1))));
+        dmm.publish_targeted(Arc::new(DpmSet::new(StateI(2))), vec![c]);
+        // a reader that held "state 1" cannot know WHICH state-1 snapshot
+        // it cached from — it must fully evict
+        assert_eq!(dmm.affected_between(StateI(1), StateI(2)), None);
+        assert_eq!(dmm.affected_between(StateI(0), StateI(2)), None);
+        // readers whose snapshot postdates the anomaly regain targeted
+        // eviction
+        dmm.publish_targeted(Arc::new(DpmSet::new(StateI(3))), vec![c]);
+        assert_eq!(
+            dmm.affected_between(StateI(2), StateI(3)),
+            Some(vec![c])
+        );
+    }
+
+    #[test]
+    fn journal_is_bounded() {
+        let dmm = EpochDmm::new(Arc::new(DpmSet::new(StateI(0))));
+        for i in 1..=(JOURNAL_CAP as u64 + 10) {
+            dmm.publish_targeted(Arc::new(DpmSet::new(StateI(i))), vec![]);
+        }
+        // recent ranges still resolve...
+        let hi = JOURNAL_CAP as u64 + 10;
+        assert!(dmm.affected_between(StateI(hi - 5), StateI(hi)).is_some());
+        // ...but ranges starting before the truncation horizon do not
+        assert_eq!(dmm.affected_between(StateI(0), StateI(hi)), None);
     }
 }

@@ -21,10 +21,14 @@
 //!   lakehouse, audit mirror — and yours).
 //! - [`coordinator`] — the METL app: pipeline wiring via
 //!   [`coordinator::pipeline::PipelineBuilder`], per-sink consumer
-//!   groups, state-i sync, update workflows, error management,
-//!   horizontal scaling, bulk lane.
+//!   groups, state-i sync, the online schema-evolution lane
+//!   ([`coordinator::evolution`]), error management, horizontal scaling,
+//!   bulk lane.
 //! - [`runtime`] — PJRT loader executing the AOT-compiled JAX/Pallas bulk
 //!   mapping kernels from `artifacts/`.
+//!
+//! `ARCHITECTURE.md` at the repository root maps every paper section to
+//! its module and documents the epoch lifecycle end to end.
 
 pub mod broker;
 pub mod cache;
@@ -47,12 +51,19 @@ pub mod xla_stub;
 /// Convenience prelude for examples and benches.
 pub mod prelude {
     pub use crate::broker::{Broker, Consumer, Topic};
+    pub use crate::cache::EvictMode;
     pub use crate::cdm::{CdmAttrId, CdmTree, CdmType, CdmVersionNo, EntityId};
+    pub use crate::coordinator::evolution::{
+        ChangeOutcome, EvolutionController,
+    };
     pub use crate::coordinator::pipeline::{Pipeline, PipelineBuilder};
     pub use crate::sink::{
         AuditMirrorSink, DwSink, JsonlSink, MlSink, SinkConnector, SinkStats,
     };
-    pub use crate::source::{Connector, SourceConnector, SourceStats};
+    pub use crate::source::{
+        Connector, DdlQueue, SchemaChange, SchemaChangeEvent,
+        SchemaChangeSource, SourceConnector, SourceStats,
+    };
     pub use crate::mapper::{baseline::BaselineMapper, parallel::ParallelMapper};
     pub use crate::matrix::{
         dpm::DpmSet, dusb::DusbSet, BlockKey, MappingMatrix,

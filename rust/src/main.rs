@@ -24,7 +24,7 @@ use metl::workload;
 fn usage() -> ! {
     eprintln!(
         "usage: metl <command> [--profile small|paper_day|eos_scale] [--config FILE]\n\
-         \x20                   [--sinks dw,ml,jsonl,audit]\n\
+         \x20                   [--sinks dw,ml,jsonl,audit] [--evict targeted|full]\n\
          \n\
          commands:\n\
            run        [--instances N]   simulate a day trace end to end\n\
@@ -93,6 +93,11 @@ fn load_config(args: &Args) -> Result<PipelineConfig> {
     if let Some(list) = args.get("sinks") {
         cfg.sinks = metl::config::parse_string_list(list);
     }
+    if let Some(mode) = args.get("evict") {
+        cfg.evict = mode
+            .parse::<metl::cache::EvictMode>()
+            .map_err(|e| anyhow::anyhow!(e))?;
+    }
     Ok(cfg)
 }
 
@@ -149,6 +154,8 @@ fn cmd_serve(args: &Args, cfg: PipelineConfig) -> Result<()> {
             let service = rng.gen_range(pipeline.cfg.n_services as u64) as usize;
             let _ = pipeline.apply_schema_change(service);
         }
+        // drain wire-observed schema changes (the online evolution lane)
+        pipeline.evolution.pump(&pipeline);
         // consume + map + sink
         loop {
             let batch = consumer.poll(128);

@@ -50,6 +50,11 @@ impl ParallelMapper {
         self.dpm.state
     }
 
+    /// The snapshot this mapper currently maps against.
+    pub fn dpm(&self) -> &Arc<DpmSet> {
+        &self.dpm
+    }
+
     /// Swap in a new DMM snapshot after an update (state i+1).
     pub fn replace_dpm(&mut self, dpm: Arc<DpmSet>) {
         self.dpm = dpm;

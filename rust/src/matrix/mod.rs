@@ -11,6 +11,9 @@
 //! we follow the *figures* (and the `m_qp` index order): rows are CDM
 //! attributes `c_q`, columns are extracting attributes `a_p`, and the
 //! estimated row:column ratio is 1:100 (§5.2).
+//!
+//! The full paper-section → module map and the epoch lifecycle around
+//! these sets live in `ARCHITECTURE.md` at the repository root.
 
 pub mod blocks;
 pub mod compaction;

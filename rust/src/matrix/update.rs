@@ -80,13 +80,7 @@ pub fn auto_update(
         }
         // case 3
         ChangeCase::AddedSchemaVersion { schema, v } => {
-            let prev = dpm
-                .column_keys()
-                .into_iter()
-                .filter(|(s, pv)| *s == schema && *pv < v)
-                .map(|(_, pv)| pv)
-                .max();
-            let Some(prev) = prev else {
+            let Some(prev) = case3_source(dpm, schema, v) else {
                 report.notices.push(Notice::NeedsManualInit {
                     schema: Some(schema),
                     entity: None,
@@ -166,11 +160,54 @@ pub fn auto_update(
     report
 }
 
+/// The column set Alg-5 case 3 copies from when version `v` of `schema`
+/// is added: the latest earlier version with a column in `dpm`. Shared
+/// between [`auto_update`] and the in-band patchability screen of the
+/// evolution lane, so the two can never disagree on the copy source.
+pub fn case3_source(
+    dpm: &DpmSet,
+    schema: SchemaId,
+    v: VersionNo,
+) -> Option<VersionNo> {
+    dpm.column_keys()
+        .into_iter()
+        .filter(|(s, pv)| *s == schema && *pv < v)
+        .map(|(_, pv)| pv)
+        .max()
+}
+
 /// Epoch-swap variant of [`auto_update`]: build `ᵢ₊₁𝔇𝔓𝔐` off to the side
 /// from an immutable snapshot. The live set keeps serving Alg 6 unchanged
 /// while this runs; the caller publishes the returned set with a single
 /// pointer swap (see `coordinator::state::EpochDmm`), so schema-change
 /// storms never stall in-flight mapping.
+///
+/// ```
+/// use metl::matrix::dpm::DpmSet;
+/// use metl::matrix::fixtures::{fig6_matrix, fig6_trees};
+/// use metl::matrix::update::{prepare_update, ChangeCase};
+/// use metl::message::StateI;
+/// use metl::schema::ExtractType;
+///
+/// let (mut tree, cdm) = fig6_trees();
+/// let matrix = fig6_matrix(&tree, &cdm);
+/// let live = DpmSet::from_matrix(&matrix, &tree, &cdm, StateI(0)).unwrap();
+/// // figure-6 event (1): a new extracting version s1.v3 (a7 ≡ a4 ≡ a1)
+/// let s1 = tree.schema_by_name("s1").unwrap();
+/// let v3 = tree.add_version(s1, &[("a1".into(), ExtractType::Int64, true)]);
+/// let (next, report) = prepare_update(
+///     &live,
+///     &tree,
+///     &cdm,
+///     ChangeCase::AddedSchemaVersion { schema: s1, v: v3 },
+///     StateI(1),
+/// );
+/// // the live snapshot is untouched; the successor carries the new column
+/// assert_eq!(live.state, StateI(0));
+/// assert_eq!(next.state, StateI(1));
+/// assert_eq!(report.blocks_added, 1);
+/// assert_eq!(next.column(s1, v3).len(), 1);
+/// ```
 pub fn prepare_update(
     current: &DpmSet,
     tree: &SchemaTree,

@@ -5,7 +5,7 @@
 use super::InMessage;
 
 /// CDC operation kinds (Debezium op codes c/u/d, plus schema-change
-//  notifications which the pipeline's control lane consumes).
+/// notifications which the pipeline's control lane consumes).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum CdcOp {
     Create,

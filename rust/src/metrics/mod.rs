@@ -244,6 +244,12 @@ pub struct PipelineMetrics {
     pub sync_retries: Counter,
     /// DMM updates applied (state transitions).
     pub dmm_updates: Counter,
+    /// Schema-change events rejected as incompatible by the evolution
+    /// lane (epoch and state untouched).
+    pub rejected_changes: Counter,
+    /// Schema-change events observed but not yet applied (the evolution
+    /// lane's backlog — how far the published epoch lags the wire).
+    pub epoch_lag: Gauge,
     /// Events served through the XLA bulk lane.
     pub bulk_events: Counter,
     /// Published DMM epoch (bumped on every snapshot swap).
@@ -256,6 +262,8 @@ pub struct PipelineMetrics {
     pub map_latency: LatencyChannel,
     /// End-to-end latency source-commit → DW-visible.
     pub e2e_latency: LatencyChannel,
+    /// Per-change evolution-lane latency: event consumed → new epoch live.
+    pub update_latency: LatencyChannel,
 }
 
 impl PipelineMetrics {
@@ -283,6 +291,17 @@ impl PipelineMetrics {
             "| dmm updates       {:>12}  epoch    {:>9} |\n",
             self.dmm_updates.get(),
             self.dmm_epoch.get()
+        ));
+        out.push_str(&format!(
+            "| evo rejected      {:>12}  epoch lag{:>9} |\n",
+            self.rejected_changes.get(),
+            self.epoch_lag.get()
+        ));
+        let u = self.update_latency.summary();
+        out.push_str(&format!(
+            "| update latency    mean {:>9} p99 {:>9}    |\n",
+            format_ns(u.mean),
+            format_ns(u.p99)
         ));
         out.push_str(&format!(
             "| map latency  mean {:>9} sigma {:>9} n={:<6} |\n",
@@ -395,9 +414,15 @@ mod tests {
         m.events_in.add(1168);
         m.transformations.add(1168);
         m.map_latency.record(Duration::from_millis(39));
+        m.rejected_changes.add(2);
+        m.epoch_lag.set(4);
+        m.update_latency.record(Duration::from_millis(7));
         let d = m.dashboard(1024, 0.97);
         assert!(d.contains("1168"));
         assert!(d.contains("39.00ms"));
         assert!(d.contains("97.00%"));
+        assert!(d.contains("evo rejected"));
+        assert!(d.contains("update latency"));
+        assert!(d.contains("7.00ms"));
     }
 }

@@ -18,6 +18,22 @@ pub enum Compatibility {
     None,
 }
 
+impl std::str::FromStr for Compatibility {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "backward" => Ok(Compatibility::Backward),
+            "forward" => Ok(Compatibility::Forward),
+            "full" => Ok(Compatibility::Full),
+            "none" => Ok(Compatibility::None),
+            other => Err(format!(
+                "unknown compatibility {other:?} (backward|forward|full|none)"
+            )),
+        }
+    }
+}
+
 /// The diff between two consecutive schema versions.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct VersionDiff {
@@ -27,6 +43,23 @@ pub struct VersionDiff {
 }
 
 impl VersionDiff {
+    /// Diff two full field lists `(name, type, optional)` by name: fields
+    /// only in `next` are additions, fields only in `prev` are removals,
+    /// and a shared name with a different type is a retype.
+    ///
+    /// ```
+    /// use metl::schema::{ExtractType, VersionDiff};
+    ///
+    /// let prev = vec![("id".to_string(), ExtractType::Int64, false)];
+    /// let next = vec![
+    ///     ("id".to_string(), ExtractType::Int64, false),
+    ///     ("currency".to_string(), ExtractType::Varchar, true),
+    /// ];
+    /// let diff = VersionDiff::compute(&prev, &next);
+    /// assert_eq!(diff.added, vec!["currency".to_string()]);
+    /// assert!(diff.removed.is_empty() && diff.retyped.is_empty());
+    /// assert_eq!(diff.change_count(), 1);
+    /// ```
     pub fn compute(
         prev: &[(String, ExtractType, bool)],
         next: &[(String, ExtractType, bool)],
@@ -239,6 +272,15 @@ mod tests {
             Err(EvolutionError::TooManyChanges(2))
         );
         assert!(validate(Compatibility::Backward, &prev, &two, false).is_ok());
+    }
+
+    #[test]
+    fn compatibility_parses_from_config_names() {
+        assert_eq!("backward".parse(), Ok(Compatibility::Backward));
+        assert_eq!("forward".parse(), Ok(Compatibility::Forward));
+        assert_eq!("full".parse(), Ok(Compatibility::Full));
+        assert_eq!("none".parse(), Ok(Compatibility::None));
+        assert!("sideways".parse::<Compatibility>().is_err());
     }
 
     #[test]

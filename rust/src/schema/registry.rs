@@ -64,16 +64,7 @@ impl Registry {
         let mut tree = self.tree.write().unwrap();
         let prev_fields: Vec<(String, ExtractType, bool)> = tree
             .latest_version(schema)
-            .and_then(|v| tree.version(schema, v).cloned())
-            .map(|sv| {
-                sv.attrs
-                    .iter()
-                    .map(|a| {
-                        let at = tree.attr(*a);
-                        (at.name.clone(), at.ty, at.optional)
-                    })
-                    .collect()
-            })
+            .and_then(|v| tree.field_list(schema, v))
             .unwrap_or_default();
         let diff = if prev_fields.is_empty() {
             // first version: no evolution check

@@ -178,6 +178,26 @@ impl SchemaTree {
         &self.schemas[schema.0 as usize].versions
     }
 
+    /// The `(name, type, optional)` field list of one registered version —
+    /// the registry-facing shape used by evolution validation, change
+    /// events and version registration.
+    pub fn field_list(
+        &self,
+        schema: SchemaId,
+        v: VersionNo,
+    ) -> Option<Vec<(String, ExtractType, bool)>> {
+        let sv = self.version(schema, v)?;
+        Some(
+            sv.attrs
+                .iter()
+                .map(|&a| {
+                    let at = self.attr(a);
+                    (at.name.clone(), at.ty, at.optional)
+                })
+                .collect(),
+        )
+    }
+
     pub fn attr(&self, id: AttrId) -> &Attribute {
         &self.attrs[id.index()]
     }
@@ -315,6 +335,19 @@ mod tests {
         let sv1 = t.version(s, v1).unwrap();
         let a_v2 = t.version(s, v2).unwrap().attrs[0];
         assert_eq!(sv1.local_of(a_v2), None);
+    }
+
+    #[test]
+    fn field_list_round_trips_registration() {
+        let mut t = SchemaTree::new();
+        let s = t.add_schema("s1", "t1");
+        let fields = vec![
+            ("a".to_string(), ExtractType::Int64, false),
+            ("b".to_string(), ExtractType::Varchar, true),
+        ];
+        let v = t.add_version(s, &fields);
+        assert_eq!(t.field_list(s, v), Some(fields));
+        assert_eq!(t.field_list(s, VersionNo(9)), None);
     }
 
     #[test]

@@ -132,6 +132,11 @@ impl DwTable {
     pub fn row(&self, key: u64) -> Option<&Vec<(CdmAttrId, Json)>> {
         self.rows.get(&key)
     }
+
+    /// All rows as (key, fields), unordered (warehouse-state audits).
+    pub fn rows(&self) -> impl Iterator<Item = (u64, &Vec<(CdmAttrId, Json)>)> {
+        self.rows.iter().map(|(k, v)| (*k, v))
+    }
 }
 
 /// The data-warehouse sink (backend name `"dw"`).
@@ -149,6 +154,13 @@ impl DwSink {
 
     pub fn table(&self, entity: EntityId, w: CdmVersionNo) -> Option<&DwTable> {
         self.tables.get(&(entity, w))
+    }
+
+    /// All materialized tables, unordered (warehouse-state audits).
+    pub fn tables(
+        &self,
+    ) -> impl Iterator<Item = ((EntityId, CdmVersionNo), &DwTable)> {
+        self.tables.iter().map(|(k, t)| (*k, t))
     }
 
     pub fn total_rows(&self) -> usize {

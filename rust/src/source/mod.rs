@@ -20,14 +20,27 @@
 //! rests on), serve table snapshots for initial loads (§3.4/§6.4), and
 //! expose cheap counters via [`SourceConnector::snapshot_stats`].
 //! [`Connector`] is the built-in Debezium-sim implementation.
+//!
+//! # The `SchemaChangeSource` trait
+//!
+//! CDC connectors also observe **schema changes**: Debezium publishes DDL
+//! statements to a schema-change topic, and the Apicurio-sim registry
+//! emits version events. [`SchemaChangeSource`] is the ingress seam for
+//! that control stream — implementors enqueue [`SchemaChangeEvent`]s (a
+//! new full field list or a version retirement, with the observed DDL
+//! riding along) and the online evolution lane
+//! ([`crate::coordinator::evolution::EvolutionController`]) polls and
+//! applies them while mapping continues. [`DdlQueue`] is the built-in
+//! queue-backed implementation.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use crate::broker::Topic;
 use crate::message::cdc::{CdcEvent, CdcOp, CdcSource};
 use crate::message::{InMessage, StateI};
-use crate::schema::{SchemaId, SchemaTree, VersionNo};
+use crate::schema::{ExtractType, SchemaId, SchemaTree, VersionNo};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -308,6 +321,112 @@ impl SourceConnector for Connector {
     }
 }
 
+/// The change one [`SchemaChangeEvent`] proposes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SchemaChange {
+    /// A new version of the schema: the registry-style *full* field list
+    /// `(name, type, optional)` the next version should carry.
+    AddVersion { fields: Vec<(String, ExtractType, bool)> },
+    /// Retirement of one registered version (Alg-5 case 1 trigger).
+    DropVersion { v: VersionNo },
+}
+
+/// A Debezium-style schema-change event observed on the wire: the DDL the
+/// connector saw plus the structured change the evolution lane validates
+/// and applies.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchemaChangeEvent {
+    pub schema: SchemaId,
+    /// Human-readable DDL (the schema-change-topic payload).
+    pub ddl: String,
+    pub change: SchemaChange,
+    /// Observation timestamp, µs.
+    pub ts_us: u64,
+}
+
+impl SchemaChangeEvent {
+    /// A new-version event carrying the full field list.
+    pub fn add_version(
+        schema: SchemaId,
+        fields: Vec<(String, ExtractType, bool)>,
+        ts_us: u64,
+    ) -> Self {
+        let ddl = format!(
+            "ALTER TABLE s{} -- registry proposes {} attribute(s)",
+            schema.0,
+            fields.len()
+        );
+        Self { schema, ddl, change: SchemaChange::AddVersion { fields }, ts_us }
+    }
+
+    /// A version-retirement event.
+    pub fn drop_version(schema: SchemaId, v: VersionNo, ts_us: u64) -> Self {
+        Self {
+            schema,
+            ddl: format!("DROP VERSION v{} OF s{}", v.0, schema.0),
+            change: SchemaChange::DropVersion { v },
+            ts_us,
+        }
+    }
+}
+
+/// An ingress backend for the schema-change control stream (Debezium DDL
+/// topic / registry webhook sim). Object-safe; the evolution lane polls
+/// it between mapping batches, so implementations must be cheap and
+/// non-blocking.
+pub trait SchemaChangeSource: Send + Sync {
+    /// Stable source name (metrics/debug label).
+    fn name(&self) -> &str;
+
+    /// Enqueue one observed change, in arrival order.
+    fn publish_change(&self, ev: SchemaChangeEvent);
+
+    /// Drain the events observed since the last poll, in arrival order.
+    fn poll_changes(&self) -> Vec<SchemaChangeEvent>;
+
+    /// Events observed but not yet polled — the `epoch_lag` gauge feed.
+    fn pending(&self) -> usize;
+}
+
+/// Built-in queue-backed [`SchemaChangeSource`]: the Debezium
+/// schema-change-topic simulation the pipeline wires by default. Tests
+/// and the CLI push events in; the evolution lane drains them.
+#[derive(Debug, Default)]
+pub struct DdlQueue {
+    queue: Mutex<VecDeque<SchemaChangeEvent>>,
+    observed: AtomicU64,
+}
+
+impl DdlQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Total events ever observed (monotonic; `pending` is the backlog).
+    pub fn observed(&self) -> u64 {
+        self.observed.load(Ordering::Relaxed)
+    }
+}
+
+impl SchemaChangeSource for DdlQueue {
+    fn name(&self) -> &str {
+        "ddl"
+    }
+
+    fn publish_change(&self, ev: SchemaChangeEvent) {
+        self.queue.lock().unwrap().push_back(ev);
+        self.observed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn poll_changes(&self) -> Vec<SchemaChangeEvent> {
+        self.queue.lock().unwrap().drain(..).collect()
+    }
+
+    fn pending(&self) -> usize {
+        self.queue.lock().unwrap().len()
+    }
+}
+
 /// Generate a random row for a schema version (used by workloads/tests).
 pub fn random_row(
     tree: &SchemaTree,
@@ -474,6 +593,34 @@ mod tests {
         assert_eq!(r.values[0].as_f64(), Some(1.0));
         assert_eq!(r.values[1].as_f64(), Some(10.0));
         assert!(r.values[2].is_null());
+    }
+
+    #[test]
+    fn ddl_queue_preserves_arrival_order() {
+        let q = DdlQueue::new();
+        assert_eq!(q.pending(), 0);
+        q.publish_change(SchemaChangeEvent::add_version(
+            SchemaId(1),
+            vec![("a".into(), ExtractType::Int64, true)],
+            5,
+        ));
+        q.publish_change(SchemaChangeEvent::drop_version(
+            SchemaId(1),
+            VersionNo(1),
+            6,
+        ));
+        assert_eq!(q.pending(), 2);
+        assert_eq!(q.observed(), 2);
+        let drained = q.poll_changes();
+        assert_eq!(drained.len(), 2);
+        assert!(matches!(drained[0].change, SchemaChange::AddVersion { .. }));
+        assert!(matches!(
+            drained[1].change,
+            SchemaChange::DropVersion { v: VersionNo(1) }
+        ));
+        assert!(drained[0].ddl.contains("ALTER TABLE"));
+        assert_eq!(q.pending(), 0);
+        assert!(q.poll_changes().is_empty());
     }
 
     #[test]

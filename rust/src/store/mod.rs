@@ -3,6 +3,13 @@
 //! in-memory `ᵢ𝔇𝔓𝔐` is recreated through the decompaction "view"
 //! (Alg 4 + Alg 2). An append-only update log stands in for the WAL and
 //! lets operators audit the state-i history.
+//!
+//! Writers: every change accepted by the evolution lane
+//! ([`crate::coordinator::evolution`]) saves the new DUSB and appends an
+//! audit line. Readers: the restart path
+//! (`Pipeline::restore_from_store`) recreates the DPM through
+//! [`MatrixStore::view_recreate_dpm`] and publishes it as a fresh epoch
+//! (with an unknown diff, so caches fully evict once).
 
 use std::fs;
 use std::path::{Path, PathBuf};

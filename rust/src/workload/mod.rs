@@ -4,7 +4,11 @@
 //! §2, "EOS production traces" row).
 //!
 //! Everything is seeded and deterministic so paper-figure regenerations
-//! are reproducible.
+//! are reproducible. [`TraceOp::SchemaChange`] steps resolve through the
+//! online evolution lane ([`crate::coordinator::evolution`]): the
+//! evolved field list ([`evolved_fields`]) is published as a
+//! registry-style change event and applied with one epoch swap while
+//! mapping continues.
 
 use crate::cdm::{CdmType, CdmTree};
 use crate::config::PipelineConfig;
@@ -277,15 +281,7 @@ pub fn evolved_fields(
     schema: crate::schema::SchemaId,
 ) -> Vec<(String, ExtractType, bool)> {
     let latest = tree.latest_version(schema).expect("schema has versions");
-    let sv = tree.version(schema, latest).expect("live");
-    let mut fields: Vec<(String, ExtractType, bool)> = sv
-        .attrs
-        .iter()
-        .map(|&a| {
-            let at = tree.attr(a);
-            (at.name.clone(), at.ty, at.optional)
-        })
-        .collect();
+    let mut fields = tree.field_list(schema, latest).expect("live");
     fields.push((
         format!("evo{}", tree.n_attr_ids()),
         ExtractType::Varchar,

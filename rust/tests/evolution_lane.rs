@@ -1,0 +1,332 @@
+//! End-to-end test of the online schema-evolution lane: a live change
+//! storm (add an attribute + remove an attribute + one retype that must
+//! be rejected) applied mid-stream while 4 shards keep mapping produces
+//! the same warehouse state as a cold restart that saw the final schema
+//! before any traffic — zero dropped or mis-mapped messages, the epoch
+//! gauge incremented exactly once per accepted change.
+//!
+//! DML is driven with deterministic values (a pure function of attribute
+//! name + key) instead of the pipeline's seeded generator, so the live
+//! and cold runs write byte-identical rows wherever their schemas agree.
+
+use metl::config::PipelineConfig;
+use metl::coordinator::evolution::ChangeOutcome;
+use metl::coordinator::pipeline::Pipeline;
+use metl::coordinator::shard;
+use metl::matrix::dpm::DpmSet;
+use metl::message::StateI;
+use metl::schema::{ExtractType, SchemaId};
+use metl::sink::DwSink;
+use metl::source::{Dml, Row, SchemaChangeEvent};
+use metl::util::json::Json;
+use metl::workload::Landscape;
+
+fn evo_cfg() -> PipelineConfig {
+    let mut cfg = PipelineConfig::small();
+    cfg.sinks = vec!["dw".into()];
+    cfg
+}
+
+/// Deterministic, non-null value for one attribute — identical across
+/// runs and independent of the attribute's position in the version.
+fn value_for(ty: ExtractType, key: u64, name: &str) -> Json {
+    match ty {
+        ExtractType::Varchar | ExtractType::Bytes | ExtractType::Uuid => {
+            Json::Str(format!("{name}-{key}"))
+        }
+        ExtractType::Boolean => Json::Bool(key % 2 == 0),
+        _ => Json::Num((key * 31 + name.len() as u64) as f64),
+    }
+}
+
+/// Apply one deterministic DML against a service's table (at whatever
+/// schema version is live right now) and publish the CDC event.
+fn push_dml(p: &Pipeline, service: usize, key: u64, update: bool) {
+    let mut land = p.landscape.write().unwrap();
+    let state = p.state.current();
+    let Landscape { tree, dbs, .. } = &mut *land;
+    let db = &mut dbs[service];
+    let (schema, version) = (db.tables[0].schema, db.tables[0].live_version);
+    let sv = tree.version(schema, version).unwrap();
+    let values: Vec<Json> = sv
+        .attrs
+        .iter()
+        .map(|&a| {
+            let at = tree.attr(a);
+            value_for(at.ty, key, &at.name)
+        })
+        .collect();
+    let row = Row { key, values };
+    let dml = if update {
+        Dml::Update { table: 0, row }
+    } else {
+        Dml::Insert { table: 0, row }
+    };
+    let ev = db
+        .apply(tree, dml, state, key.wrapping_mul(1000))
+        .expect("dml applies");
+    p.connector().publish(&p.cdc_topic, ev);
+}
+
+/// The latest registered field list of a schema.
+fn fields_of(p: &Pipeline, schema: SchemaId) -> Vec<(String, ExtractType, bool)> {
+    let land = p.landscape.read().unwrap();
+    let latest = land.tree.latest_version(schema).unwrap();
+    land.tree.field_list(schema, latest).unwrap()
+}
+
+fn push_change(
+    p: &Pipeline,
+    schema: SchemaId,
+    fields: Vec<(String, ExtractType, bool)>,
+) -> ChangeOutcome {
+    p.evolution
+        .source()
+        .publish_change(SchemaChangeEvent::add_version(schema, fields, 0));
+    p.evolution.pump(p).pop().unwrap()
+}
+
+/// The three-step change storm against `schema`: add one optional
+/// attribute, remove one optional attribute, retype the key attribute
+/// (the retype must be rejected under `Compatibility::Full`). Returns
+/// the three outcomes.
+fn change_storm(p: &Pipeline, schema: SchemaId) -> [ChangeOutcome; 3] {
+    // (1) add one optional attribute
+    let mut add = fields_of(p, schema);
+    add.push(("evolved_col".into(), ExtractType::Varchar, true));
+    let o1 = push_change(p, schema, add);
+    // (2) remove one optional attribute (the one the source retired)
+    let mut remove = fields_of(p, schema);
+    let victim = remove
+        .iter()
+        .position(|(name, _, _)| name == "evolved_col")
+        .expect("the evolved attribute to remove");
+    remove.remove(victim);
+    let o2 = push_change(p, schema, remove);
+    // (3) retype the key attribute — incompatible, must be rejected
+    let mut retype = fields_of(p, schema);
+    retype[0].1 = if retype[0].1 == ExtractType::Varchar {
+        ExtractType::Int64
+    } else {
+        ExtractType::Varchar
+    };
+    let o3 = push_change(p, schema, retype);
+    [o1, o2, o3]
+}
+
+/// The materialized warehouse state, canonically ordered.
+type DwDump = Vec<(u32, u32, u64, Vec<(u32, Json)>)>;
+
+fn dw_dump(p: &Pipeline) -> DwDump {
+    let mut out: DwDump = p
+        .with_sink("dw", |dw: &DwSink| {
+            let mut rows = Vec::new();
+            for ((entity, w), table) in dw.tables() {
+                for (key, fields) in table.rows() {
+                    let mut fields: Vec<(u32, Json)> = fields
+                        .iter()
+                        .map(|(q, v)| (q.0, v.clone()))
+                        .collect();
+                    fields.sort_by_key(|(q, _)| *q);
+                    rows.push((entity.0, w.0, key, fields));
+                }
+            }
+            rows
+        })
+        .unwrap();
+    out.sort_by(|a, b| (a.0, a.1, a.2).cmp(&(b.0, b.1, b.2)));
+    out
+}
+
+/// Drive the deterministic traffic through a live 4-shard pool: phase-1
+/// inserts (keys 1..=60) are dispatched, then `mid` runs while the
+/// workers are still mapping them (the live run applies the change storm
+/// there; the cold run is a no-op because its storm already ran), then
+/// phase-3 updates every phase-1 key and inserts fresh keys (61..=100).
+fn run_traffic<R>(p: &Pipeline, mid: impl FnOnce(&Pipeline) -> R) -> R {
+    let (report, out) = shard::run_sharded_session(p, 4, |dispatch| {
+        for key in 1..=60u64 {
+            push_dml(p, (key % 4) as usize, key, false);
+        }
+        dispatch();
+        // mid-stream: the workers are still chewing the dispatched backlog
+        let out = mid(p);
+        for key in 1..=60u64 {
+            push_dml(p, (key % 4) as usize, key, true);
+        }
+        for key in 61..=100u64 {
+            push_dml(p, (key % 4) as usize, key, false);
+        }
+        out
+    });
+    assert_eq!(report.processed, 160);
+    assert_eq!(report.shards, 4);
+    p.drain_sinks();
+    out
+}
+
+#[test]
+fn live_change_storm_matches_cold_restart_across_4_shards() {
+    // ---- live run: the storm lands while 4 shards drain the backlog ----
+    let live = Pipeline::new(evo_cfg()).unwrap();
+    let schema = live.landscape.read().unwrap().dbs[0].tables[0].schema;
+    let [o1, o2, o3] = run_traffic(&live, |p| change_storm(p, schema));
+    assert!(o1.is_applied(), "add accepted: {o1:?}");
+    assert!(o2.is_applied(), "remove accepted: {o2:?}");
+    assert!(
+        matches!(&o3, ChangeOutcome::Rejected { reason, .. }
+            if reason.contains("type changes")),
+        "retype rejected: {o3:?}"
+    );
+
+    // zero dropped or mis-mapped messages, one epoch per accepted change
+    assert_eq!(live.metrics.dead_letters.get(), 0);
+    assert_eq!(live.dlq.len(), 0);
+    assert_eq!(live.metrics.events_in.get(), 160);
+    assert_eq!(live.metrics.dmm_epoch.get(), 2);
+    assert_eq!(live.metrics.dmm_updates.get(), 2);
+    assert_eq!(live.metrics.rejected_changes.get(), 1);
+    assert_eq!(live.state.current(), StateI(2));
+    assert_eq!(live.metrics.update_latency.count(), 2);
+
+    // the live DMM equals a recompute from the mirrored ground truth
+    {
+        let land = live.landscape.read().unwrap();
+        let recomputed = DpmSet::from_matrix(
+            &land.matrix,
+            &land.tree,
+            &land.cdm,
+            live.state.current(),
+        )
+        .unwrap();
+        assert!(live.dmm.snapshot().same_elements(&recomputed));
+    }
+
+    // ---- cold restart: same changes applied before any traffic --------
+    let cold = Pipeline::new(evo_cfg()).unwrap();
+    let [c1, c2, c3] = change_storm(&cold, schema);
+    assert!(c1.is_applied() && c2.is_applied() && !c3.is_applied());
+    run_traffic(&cold, |_| ());
+    assert_eq!(cold.metrics.dead_letters.get(), 0);
+
+    // identical final schema trees...
+    assert_eq!(fields_of(&live, schema), fields_of(&cold, schema));
+    // ...and identical warehouse contents: every phase-1 key was
+    // re-written post-change, so both runs materialize the same rows
+    let live_dw = dw_dump(&live);
+    let cold_dw = dw_dump(&cold);
+    assert!(!live_dw.is_empty());
+    assert_eq!(live_dw, cold_dw);
+}
+
+#[test]
+fn in_band_unknown_version_heals_mid_stream() {
+    // the source migrates before the control event reaches METL: rows
+    // arrive stamped with a (schema, version) the DMM has no column for
+    let p = Pipeline::new(evo_cfg()).unwrap();
+    let (schema, v_new) = {
+        let mut land = p.landscape.write().unwrap();
+        let schema = land.dbs[0].tables[0].schema;
+        let latest = land.tree.latest_version(schema).unwrap();
+        let mut fields = land.tree.field_list(schema, latest).unwrap();
+        fields.push(("late_registry_col".into(), ExtractType::Varchar, true));
+        let v = land.tree.add_version(schema, &fields);
+        let Landscape { tree, dbs, .. } = &mut *land;
+        dbs[0].migrate_table(tree, 0, v);
+        (schema, v)
+    };
+    for key in 1..=10u64 {
+        push_dml(&p, 0, key, false);
+    }
+    let report = shard::run_sharded_drain(&p, 2);
+    assert_eq!(report.processed, 10);
+    // the lane patched the column in-band: no drops, one epoch, state+1
+    assert_eq!(p.metrics.dead_letters.get(), 0);
+    assert_eq!(p.evolution.in_band_updates(), 1);
+    assert!(!p.dmm.snapshot().column(schema, v_new).is_empty());
+    assert_eq!(p.metrics.dmm_epoch.get(), 1);
+    assert_eq!(p.state.current(), StateI(1));
+    p.drain_sinks();
+    let rows = p
+        .with_sink("dw", |dw: &DwSink| {
+            dw.tables().map(|(_, t)| t.len()).sum::<usize>()
+        })
+        .unwrap();
+    assert!(rows > 0);
+}
+
+#[test]
+fn rejected_change_leaves_mapping_untouched() {
+    let p = Pipeline::new(evo_cfg()).unwrap();
+    let schema = p.landscape.read().unwrap().dbs[0].tables[0].schema;
+    let before_fields = fields_of(&p, schema);
+    let mut retype = before_fields.clone();
+    retype[0].1 = if retype[0].1 == ExtractType::Varchar {
+        ExtractType::Int64
+    } else {
+        ExtractType::Varchar
+    };
+    let outcome = push_change(&p, schema, retype);
+    assert!(matches!(outcome, ChangeOutcome::Rejected { .. }));
+    assert_eq!(p.metrics.rejected_changes.get(), 1);
+    assert_eq!(p.metrics.dmm_epoch.get(), 0);
+    assert_eq!(p.metrics.dmm_updates.get(), 0);
+    assert_eq!(p.state.current(), StateI(0));
+    assert_eq!(fields_of(&p, schema), before_fields);
+    // traffic keeps flowing at the old state with zero retries or drops
+    for key in 1..=8u64 {
+        push_dml(&p, 0, key, false);
+    }
+    let report = shard::run_sharded_drain(&p, 2);
+    assert_eq!(report.processed, 8);
+    assert_eq!(p.metrics.dead_letters.get(), 0);
+    assert_eq!(p.metrics.sync_retries.get(), 0);
+}
+
+#[test]
+fn targeted_eviction_keeps_unaffected_columns_warm() {
+    // single-lane variant: after an accepted change on schema A, the
+    // shared cache still serves schema B's column without a rebuild
+    let p = Pipeline::new(evo_cfg()).unwrap();
+    let schema_a = p.landscape.read().unwrap().dbs[0].tables[0].schema;
+    // warm the cache for both schemas
+    for key in 1..=8u64 {
+        push_dml(&p, 0, key, false);
+        push_dml(&p, 1, key, false);
+    }
+    let mut consumer =
+        metl::broker::Consumer::new(p.cdc_topic.clone(), 0, 1);
+    for (_, rec) in consumer.poll(usize::MAX) {
+        p.process_event(&rec.value);
+    }
+    let warm_len = p.cache.len();
+    assert!(warm_len >= 2);
+    // one accepted change on schema A
+    let mut add = fields_of(&p, schema_a);
+    add.push(("warm_test_col".into(), ExtractType::Varchar, true));
+    assert!(push_change(&p, schema_a, add).is_applied());
+    // targeted eviction dropped at most the affected column
+    assert!(p.cache.len() >= warm_len - 1);
+    assert_eq!(
+        p.cache
+            .stats
+            .targeted_evictions
+            .load(std::sync::atomic::Ordering::Relaxed),
+        1
+    );
+    assert_eq!(
+        p.cache.stats.evictions.load(std::sync::atomic::Ordering::Relaxed),
+        0
+    );
+    // schema B's column is served as a hit under the new state
+    let hits_before =
+        p.cache.stats.hits.load(std::sync::atomic::Ordering::Relaxed);
+    push_dml(&p, 1, 99, false);
+    for (_, rec) in consumer.poll(usize::MAX) {
+        p.process_event(&rec.value);
+    }
+    assert!(
+        p.cache.stats.hits.load(std::sync::atomic::Ordering::Relaxed)
+            > hits_before
+    );
+}

@@ -169,9 +169,12 @@ fn consumer_crash_redelivery() {
     assert!(dupes > 0);
 }
 
-/// Deleting a schema version mid-stream: in-flight events of that version
-/// dead-letter with UnknownColumn (offset reset + initial load is the
-/// §3.4 recovery), newer-version events keep flowing.
+/// A registered version's column vanishing from the DMM mid-stream no
+/// longer dead-letters: the in-band evolution lane re-derives the column
+/// from the previous version (Alg-5 case 3) and the event maps against
+/// the fresh epoch. Events of a version the registry *never* saw still
+/// dead-letter — the §3.4 offset-reset + initial-load recovery applies,
+/// exercised here by re-deriving the DMM from ground truth and replaying.
 #[test]
 fn version_deletion_mid_stream() {
     let p = Pipeline::new(PipelineConfig::small()).unwrap();
@@ -192,8 +195,39 @@ fn version_deletion_mid_stream() {
     for (_, rec) in consumer.poll(64) {
         p.process_event(&rec.value);
     }
-    assert_eq!(p.dlq.len(), 1);
-    // recovery: restore the DMM (re-derive from ground truth), replay DLQ
+    // the in-band lane healed the column: no dead letters, one patch epoch
+    assert_eq!(p.dlq.len(), 0);
+    assert_eq!(p.evolution.in_band_updates(), 1);
+    assert!(!p.dmm.snapshot().column(schema, live).is_empty());
+    assert!(p.metrics.messages_out.get() > 0);
+
+    // a version the registry never saw cannot heal: it dead-letters, and
+    // the recovery is re-deriving the DMM from ground truth + DLQ replay
+    let rogue = Arc::new(metl::message::cdc::CdcEvent {
+        op: metl::message::cdc::CdcOp::Create,
+        before: None,
+        after: Some(metl::message::InMessage {
+            key: 123,
+            schema,
+            version: metl::schema::VersionNo(99),
+            state: p.state.current(),
+            ts_us: 1,
+            fields: vec![(
+                metl::schema::AttrId(0),
+                metl::util::json::Json::Num(1.0),
+            )],
+        }),
+        source: metl::message::cdc::CdcSource {
+            connector: "postgresql".into(),
+            db: "svc0".into(),
+            table: "main".into(),
+        },
+        ts_us: 1,
+    });
+    p.process_event(&rogue);
+    assert_eq!(p.dlq.len(), 1, "unregistered version dead-letters");
+    // recovery: restore the DMM (re-derive from ground truth) keeps the
+    // pipeline mappable for registered traffic
     {
         let land = p.landscape.read().unwrap();
         let dpm = DpmSet::from_matrix(
@@ -206,9 +240,11 @@ fn version_deletion_mid_stream() {
         p.dmm.publish(Arc::new(dpm));
         p.cache.evict_all(p.state.current());
     }
-    for dead in p.dlq.drain() {
-        p.process_event(&dead.event);
+    p.resolve_op(&TraceOp::Dml { service: 0, kind: DmlKind::Insert })
+        .unwrap();
+    let before_dead = p.metrics.dead_letters.get();
+    for (_, rec) in consumer.poll(64) {
+        p.process_event(&rec.value);
     }
-    assert_eq!(p.dlq.len(), 0, "replay succeeded after recovery");
-    assert!(p.metrics.messages_out.get() > 0);
+    assert_eq!(p.metrics.dead_letters.get(), before_dead);
 }
