@@ -11,7 +11,7 @@ mod harness;
 
 use std::sync::Arc;
 
-use harness::{section, Bench};
+use harness::{section, Artifact, Bench};
 use metl::cache::DcpmCache;
 use metl::config::PipelineConfig;
 use metl::mapper::parallel::ParallelMapper;
@@ -58,6 +58,7 @@ fn main() {
     let msgs = messages(&land, &cfg, 2_000);
     let dense: Vec<InMessage> = msgs.iter().map(|m| m.to_dense()).collect();
     let bench = Bench::new(2, 10);
+    let mut artifact = Artifact::new("ablation");
 
     section("(a) column cache on vs off (2000 msgs)");
     let cache = Arc::new(DcpmCache::new(StateI(0)));
@@ -78,6 +79,9 @@ fn main() {
         "  cache dividend: {:.1}x (the §7 eviction-spike mechanism)",
         cold.mean / warm.mean
     );
+    artifact.set_summary_ns("cache_on_ns", &warm);
+    artifact.set_summary_ns("cache_off_ns", &cold);
+    artifact.set_num("cache_dividend", cold.mean / warm.mean);
 
     section("(b) dense vs sparse message discipline (2000 msgs)");
     let s_dense = bench.run("dense messages (§5.5 rule)", || {
@@ -90,19 +94,22 @@ fn main() {
         "  dense dividend: {:.2}x fewer field scans",
         s_sparse.mean / s_dense.mean
     );
+    artifact.set_summary_ns("dense_msgs_ns", &s_dense);
+    artifact.set_summary_ns("sparse_msgs_ns", &s_sparse);
 
     section("(c) Alg 6 block-parallel threshold");
     for threshold in [1usize, 4, usize::MAX] {
         let mut m2 = ParallelMapper::new(Arc::clone(&dpm), Arc::clone(&cache));
         m2.block_parallel_threshold = threshold;
-        let label = match threshold {
-            1 => "always spawn (threshold 1)",
-            4 => "default (threshold 4)",
-            _ => "never spawn (sequential)",
+        let (label, key) = match threshold {
+            1 => ("always spawn (threshold 1)", "threshold_1"),
+            4 => ("default (threshold 4)", "threshold_4"),
+            _ => ("never spawn (sequential)", "threshold_seq"),
         };
-        bench.run(label, || {
+        let s = bench.run(label, || {
             dense.iter().map(|m| m2.map(m).unwrap().len()).sum::<usize>()
         });
+        artifact.set_summary_ns(&format!("block_parallel_{key}_ns"), &s);
     }
 
     section("(d) hybrid storage: resident DPM vs decompact-on-demand DUSB");
@@ -131,5 +138,9 @@ fn main() {
          ᵢ𝔇𝔘𝔖𝔅 is the storage form",
         on_demand.mean / resident.mean
     );
+    artifact.set_summary_ns("resident_dpm_ns", &resident);
+    artifact.set_summary_ns("decompact_on_demand_ns", &on_demand);
+    artifact.set_num("hybrid_dividend", on_demand.mean / resident.mean);
+    artifact.write_default().unwrap();
     println!("\nablation bench OK");
 }

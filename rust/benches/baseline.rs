@@ -1,0 +1,217 @@
+//! Bench: the checked-in performance baseline behind `BENCH_6.json`.
+//!
+//! Measures the repo's four headline axes on one binary so regressions
+//! are diffable against the committed artifact:
+//!
+//!   1. end-to-end throughput (events/s) through the Alg-6 lane,
+//!   2. per-message mapping latency (p50/p99 ns),
+//!   3. Alg-5 update latency under the targeted-eviction default,
+//!   4. the native block-permutation kernel vs the scalar Alg-6 lane on
+//!      identical message batches (the tentpole speedup).
+//!
+//! Flags (after `cargo bench --bench baseline --`):
+//!   --smoke           reduced iterations + small profile (CI shape check)
+//!   --out PATH        artifact destination (default ../BENCH_6.json from
+//!                     the crate root, i.e. the repo-root baseline)
+//!   --validate PATH   validate an existing artifact's schema and exit
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::sync::Arc;
+
+use harness::{arg_value, has_flag, section, Artifact, Bench};
+use metl::cache::DcpmCache;
+use metl::config::PipelineConfig;
+use metl::coordinator::{pipeline::Pipeline, scaler};
+use metl::mapper::kernel::KernelMode;
+use metl::mapper::parallel::ParallelMapper;
+use metl::matrix::dpm::DpmSet;
+use metl::message::{InMessage, StateI};
+use metl::util::json::Json;
+use metl::util::rng::Rng;
+use metl::util::stats::format_ns;
+use metl::workload::{self, DmlKind, TraceOp};
+
+/// Metrics every `BENCH_6.json`-shaped artifact must carry (dotted paths
+/// under `metrics`; shared by `--validate` and the CI bench-smoke job).
+const REQUIRED: &[&str] = &[
+    "throughput_eps",
+    "mapping_latency_ns.p50",
+    "mapping_latency_ns.p99",
+    "update_latency_ns.mean",
+    "kernel.native_batch_ns.mean",
+    "kernel.scalar_batch_ns.mean",
+    "kernel.native_over_scalar_speedup",
+];
+
+fn main() {
+    if let Some(path) = arg_value("--validate") {
+        match harness::validate_artifact_file(&path, "baseline", REQUIRED) {
+            Ok(()) => {
+                println!("{path}: valid baseline artifact");
+                return;
+            }
+            Err(e) => {
+                eprintln!("invalid baseline artifact: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+
+    let smoke = has_flag("--smoke");
+    let (cfg, backlog, batch, iters) = if smoke {
+        (PipelineConfig::small(), 2_000usize, 400usize, 3usize)
+    } else {
+        let mut cfg = PipelineConfig::paper_day();
+        cfg.partitions = 16;
+        (cfg, 40_000, 2_000, 10)
+    };
+    let profile = if smoke { "small" } else { "paper_day" };
+    let mut artifact = Artifact::new("baseline");
+    artifact
+        .meta("profile", Json::Str(profile.to_string()))
+        .meta("smoke", Json::Bool(smoke))
+        .meta("iters", Json::Num(iters as f64));
+
+    // --- axis 1+2: end-to-end throughput + mapping latency ---------------
+    section(format!("throughput + mapping latency ({backlog} events)").as_str());
+    let p = {
+        let mut land = workload::generate(&cfg);
+        let mut rng = Rng::seed_from(cfg.seed ^ 0xFEED);
+        workload::populate(&mut land, 50, &mut rng);
+        let p = Pipeline::from_landscape(cfg.clone(), land).unwrap();
+        for i in 0..backlog {
+            p.resolve_op(&TraceOp::Dml {
+                service: i % cfg.n_services,
+                kind: if i % 3 == 0 { DmlKind::Update } else { DmlKind::Insert },
+            })
+            .unwrap();
+        }
+        p
+    };
+    let t0 = std::time::Instant::now();
+    let report = scaler::run_scaled(&p, 1);
+    let eps = report.processed as f64 / t0.elapsed().as_secs_f64();
+    assert_eq!(report.processed as usize, backlog);
+    assert_eq!(p.metrics.dead_letters.get(), 0);
+    let map = p.metrics.map_latency.summary();
+    println!(
+        "  {eps:>10.0} events/s | map p50={} p99={}",
+        format_ns(map.p50),
+        format_ns(map.p99)
+    );
+    artifact.set_num("throughput_eps", eps);
+    artifact.set_summary_ns("mapping_latency_ns", &map);
+
+    // --- axis 3: Alg-5 update latency (targeted eviction default) ---------
+    section("update latency (Alg-5 storms, targeted eviction)");
+    let storms = if smoke { 3 } else { 8 };
+    for i in 0..storms {
+        p.apply_schema_change(i % cfg.n_services).unwrap();
+    }
+    let upd = p.metrics.update_latency.summary();
+    println!(
+        "  {} storms: mean={} p99={}",
+        storms,
+        format_ns(upd.mean),
+        format_ns(upd.p99)
+    );
+    artifact.set_summary_ns("update_latency_ns", &upd);
+
+    // --- axis 4: native kernel vs scalar Alg-6 lane -----------------------
+    section(format!("native vs scalar kernel ({batch}-message batches)").as_str());
+    let land = workload::generate(&cfg);
+    let dpm = Arc::new(
+        DpmSet::from_matrix(&land.matrix, &land.tree, &land.cdm, StateI(0))
+            .unwrap(),
+    );
+    let native = ParallelMapper::with_threads(
+        Arc::clone(&dpm),
+        Arc::new(DcpmCache::new(StateI(0))),
+        1,
+    )
+    .with_kernel(KernelMode::Native);
+    let scalar = ParallelMapper::with_threads(
+        Arc::clone(&dpm),
+        Arc::new(DcpmCache::new(StateI(0))),
+        1,
+    )
+    .with_kernel(KernelMode::Scalar);
+    let mut rng = Rng::seed_from(3);
+    let msgs: Vec<InMessage> = (0..batch)
+        .map(|k| {
+            let s = land.tree.schemas().nth(k % cfg.n_services).unwrap();
+            let v = *s.versions.last().unwrap();
+            let sv = land.tree.version(s.id, v).unwrap();
+            let row = metl::source::random_row(
+                &land.tree, s.id, v, k as u64, &mut rng, 0.25,
+            );
+            InMessage {
+                key: k as u64,
+                schema: s.id,
+                version: v,
+                state: StateI(0),
+                ts_us: 0,
+                fields: sv.attrs.iter().copied().zip(row.values).collect(),
+            }
+            .to_dense()
+        })
+        .collect();
+    // identical outputs before timing anything
+    for m in &msgs {
+        assert_eq!(native.map(m), scalar.map(m), "kernel lanes diverged");
+    }
+    let bench = Bench::new(if smoke { 1 } else { 3 }, iters);
+    let s_native = bench.run("native block-permutation kernel", || {
+        msgs.iter()
+            .map(|m| native.map(m).map(|o| o.len()).unwrap_or(0))
+            .sum::<usize>()
+    });
+    let s_scalar = bench.run("scalar Alg-6 lane", || {
+        msgs.iter()
+            .map(|m| scalar.map(m).map(|o| o.len()).unwrap_or(0))
+            .sum::<usize>()
+    });
+    let speedup = s_scalar.mean / s_native.mean.max(1.0);
+    println!("  native speedup over scalar: {speedup:.2}x");
+    artifact.set(
+        "kernel",
+        Json::Obj(vec![
+            ("native_batch_ns".to_string(), summary_obj(&s_native)),
+            ("scalar_batch_ns".to_string(), summary_obj(&s_scalar)),
+            (
+                "native_over_scalar_speedup".to_string(),
+                Json::Num(speedup),
+            ),
+        ]),
+    );
+    if !smoke {
+        // the tentpole claim, enforced on real runs (smoke runs are too
+        // short to be noise-free on shared CI runners)
+        assert!(
+            speedup > 1.0,
+            "native kernel no faster than scalar lane ({speedup:.2}x)"
+        );
+    }
+
+    // --- emit ------------------------------------------------------------
+    let out = arg_value("--out").unwrap_or_else(|| "../BENCH_6.json".to_string());
+    artifact.write(&out).unwrap();
+    if let Err(e) = harness::validate_artifact_file(&out, "baseline", REQUIRED) {
+        eprintln!("emitted artifact failed self-validation: {e}");
+        std::process::exit(1);
+    }
+    println!("\nbaseline bench OK");
+}
+
+fn summary_obj(s: &metl::util::stats::Summary) -> Json {
+    Json::Obj(vec![
+        ("count".to_string(), Json::Num(s.count as f64)),
+        ("mean".to_string(), Json::Num(s.mean)),
+        ("std".to_string(), Json::Num(s.std)),
+        ("p50".to_string(), Json::Num(s.p50)),
+        ("p90".to_string(), Json::Num(s.p90)),
+        ("p99".to_string(), Json::Num(s.p99)),
+    ])
+}

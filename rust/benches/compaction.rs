@@ -7,7 +7,7 @@
 #[path = "harness.rs"]
 mod harness;
 
-use harness::{section, Bench};
+use harness::{section, Artifact, Bench};
 use metl::config::PipelineConfig;
 use metl::matrix::compaction::CompactionStats;
 use metl::matrix::dpm::DpmSet;
@@ -17,6 +17,7 @@ use metl::message::StateI;
 use metl::workload;
 
 fn main() {
+    let mut artifact = Artifact::new("compaction");
     section("fig 5 worked example (exact)");
     let (t, c) = fig5_trees();
     let m = fig5_matrix(&t, &c);
@@ -31,6 +32,8 @@ fn main() {
     );
     assert_eq!(dpm.n_elements(), 7);
     assert_eq!((dusb.n_elements(), dusb.n_special_nulls()), (5, 1));
+    artifact.set_num("fig5_dpm_elements", dpm.n_elements() as f64);
+    artifact.set_num("fig5_dusb_elements", dusb.n_elements() as f64);
 
     section("compaction ratios across scales (paper: >99% / >99.9%)");
     println!(
@@ -58,6 +61,9 @@ fn main() {
             s.dpm_ratio() * 100.0,
             s.dusb_ratio() * 100.0
         );
+        let key = name.replace(['/', '-'], "_");
+        artifact.set_num(&format!("dpm_ratio_{key}"), s.dpm_ratio());
+        artifact.set_num(&format!("dusb_ratio_{key}"), s.dusb_ratio());
     }
 
     section("§3.5 scale estimate (10k attrs x 10 versions x 1k CDM rows)");
@@ -101,16 +107,18 @@ fn main() {
     let cfg = PipelineConfig::paper_day();
     let land = workload::generate(&cfg);
     let bench = Bench::default();
-    bench.run("Alg 2: M -> DPM", || {
+    let s2 = bench.run("Alg 2: M -> DPM", || {
         DpmSet::from_matrix(&land.matrix, &land.tree, &land.cdm, StateI(0))
             .unwrap()
             .n_elements()
     });
-    bench.run("Alg 3: M -> DUSB", || {
+    let s3 = bench.run("Alg 3: M -> DUSB", || {
         DusbSet::from_matrix(&land.matrix, &land.tree, &land.cdm, StateI(0))
             .unwrap()
             .n_elements()
     });
+    artifact.set_summary_ns("alg2_build_ns", &s2);
+    artifact.set_summary_ns("alg3_build_ns", &s3);
 
     section("§5.2 space per single mapping is O(n)");
     // space to execute one mapping = the column super-set size, linear in
@@ -137,6 +145,7 @@ fn main() {
         max <= cfg.attrs_per_schema * cfg.n_entities,
         "column space bounded by realized mappings, not matrix area"
     );
+    artifact.write_default().unwrap();
     println!("\ncompaction bench OK");
 }
 

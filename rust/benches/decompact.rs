@@ -5,7 +5,7 @@
 #[path = "harness.rs"]
 mod harness;
 
-use harness::{section, Bench};
+use harness::{section, Artifact, Bench};
 use metl::config::PipelineConfig;
 use metl::matrix::decompact::recreate_dpm;
 use metl::matrix::dpm::DpmSet;
@@ -15,6 +15,7 @@ use metl::store::MatrixStore;
 use metl::workload;
 
 fn main() {
+    let mut artifact = Artifact::new("decompact");
     for (name, cfg) in [
         ("paper_day", PipelineConfig::paper_day()),
         ("eos_scale-", {
@@ -40,14 +41,17 @@ fn main() {
         );
 
         let bench = Bench::new(2, 10);
-        bench.run("Alg 4: DUSB -> M", || {
+        let key = name.replace('-', "_");
+        let s4 = bench.run("Alg 4: DUSB -> M", || {
             dusb.decompact(&land.tree, &land.cdm).count_ones()
         });
-        bench.run("view: DUSB -> M -> DPM", || {
+        let sv = bench.run("view: DUSB -> M -> DPM", || {
             recreate_dpm(&dusb, &land.tree, &land.cdm)
                 .unwrap()
                 .n_elements()
         });
+        artifact.set_summary_ns(&format!("alg4_decompact_ns_{key}"), &s4);
+        artifact.set_summary_ns(&format!("recreate_dpm_ns_{key}"), &sv);
         // correctness of the restore
         let restored = recreate_dpm(&dusb, &land.tree, &land.cdm).unwrap();
         assert!(dpm_direct.same_elements(&restored));
@@ -57,16 +61,19 @@ fn main() {
             .join("metl-bench-store")
             .join(format!("{name}-{}", std::process::id()));
         let store = MatrixStore::open(&dir).unwrap();
-        bench.run("store: save DUSB (json)", || {
+        let ss = bench.run("store: save DUSB (json)", || {
             store.save_dusb(&dusb).unwrap()
         });
-        bench.run("store: load + recreate DPM", || {
+        let sl = bench.run("store: load + recreate DPM", || {
             store
                 .view_recreate_dpm(&land.tree, &land.cdm)
                 .unwrap()
                 .unwrap()
                 .n_elements()
         });
+        artifact.set_summary_ns(&format!("store_save_ns_{key}"), &ss);
+        artifact.set_summary_ns(&format!("store_load_ns_{key}"), &sl);
     }
+    artifact.write_default().unwrap();
     println!("\ndecompact bench OK");
 }

@@ -1,9 +1,16 @@
 //! Minimal bench harness shared by all bench binaries (criterion is not
 //! available offline; see DESIGN.md §2). Prints one row per measurement:
 //! mean ± σ with percentiles over `iters` timed runs after `warmup` runs.
+//!
+//! Every bench binary also emits a machine-readable JSON [`Artifact`]
+//! (default `target/bench-artifacts/<bench>.json`, overridable with
+//! `--out PATH`) so CI and the checked-in `BENCH_<n>.json` baselines can
+//! be diffed without scraping stdout. See README §Benchmarks for the
+//! schema.
 
 #![allow(dead_code)] // each bench binary uses a subset of the harness
 
+use metl::util::json::Json;
 use metl::util::stats::{format_ns, Summary};
 use std::time::Instant;
 
@@ -43,6 +50,156 @@ impl Bench {
 /// Section header helper.
 pub fn section(title: &str) {
     println!("\n=== {title} ===");
+}
+
+/// The value following `flag` on the bench command line, if present
+/// (cargo passes everything after `--` through to the bench binary).
+pub fn arg_value(flag: &str) -> Option<String> {
+    std::env::args().skip_while(|a| a != flag).nth(1)
+}
+
+/// Whether a bare `flag` is present on the bench command line.
+pub fn has_flag(flag: &str) -> bool {
+    std::env::args().any(|a| a == flag)
+}
+
+/// Machine-readable bench result, serialized as pretty JSON:
+///
+/// ```json
+/// { "schema_version": 1, "bench": "<name>", "metrics": { ... } }
+/// ```
+///
+/// Metric values are numbers, strings, or latency-summary objects
+/// (`set_summary_ns`) with `count/mean/std/p50/p90/p99` in nanoseconds.
+pub struct Artifact {
+    name: String,
+    meta: Vec<(String, Json)>,
+    metrics: Vec<(String, Json)>,
+}
+
+impl Artifact {
+    pub fn new(name: &str) -> Artifact {
+        Artifact {
+            name: name.to_string(),
+            meta: Vec::new(),
+            metrics: Vec::new(),
+        }
+    }
+
+    /// Attach a top-level metadata field (profile, smoke, iters, ...).
+    pub fn meta(&mut self, key: &str, value: Json) -> &mut Self {
+        self.meta.push((key.to_string(), value));
+        self
+    }
+
+    /// Record one metric.
+    pub fn set(&mut self, key: &str, value: Json) -> &mut Self {
+        self.metrics.push((key.to_string(), value));
+        self
+    }
+
+    pub fn set_num(&mut self, key: &str, v: f64) -> &mut Self {
+        self.set(key, Json::Num(v))
+    }
+
+    /// Record a latency [`Summary`] (nanoseconds) as a nested object.
+    pub fn set_summary_ns(&mut self, key: &str, s: &Summary) -> &mut Self {
+        self.set(key, summary_json(s))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut top = vec![
+            ("schema_version".to_string(), Json::Num(1.0)),
+            ("bench".to_string(), Json::Str(self.name.clone())),
+        ];
+        top.extend(self.meta.iter().cloned());
+        top.push(("metrics".to_string(), Json::Obj(self.metrics.clone())));
+        Json::Obj(top)
+    }
+
+    /// Write the artifact to `path` (creating parent dirs) and say so.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_pretty() + "\n")?;
+        println!("  artifact -> {path}");
+        Ok(())
+    }
+
+    /// Write to `--out PATH` if given, else the default
+    /// `target/bench-artifacts/<bench>.json`.
+    pub fn write_default(&self) -> std::io::Result<()> {
+        let path = arg_value("--out")
+            .unwrap_or_else(|| format!("target/bench-artifacts/{}.json", self.name));
+        self.write(&path)
+    }
+}
+
+fn summary_json(s: &Summary) -> Json {
+    Json::Obj(vec![
+        ("count".to_string(), Json::Num(s.count as f64)),
+        ("mean".to_string(), Json::Num(s.mean)),
+        ("std".to_string(), Json::Num(s.std)),
+        ("p50".to_string(), Json::Num(s.p50)),
+        ("p90".to_string(), Json::Num(s.p90)),
+        ("p99".to_string(), Json::Num(s.p99)),
+    ])
+}
+
+/// Validate an artifact file: well-formed JSON, `schema_version` 1, the
+/// expected `bench` name, and every dotted path in `required` present
+/// under `metrics` as a number. Returns the error text instead of
+/// panicking so bench binaries can exit(1) with a readable message.
+pub fn validate_artifact_file(
+    path: &str,
+    bench: &str,
+    required: &[&str],
+) -> Result<(), String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("{path}: {e}"))?;
+    let json = metl::util::json::parse(&text)
+        .map_err(|e| format!("{path}: invalid JSON: {e}"))?;
+    let get = |obj: &Json, key: &str| -> Option<Json> {
+        match obj {
+            Json::Obj(fields) => fields
+                .iter()
+                .find(|(k, _)| k == key)
+                .map(|(_, v)| v.clone()),
+            _ => None,
+        }
+    };
+    match get(&json, "schema_version") {
+        Some(Json::Num(v)) if v == 1.0 => {}
+        other => return Err(format!("{path}: bad schema_version {other:?}")),
+    }
+    match get(&json, "bench") {
+        Some(Json::Str(name)) if name == bench => {}
+        other => {
+            return Err(format!("{path}: bench != {bench:?} (got {other:?})"))
+        }
+    }
+    let metrics = get(&json, "metrics")
+        .ok_or_else(|| format!("{path}: missing metrics object"))?;
+    for dotted in required {
+        let mut cur = metrics.clone();
+        for part in dotted.split('.') {
+            cur = get(&cur, part).ok_or_else(|| {
+                format!("{path}: missing metric {dotted}")
+            })?;
+        }
+        match cur {
+            Json::Num(v) if v.is_finite() => {}
+            other => {
+                return Err(format!(
+                    "{path}: metric {dotted} is not a finite number ({other:?})"
+                ))
+            }
+        }
+    }
+    Ok(())
 }
 
 /// Allow the harness file to compile standalone if cargo ever treats it as

@@ -8,7 +8,7 @@ mod harness;
 
 use std::sync::Arc;
 
-use harness::{section, Bench};
+use harness::{section, Artifact, Bench};
 use metl::cache::DcpmCache;
 use metl::config::PipelineConfig;
 use metl::coordinator::pipeline::Pipeline;
@@ -21,6 +21,7 @@ use metl::util::stats::{format_ns, Summary};
 use metl::workload;
 
 fn main() {
+    let mut artifact = Artifact::new("mapping_latency");
     section("§7 day trace: 1168 CDC events, 3 cache-evicting DMM updates");
     let cfg = PipelineConfig::paper_day();
     let mut rng = Rng::seed_from(cfg.seed);
@@ -56,6 +57,9 @@ fn main() {
         format_ns(tail.mean),
         (tail.mean / warm.mean).round()
     );
+    artifact.set_summary_ns("day_map_latency_ns", &s);
+    artifact.set_num("warm_bracket_mean_ns", warm.mean);
+    artifact.set_num("tail_bracket_mean_ns", tail.mean);
 
     section("single-message latency: Alg 1 (baseline) vs Alg 6 (DMM)");
     let cfg = PipelineConfig::paper_day();
@@ -113,5 +117,9 @@ fn main() {
         s6.mean < s1.mean,
         "the dense DMM path must beat the sparse baseline"
     );
+    artifact.set_summary_ns("alg1_batch_ns", &s1);
+    artifact.set_summary_ns("alg6_batch_ns", &s6);
+    artifact.set_num("alg6_over_alg1_speedup", s1.mean / s6.mean);
+    artifact.write_default().unwrap();
     println!("\nmapping_latency bench OK");
 }

@@ -12,7 +12,7 @@
 #[path = "harness.rs"]
 mod harness;
 
-use harness::section;
+use harness::{section, Artifact};
 use metl::cache::EvictMode;
 use metl::config::PipelineConfig;
 use metl::coordinator::batcher::InitialLoader;
@@ -45,6 +45,7 @@ fn backlog_pipeline(cfg: &PipelineConfig) -> Pipeline {
 fn main() {
     let mut cfg = PipelineConfig::paper_day();
     cfg.partitions = 16;
+    let mut artifact = Artifact::new("throughput");
 
     section(format!("lane throughput over {BACKLOG} events").as_str());
     // --- Alg 6 lane (the production path) --------------------------------
@@ -58,6 +59,7 @@ fn main() {
         report.processed,
         report.wall
     );
+    artifact.set_num("alg6_pipeline_eps", alg6_eps);
 
     // --- raw mapper comparison on identical messages ----------------------
     // (mapper-only, no broker/metrics/sink overhead on either side)
@@ -113,6 +115,8 @@ fn main() {
         alg6_raw_eps / alg6_eps
     );
     assert!(alg6_raw_eps > alg1_eps);
+    artifact.set_num("alg1_raw_eps", alg1_eps);
+    artifact.set_num("alg6_raw_eps", alg6_raw_eps);
 
     // --- XLA bulk lane -----------------------------------------------------
     match BulkRuntime::try_load("artifacts") {
@@ -159,6 +163,7 @@ fn main() {
             instances, eps, report.wall, eps / base
         );
         assert_eq!(report.processed as usize, BACKLOG);
+        artifact.set_num(&format!("scaling_eps_x{instances}"), eps);
     }
 
     section("sharded mapping lane (schema shards, epoch-swapped snapshots)");
@@ -186,6 +191,7 @@ fn main() {
         );
         assert_eq!(report.processed as usize, BACKLOG);
         assert_eq!(p.metrics.dead_letters.get(), 0);
+        artifact.set_num(&format!("shard_eps_x{shards}"), eps);
     }
 
     // no-stall check: an Alg-5 update racing the sharded drain must leave
@@ -220,6 +226,8 @@ fn main() {
         stormy_p99 <= steady_p99 * 2.0 + 2_000_000.0,
         "Alg-5 update stalled the sharded lane: p99 {stormy_p99}ns vs steady {steady_p99}ns"
     );
+    artifact.set_num("steady_map_p99_ns", steady_p99);
+    artifact.set_num("update_under_load_map_p99_ns", stormy_p99);
 
     section("egress fan-out (per-sink consumer groups over the CDM topic)");
     let sink_axis: Vec<usize> = std::env::args()
@@ -311,6 +319,8 @@ fn main() {
             format_ns(upd.mean),
             format_ns(upd.p99)
         );
+        artifact.set_num(&format!("evolve_{mode}_eps"), eps);
+        artifact.set_num(&format!("evolve_{mode}_update_mean_ns"), upd.mean);
     }
     println!(
         "  dip = baseline eps / storm eps (1.00x = no dip); targeted \
@@ -318,5 +328,6 @@ fn main() {
          stay below the full-evict fallback"
     );
 
+    artifact.write_default().unwrap();
     println!("\nthroughput bench OK");
 }

@@ -6,7 +6,7 @@
 #[path = "harness.rs"]
 mod harness;
 
-use harness::{section, Bench};
+use harness::{section, Artifact, Bench};
 use metl::config::PipelineConfig;
 use metl::coordinator::pipeline::Pipeline;
 use metl::matrix::dpm::DpmSet;
@@ -15,6 +15,7 @@ use metl::message::StateI;
 use metl::workload;
 
 fn main() {
+    let mut artifact = Artifact::new("update");
     section("raw diff size vs Alg-5 set operations (per version addition)");
     let mut cfg = PipelineConfig::eos_scale();
     cfg.n_services = 60;
@@ -67,7 +68,7 @@ fn main() {
     section("Alg 5 case timing (eos_scale- landscape)");
     let bench = Bench::new(3, 15);
     // case 3: added schema version
-    bench.run("case 3: added schema version (copy via ≡)", || {
+    let s_c3 = bench.run("case 3: added schema version (copy via ≡)", || {
         let mut d = dpm0.clone();
         auto_update(
             &mut d,
@@ -80,7 +81,7 @@ fn main() {
     });
     // case 1: deleted schema version
     let v1 = metl::schema::VersionNo(1);
-    bench.run("case 1: deleted schema version (drop column)", || {
+    let s_c1 = bench.run("case 1: deleted schema version (drop column)", || {
         let mut d = dpm0.clone();
         auto_update(
             &mut d,
@@ -109,7 +110,7 @@ fn main() {
     let w_new = land.cdm.add_version(entity, &cdm_fields);
     let (nr, nc) = (land.cdm.n_attr_ids(), land.tree.n_attr_ids());
     land.matrix.grow(nr, nc);
-    bench.run("case 4: added CDM version (+cleanup)", || {
+    let s_c4 = bench.run("case 4: added CDM version (+cleanup)", || {
         let mut d = dpm0.clone();
         auto_update(
             &mut d,
@@ -122,7 +123,7 @@ fn main() {
     });
     // case 2: deleted CDM version
     let w1 = metl::cdm::CdmVersionNo(1);
-    bench.run("case 2: deleted CDM version (drop row)", || {
+    let s_c2 = bench.run("case 2: deleted CDM version (drop row)", || {
         let mut d = dpm0.clone();
         auto_update(
             &mut d,
@@ -133,6 +134,10 @@ fn main() {
         )
         .elements_removed
     });
+    artifact.set_summary_ns("case3_added_schema_version_ns", &s_c3);
+    artifact.set_summary_ns("case1_deleted_schema_version_ns", &s_c1);
+    artifact.set_summary_ns("case4_added_cdm_version_ns", &s_c4);
+    artifact.set_summary_ns("case2_deleted_cdm_version_ns", &s_c2);
 
     section("update-vs-recompute (the automation dividend)");
     let bench = Bench::new(2, 8);
@@ -156,15 +161,20 @@ fn main() {
         "  incremental update is {:.0}x faster than recompute",
         sr.mean / su.mean
     );
+    artifact.set_summary_ns("alg5_update_ns", &su);
+    artifact.set_summary_ns("recompute_ns", &sr);
+    artifact.set_num("update_over_recompute_speedup", sr.mean / su.mean);
 
     section("full workflow (pipeline storm incl. store + cache eviction)");
     let cfg2 = PipelineConfig::paper_day();
     let pipeline = Pipeline::new(cfg2).unwrap();
     let bench = Bench::new(1, 5);
     let mut svc = 0usize;
-    bench.run("apply_schema_change end-to-end", || {
+    let s_wf = bench.run("apply_schema_change end-to-end", || {
         svc += 1;
         pipeline.apply_schema_change(svc % 80).unwrap().elements_added
     });
+    artifact.set_summary_ns("apply_schema_change_ns", &s_wf);
+    artifact.write_default().unwrap();
     println!("\nupdate bench OK");
 }

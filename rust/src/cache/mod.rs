@@ -18,11 +18,14 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
+use crate::mapper::kernel::{ColumnPlan, PlanCache};
 use crate::matrix::dpm::{DpmBlock, DpmSet};
 use crate::message::StateI;
 use crate::schema::{SchemaId, VersionNo};
 
-type Column = Arc<Vec<Arc<DpmBlock>>>;
+/// A cached `ᵢ𝒟𝒞𝒫𝓜` column super-set. The `Arc` identity doubles as the
+/// validity token for compiled kernel plans ([`PlanCache`]).
+pub type Column = Arc<Vec<Arc<DpmBlock>>>;
 
 /// Eviction policy applied on a state transition with a known diff
 /// (`runtime.evict` config key / `--evict` CLI flag).
@@ -77,6 +80,9 @@ pub struct DcpmCache {
     columns: RwLock<HashMap<(SchemaId, VersionNo), Column>>,
     mode: EvictMode,
     pub stats: CacheStats,
+    /// Compiled kernel plans, same sharing scope as the columns (the
+    /// pipeline shares one cache; each shard worker owns its own).
+    pub plans: PlanCache,
 }
 
 impl DcpmCache {
@@ -91,6 +97,7 @@ impl DcpmCache {
             columns: RwLock::new(HashMap::new()),
             mode,
             stats: CacheStats::default(),
+            plans: PlanCache::new(),
         }
     }
 
@@ -129,6 +136,21 @@ impl DcpmCache {
         Arc::clone(entry)
     }
 
+    /// Column lookup plus its compiled kernel plan (the native lane's
+    /// entry point). The plan is validated by `Arc` identity against the
+    /// served column, so any eviction that replaces the column — targeted
+    /// or full — transparently recompiles it.
+    pub fn plan(
+        &self,
+        dpm: &DpmSet,
+        schema: SchemaId,
+        version: VersionNo,
+    ) -> (Column, Arc<ColumnPlan>) {
+        let column = self.column(dpm, schema, version);
+        let plan = self.plans.plan_for((schema, version), &column);
+        (column, plan)
+    }
+
     /// Evict everything and move to a new state (§6.2: on every update of
     /// a business entity, schema or mapping).
     pub fn evict_all(&self, new_state: StateI) {
@@ -137,6 +159,7 @@ impl DcpmCache {
             self.stats.evictions.fetch_add(1, Ordering::Relaxed);
         }
         columns.clear();
+        self.plans.clear();
         *self.state.write().unwrap() = new_state;
     }
 
@@ -164,6 +187,7 @@ impl DcpmCache {
         let mut columns = self.columns.write().unwrap();
         for key in keys {
             columns.remove(key);
+            self.plans.remove(key);
         }
         self.stats.targeted_evictions.fetch_add(1, Ordering::Relaxed);
         *self.state.write().unwrap() = new_state;
@@ -320,6 +344,34 @@ mod tests {
         assert!(cache.is_empty());
         assert_eq!(cache.stats.evictions.load(Ordering::Relaxed), 1);
         assert_eq!(cache.stats.targeted_evictions.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn kernel_plans_follow_targeted_eviction() {
+        let (mut dpm, cache, s1) = setup();
+        let (col_a, plan_a) = cache.plan(&dpm, s1, VersionNo(1));
+        let (_, plan_b) = cache.plan(&dpm, s1, VersionNo(2));
+        // warm lookup reuses the compiled plan
+        let (_, plan_a2) = cache.plan(&dpm, s1, VersionNo(1));
+        assert!(Arc::ptr_eq(&plan_a, &plan_a2));
+        // epoch swap whose journal says only (s1, v1) changed
+        cache.advance(StateI(1), Some(&[(s1, VersionNo(1))]));
+        dpm.state = StateI(1);
+        let (col_a2, plan_a3) = cache.plan(&dpm, s1, VersionNo(1));
+        assert!(!Arc::ptr_eq(&col_a, &col_a2));
+        assert!(!Arc::ptr_eq(&plan_a, &plan_a3), "stale plan must recompile");
+        // the unaffected column keeps its plan across the swap
+        let (_, plan_b2) = cache.plan(&dpm, s1, VersionNo(2));
+        assert!(Arc::ptr_eq(&plan_b, &plan_b2));
+    }
+
+    #[test]
+    fn full_eviction_clears_plans() {
+        let (dpm, cache, s1) = setup();
+        cache.plan(&dpm, s1, VersionNo(1));
+        assert_eq!(cache.plans.len(), 1);
+        cache.evict_all(StateI(1));
+        assert!(cache.plans.is_empty());
     }
 
     #[test]

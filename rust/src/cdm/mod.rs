@@ -215,6 +215,20 @@ impl CdmTree {
         w
     }
 
+    /// Test-only corruption: remove a version's *definition* while keeping
+    /// it listed on the entity — a torn §5.1 delete, unreachable through
+    /// the public API (`delete_version` updates both sides). Lets tests
+    /// prove the mapping path surfaces `DeadCdmVersion` instead of
+    /// panicking.
+    #[cfg(test)]
+    pub(crate) fn drop_version_definition(
+        &mut self,
+        entity: EntityId,
+        w: CdmVersionNo,
+    ) {
+        self.versions.remove(&(entity, w));
+    }
+
     pub fn delete_version(&mut self, entity: EntityId, w: CdmVersionNo) -> bool {
         if self.versions.remove(&(entity, w)).is_some() {
             self.entities[entity.0 as usize].versions.retain(|x| *x != w);

@@ -7,6 +7,7 @@ use std::collections::HashMap;
 use anyhow::{bail, Context, Result};
 
 use crate::cache::EvictMode;
+use crate::mapper::kernel::KernelMode;
 use crate::schema::Compatibility;
 
 /// Full pipeline configuration.
@@ -60,6 +61,10 @@ pub struct PipelineConfig {
     /// targeted (default — only affected columns drop) or full (the
     /// paper's §6.2 evict-everything behaviour).
     pub evict: EvictMode,
+    /// Mapping lane (`runtime.kernel` / `--kernel`): native (default —
+    /// the block-permutation kernel with compiled column plans) or scalar
+    /// (the per-element Alg-6 lane, kept as fallback and bench baseline).
+    pub kernel: KernelMode,
 }
 
 impl Default for PipelineConfig {
@@ -92,6 +97,7 @@ impl PipelineConfig {
             evolution_compatibility: Compatibility::Full,
             evolution_single_change: true,
             evict: EvictMode::Targeted,
+            kernel: KernelMode::Native,
         }
     }
 
@@ -119,6 +125,7 @@ impl PipelineConfig {
             evolution_compatibility: Compatibility::Full,
             evolution_single_change: true,
             evict: EvictMode::Targeted,
+            kernel: KernelMode::Native,
         }
     }
 
@@ -146,6 +153,7 @@ impl PipelineConfig {
             evolution_compatibility: Compatibility::Full,
             evolution_single_change: true,
             evict: EvictMode::Targeted,
+            kernel: KernelMode::Native,
         }
     }
 
@@ -204,6 +212,10 @@ impl PipelineConfig {
         if let Some(v) = kv.get("runtime.evict") {
             cfg.evict =
                 v.parse::<EvictMode>().map_err(|e| anyhow::anyhow!(e))?;
+        }
+        if let Some(v) = kv.get("runtime.kernel") {
+            cfg.kernel =
+                v.parse::<KernelMode>().map_err(|e| anyhow::anyhow!(e))?;
         }
         Ok(cfg)
     }
@@ -342,6 +354,18 @@ mod tests {
             "[runtime.evolution]\ncompatibility = sideways"
         )
         .is_err());
+    }
+
+    #[test]
+    fn parses_kernel_mode() {
+        let cfg =
+            PipelineConfig::parse("[runtime]\nkernel = \"scalar\"").unwrap();
+        assert_eq!(cfg.kernel, KernelMode::Scalar);
+        // default is the native kernel in every profile
+        assert_eq!(PipelineConfig::small().kernel, KernelMode::Native);
+        assert_eq!(PipelineConfig::paper_day().kernel, KernelMode::Native);
+        assert_eq!(PipelineConfig::eos_scale().kernel, KernelMode::Native);
+        assert!(PipelineConfig::parse("[runtime]\nkernel = pallas").is_err());
     }
 
     #[test]

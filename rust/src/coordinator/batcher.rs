@@ -11,6 +11,7 @@
 use anyhow::{Context, Result};
 
 use super::pipeline::Pipeline;
+use crate::mapper::kernel::{self, KernelMode};
 use crate::matrix::blocks;
 use crate::message::cdc::CdcOp;
 use crate::message::{InMessage, OutMessage};
@@ -22,8 +23,11 @@ use crate::util::json::Json;
 pub struct LoadReport {
     pub rows: usize,
     pub out_messages: usize,
-    /// Whether the XLA lane served the load (false = Alg 6 fallback).
+    /// Whether the XLA lane served the load (false = native kernel or
+    /// Alg 6 fallback).
     pub used_bulk: bool,
+    /// Which lane served the load: `"xla"`, `"native"` or `"scalar"`.
+    pub lane: &'static str,
 }
 
 /// The initial-load driver.
@@ -148,7 +152,31 @@ impl InitialLoader {
             pipeline.metrics.bulk_events.add(rows as u64);
             pipeline.metrics.events_in.add(rows as u64);
             pipeline.metrics.transformations.add(rows as u64);
-            Ok(LoadReport { rows, out_messages, used_bulk: true })
+            Ok(LoadReport { rows, out_messages, used_bulk: true, lane: "xla" })
+        } else if pipeline.cfg.kernel == KernelMode::Native {
+            drop(land);
+            // Native block-permutation lane: compile the column's gather
+            // plan once and push every snapshot message through it with one
+            // warm scratch — same outputs as the Alg-6 lane (equivalence:
+            // rust/tests/kernel_equivalence.rs), without the per-event
+            // mapper setup of the fallback below.
+            let (_, plan) = pipeline.cache.plan(&dpm, schema, version);
+            kernel::with_scratch(|scratch| {
+                for msg in &messages {
+                    for out in plan.map_message(msg, scratch) {
+                        pipeline.out_topic.produce(
+                            out.key,
+                            std::sync::Arc::new((CdcOp::SnapshotRead, out)),
+                        );
+                        out_messages += 1;
+                        pipeline.metrics.messages_out.inc();
+                    }
+                }
+            });
+            pipeline.metrics.bulk_events.add(rows as u64);
+            pipeline.metrics.events_in.add(rows as u64);
+            pipeline.metrics.transformations.add(rows as u64);
+            Ok(LoadReport { rows, out_messages, used_bulk: false, lane: "native" })
         } else {
             drop(land);
             // Alg-6 fallback lane
@@ -159,7 +187,7 @@ impl InitialLoader {
                 out_messages +=
                     (pipeline.metrics.messages_out.get() - before) as usize;
             }
-            Ok(LoadReport { rows, out_messages, used_bulk: false })
+            Ok(LoadReport { rows, out_messages, used_bulk: false, lane: "scalar" })
         }
     }
 }
@@ -170,13 +198,16 @@ mod tests {
     use crate::config::PipelineConfig;
     use crate::util::rng::Rng;
 
-    fn loaded_pipeline(rows: usize) -> Pipeline {
-        let cfg = PipelineConfig::small();
+    fn loaded_pipeline_with(cfg: PipelineConfig, rows: usize) -> Pipeline {
         let mut land = crate::workload::generate(&cfg);
         let mut rng = Rng::seed_from(5);
         crate::workload::populate(&mut land, rows, &mut rng);
         // keep only the rows we just made
         Pipeline::from_landscape(cfg, land).unwrap()
+    }
+
+    fn loaded_pipeline(rows: usize) -> Pipeline {
+        loaded_pipeline_with(PipelineConfig::small(), rows)
     }
 
     #[test]
@@ -186,9 +217,37 @@ mod tests {
         let report = loader.initial_load(&p, 0).unwrap();
         assert_eq!(report.rows, 25);
         assert!(!report.used_bulk);
+        // without XLA artifacts the default config serves the load from
+        // the native kernel lane
+        assert_eq!(report.lane, "native");
         assert!(report.out_messages > 0);
         // outputs reached the topic
         assert!(p.out_topic.total_records() >= report.out_messages as u64);
+    }
+
+    #[test]
+    fn native_and_scalar_load_lanes_agree() {
+        let p_native = loaded_pipeline(30);
+        let mut cfg = PipelineConfig::small();
+        cfg.kernel = KernelMode::Scalar;
+        let p_scalar = loaded_pipeline_with(cfg, 30);
+        let loader = InitialLoader { runtime: None };
+        let rn = loader.initial_load(&p_native, 0).unwrap();
+        let rs = loader.initial_load(&p_scalar, 0).unwrap();
+        assert_eq!(rn.lane, "native");
+        assert_eq!(rs.lane, "scalar");
+        assert!(!rn.used_bulk && !rs.used_bulk);
+        assert_eq!(rn.rows, rs.rows);
+        assert_eq!(rn.out_messages, rs.out_messages);
+        // drain both DWs and compare materialized rows
+        p_native.drain_sinks();
+        p_scalar.drain_sinks();
+        let rows = |p: &Pipeline| {
+            p.with_sink("dw", |dw: &crate::sink::DwSink| dw.total_rows())
+                .unwrap()
+        };
+        assert_eq!(rows(&p_native), rows(&p_scalar));
+        assert_eq!(p_scalar.metrics.dead_letters.get(), 0);
     }
 
     #[test]

@@ -470,6 +470,7 @@ impl Pipeline {
             Arc::clone(&self.cache),
             self.cfg.threads,
         )
+        .with_kernel(self.cfg.kernel)
     }
 
     /// Process one CDC event end to end: map, publish, count, time.
@@ -808,6 +809,57 @@ mod tests {
         // no epoch or state movement for a genuinely unknown version
         assert_eq!(p.metrics.dmm_epoch.get(), 0);
         assert_eq!(p.state.current(), StateI(0));
+    }
+
+    #[test]
+    fn poisoned_payload_dead_letters_instead_of_crashing() {
+        use crate::message::cdc::CdcSource;
+        use crate::message::InMessage;
+        let p = small_pipeline();
+        let (schema, version, attr) = {
+            let land = p.landscape.read().unwrap();
+            let schema = land.dbs[0].tables[0].schema;
+            let v = land.dbs[0].tables[0].live_version;
+            let sv = land.tree.version(schema, v).unwrap();
+            (schema, v, sv.attrs[0])
+        };
+        // duplicate attr entries with conflicting nullness: Alg 1 and
+        // Alg 6 would disagree on this record, so both lanes reject it —
+        // it must land in the DLQ, not crash a shard worker
+        let ev = Arc::new(CdcEvent {
+            op: CdcOp::Create,
+            before: None,
+            after: Some(InMessage {
+                key: 9,
+                schema,
+                version,
+                state: p.state.current(),
+                ts_us: 1,
+                fields: vec![
+                    (attr, crate::util::json::Json::Null),
+                    (attr, crate::util::json::Json::Num(3.0)),
+                ],
+            }),
+            source: CdcSource {
+                connector: "postgresql".into(),
+                db: "svc0".into(),
+                table: "main".into(),
+            },
+            ts_us: 1,
+        });
+        p.process_event(&ev);
+        assert_eq!(p.metrics.dead_letters.get(), 1);
+        assert_eq!(p.dlq.len(), 1);
+        assert!(p.dlq.snapshot()[0].error.contains("null and non-null"));
+        // healthy traffic keeps flowing after the poisoned record
+        p.resolve_op(&TraceOp::Dml { service: 0, kind: DmlKind::Insert })
+            .unwrap();
+        let mut consumer = Consumer::new(p.cdc_topic.clone(), 0, 1);
+        for (_, rec) in consumer.poll(10) {
+            p.process_event(&rec.value);
+        }
+        assert_eq!(p.metrics.dead_letters.get(), 1);
+        assert!(p.metrics.messages_out.get() >= 1);
     }
 
     #[test]

@@ -253,7 +253,8 @@ fn run_worker(
     ));
     let mut epoch = pipeline.dmm.epoch();
     let mut mapper =
-        ParallelMapper::with_threads(pipeline.dmm.snapshot(), Arc::clone(&cache), 1);
+        ParallelMapper::with_threads(pipeline.dmm.snapshot(), Arc::clone(&cache), 1)
+            .with_kernel(pipeline.cfg.kernel);
     let mut processed = 0u64;
     let mut outs_buf: Vec<(u64, OutRecord)> = Vec::new();
     while let Ok(first) = rx.recv() {

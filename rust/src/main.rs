@@ -25,6 +25,7 @@ fn usage() -> ! {
     eprintln!(
         "usage: metl <command> [--profile small|paper_day|eos_scale] [--config FILE]\n\
          \x20                   [--sinks dw,ml,jsonl,audit] [--evict targeted|full]\n\
+         \x20                   [--kernel native|scalar]\n\
          \n\
          commands:\n\
            run        [--instances N]   simulate a day trace end to end\n\
@@ -96,6 +97,11 @@ fn load_config(args: &Args) -> Result<PipelineConfig> {
     if let Some(mode) = args.get("evict") {
         cfg.evict = mode
             .parse::<metl::cache::EvictMode>()
+            .map_err(|e| anyhow::anyhow!(e))?;
+    }
+    if let Some(mode) = args.get("kernel") {
+        cfg.kernel = mode
+            .parse::<metl::mapper::kernel::KernelMode>()
             .map_err(|e| anyhow::anyhow!(e))?;
     }
     Ok(cfg)
@@ -362,10 +368,10 @@ fn cmd_bulk(args: &Args, cfg: PipelineConfig) -> Result<()> {
     let t0 = std::time::Instant::now();
     let report = loader.initial_load(&pipeline, 0)?;
     println!(
-        "initial load: {} rows -> {} messages, bulk={} in {:?}",
+        "initial load: {} rows -> {} messages, lane={} in {:?}",
         report.rows,
         report.out_messages,
-        report.used_bulk,
+        report.lane,
         t0.elapsed()
     );
     Ok(())

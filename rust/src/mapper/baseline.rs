@@ -40,6 +40,9 @@ impl<'a> BaselineMapper<'a> {
                 dmm: self.state,
             });
         }
+        if let Some(attr) = super::conflicting_dup(msg) {
+            return Err(MapError::MalformedPayload { attr });
+        }
         let sv = self
             .tree
             .version(msg.schema, msg.version)
@@ -52,7 +55,11 @@ impl<'a> BaselineMapper<'a> {
         // the baseline iterates ALL (r, w), null blocks included.
         for entity in self.cdm.entities() {
             for &w in &entity.versions {
-                let cv = self.cdm.version(entity.id, w).expect("live");
+                // a listed-but-undefined version is a torn §5.1 delete:
+                // dead-letter the record, don't crash the shard worker
+                let cv = self.cdm.version(entity.id, w).ok_or(
+                    MapError::DeadCdmVersion { entity: entity.id, w },
+                )?;
                 // line 4: pre-construct the all-null outgoing message
                 let mut out = OutMessage {
                     key: msg.key,
@@ -80,9 +87,12 @@ impl<'a> BaselineMapper<'a> {
                     let nad = msg.nad(attr);
                     let ncd = 1 * nad; // m_qp == 1 here
                     if ncd == 1 {
-                        // lines 9-11: replace the "null" object
-                        let data =
-                            msg.data_object(attr).expect("nad==1").clone();
+                        // lines 9-11: replace the "null" object; a missing
+                        // object despite nad==1 is a malformed payload
+                        let data = msg
+                            .data_object(attr)
+                            .ok_or(MapError::MalformedPayload { attr })?
+                            .clone();
                         let slot = q - ext.rows.start;
                         out.fields[slot].1 = data;
                     }
@@ -189,5 +199,50 @@ mod tests {
             mapper.map(&msg).unwrap_err(),
             MapError::UnknownColumn { .. }
         ));
+    }
+
+    #[test]
+    fn torn_cdm_delete_is_error_not_panic() {
+        let (t, mut c) = fig5_trees();
+        let m = fig5_matrix(&t, &c);
+        let be1 = c.entity_by_name("be1").unwrap();
+        // be1.v1 stays listed on the entity but loses its definition
+        c.drop_version_definition(be1, crate::cdm::CdmVersionNo(1));
+        let mapper = BaselineMapper::new(&m, &t, &c, StateI(0));
+        let msg = incoming(&t, &[(0, Json::Num(1.0))]);
+        assert_eq!(
+            mapper.map(&msg).unwrap_err(),
+            MapError::DeadCdmVersion {
+                entity: be1,
+                w: crate::cdm::CdmVersionNo(1)
+            }
+        );
+    }
+
+    #[test]
+    fn nad_payload_disagreement_is_error_not_panic() {
+        let (t, c) = fig5_trees();
+        let m = fig5_matrix(&t, &c);
+        let mapper = BaselineMapper::new(&m, &t, &c, StateI(0));
+        let s1 = t.schema_by_name("s1").unwrap();
+        let sv = t.version(s1, VersionNo(1)).unwrap();
+        let msg = InMessage {
+            key: 1,
+            schema: s1,
+            version: VersionNo(1),
+            state: StateI(0),
+            ts_us: 0,
+            // duplicate a1 entries with conflicting nullness: nad says 0,
+            // the payload carries data — Alg 1 would silently drop what
+            // Alg 6 maps, so the record must dead-letter
+            fields: vec![
+                (sv.attrs[0], Json::Null),
+                (sv.attrs[0], Json::Num(7.0)),
+            ],
+        };
+        assert_eq!(
+            mapper.map(&msg).unwrap_err(),
+            MapError::MalformedPayload { attr: sv.attrs[0] }
+        );
     }
 }

@@ -1,0 +1,428 @@
+//! Native block-permutation mapping kernel — the bulk fast path.
+//!
+//! This is the Rust port of the Python bulk kernels
+//! (`python/compile/kernels/block_map.py`, `permute_extract.py`, `ref.py`):
+//! there, a mapping block applies the paper's mapping function
+//! `ncd_q ← m_qp · nad_p` to a batch of presence vectors as a 0/1 matmul
+//! producing a presence plane and a source-index plane. Here the same two
+//! planes are computed natively, without the PJRT runtime: a **presence
+//! bitset** over column-major slot indices (one bit per live matrix column
+//! of the `ᵢ𝒟𝒞𝒫𝓜` column super-set) and a **source-field table** (which
+//! incoming field feeds each slot — the `src_idx` plane). Each block then
+//! reduces to a permutation *gather*: rank-many bit tests plus payload
+//! clones, instead of re-scanning the message fields per element as the
+//! scalar Alg-6 lane does.
+//!
+//! Per message the cost is O(|fields| + Σ rank) against the scalar lane's
+//! O(Σ rank · |fields|); the [`ColumnPlan`] is built once per cached
+//! column and shared through the [`PlanCache`], whose entries are
+//! validated by **pointer identity** against the column-cache `Arc` — an
+//! epoch swap that drops a column through the targeted-eviction journal
+//! (`DcpmCache::advance`) therefore invalidates the plan with no extra
+//! wiring, while unaffected warm columns keep their plans.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock, Weak};
+
+use crate::cdm::{CdmAttrId, CdmVersionNo, EntityId};
+use crate::matrix::dpm::DpmBlock;
+use crate::message::{InMessage, OutMessage};
+use crate::schema::{SchemaId, VersionNo};
+
+/// Which mapping lane serves bulk/batch traffic
+/// (`runtime.kernel` config key / `--kernel` CLI flag).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelMode {
+    /// The native block-permutation kernel (default).
+    #[default]
+    Native,
+    /// The scalar Alg-6 per-element lane, kept as fallback and as the
+    /// bench comparison baseline.
+    Scalar,
+}
+
+impl std::str::FromStr for KernelMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "native" => Ok(KernelMode::Native),
+            "scalar" => Ok(KernelMode::Scalar),
+            other => {
+                Err(format!("unknown kernel mode {other:?} (native|scalar)"))
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for KernelMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KernelMode::Native => write!(f, "native"),
+            KernelMode::Scalar => write!(f, "scalar"),
+        }
+    }
+}
+
+/// One block's gather table: output attribute × slot index, in the
+/// block's element order (sorted by `q`) so outputs are bit-identical to
+/// the scalar lane's.
+#[derive(Debug, Clone)]
+struct BlockPlan {
+    entity: EntityId,
+    w: CdmVersionNo,
+    /// `(c_q, p - base)` pairs — the permutation as slot gathers.
+    gather: Vec<(CdmAttrId, u32)>,
+}
+
+/// Compiled mapping plan for one `ᵢ𝒟𝒞𝒫𝓜` column super-set.
+///
+/// Slot indexing exploits the matrix layout: schema-version attribute ids
+/// are contiguous ascending (each version owns a column range), so
+/// `p - base` is a dense index and the presence plane is a bitset, no
+/// hashing anywhere on the mapping path.
+#[derive(Debug, Clone)]
+pub struct ColumnPlan {
+    /// Smallest global column index `p` referenced by any block.
+    base: u32,
+    /// Number of slots: `max(p) - base + 1` (0 for an empty column).
+    width: usize,
+    blocks: Vec<BlockPlan>,
+}
+
+impl ColumnPlan {
+    /// Compile a column's blocks into gather tables. Block order and
+    /// per-block element order are preserved, which is what makes the
+    /// native lane's output identical to the scalar lane's.
+    pub fn build(column: &[Arc<DpmBlock>]) -> ColumnPlan {
+        let ps = column
+            .iter()
+            .flat_map(|b| b.elements.iter().map(|&(_, p)| p.0));
+        let base = ps.clone().min().unwrap_or(0);
+        let width = ps.max().map(|hi| (hi - base) as usize + 1).unwrap_or(0);
+        let blocks = column
+            .iter()
+            .map(|b| BlockPlan {
+                entity: b.key.entity,
+                w: b.key.w,
+                gather: b
+                    .elements
+                    .iter()
+                    .map(|&(q, p)| (q, p.0 - base))
+                    .collect(),
+            })
+            .collect();
+        ColumnPlan { base, width, blocks }
+    }
+
+    /// Number of blocks in the plan.
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Total gather elements (the column's Σ rank).
+    pub fn n_elements(&self) -> usize {
+        self.blocks.iter().map(|b| b.gather.len()).sum()
+    }
+
+    /// Map one message through the plan. Semantics match the scalar Alg-6
+    /// lane exactly: the first non-null field per attribute wins, fields
+    /// appear in block element order, empty outputs are dropped.
+    pub fn map_message(
+        &self,
+        msg: &InMessage,
+        scratch: &mut Scratch,
+    ) -> Vec<OutMessage> {
+        scratch.reset(self.width);
+        // Presence + src-idx planes (ref.py: presence, src_idx) in one
+        // pass over the message fields.
+        for (i, (attr, value)) in msg.fields.iter().enumerate() {
+            if value.is_null() {
+                continue;
+            }
+            let p = attr.0;
+            if p < self.base {
+                continue;
+            }
+            let slot = (p - self.base) as usize;
+            if slot >= self.width {
+                continue;
+            }
+            let (word, bit) = (slot / 64, slot % 64);
+            if scratch.mask[word] & (1 << bit) == 0 {
+                scratch.mask[word] |= 1 << bit;
+                scratch.field_of[slot] = i as u32;
+            }
+        }
+        // Per-block permutation gather.
+        let mut outs = Vec::with_capacity(self.blocks.len());
+        for block in &self.blocks {
+            let mut fields = Vec::with_capacity(block.gather.len());
+            for &(q, slot) in &block.gather {
+                let slot = slot as usize;
+                if scratch.mask[slot / 64] & (1 << (slot % 64)) != 0 {
+                    let src = scratch.field_of[slot] as usize;
+                    fields.push((q, msg.fields[src].1.clone()));
+                }
+            }
+            if fields.is_empty() {
+                continue; // dense discipline: no empty outputs (§5.5)
+            }
+            outs.push(OutMessage {
+                key: msg.key,
+                entity: block.entity,
+                version: block.w,
+                state: msg.state,
+                ts_us: msg.ts_us,
+                fields,
+            });
+        }
+        outs
+    }
+}
+
+/// Reusable per-thread working memory for [`ColumnPlan::map_message`]:
+/// the presence bitset and the source-field table.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    mask: Vec<u64>,
+    field_of: Vec<u32>,
+}
+
+impl Scratch {
+    fn reset(&mut self, width: usize) {
+        let words = width.div_ceil(64);
+        self.mask.clear();
+        self.mask.resize(words, 0);
+        // field_of is only read where the mask bit is set — grow, don't
+        // clear.
+        if self.field_of.len() < width {
+            self.field_of.resize(width, 0);
+        }
+    }
+}
+
+thread_local! {
+    static SCRATCH: RefCell<Scratch> = RefCell::new(Scratch::default());
+}
+
+/// Run `f` with this thread's kernel scratch (zero allocation on the warm
+/// path).
+pub fn with_scratch<R>(f: impl FnOnce(&mut Scratch) -> R) -> R {
+    SCRATCH.with(|s| f(&mut s.borrow_mut()))
+}
+
+/// Plan-cache counters (bench + dashboard material).
+#[derive(Debug, Default)]
+pub struct PlanStats {
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+}
+
+/// Cache of compiled [`ColumnPlan`]s, keyed like the column cache.
+///
+/// An entry is valid only while its [`Weak`] upgrades to the *same* `Arc`
+/// the column cache currently serves: targeted eviction replaces a
+/// column's `Arc`, so the stale plan misses and recompiles, while columns
+/// that survived an epoch swap warm keep their plans. The `Weak` makes
+/// ABA impossible — a recycled allocation address can't masquerade as the
+/// old column, because a successful upgrade proves the old allocation is
+/// still alive.
+#[derive(Default)]
+pub struct PlanCache {
+    #[allow(clippy::type_complexity)]
+    plans: RwLock<
+        HashMap<
+            (SchemaId, VersionNo),
+            (Weak<Vec<Arc<DpmBlock>>>, Arc<ColumnPlan>),
+        >,
+    >,
+    pub stats: PlanStats,
+}
+
+impl PlanCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get (or compile) the plan for `column` as currently cached under
+    /// `key`.
+    pub fn plan_for(
+        &self,
+        key: (SchemaId, VersionNo),
+        column: &Arc<Vec<Arc<DpmBlock>>>,
+    ) -> Arc<ColumnPlan> {
+        if let Some((weak, plan)) = self.plans.read().unwrap().get(&key) {
+            if let Some(live) = weak.upgrade() {
+                if Arc::ptr_eq(&live, column) {
+                    self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                    return Arc::clone(plan);
+                }
+            }
+        }
+        self.stats.misses.fetch_add(1, Ordering::Relaxed);
+        let plan = Arc::new(ColumnPlan::build(column));
+        self.plans
+            .write()
+            .unwrap()
+            .insert(key, (Arc::downgrade(column), Arc::clone(&plan)));
+        plan
+    }
+
+    /// Drop one key (rides the targeted-eviction path).
+    pub fn remove(&self, key: &(SchemaId, VersionNo)) {
+        self.plans.write().unwrap().remove(key);
+    }
+
+    /// Drop everything (rides the full-eviction path).
+    pub fn clear(&self) {
+        self.plans.write().unwrap().clear();
+    }
+
+    pub fn len(&self) -> usize {
+        self.plans.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::dpm::DpmSet;
+    use crate::matrix::fixtures::{fig5_matrix, fig5_trees};
+    use crate::message::StateI;
+    use crate::util::json::Json;
+
+    fn fig5_column() -> (Arc<Vec<Arc<DpmBlock>>>, crate::schema::SchemaTree) {
+        let (t, c) = fig5_trees();
+        let m = fig5_matrix(&t, &c);
+        let dpm = DpmSet::from_matrix(&m, &t, &c, StateI(0)).unwrap();
+        let s1 = t.schema_by_name("s1").unwrap();
+        (Arc::new(dpm.column(s1, VersionNo(1))), t)
+    }
+
+    fn msg(t: &crate::schema::SchemaTree, idx_vals: &[(usize, f64)]) -> InMessage {
+        let s1 = t.schema_by_name("s1").unwrap();
+        let sv = t.version(s1, VersionNo(1)).unwrap();
+        InMessage {
+            key: 4,
+            schema: s1,
+            version: VersionNo(1),
+            state: StateI(0),
+            ts_us: 1,
+            fields: idx_vals
+                .iter()
+                .map(|&(i, v)| (sv.attrs[i], Json::Num(v)))
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn plan_shape_matches_column() {
+        let (col, _) = fig5_column();
+        let plan = ColumnPlan::build(&col);
+        // s1.v1 feeds be1.v2 (2 elements) + be3.v1 (2 elements)
+        assert_eq!(plan.n_blocks(), 2);
+        assert_eq!(plan.n_elements(), 4);
+        // s1.v1 owns columns a1..a3; all referenced ps are inside
+        assert!(plan.width >= 1 && plan.width <= 3);
+    }
+
+    #[test]
+    fn empty_column_builds_empty_plan() {
+        let plan = ColumnPlan::build(&[]);
+        assert_eq!(plan.n_blocks(), 0);
+        assert_eq!(plan.width, 0);
+        let m = InMessage {
+            key: 0,
+            schema: SchemaId(0),
+            version: VersionNo(1),
+            state: StateI(0),
+            ts_us: 0,
+            fields: vec![],
+        };
+        let outs = with_scratch(|s| plan.map_message(&m, s));
+        assert!(outs.is_empty());
+    }
+
+    #[test]
+    fn maps_like_the_scalar_lane() {
+        let (col, t) = fig5_column();
+        let plan = ColumnPlan::build(&col);
+        let m = msg(&t, &[(0, 11.0), (2, 33.0)]); // a1, a3
+        let outs = with_scratch(|s| plan.map_message(&m, s));
+        // be1.v2 gets c3<-a1, c4<-a3; be3.v1 gets c7<-a1
+        assert_eq!(outs.len(), 2);
+        assert_eq!(outs[0].fields.len(), 2);
+        assert_eq!(outs[1].fields.len(), 1);
+        assert!(outs.iter().all(|o| o.is_dense_valid()));
+    }
+
+    #[test]
+    fn nulls_and_out_of_range_attrs_skip() {
+        let (col, t) = fig5_column();
+        let plan = ColumnPlan::build(&col);
+        let s1 = t.schema_by_name("s1").unwrap();
+        let sv = t.version(s1, VersionNo(1)).unwrap();
+        let m = InMessage {
+            key: 0,
+            schema: s1,
+            version: VersionNo(1),
+            state: StateI(0),
+            ts_us: 0,
+            fields: vec![
+                (sv.attrs[0], Json::Null),            // null → absent
+                (crate::schema::AttrId(999), Json::Num(1.0)), // unmapped
+            ],
+        };
+        let outs = with_scratch(|s| plan.map_message(&m, s));
+        assert!(outs.is_empty());
+    }
+
+    #[test]
+    fn plan_cache_hits_on_same_arc_and_misses_on_replacement() {
+        let (col, t) = fig5_column();
+        let s1 = t.schema_by_name("s1").unwrap();
+        let cache = PlanCache::new();
+        let key = (s1, VersionNo(1));
+        let p1 = cache.plan_for(key, &col);
+        let p2 = cache.plan_for(key, &col);
+        assert!(Arc::ptr_eq(&p1, &p2));
+        assert_eq!(cache.stats.hits.load(Ordering::Relaxed), 1);
+        assert_eq!(cache.stats.misses.load(Ordering::Relaxed), 1);
+        // a *replaced* column Arc (same contents) must recompile
+        let replaced = Arc::new((*col).clone());
+        let p3 = cache.plan_for(key, &replaced);
+        assert!(!Arc::ptr_eq(&p2, &p3));
+        assert_eq!(cache.stats.misses.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn dead_column_arc_never_validates_a_plan() {
+        let (col, t) = fig5_column();
+        let s1 = t.schema_by_name("s1").unwrap();
+        let cache = PlanCache::new();
+        let key = (s1, VersionNo(1));
+        cache.plan_for(key, &col);
+        drop(col); // the cached Weak is now dead
+        let (fresh, _) = fig5_column();
+        cache.plan_for(key, &fresh);
+        assert_eq!(cache.stats.misses.load(Ordering::Relaxed), 2);
+        assert_eq!(cache.stats.hits.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn kernel_mode_parses() {
+        assert_eq!("native".parse::<KernelMode>(), Ok(KernelMode::Native));
+        assert_eq!("scalar".parse::<KernelMode>(), Ok(KernelMode::Scalar));
+        assert!("pallas".parse::<KernelMode>().is_err());
+        assert_eq!(KernelMode::Native.to_string(), "native");
+        assert_eq!(KernelMode::Scalar.to_string(), "scalar");
+        assert_eq!(KernelMode::default(), KernelMode::Native);
+    }
+}

@@ -12,10 +12,12 @@
 //! [`MapError::StateMismatch`] and routed to error management.
 
 pub mod baseline;
+pub mod kernel;
 pub mod parallel;
 
-use crate::message::StateI;
-use crate::schema::{SchemaId, VersionNo};
+use crate::cdm::{CdmVersionNo, EntityId};
+use crate::message::{InMessage, StateI};
+use crate::schema::{AttrId, SchemaId, VersionNo};
 
 /// Mapping failures surfaced to the coordinator's error management.
 #[derive(Debug, Clone, PartialEq)]
@@ -26,6 +28,15 @@ pub enum MapError {
     /// The message's schema version has no mapping column (not registered
     /// or all blocks deleted).
     UnknownColumn { schema: SchemaId, version: VersionNo },
+    /// A CDM version listed on its entity has no definition in the tree —
+    /// a torn §5.1 delete. Previously a baseline-lane panic.
+    DeadCdmVersion { entity: EntityId, w: CdmVersionNo },
+    /// The message's `nad` view disagrees with its payload: an attribute
+    /// appears as "null" and *also* carries a data object. The lanes would
+    /// diverge on such input (Alg 1 reads `nad` of the first entry, Alg 6
+    /// scans for any non-null entry), so it dead-letters instead.
+    /// Previously a baseline-lane panic (`expect("nad==1")`).
+    MalformedPayload { attr: AttrId },
 }
 
 impl std::fmt::Display for MapError {
@@ -38,8 +49,36 @@ impl std::fmt::Display for MapError {
             MapError::UnknownColumn { schema, version } => {
                 write!(f, "no mapping column for schema {schema:?} v{}", version.0)
             }
+            MapError::DeadCdmVersion { entity, w } => write!(
+                f,
+                "CDM version v{} of entity {entity:?} is listed but undefined",
+                w.0
+            ),
+            MapError::MalformedPayload { attr } => write!(
+                f,
+                "attribute {attr:?} is null and non-null in the same payload"
+            ),
         }
     }
 }
 
 impl std::error::Error for MapError {}
+
+/// Detect the realizable nad/payload disagreement: an attribute whose
+/// *first* entry is "null" (so `nad_p = 0`) while a later duplicate entry
+/// carries a data object. Alg 1 would silently drop the value and Alg 6
+/// would map it — every lane rejects such messages up front with
+/// [`MapError::MalformedPayload`] instead. Dense messages carry no nulls,
+/// so the scan is free on the optimized path.
+pub(crate) fn conflicting_dup(msg: &InMessage) -> Option<AttrId> {
+    for (i, (attr, value)) in msg.fields.iter().enumerate() {
+        if !value.is_null()
+            && msg.fields[..i]
+                .iter()
+                .any(|(a, v)| a == attr && v.is_null())
+        {
+            return Some(*attr);
+        }
+    }
+    None
+}

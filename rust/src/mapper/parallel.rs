@@ -13,6 +13,7 @@
 
 use std::sync::Arc;
 
+use super::kernel::{self, KernelMode};
 use super::MapError;
 use crate::cache::DcpmCache;
 use crate::matrix::dpm::{DpmBlock, DpmSet};
@@ -23,9 +24,13 @@ use crate::util::threadpool::par_map;
 pub struct ParallelMapper {
     dpm: Arc<DpmSet>,
     cache: Arc<DcpmCache>,
-    /// Parallelize across blocks when a column has at least this many.
+    /// Parallelize across blocks when a column has at least this many
+    /// (scalar lane only — the native kernel is single-pass per message).
     pub block_parallel_threshold: usize,
     pub threads: usize,
+    /// Which lane [`ParallelMapper::map`] runs
+    /// ([`KernelMode::Native`] by default).
+    pub kernel: KernelMode,
 }
 
 impl ParallelMapper {
@@ -43,7 +48,19 @@ impl ParallelMapper {
         cache: Arc<DcpmCache>,
         threads: usize,
     ) -> Self {
-        Self { dpm, cache, block_parallel_threshold: 4, threads }
+        Self {
+            dpm,
+            cache,
+            block_parallel_threshold: 4,
+            threads,
+            kernel: KernelMode::default(),
+        }
+    }
+
+    /// Select the mapping lane (`runtime.kernel` / `--kernel`).
+    pub fn with_kernel(mut self, kernel: KernelMode) -> Self {
+        self.kernel = kernel;
+        self
     }
 
     pub fn state(&self) -> StateI {
@@ -68,6 +85,22 @@ impl ParallelMapper {
                 message: msg.state,
                 dmm: self.dpm.state,
             });
+        }
+        if let Some(attr) = super::conflicting_dup(msg) {
+            return Err(MapError::MalformedPayload { attr });
+        }
+        if self.kernel == KernelMode::Native {
+            // native lane: compiled per-column plan, presence bitset,
+            // permutation gather — one pass over the fields
+            let (column, plan) =
+                self.cache.plan(&self.dpm, msg.schema, msg.version);
+            if column.is_empty() {
+                return Err(MapError::UnknownColumn {
+                    schema: msg.schema,
+                    version: msg.version,
+                });
+            }
+            return Ok(kernel::with_scratch(|s| plan.map_message(msg, s)));
         }
         // line 3: ᵢ𝒟𝒞𝒫𝓜_v^o lookup through the cache (O(1) warm)
         let column = self.cache.column(&self.dpm, msg.schema, msg.version);
@@ -260,6 +293,66 @@ mod tests {
             mapper.map(&msg).unwrap_err(),
             MapError::StateMismatch { .. }
         ));
+    }
+
+    fn scalar_twin(mapper: &ParallelMapper) -> ParallelMapper {
+        ParallelMapper::with_threads(
+            Arc::clone(mapper.dpm()),
+            Arc::new(DcpmCache::new(mapper.state())),
+            1,
+        )
+        .with_kernel(KernelMode::Scalar)
+    }
+
+    #[test]
+    fn native_and_scalar_lanes_agree() {
+        let (t, _c, native) = setup();
+        assert_eq!(native.kernel, KernelMode::Native);
+        let scalar = scalar_twin(&native);
+        for fields in [
+            vec![(0, 11.0)],
+            vec![(1, 22.0)],
+            vec![(0, 1.0), (1, 2.0), (2, 3.0)],
+            vec![(2, 9.0), (0, 8.0)], // out-of-order fields
+            vec![],
+        ] {
+            let msg = dense_msg(&t, &fields);
+            assert_eq!(native.map(&msg), scalar.map(&msg), "{fields:?}");
+        }
+    }
+
+    #[test]
+    fn conflicting_duplicate_attr_is_rejected_by_both_lanes() {
+        let (t, _c, native) = setup();
+        let scalar = scalar_twin(&native);
+        let s1 = t.schema_by_name("s1").unwrap();
+        let sv = t.version(s1, VersionNo(1)).unwrap();
+        let msg = InMessage {
+            key: 3,
+            schema: s1,
+            version: VersionNo(1),
+            state: StateI(0),
+            ts_us: 0,
+            // nad(a1) = 0 (first entry null) but a data object exists —
+            // the lanes would disagree; both must refuse instead
+            fields: vec![
+                (sv.attrs[0], Json::Null),
+                (sv.attrs[0], Json::Num(5.0)),
+            ],
+        };
+        let expected = MapError::MalformedPayload { attr: sv.attrs[0] };
+        assert_eq!(native.map(&msg).unwrap_err(), expected);
+        assert_eq!(scalar.map(&msg).unwrap_err(), expected);
+        // the benign direction (non-null first, null dup later) still maps
+        let benign = InMessage {
+            fields: vec![
+                (sv.attrs[0], Json::Num(5.0)),
+                (sv.attrs[0], Json::Null),
+            ],
+            ..msg
+        };
+        assert_eq!(native.map(&benign), scalar.map(&benign));
+        assert!(!native.map(&benign).unwrap().is_empty());
     }
 
     #[test]

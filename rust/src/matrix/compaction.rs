@@ -40,6 +40,13 @@ impl CompactionStats {
         let mut total_blocks = 0usize;
         let mut nonnull_blocks = 0usize;
         for key in blocks::all_block_keys(tree, cdm) {
+            // §5.1: outdated CDM versions are deleted from the matrix (the
+            // tree keeps recording them) — their extents are dead and must
+            // not inflate the live-element denominator (fig 5 counts 30,
+            // not 42, for the worked example).
+            if Some(key.w) != cdm.latest_version(key.entity) {
+                continue;
+            }
             let ext = blocks::block_extent(tree, cdm, key).expect("live");
             matrix_elements += ext.area();
             total_blocks += 1;
@@ -106,13 +113,42 @@ mod tests {
         let dpm = DpmSet::from_matrix(&m, &t, &c, StateI(0)).unwrap();
         let dusb = DusbSet::from_matrix(&m, &t, &c, StateI(0)).unwrap();
         let stats = CompactionStats::measure(&m, &t, &c, &dpm, &dusb);
-        // live matrix area: includes the stale be1.v1 rows (still in tree)
-        // — fig 5 shows the 30-element live view with be1.v1 gone:
+        // fig 5's live view exactly: 5 live rows (be1.v2, be2.v1, be3.v1;
+        // the stale be1.v1 rows are dead per §5.1) × 6 columns = 30
+        assert_eq!(stats.matrix_elements, 30);
+        // 3 schema versions × 3 live entity versions
+        assert_eq!(stats.total_blocks, 9);
+        assert_eq!(stats.nonnull_blocks, 4);
         assert_eq!(stats.ones, 7);
         assert_eq!(stats.dpm_elements, 7);
         assert_eq!(stats.dusb_elements, 5);
         assert_eq!(stats.dusb_special_nulls, 1);
-        assert!(stats.dpm_ratio() > 0.80); // tiny example; scale benches hit >99%
+        // strategy 1 stores 7 of 30 → ratio 23/30; strategy 2 stores
+        // 5 + 1 of 30 → ratio 0.80 (tiny example; scale benches hit >99%)
+        assert!((stats.dpm_ratio() - 23.0 / 30.0).abs() < 1e-12);
+        assert!((stats.dusb_ratio() - 0.80).abs() < 1e-12);
         assert!(stats.dusb_ratio() >= stats.dpm_ratio());
+    }
+
+    #[test]
+    fn dead_cdm_version_extents_do_not_inflate_the_denominator() {
+        use crate::matrix::fixtures::fig5_drop_old_cdm;
+        let (t, mut c) = fig5_trees();
+        let m = fig5_matrix(&t, &c);
+        let before = {
+            let dpm = DpmSet::from_matrix(&m, &t, &c, StateI(0)).unwrap();
+            let dusb = DusbSet::from_matrix(&m, &t, &c, StateI(0)).unwrap();
+            CompactionStats::measure(&m, &t, &c, &dpm, &dusb)
+        };
+        // physically deleting be1.v1 must not change the live accounting —
+        // the measure already excluded it
+        fig5_drop_old_cdm(&mut c);
+        let dpm = DpmSet::from_matrix(&m, &t, &c, StateI(0)).unwrap();
+        let dusb = DusbSet::from_matrix(&m, &t, &c, StateI(0)).unwrap();
+        let after = CompactionStats::measure(&m, &t, &c, &dpm, &dusb);
+        assert_eq!(before.matrix_elements, after.matrix_elements);
+        assert_eq!(before.total_blocks, after.total_blocks);
+        assert_eq!(before.nonnull_blocks, after.nonnull_blocks);
+        assert_eq!(before.dpm_ratio(), after.dpm_ratio());
     }
 }

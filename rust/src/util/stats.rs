@@ -32,8 +32,14 @@ impl Summary {
         }
         let count = sample.len();
         let mean = sample.iter().sum::<f64>() / count as f64;
-        let var = sample.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
-            / count as f64;
+        // Bessel-corrected *sample* variance — the paper's §7 σ is a
+        // sample statistic; a single observation has no spread.
+        let var = if count < 2 {
+            0.0
+        } else {
+            sample.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+                / (count - 1) as f64
+        };
         let mut sorted = sample.to_vec();
         sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
         Summary {
@@ -184,7 +190,25 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 5.0);
         assert_eq!(s.p50, 3.0);
-        assert!((s.std - (2.0f64).sqrt()).abs() < 1e-12);
+        // sample std: Σ(x-x̄)² = 10, / (n-1) = 2.5
+        assert!((s.std - (2.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn std_is_bessel_corrected() {
+        // known sample σ: [2, 4, 4, 4, 5, 5, 7, 9] has Σ(x-x̄)² = 32 over
+        // n-1 = 7 → σ = sqrt(32/7)
+        let s = Summary::from(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((s.std - (32.0f64 / 7.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_observation_has_zero_std() {
+        let s = Summary::from(&[39.0]);
+        assert_eq!(s.count, 1);
+        assert_eq!(s.mean, 39.0);
+        assert_eq!(s.std, 0.0);
+        assert!(s.std.is_finite());
     }
 
     #[test]

@@ -1,0 +1,267 @@
+//! Equivalence suite for the native block-permutation kernel: over seeded
+//! random landscapes and random message batches (nulls, deletes, unmapped
+//! columns), the native lane, the scalar Alg-6 lane and the Alg-1 baseline
+//! must produce identical `OutMessage` sets — and warming a plan cache
+//! across a mid-batch epoch swap must equal a cold restart against the
+//! updated DMM.
+
+use std::sync::Arc;
+
+use metl::cache::DcpmCache;
+use metl::config::PipelineConfig;
+use metl::mapper::baseline::BaselineMapper;
+use metl::mapper::kernel::KernelMode;
+use metl::mapper::parallel::ParallelMapper;
+use metl::mapper::MapError;
+use metl::matrix::dpm::DpmSet;
+use metl::matrix::update::{prepare_update, ChangeCase};
+use metl::message::{InMessage, OutMessage, StateI};
+use metl::util::rng::Rng;
+use metl::workload::{self, Landscape};
+
+/// Randomized config within paper-plausible bounds (mirrors
+/// `prop_invariants::random_cfg`).
+fn random_cfg(rng: &mut Rng) -> PipelineConfig {
+    let mut cfg = PipelineConfig::small();
+    cfg.n_services = 2 + rng.gen_range(6) as usize;
+    cfg.attrs_per_schema = 3 + rng.gen_range(8) as usize;
+    cfg.versions_per_schema = 1 + rng.gen_range(6) as usize;
+    cfg.n_entities = 1 + rng.gen_range(4) as usize;
+    cfg.attrs_per_entity = 3 + rng.gen_range(10) as usize;
+    cfg.mapped_fraction = 0.2 + rng.f64() * 0.7;
+    cfg.seed = rng.next_u64();
+    cfg
+}
+
+/// A random message for (schema, version), with nulls at `null_prob` and
+/// occasionally an extra field carrying an attribute no mapping column
+/// knows (the kernel must skip out-of-range slots, not index past the
+/// bitset).
+fn random_msg(
+    land: &Landscape,
+    schema: metl::schema::SchemaId,
+    version: metl::schema::VersionNo,
+    key: u64,
+    state: StateI,
+    rng: &mut Rng,
+) -> InMessage {
+    let sv = land.tree.version(schema, version).unwrap();
+    let row = metl::source::random_row(
+        &land.tree, schema, version, key, rng, 0.4,
+    );
+    let mut fields: Vec<_> =
+        sv.attrs.iter().copied().zip(row.values).collect();
+    if rng.chance(0.25) {
+        // an unmapped column id far outside every version's range
+        fields.push((
+            metl::schema::AttrId(90_000 + rng.gen_range(100) as u32),
+            metl::util::json::Json::Num(1.0),
+        ));
+    }
+    InMessage { key, schema, version, state, ts_us: 0, fields }
+}
+
+fn map_sorted(
+    mapper: &ParallelMapper,
+    msg: &InMessage,
+) -> Result<Vec<OutMessage>, MapError> {
+    mapper.map(msg).map(|mut outs| {
+        outs.sort_by_key(|o| (o.entity, o.version));
+        outs
+    })
+}
+
+/// Three-way agreement: native ≡ scalar ≡ dense-filtered Alg 1 over random
+/// landscapes × random batches.
+#[test]
+fn prop_native_scalar_baseline_agree() {
+    let mut meta = Rng::seed_from(0x6E47_1BE);
+    for trial in 0..12 {
+        let cfg = random_cfg(&mut meta);
+        let land = workload::generate(&cfg);
+        let dpm = Arc::new(
+            DpmSet::from_matrix(&land.matrix, &land.tree, &land.cdm, StateI(0))
+                .unwrap(),
+        );
+        let native = ParallelMapper::with_threads(
+            Arc::clone(&dpm),
+            Arc::new(DcpmCache::new(StateI(0))),
+            1,
+        )
+        .with_kernel(KernelMode::Native);
+        let scalar = ParallelMapper::with_threads(
+            Arc::clone(&dpm),
+            Arc::new(DcpmCache::new(StateI(0))),
+            1,
+        )
+        .with_kernel(KernelMode::Scalar);
+        let baseline = BaselineMapper::new(
+            &land.matrix, &land.tree, &land.cdm, StateI(0),
+        );
+        let mut rng = Rng::seed_from(cfg.seed ^ 0xBA7C);
+        for k in 0..25u64 {
+            let s_idx = rng.gen_range(cfg.n_services as u64) as usize;
+            let node = land.tree.schemas().nth(s_idx).unwrap();
+            let v = *rng.choose(&node.versions).unwrap();
+            let msg =
+                random_msg(&land, node.id, v, k, StateI(0), &mut rng);
+            // native and scalar agree bit for bit — same Ok order, same Err
+            assert_eq!(
+                native.map(&msg),
+                scalar.map(&msg),
+                "trial {trial} msg {k}: native vs scalar"
+            );
+            // both agree with the densified Alg-1 ground truth; a version
+            // with zero mapped blocks is UnknownColumn on the dense lanes
+            // while Alg 1 emits all-null outputs — both mean "nothing
+            // reaches the CDM"
+            let fast = match map_sorted(&native, &msg) {
+                Ok(outs) => outs,
+                Err(MapError::UnknownColumn { .. }) => vec![],
+                Err(e) => panic!("trial {trial} msg {k}: {e}"),
+            };
+            let mut slow: Vec<OutMessage> = baseline
+                .map(&msg)
+                .unwrap()
+                .into_iter()
+                .map(|o| OutMessage {
+                    fields: o
+                        .fields
+                        .into_iter()
+                        .filter(|(_, val)| !val.is_null())
+                        .collect(),
+                    ..o
+                })
+                .filter(|o| !o.fields.is_empty())
+                .collect();
+            slow.sort_by_key(|o| (o.entity, o.version));
+            assert_eq!(fast, slow, "trial {trial} msg {k}: vs baseline");
+        }
+    }
+}
+
+/// Mid-batch epoch swap ≡ cold restart: warm the plan cache, apply an
+/// Alg-5 update with **targeted** eviction (only the changed column's plan
+/// drops; the rest stay warm), and require every post-swap output to equal
+/// a cold mapper built directly over the new DMM.
+#[test]
+fn prop_epoch_swap_equals_cold_restart() {
+    let mut meta = Rng::seed_from(0x5AFE_CA5E);
+    for trial in 0..8 {
+        let cfg = random_cfg(&mut meta);
+        let mut land = workload::generate(&cfg);
+        let dpm0 = DpmSet::from_matrix(
+            &land.matrix, &land.tree, &land.cdm, StateI(0),
+        )
+        .unwrap();
+        let warm_cache = Arc::new(DcpmCache::new(StateI(0)));
+        let mut warm = ParallelMapper::with_threads(
+            Arc::new(dpm0.clone()),
+            Arc::clone(&warm_cache),
+            1,
+        )
+        .with_kernel(KernelMode::Native);
+
+        // phase 1: warm every column's plan
+        let mut rng = Rng::seed_from(cfg.seed ^ 0x77A5);
+        let schemas: Vec<_> =
+            land.tree.schemas().map(|s| (s.id, s.versions.clone())).collect();
+        for (schema, versions) in &schemas {
+            for &v in versions {
+                let msg =
+                    random_msg(&land, *schema, v, 1, StateI(0), &mut rng);
+                let _ = warm.map(&msg);
+            }
+        }
+        assert!(
+            !warm_cache.plans.is_empty(),
+            "trial {trial}: warm-up compiled no plans"
+        );
+
+        // phase 2: an Alg-5 case-3 change, published with targeted eviction
+        let schema = schemas[trial % schemas.len()].0;
+        let fields = workload::evolved_fields(&land.tree, schema);
+        let v_new = land.tree.add_version(schema, &fields);
+        let (dpm1, _report) = prepare_update(
+            &dpm0,
+            &land.tree,
+            &land.cdm,
+            ChangeCase::AddedSchemaVersion { schema, v: v_new },
+            StateI(1),
+        );
+        warm_cache.advance(StateI(1), Some(&[(schema, v_new)]));
+        warm.replace_dpm(Arc::new(dpm1.clone()));
+
+        // phase 3: every output after the swap equals a cold restart
+        let cold = ParallelMapper::with_threads(
+            Arc::new(dpm1),
+            Arc::new(DcpmCache::new(StateI(1))),
+            1,
+        )
+        .with_kernel(KernelMode::Native);
+        let hits_before =
+            warm_cache.plans.stats.hits.load(std::sync::atomic::Ordering::Relaxed);
+        for (schema, versions) in &schemas {
+            for &v in versions {
+                for k in 0..3u64 {
+                    let msg = random_msg(
+                        &land, *schema, v, 10 + k, StateI(1), &mut rng,
+                    );
+                    assert_eq!(
+                        warm.map(&msg),
+                        cold.map(&msg),
+                        "trial {trial}: swap ≠ cold restart ({schema:?} v{})",
+                        v.0
+                    );
+                }
+            }
+        }
+        // the new version's column maps identically too
+        let msg = random_msg(&land, schema, v_new, 99, StateI(1), &mut rng);
+        assert_eq!(warm.map(&msg), cold.map(&msg), "trial {trial}: new column");
+        // targeted eviction kept unaffected plans warm: the post-swap pass
+        // must have hit the plan cache, not recompiled everything
+        let hits_after =
+            warm_cache.plans.stats.hits.load(std::sync::atomic::Ordering::Relaxed);
+        assert!(
+            hits_after > hits_before,
+            "trial {trial}: post-swap mapping never hit a warm plan"
+        );
+    }
+}
+
+/// Full-pipeline determinism across lanes: the same seeded day trace
+/// (inserts, updates, deletes, schema-change storms) through a native and
+/// a scalar pipeline yields identical CDM topic contents.
+#[test]
+fn day_trace_is_kernel_invariant() {
+    use metl::broker::Consumer;
+    use metl::coordinator::pipeline::{OutRecord, Pipeline};
+
+    let run = |kernel: KernelMode| {
+        let mut cfg = PipelineConfig::small();
+        cfg.kernel = kernel;
+        let mut rng = Rng::seed_from(cfg.seed);
+        let ops = workload::day_trace(&cfg, &mut rng);
+        let p = Pipeline::new(cfg).unwrap();
+        let report = p.run_trace(&ops).unwrap();
+        let mut consumer: Consumer<OutRecord> =
+            Consumer::new(p.out_topic.clone(), 0, 1);
+        let mut records: Vec<(metl::message::cdc::CdcOp, OutMessage)> =
+            consumer
+                .poll(usize::MAX)
+                .into_iter()
+                .map(|(_, rec)| (rec.value.0, rec.value.1.clone()))
+                .collect();
+        records.sort_by_key(|(_, o)| (o.key, o.entity, o.version, o.ts_us));
+        (report, records)
+    };
+    let (rn, native) = run(KernelMode::Native);
+    let (rs, scalar) = run(KernelMode::Scalar);
+    assert_eq!(rn.events, rs.events);
+    assert_eq!(rn.out_messages, rs.out_messages);
+    assert_eq!(rn.dead_letters, rs.dead_letters);
+    assert_eq!(rn.dmm_updates, rs.dmm_updates);
+    assert!(!native.is_empty());
+    assert_eq!(native, scalar);
+}
