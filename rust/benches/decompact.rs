@@ -56,13 +56,11 @@ fn main() {
         let restored = recreate_dpm(&dusb, &land.tree, &land.cdm).unwrap();
         assert!(dpm_direct.same_elements(&restored));
 
-        // store round trip (serialize + fsync-less write + parse)
-        let dir = std::env::temp_dir()
-            .join("metl-bench-store")
-            .join(format!("{name}-{}", std::process::id()));
-        let store = MatrixStore::open(&dir).unwrap();
-        let ss = bench.run("store: save DUSB (json)", || {
-            store.save_dusb(&dusb).unwrap()
+        // store round trip (segment write + manifest swap + parse)
+        let dir = metl::util::tmp::TestDir::new(&format!("bench-store-{name}"));
+        let store = MatrixStore::open(dir.path()).unwrap();
+        let ss = bench.run("store: save DUSB segment", || {
+            store.save_dusb(&dusb, &land.tree).unwrap()
         });
         let sl = bench.run("store: load + recreate DPM", || {
             store

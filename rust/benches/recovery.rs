@@ -1,0 +1,164 @@
+//! Bench: durable-store crash recovery, the numbers behind `BENCH_7.json`.
+//!
+//! Three axes of the log-structured store (see ARCHITECTURE.md §Store):
+//!
+//!   1. full recovery latency (segment read + bounded decompaction +
+//!      Alg-5 WAL-tail replay) — the restart-to-first-mapping cost,
+//!   2. WAL replay rate (records/s through Alg 5),
+//!   3. single-schema point recovery through the sparse index, with the
+//!      "<10% of total store bytes" acceptance bound enforced.
+//!
+//! Flags (after `cargo bench --bench recovery --`):
+//!   --smoke           reduced iterations + small profile (CI shape check)
+//!   --out PATH        artifact destination (default ../BENCH_7.json from
+//!                     the crate root, i.e. the repo-root baseline)
+//!   --validate PATH   validate an existing artifact's schema and exit
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{arg_value, has_flag, section, Artifact, Bench};
+use metl::config::PipelineConfig;
+use metl::coordinator::pipeline::Pipeline;
+use metl::util::json::Json;
+use metl::util::tmp::TestDir;
+use metl::workload::{self, Landscape};
+
+/// Metrics every `BENCH_7.json`-shaped artifact must carry (dotted paths
+/// under `metrics`; shared by `--validate` and the CI bench-smoke job).
+const REQUIRED: &[&str] = &[
+    "recovery_ns.p50",
+    "recovery_ns.p99",
+    "wal_replayed",
+    "wal_replay_per_s",
+    "point_recovery.bytes_read",
+    "point_recovery.store_bytes",
+    "point_recovery.read_fraction",
+    "point_recovery.read_ns.p50",
+];
+
+fn main() {
+    if let Some(path) = arg_value("--validate") {
+        match harness::validate_artifact_file(&path, "recovery", REQUIRED) {
+            Ok(()) => {
+                println!("{path}: valid recovery artifact");
+                return;
+            }
+            Err(e) => {
+                eprintln!("invalid recovery artifact: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+
+    let smoke = has_flag("--smoke");
+    let (mut cfg, wal_tail, iters) = if smoke {
+        (PipelineConfig::small(), 4usize, 3usize)
+    } else {
+        (PipelineConfig::paper_day(), 16, 10)
+    };
+    // keep every change in the WAL tail: replay is what we are measuring
+    cfg.store_segment_threshold = 10_000;
+    let profile = if smoke { "small" } else { "paper_day" };
+    let mut artifact = Artifact::new("recovery");
+    artifact
+        .meta("profile", Json::Str(profile.to_string()))
+        .meta("smoke", Json::Bool(smoke))
+        .meta("iters", Json::Num(iters as f64));
+
+    // --- axis 1+2: full recovery + WAL replay rate -----------------------
+    section(&format!(
+        "full recovery: segment + {wal_tail}-record WAL tail ({profile})"
+    ));
+    let dir = TestDir::new("bench-recovery");
+    let p = Pipeline::new(cfg.clone())
+        .unwrap()
+        .with_store(dir.path())
+        .unwrap();
+    for i in 0..wal_tail {
+        p.apply_schema_change(i % cfg.n_services).unwrap();
+    }
+    let store = p.store.as_ref().unwrap();
+    let bench = Bench::new(1, iters);
+    // recovery mutates its landscape, so each timed run consumes a
+    // pre-generated pristine one (generation stays outside the timing)
+    let mut lands: Vec<Landscape> =
+        (0..=iters).map(|_| workload::generate(&cfg)).collect();
+    let rec = bench.run("recover (cold restart)", || {
+        let mut land = lands.pop().expect("pre-generated landscape");
+        let out = store.recover(&mut land).unwrap().unwrap();
+        assert_eq!(out.replayed, wal_tail);
+        out.dpm.n_elements()
+    });
+    let replay_per_s = wal_tail as f64 / (rec.mean / 1e9);
+    println!("  WAL replay rate: {replay_per_s:.0} records/s");
+    artifact.set_summary_ns("recovery_ns", &rec);
+    artifact.set_num("wal_replayed", wal_tail as f64);
+    artifact.set_num("wal_replay_per_s", replay_per_s);
+
+    // --- axis 3: single-schema point recovery ----------------------------
+    section("single-schema point recovery (sparse index)");
+    let mut pcfg = PipelineConfig::small();
+    pcfg.n_services = 24;
+    pcfg.n_entities = 12;
+    pcfg.store_segment_threshold = 10_000;
+    let pdir = TestDir::new("bench-recovery-point");
+    let pp = Pipeline::new(pcfg)
+        .unwrap()
+        .with_store(pdir.path())
+        .unwrap();
+    pp.apply_schema_change(0).unwrap();
+    pp.apply_schema_change(1).unwrap();
+    let pstore = pp.store.as_ref().unwrap();
+    let schema = {
+        let land = pp.landscape.read().unwrap();
+        land.dbs[12].tables[0].schema
+    };
+    let pr = pstore.recover_schema(schema).unwrap().unwrap();
+    let frac = pr.bytes_read as f64 / pr.store_bytes as f64;
+    println!(
+        "  region read: {}B of {}B ({:.1}% of the store)",
+        pr.bytes_read,
+        pr.store_bytes,
+        frac * 100.0
+    );
+    // the acceptance bound, enforced on every run including smoke
+    assert!(
+        frac < 0.10,
+        "point recovery read {:.1}% of the store (bound: 10%)",
+        frac * 100.0
+    );
+    let ps = bench.run("recover_schema (point read)", || {
+        pstore.recover_schema(schema).unwrap().unwrap().bytes_read
+    });
+    artifact.set(
+        "point_recovery",
+        Json::Obj(vec![
+            ("bytes_read".to_string(), Json::Num(pr.bytes_read as f64)),
+            ("store_bytes".to_string(), Json::Num(pr.store_bytes as f64)),
+            ("read_fraction".to_string(), Json::Num(frac)),
+            ("read_ns".to_string(), summary_obj(&ps)),
+        ]),
+    );
+
+    // --- emit ------------------------------------------------------------
+    let out =
+        arg_value("--out").unwrap_or_else(|| "../BENCH_7.json".to_string());
+    artifact.write(&out).unwrap();
+    if let Err(e) = harness::validate_artifact_file(&out, "recovery", REQUIRED) {
+        eprintln!("emitted artifact failed self-validation: {e}");
+        std::process::exit(1);
+    }
+    println!("\nrecovery bench OK");
+}
+
+fn summary_obj(s: &metl::util::stats::Summary) -> Json {
+    Json::Obj(vec![
+        ("count".to_string(), Json::Num(s.count as f64)),
+        ("mean".to_string(), Json::Num(s.mean)),
+        ("std".to_string(), Json::Num(s.std)),
+        ("p50".to_string(), Json::Num(s.p50)),
+        ("p90".to_string(), Json::Num(s.p90)),
+        ("p99".to_string(), Json::Num(s.p99)),
+    ])
+}

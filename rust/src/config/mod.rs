@@ -9,6 +9,7 @@ use anyhow::{bail, Context, Result};
 use crate::cache::EvictMode;
 use crate::mapper::kernel::KernelMode;
 use crate::schema::Compatibility;
+use crate::store::FsyncPolicy;
 
 /// Full pipeline configuration.
 #[derive(Debug, Clone, PartialEq)]
@@ -65,6 +66,17 @@ pub struct PipelineConfig {
     /// the block-permutation kernel with compiled column plans) or scalar
     /// (the per-element Alg-6 lane, kept as fallback and bench baseline).
     pub kernel: KernelMode,
+    /// Durable matrix-store directory (`runtime.store.dir` / `--store`);
+    /// None runs without persistence.
+    pub store_dir: Option<String>,
+    /// WAL records past the live segment before a fresh snapshot segment
+    /// is written (`runtime.store.segment_threshold`).
+    pub store_segment_threshold: u64,
+    /// WAL fsync policy (`runtime.store.fsync = "always"|"never"`).
+    pub store_fsync: FsyncPolicy,
+    /// Restart-recovery time budget asserted by the crash tests/benches
+    /// (`runtime.store.recovery_budget_ms`).
+    pub store_recovery_budget_ms: u64,
 }
 
 impl Default for PipelineConfig {
@@ -98,6 +110,10 @@ impl PipelineConfig {
             evolution_single_change: true,
             evict: EvictMode::Targeted,
             kernel: KernelMode::Native,
+            store_dir: None,
+            store_segment_threshold: 32,
+            store_fsync: FsyncPolicy::Always,
+            store_recovery_budget_ms: 5_000,
         }
     }
 
@@ -126,6 +142,10 @@ impl PipelineConfig {
             evolution_single_change: true,
             evict: EvictMode::Targeted,
             kernel: KernelMode::Native,
+            store_dir: None,
+            store_segment_threshold: 32,
+            store_fsync: FsyncPolicy::Always,
+            store_recovery_budget_ms: 5_000,
         }
     }
 
@@ -154,6 +174,10 @@ impl PipelineConfig {
             evolution_single_change: true,
             evict: EvictMode::Targeted,
             kernel: KernelMode::Native,
+            store_dir: None,
+            store_segment_threshold: 32,
+            store_fsync: FsyncPolicy::Always,
+            store_recovery_budget_ms: 5_000,
         }
     }
 
@@ -217,6 +241,15 @@ impl PipelineConfig {
             cfg.kernel =
                 v.parse::<KernelMode>().map_err(|e| anyhow::anyhow!(e))?;
         }
+        if let Some(v) = kv.get("runtime.store.dir") {
+            cfg.store_dir = if v.is_empty() { None } else { Some(v.clone()) };
+        }
+        num!("runtime.store.segment_threshold", cfg.store_segment_threshold);
+        if let Some(v) = kv.get("runtime.store.fsync") {
+            cfg.store_fsync =
+                v.parse::<FsyncPolicy>().map_err(|e| anyhow::anyhow!(e))?;
+        }
+        num!("runtime.store.recovery_budget_ms", cfg.store_recovery_budget_ms);
         Ok(cfg)
     }
 }
@@ -366,6 +399,29 @@ mod tests {
         assert_eq!(PipelineConfig::paper_day().kernel, KernelMode::Native);
         assert_eq!(PipelineConfig::eos_scale().kernel, KernelMode::Native);
         assert!(PipelineConfig::parse("[runtime]\nkernel = pallas").is_err());
+    }
+
+    #[test]
+    fn parses_store_knobs() {
+        let text = r#"
+            [runtime.store]
+            dir = "state/store"
+            segment_threshold = 8
+            fsync = "never"
+            recovery_budget_ms = 250
+        "#;
+        let cfg = PipelineConfig::parse(text).unwrap();
+        assert_eq!(cfg.store_dir.as_deref(), Some("state/store"));
+        assert_eq!(cfg.store_segment_threshold, 8);
+        assert_eq!(cfg.store_fsync, FsyncPolicy::Never);
+        assert_eq!(cfg.store_recovery_budget_ms, 250);
+        // defaults: no store, durable fsync
+        let cfg = PipelineConfig::parse("").unwrap();
+        assert_eq!(cfg.store_dir, None);
+        assert_eq!(cfg.store_fsync, FsyncPolicy::Always);
+        assert!(
+            PipelineConfig::parse("[runtime.store]\nfsync = maybe").is_err()
+        );
     }
 
     #[test]

@@ -42,6 +42,7 @@ use crate::message::StateI;
 use crate::schema::evolution::{self, Compatibility};
 use crate::schema::{ExtractType, SchemaId, VersionNo};
 use crate::source::{SchemaChange, SchemaChangeEvent, SchemaChangeSource};
+use crate::store::WalOp;
 use crate::workload::Landscape;
 
 /// Result of applying one schema-change event.
@@ -58,9 +59,11 @@ pub enum ChangeOutcome {
     /// The change violated the compatibility rules (or referenced an
     /// unknown/live version) and was dropped — state and epoch untouched.
     Rejected { schema: SchemaId, reason: String },
-    /// The change reached the live DMM (the epoch may already have
-    /// swapped) but persistence/audit failed — an infrastructure fault
-    /// the operator must look at, not a validation rejection.
+    /// Store I/O failed — an infrastructure fault the operator must look
+    /// at, not a validation rejection. If the WAL commit itself failed the
+    /// change is **not** live (nothing was mutated or published); if a
+    /// post-publish step failed (audit line, snapshot segment) the change
+    /// is live *and* durable — the WAL already carries it.
     Faulted { schema: SchemaId, error: String },
 }
 
@@ -125,28 +128,29 @@ impl EvolutionController {
         outcomes
     }
 
-    /// Apply one schema-change event end to end (validate → register →
-    /// migrate → Alg 5 off to the side → epoch swap → targeted eviction
-    /// → persist/audit). Every failure is classified: validation failures
-    /// are [`ChangeOutcome::Rejected`]; persistence failures after the
-    /// swap are [`ChangeOutcome::Faulted`] (also logged to stderr, since
-    /// production loops pump fire-and-forget).
+    /// Apply one schema-change event end to end (validate → **WAL
+    /// commit** → register → migrate → Alg 5 off to the side → epoch swap
+    /// → targeted eviction → audit/snapshot). Every failure is
+    /// classified: validation failures are [`ChangeOutcome::Rejected`];
+    /// store faults are [`ChangeOutcome::Faulted`] (also logged to
+    /// stderr, since production loops pump fire-and-forget). The WAL
+    /// commit runs *before* any mutation, so a change that was
+    /// acknowledged as applied is always recoverable, and a change whose
+    /// commit failed left no trace.
     pub fn apply(&self, p: &Pipeline, ev: &SchemaChangeEvent) -> ChangeOutcome {
         let t0 = Instant::now();
         let result = match &ev.change {
             SchemaChange::AddVersion { fields } => {
-                self.apply_add(p, ev.schema, fields, t0)
+                self.apply_add(p, ev.schema, fields, ev.ts_us, t0)
             }
             SchemaChange::DropVersion { v } => {
-                self.apply_drop(p, ev.schema, *v, t0)
+                self.apply_drop(p, ev.schema, *v, ev.ts_us, t0)
             }
         };
         result.unwrap_or_else(|e| {
-            // the only fallible step is persistence, which runs after the
-            // epoch swap: the change is live but not durable
             eprintln!(
-                "evolution: change for schema {:?} applied but failed to \
-                 persist: {e}",
+                "evolution: store fault while applying change for schema \
+                 {:?}: {e}",
                 ev.schema
             );
             ChangeOutcome::Faulted { schema: ev.schema, error: e.to_string() }
@@ -170,6 +174,7 @@ impl EvolutionController {
         p: &Pipeline,
         schema: SchemaId,
         fields: &[(String, ExtractType, bool)],
+        ts_us: u64,
         t0: Instant,
     ) -> Result<ChangeOutcome> {
         let mut land = p.landscape.write().unwrap();
@@ -191,7 +196,20 @@ impl EvolutionController {
         ) {
             return Ok(self.reject(p, schema, e.to_string()));
         }
+        // durability point: commit to the WAL before touching the tree.
+        // The version number and state are deterministic under the write
+        // lock (add_version assigns latest+1; only this lane bumps state),
+        // so the record carries exactly what the mutation will do — a
+        // commit failure leaves the pipeline untouched.
+        self.wal_commit(
+            p,
+            schema,
+            VersionNo(latest.0 + 1),
+            WalOp::Add { fields: fields.to_vec() },
+            ts_us,
+        )?;
         let v = land.tree.add_version(schema, fields);
+        debug_assert_eq!(v, VersionNo(latest.0 + 1));
         {
             // the sources migrate with the registry: new writes conform to
             // the new live version (values carried across ≡, else null)
@@ -223,6 +241,7 @@ impl EvolutionController {
         p: &Pipeline,
         schema: SchemaId,
         v: VersionNo,
+        ts_us: u64,
         t0: Instant,
     ) -> Result<ChangeOutcome> {
         let mut land = p.landscape.write().unwrap();
@@ -246,6 +265,9 @@ impl EvolutionController {
                 format!("cannot drop live version v{}", v.0),
             ));
         }
+        // durability point: the retirement is in the WAL before the
+        // column clears or the tree node goes
+        self.wal_commit(p, schema, v, WalOp::Drop, ts_us)?;
         let n_rows = land.matrix.n_rows();
         land.matrix.clear_block(0..n_rows, col_start..col_start + width);
         land.tree.delete_version(schema, v);
@@ -297,10 +319,37 @@ impl EvolutionController {
         (new_state, epoch, report)
     }
 
-    /// Persist the post-change `ᵢ𝔇𝔘𝔖𝔅` and append the audit line, under
-    /// a fresh *read* lock. A change racing in between simply persists
-    /// its own newer DUSB afterwards — last writer wins, exactly like the
-    /// store's replace semantics.
+    /// Commit one evolution record to the store's WAL (no-op without a
+    /// store). Runs under the landscape write lock, *before* any
+    /// mutation: the predicted `(state, version)` is deterministic there
+    /// (`add_version` assigns latest+1, and only this lane bumps the
+    /// state), so the record carries exactly what the mutation will do.
+    fn wal_commit(
+        &self,
+        p: &Pipeline,
+        schema: SchemaId,
+        v: VersionNo,
+        op: WalOp,
+        ts_us: u64,
+    ) -> Result<()> {
+        let Some(store) = &p.store else { return Ok(()) };
+        store.commit_update(
+            StateI(p.state.current().0 + 1),
+            schema,
+            v,
+            op,
+            ts_us,
+        )?;
+        Ok(())
+    }
+
+    /// Post-publish bookkeeping, under a fresh *read* lock: append the
+    /// audit line, and — once enough WAL records accumulated past the
+    /// live segment — compact the ground-truth matrix into a fresh
+    /// snapshot segment (`ᵢ𝔇𝔘𝔖𝔅`, atomic manifest swap, old segment
+    /// GCed). Durability does **not** depend on this: the change is
+    /// already in the WAL; a racing change simply snapshots its own newer
+    /// DUSB afterwards — last writer wins.
     fn persist(
         &self,
         p: &Pipeline,
@@ -314,16 +363,19 @@ impl EvolutionController {
             new_state,
             report.clone(),
         );
-        let land = p.landscape.read().unwrap();
-        let dusb = DusbSet::from_matrix(
-            &land.matrix,
-            &land.tree,
-            &land.cdm,
-            p.state.current(),
-        )
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
-        store.save_dusb(&dusb)?;
         store.log_update(&outcome.audit_json(audit_case))?;
+        store.sync()?;
+        if store.snapshot_due() {
+            let land = p.landscape.read().unwrap();
+            let dusb = DusbSet::from_matrix(
+                &land.matrix,
+                &land.tree,
+                &land.cdm,
+                p.state.current(),
+            )
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+            store.save_dusb(&dusb, &land.tree)?;
+        }
         Ok(())
     }
 
@@ -393,6 +445,24 @@ impl EvolutionController {
             return false;
         }
         let t0 = Instant::now();
+        // durability point: the patch is logged before it publishes. If
+        // the WAL is unwritable the record dead-letters instead — an
+        // unlogged epoch would vanish on restart while its consumers saw
+        // mapped output.
+        if let Err(e) = self.wal_commit(
+            p,
+            schema,
+            version,
+            WalOp::InBand,
+            p.now_us(),
+        ) {
+            eprintln!(
+                "evolution: in-band patch for schema {schema:?} v{} not \
+                 applied, wal commit failed: {e}",
+                version.0
+            );
+            return false;
+        }
         let (new_state, _epoch, report) = self.swap_in(
             p,
             &mut land,

@@ -286,6 +286,9 @@ impl PipelineBuilder {
             next_key: IdGen::new(),
             clock_us: AtomicU64::new(1_600_000_000_000_000),
         };
+        let store_dir = store_dir.or_else(|| {
+            pipeline.cfg.store_dir.clone().map(std::path::PathBuf::from)
+        });
         match store_dir {
             Some(dir) => pipeline.with_store(dir),
             None => Ok(pipeline),
@@ -320,11 +323,34 @@ impl Pipeline {
         Self::builder(cfg).landscape(landscape).build()
     }
 
-    /// Attach the Postgres-sim store (hybrid §6.2 persistence).
-    pub fn with_store(mut self, dir: impl AsRef<std::path::Path>) -> Result<Self> {
-        let store = MatrixStore::open(dir)?;
-        // persist the initial DUSB
-        {
+    /// Attach the durable matrix store (hybrid §6.2 persistence, hardened
+    /// with a WAL + snapshot segments — see [`crate::store`]). Tuning
+    /// comes from the config's `runtime.store.*` knobs.
+    pub fn with_store(
+        self,
+        dir: impl AsRef<std::path::Path>,
+    ) -> Result<Self> {
+        let cfg = crate::store::StoreConfig {
+            segment_update_threshold: self.cfg.store_segment_threshold,
+            fsync: self.cfg.store_fsync,
+            recovery_budget_ms: self.cfg.store_recovery_budget_ms,
+        };
+        let store = MatrixStore::open_with(
+            dir,
+            cfg,
+            Arc::new(crate::store::RealIo::default()),
+            Arc::clone(&self.metrics.store),
+        )?;
+        self.attach_store(store)
+    }
+
+    /// Attach an already-opened store (crash tests inject fault-injecting
+    /// IO here). A store that holds nothing yet gets the initial snapshot
+    /// segment; one with an existing manifest is left untouched — opening
+    /// must never clobber durable state (call
+    /// [`Pipeline::restore_from_store`] to load it).
+    pub fn attach_store(mut self, store: MatrixStore) -> Result<Self> {
+        if store.manifest().is_none() && store.wal_records().is_empty() {
             let land = self.landscape.read().unwrap();
             let dusb = DusbSet::from_matrix(
                 &land.matrix,
@@ -333,13 +359,13 @@ impl Pipeline {
                 self.state.current(),
             )
             .map_err(|e| anyhow::anyhow!("{e}"))?;
-            store.save_dusb(&dusb)?;
+            store.save_dusb(&dusb, &land.tree)?;
         }
         self.store = Some(store);
         Ok(self)
     }
 
-    fn now_us(&self) -> u64 {
+    pub(crate) fn now_us(&self) -> u64 {
         self.clock_us.fetch_add(1_000, Ordering::Relaxed)
     }
 
@@ -554,21 +580,25 @@ impl Pipeline {
         })
     }
 
-    /// Restore the DMM from the store (restart path, §6.2): decompact the
-    /// persisted DUSB through the view and swap it in.
+    /// Restore the DMM from the store (restart path, §6.2 hardened):
+    /// segment snapshot + WAL tail replay through Alg 5 (see
+    /// [`crate::store::recovery`]), published as **one fresh epoch** whose
+    /// affected-column list drives targeted cache eviction — only columns
+    /// the WAL tail touched drop; everything else (columns *and* compiled
+    /// plans) stays warm. The state counter fast-forwards to the last
+    /// committed transition so post-restore changes continue the sequence.
     pub fn restore_from_store(&self) -> Result<bool> {
         let Some(store) = &self.store else { return Ok(false) };
-        let land = self.landscape.read().unwrap();
-        match store.view_recreate_dpm(&land.tree, &land.cdm)? {
-            None => Ok(false),
-            Some(dpm) => {
-                let state = dpm.state;
-                let epoch = self.dmm.publish(Arc::new(dpm));
-                self.metrics.dmm_epoch.set(epoch);
-                self.cache.evict_all(state);
-                Ok(true)
-            }
-        }
+        let mut land = self.landscape.write().unwrap();
+        let Some(out) = store.recover(&mut land)? else {
+            return Ok(false);
+        };
+        let crate::store::RecoveryOutcome { dpm, state, affected, .. } = out;
+        let epoch = self.dmm.publish_targeted(Arc::new(dpm), affected.clone());
+        self.metrics.dmm_epoch.set(epoch);
+        self.state.sync_to(state);
+        self.cache.advance(state, Some(&affected));
+        Ok(true)
     }
 
     /// Run a trace through the sharded mapping lane (see module docs and
@@ -864,19 +894,21 @@ mod tests {
 
     #[test]
     fn store_persists_and_restores() {
-        let dir = std::env::temp_dir()
-            .join("metl-pipe-store")
-            .join(format!("{}", std::process::id()));
-        let _ = std::fs::remove_dir_all(&dir);
+        let dir = crate::util::tmp::TestDir::new("pipe-store");
         let p = Pipeline::new(PipelineConfig::small())
             .unwrap()
-            .with_store(&dir)
+            .with_store(dir.path())
             .unwrap();
         let before = p.dmm.snapshot().n_elements();
         p.apply_schema_change(0).unwrap();
         let after = p.dmm.snapshot().n_elements();
         assert!(after >= before);
-        // wipe in-memory DMM, restore from store
+        // the change was committed to the WAL before it published
+        let store = p.store.as_ref().unwrap();
+        let records = store.wal_records();
+        assert_eq!(records.len(), 1);
+        assert_eq!(records[0].state, StateI(1));
+        // wipe in-memory DMM, restore from store (snapshot + WAL tail)
         p.dmm.publish(Arc::new(DpmSet::new(StateI(999))));
         assert!(p.restore_from_store().unwrap());
         assert_eq!(p.dmm.snapshot().n_elements(), after);

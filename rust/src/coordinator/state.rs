@@ -46,6 +46,12 @@ impl StateManager {
     pub fn bump(&self) -> StateI {
         StateI(self.i.fetch_add(1, Ordering::AcqRel) + 1)
     }
+
+    /// Fast-forward to `target` (store recovery replaying committed
+    /// transitions). Never moves backwards.
+    pub fn sync_to(&self, target: StateI) {
+        self.i.fetch_max(target.0, Ordering::AcqRel);
+    }
 }
 
 /// Journal entries kept; old entries fall off and force a full eviction

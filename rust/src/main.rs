@@ -25,7 +25,7 @@ fn usage() -> ! {
     eprintln!(
         "usage: metl <command> [--profile small|paper_day|eos_scale] [--config FILE]\n\
          \x20                   [--sinks dw,ml,jsonl,audit] [--evict targeted|full]\n\
-         \x20                   [--kernel native|scalar]\n\
+         \x20                   [--kernel native|scalar] [--store DIR]\n\
          \n\
          commands:\n\
            run        [--instances N]   simulate a day trace end to end\n\
@@ -104,6 +104,10 @@ fn load_config(args: &Args) -> Result<PipelineConfig> {
             .parse::<metl::mapper::kernel::KernelMode>()
             .map_err(|e| anyhow::anyhow!(e))?;
     }
+    if let Some(dir) = args.get("store") {
+        cfg.store_dir =
+            if dir.is_empty() { None } else { Some(dir.to_string()) };
+    }
     Ok(cfg)
 }
 
@@ -133,6 +137,12 @@ fn cmd_serve(args: &Args, cfg: PipelineConfig) -> Result<()> {
     use metl::workload::{DmlKind, TraceOp};
     let seconds = args.get_usize("seconds", 10)?;
     let pipeline = Pipeline::new(cfg)?;
+    if pipeline.restore_from_store()? {
+        println!(
+            "restored DMM from store at state {}",
+            pipeline.state.current().0
+        );
+    }
     let deadline = std::time::Instant::now()
         + std::time::Duration::from_secs(seconds as u64);
     let mut rng = Rng::seed_from(pipeline.cfg.seed ^ 0x5E21E);
@@ -245,6 +255,12 @@ fn cmd_run(args: &Args, cfg: PipelineConfig) -> Result<()> {
     let mut rng = Rng::seed_from(cfg.seed);
     let ops = workload::day_trace(&cfg, &mut rng);
     let pipeline = Pipeline::new(cfg)?;
+    if pipeline.restore_from_store()? {
+        println!(
+            "restored DMM from store at state {}",
+            pipeline.state.current().0
+        );
+    }
     println!(
         "running {} trace ops on {} services ({} instances)...",
         ops.len(),

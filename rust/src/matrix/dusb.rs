@@ -147,11 +147,47 @@ impl DusbSet {
         self.groups.get(&(o, r, w))
     }
 
+    /// Insert a group directly — used when reassembling a set from
+    /// per-schema store-segment regions.
+    pub fn insert_group(
+        &mut self,
+        key: (SchemaId, EntityId, CdmVersionNo),
+        seq: Vec<UsbEntry>,
+    ) {
+        self.groups.insert(key, seq);
+    }
+
     /// **Algorithm 4**: decompact to the full matrix. Each stored block is
     /// replayed over ascending versions until the next entry's version
     /// (reassigning elements through `≡`), the special null block stops a
     /// run, and leading nulls need no representation.
     pub fn decompact(&self, tree: &SchemaTree, cdm: &CdmTree) -> MappingMatrix {
+        self.decompact_impl(tree, cdm, None)
+    }
+
+    /// Algorithm 4 restricted to the versions each schema had when this
+    /// set was built. A trailing PM run normally extends through *all*
+    /// later tree versions — correct live (the tree can't outrun the
+    /// matrix), but wrong when replaying a snapshot against a tree that
+    /// already holds versions registered *after* it: those columns belong
+    /// to the WAL tail, not the snapshot. Store recovery passes the
+    /// manifest's recorded version sets here so snapshot runs never bleed
+    /// past them.
+    pub fn decompact_bounded(
+        &self,
+        tree: &SchemaTree,
+        cdm: &CdmTree,
+        allowed: &HashMap<SchemaId, Vec<VersionNo>>,
+    ) -> MappingMatrix {
+        self.decompact_impl(tree, cdm, Some(allowed))
+    }
+
+    fn decompact_impl(
+        &self,
+        tree: &SchemaTree,
+        cdm: &CdmTree,
+        allowed: Option<&HashMap<SchemaId, Vec<VersionNo>>>,
+    ) -> MappingMatrix {
         let mut m =
             MappingMatrix::new(cdm.n_attr_ids(), tree.n_attr_ids());
         for (&(o, _r, _w), seq) in &self.groups {
@@ -165,6 +201,11 @@ impl DusbSet {
                 for &v in versions {
                     if v < entry.v_from || v_end.is_some_and(|ve| v >= ve) {
                         continue;
+                    }
+                    if let Some(bound) = allowed {
+                        if !bound.get(&o).is_some_and(|vs| vs.contains(&v)) {
+                            continue;
+                        }
                     }
                     for &(q, root) in canon {
                         // the attribute of version v descending from `root`
@@ -188,30 +229,7 @@ impl DusbSet {
             g.set("o", Json::Num(o.0 as f64));
             g.set("r", Json::Num(r.0 as f64));
             g.set("w", Json::Num(w.0 as f64));
-            let entries = seq
-                .iter()
-                .map(|e| {
-                    let mut j = Json::obj();
-                    j.set("v", Json::Num(e.v_from.0 as f64));
-                    match &e.block {
-                        SquareBlock::Null => j.set("null", Json::Bool(true)),
-                        SquareBlock::Pm(canon) => {
-                            let elems = canon
-                                .iter()
-                                .map(|(q, p)| {
-                                    Json::Arr(vec![
-                                        Json::Num(q.0 as f64),
-                                        Json::Num(p.0 as f64),
-                                    ])
-                                })
-                                .collect();
-                            j.set("pm", Json::Arr(elems));
-                        }
-                    }
-                    j
-                })
-                .collect();
-            g.set("seq", Json::Arr(entries));
+            g.set("seq", usb_entries_to_json(seq));
             arr.push(g);
         }
         let mut root = Json::obj();
@@ -239,53 +257,90 @@ impl DusbSet {
                 EntityId(num("r")?),
                 CdmVersionNo(num("w")?),
             );
-            let mut seq = Vec::new();
-            for e in g
-                .get("seq")
-                .and_then(Json::as_arr)
-                .ok_or_else(|| anyhow!("missing seq"))?
-            {
-                let v = VersionNo(
-                    e.get("v").and_then(Json::as_u64).ok_or_else(|| anyhow!("missing v"))?
-                        as u32,
-                );
-                let block = if e.get("null").and_then(Json::as_bool) == Some(true)
-                {
-                    SquareBlock::Null
-                } else {
-                    let pm = e
-                        .get("pm")
-                        .and_then(Json::as_arr)
-                        .ok_or_else(|| anyhow!("missing pm"))?;
-                    SquareBlock::Pm(
-                        pm.iter()
-                            .map(|pair| {
-                                let pair =
-                                    pair.as_arr().ok_or_else(|| anyhow!("bad pair"))?;
-                                Ok((
-                                    CdmAttrId(
-                                        pair[0]
-                                            .as_u64()
-                                            .ok_or_else(|| anyhow!("bad q"))?
-                                            as u32,
-                                    ),
-                                    AttrId(
-                                        pair[1]
-                                            .as_u64()
-                                            .ok_or_else(|| anyhow!("bad p"))?
-                                            as u32,
-                                    ),
-                                ))
-                            })
-                            .collect::<anyhow::Result<Vec<_>>>()?,
-                    )
-                };
-                seq.push(UsbEntry { v_from: v, block });
-            }
+            let seq = usb_entries_from_json(
+                g.get("seq").ok_or_else(|| anyhow!("missing seq"))?,
+            )?;
             set.groups.insert(key, seq);
         }
         Ok(set)
     }
+}
+
+/// Serialize one version-super-block entry sequence — shared between the
+/// whole-set codec above and the store's per-schema segment regions.
+pub fn usb_entries_to_json(seq: &[UsbEntry]) -> Json {
+    Json::Arr(
+        seq.iter()
+            .map(|e| {
+                let mut j = Json::obj();
+                j.set("v", Json::Num(e.v_from.0 as f64));
+                match &e.block {
+                    SquareBlock::Null => j.set("null", Json::Bool(true)),
+                    SquareBlock::Pm(canon) => {
+                        let elems = canon
+                            .iter()
+                            .map(|(q, p)| {
+                                Json::Arr(vec![
+                                    Json::Num(q.0 as f64),
+                                    Json::Num(p.0 as f64),
+                                ])
+                            })
+                            .collect();
+                        j.set("pm", Json::Arr(elems));
+                    }
+                }
+                j
+            })
+            .collect(),
+    )
+}
+
+/// Inverse of [`usb_entries_to_json`].
+pub fn usb_entries_from_json(j: &Json) -> anyhow::Result<Vec<UsbEntry>> {
+    use anyhow::anyhow;
+    let mut seq = Vec::new();
+    for e in j.as_arr().ok_or_else(|| anyhow!("seq is not an array"))? {
+        let v = VersionNo(
+            e.get("v")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("missing v"))? as u32,
+        );
+        let block = if e.get("null").and_then(Json::as_bool) == Some(true) {
+            SquareBlock::Null
+        } else {
+            let pm = e
+                .get("pm")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing pm"))?;
+            SquareBlock::Pm(
+                pm.iter()
+                    .map(|pair| {
+                        let pair =
+                            pair.as_arr().ok_or_else(|| anyhow!("bad pair"))?;
+                        if pair.len() != 2 {
+                            return Err(anyhow!("bad pair arity"));
+                        }
+                        Ok((
+                            CdmAttrId(
+                                pair[0]
+                                    .as_u64()
+                                    .ok_or_else(|| anyhow!("bad q"))?
+                                    as u32,
+                            ),
+                            AttrId(
+                                pair[1]
+                                    .as_u64()
+                                    .ok_or_else(|| anyhow!("bad p"))?
+                                    as u32,
+                            ),
+                        ))
+                    })
+                    .collect::<anyhow::Result<Vec<_>>>()?,
+            )
+        };
+        seq.push(UsbEntry { v_from: v, block });
+    }
+    Ok(seq)
 }
 
 /// Canonicalize a PM's elements: map each column through `equiv_root`.
@@ -382,6 +437,60 @@ mod tests {
         assert_eq!(back.n_elements(), dusb.n_elements());
         assert_eq!(back.n_special_nulls(), dusb.n_special_nulls());
         assert_eq!(back.decompact(&t, &c), m);
+    }
+
+    #[test]
+    fn bounded_decompaction_does_not_bleed_into_later_versions() {
+        let (mut t, c) = fig5_trees();
+        let m = fig5_matrix(&t, &c);
+        let dusb = DusbSet::from_matrix(&m, &t, &c, StateI(0)).unwrap();
+        // record the version sets *before* evolving the tree
+        let allowed: HashMap<SchemaId, Vec<VersionNo>> = t
+            .schemas()
+            .map(|s| (s.id, s.versions.clone()))
+            .collect();
+        // register a v3 of s1 descending from v2 — as a post-snapshot
+        // WAL-era change would
+        let s1 = t.schema_by_name("s1").unwrap();
+        let fields = t.field_list(s1, VersionNo(2)).unwrap();
+        let v3 = t.add_version(s1, &fields);
+        // unbounded Alg-4 extends trailing PM runs into v3 (the bleed)...
+        let bled = dusb.decompact(&t, &c);
+        let v3_cols: Vec<_> = t
+            .version(s1, v3)
+            .unwrap()
+            .attrs
+            .iter()
+            .map(|a| a.index())
+            .collect();
+        let bled_elems: usize = v3_cols
+            .iter()
+            .map(|&p| (0..c.n_attr_ids()).filter(|&q| bled.get(q, p)).count())
+            .sum();
+        assert!(bled_elems > 0, "fixture should exercise a trailing run");
+        // ...bounded replay leaves the v3 block untouched
+        let bounded = dusb.decompact_bounded(&t, &c, &allowed);
+        for &p in &v3_cols {
+            for q in 0..c.n_attr_ids() {
+                assert!(!bounded.get(q, p));
+            }
+        }
+        // and is identical to the unbounded result everywhere else
+        for s in t.schemas() {
+            for &v in &s.versions {
+                if s.id == s1 && v == v3 {
+                    continue;
+                }
+                for a in &t.version(s.id, v).unwrap().attrs {
+                    for q in 0..c.n_attr_ids() {
+                        assert_eq!(
+                            bounded.get(q, a.index()),
+                            bled.get(q, a.index())
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -229,6 +229,27 @@ impl LatencyChannel {
     }
 }
 
+/// Counters/gauges of the durable matrix store (WAL + segment snapshots):
+/// shared by `Arc` between [`PipelineMetrics`] and the
+/// `store::MatrixStore` so the dashboard sees live values.
+#[derive(Debug, Default)]
+pub struct StoreMetrics {
+    /// Bytes appended to the write-ahead log (frames, incl. headers).
+    pub wal_bytes: Counter,
+    /// fsync calls issued on the WAL (one per committed update under the
+    /// default `fsync = always` policy).
+    pub wal_fsyncs: Counter,
+    /// Segment files referenced by the live manifest (0 or 1 today; the
+    /// gauge form survives a future multi-level store).
+    pub segments_live: Gauge,
+    /// Obsolete segment files garbage-collected after a manifest swap.
+    pub segment_gc_total: Counter,
+    /// Wall-clock duration of the last `restore_from_store` recovery, ms.
+    pub recovery_ms: Gauge,
+    /// WAL-tail records replayed through Alg-5 across all recoveries.
+    pub replayed_updates: Counter,
+}
+
 /// All counters/latencies of one METL deployment.
 #[derive(Debug, Default)]
 pub struct PipelineMetrics {
@@ -256,6 +277,8 @@ pub struct PipelineMetrics {
     pub dmm_epoch: Gauge,
     /// Per-shard counters of the sharded mapping lane.
     pub shard: ShardCounters,
+    /// Durable-store counters (WAL, segments, recovery).
+    pub store: Arc<StoreMetrics>,
     /// Per-sink counters/gauges of the registered egress backends.
     pub sinks: SinkMetricsRegistry,
     /// Per-event full mapping latency (the §7 headline metric).
@@ -318,6 +341,21 @@ impl PipelineMetrics {
             "| cache    {:>8} bytes   hit-rate {:>6.2}%        |\n",
             cache_bytes,
             cache_hit_rate * 100.0
+        ));
+        out.push_str(&format!(
+            "| wal bytes         {:>12}  fsyncs   {:>9} |\n",
+            self.store.wal_bytes.get(),
+            self.store.wal_fsyncs.get()
+        ));
+        out.push_str(&format!(
+            "| segments live     {:>12}  gc total {:>9} |\n",
+            self.store.segments_live.get(),
+            self.store.segment_gc_total.get()
+        ));
+        out.push_str(&format!(
+            "| recovery ms       {:>12}  replayed {:>9} |\n",
+            self.store.recovery_ms.get(),
+            self.store.replayed_updates.get()
         ));
         for row in self.sinks.rows() {
             out.push_str(&format!(
@@ -424,5 +462,22 @@ mod tests {
         assert!(d.contains("evo rejected"));
         assert!(d.contains("update latency"));
         assert!(d.contains("7.00ms"));
+    }
+
+    #[test]
+    fn dashboard_has_store_rows() {
+        let m = PipelineMetrics::default();
+        m.store.wal_bytes.add(2048);
+        m.store.wal_fsyncs.add(3);
+        m.store.segments_live.set(1);
+        m.store.segment_gc_total.add(2);
+        m.store.recovery_ms.set(17);
+        m.store.replayed_updates.add(5);
+        let d = m.dashboard(0, 0.0);
+        assert!(d.contains("wal bytes"));
+        assert!(d.contains("2048"));
+        assert!(d.contains("segments live"));
+        assert!(d.contains("recovery ms"));
+        assert!(d.contains("replayed"));
     }
 }

@@ -49,6 +49,12 @@ impl ExtractType {
         }
     }
 
+    /// Inverse of [`ExtractType::wire_name`] — used when deserializing
+    /// schema-change records from the store WAL.
+    pub fn from_wire_name(name: &str) -> Option<ExtractType> {
+        ExtractType::all().iter().copied().find(|t| t.wire_name() == name)
+    }
+
     pub fn all() -> &'static [ExtractType] {
         &[
             ExtractType::Int32,
@@ -93,5 +99,13 @@ mod tests {
         );
         // all() covers every variant exactly once
         assert_eq!(ExtractType::all().len(), 11);
+    }
+
+    #[test]
+    fn wire_names_round_trip() {
+        for &t in ExtractType::all() {
+            assert_eq!(ExtractType::from_wire_name(t.wire_name()), Some(t));
+        }
+        assert_eq!(ExtractType::from_wire_name("tinyint"), None);
     }
 }

@@ -1,0 +1,107 @@
+//! Sparse per-schema index over a snapshot segment.
+//!
+//! A segment file is a concatenation of independent per-schema JSON
+//! regions (see `super::segment`). The index records one `(schema,
+//! offset, len)` entry per region so single-schema point recovery can
+//! `read_range` exactly one region instead of the whole file — the
+//! "<10% of store bytes" acceptance bound rides on this.
+
+use anyhow::{anyhow, Result};
+
+use crate::schema::SchemaId;
+use crate::util::json::Json;
+
+/// One region of a segment file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IndexEntry {
+    pub schema: SchemaId,
+    pub offset: u64,
+    pub len: u64,
+}
+
+/// The per-segment sparse index, persisted inside the manifest.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SparseIndex {
+    entries: Vec<IndexEntry>,
+}
+
+impl SparseIndex {
+    pub fn new(mut entries: Vec<IndexEntry>) -> SparseIndex {
+        entries.sort_by_key(|e| e.offset);
+        SparseIndex { entries }
+    }
+
+    pub fn entries(&self) -> &[IndexEntry] {
+        &self.entries
+    }
+
+    /// The region holding `schema`, if the segment has one.
+    pub fn lookup(&self, schema: SchemaId) -> Option<IndexEntry> {
+        self.entries.iter().copied().find(|e| e.schema == schema)
+    }
+
+    /// Total bytes across all regions (== segment file size).
+    pub fn total_bytes(&self) -> u64 {
+        self.entries.iter().map(|e| e.len).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.entries
+                .iter()
+                .map(|e| {
+                    let mut j = Json::obj();
+                    j.set("schema", Json::Num(e.schema.0 as f64));
+                    j.set("offset", Json::Num(e.offset as f64));
+                    j.set("len", Json::Num(e.len as f64));
+                    j
+                })
+                .collect(),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> Result<SparseIndex> {
+        let arr = j.as_arr().ok_or_else(|| anyhow!("index is not an array"))?;
+        let mut entries = Vec::with_capacity(arr.len());
+        for e in arr {
+            let num = |k: &str| {
+                e.get(k)
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| anyhow!("index entry missing {k}"))
+            };
+            entries.push(IndexEntry {
+                schema: SchemaId(num("schema")? as u32),
+                offset: num("offset")?,
+                len: num("len")?,
+            });
+        }
+        Ok(SparseIndex::new(entries))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_and_totals() {
+        let idx = SparseIndex::new(vec![
+            IndexEntry { schema: SchemaId(2), offset: 40, len: 60 },
+            IndexEntry { schema: SchemaId(1), offset: 0, len: 40 },
+        ]);
+        assert_eq!(idx.entries()[0].schema, SchemaId(1));
+        assert_eq!(idx.lookup(SchemaId(2)).unwrap().offset, 40);
+        assert!(idx.lookup(SchemaId(9)).is_none());
+        assert_eq!(idx.total_bytes(), 100);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let idx = SparseIndex::new(vec![
+            IndexEntry { schema: SchemaId(1), offset: 0, len: 40 },
+            IndexEntry { schema: SchemaId(2), offset: 40, len: 61 },
+        ]);
+        let j = crate::util::json::parse(&idx.to_json().to_string()).unwrap();
+        assert_eq!(SparseIndex::from_json(&j).unwrap(), idx);
+    }
+}

@@ -1,0 +1,359 @@
+//! The store's filesystem seam: every byte the durable store writes goes
+//! through a [`StoreIo`], so crash-point fault injection is a constructor
+//! argument instead of a test-only build.
+//!
+//! [`RealIo`] is the production implementation. It keeps **one buffered
+//! append handle per path** (the fix for `log_update` reopening its file
+//! on every append) and exposes an explicit [`StoreIo::sync`] that
+//! flushes the buffer and fsyncs — the WAL's commit point.
+//!
+//! [`FaultIo`] wraps `RealIo` and kills the "process" at the Nth mutating
+//! operation: [`FaultMode::Power`] fails before the op touches disk,
+//! [`FaultMode::Torn`] persists a prefix of the bytes first (a torn
+//! write). After the injected crash every further mutation fails, exactly
+//! like a dead process — tests then reopen the directory with a fresh
+//! `RealIo` and assert recovery invariants.
+
+use std::collections::HashMap;
+use std::fmt::Debug;
+use std::fs::{self, File, OpenOptions};
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+/// Mutating + reading filesystem operations of the matrix store.
+///
+/// Mutations (`append`, `sync`, `write_file`, `rename`, `remove_file`,
+/// `truncate`) are the crash points swept by the fault-injection harness;
+/// reads are never faulted (a dead process does not read).
+pub trait StoreIo: Send + Sync + Debug {
+    /// Append bytes through the (kept-open, buffered) handle for `path`.
+    fn append(&self, path: &Path, bytes: &[u8]) -> Result<()>;
+    /// Flush the append buffer for `path` and fsync the file.
+    fn sync(&self, path: &Path) -> Result<()>;
+    /// Write a whole file (create/truncate), fsynced before returning.
+    fn write_file(&self, path: &Path, bytes: &[u8]) -> Result<()>;
+    /// Atomic rename (the manifest/segment publish step).
+    fn rename(&self, from: &Path, to: &Path) -> Result<()>;
+    fn remove_file(&self, path: &Path) -> Result<()>;
+    /// Truncate `path` to `len` bytes (WAL corrupt-tail repair).
+    fn truncate(&self, path: &Path, len: u64) -> Result<()>;
+
+    /// Whole-file read; `None` when the file does not exist.
+    fn read(&self, path: &Path) -> Result<Option<Vec<u8>>>;
+    /// Read exactly `len` bytes at `off` (sparse-index region read).
+    fn read_range(&self, path: &Path, off: u64, len: usize) -> Result<Vec<u8>>;
+    /// Current file length; 0 when the file does not exist.
+    fn file_len(&self, path: &Path) -> Result<u64>;
+    /// Files (not directories) directly under `dir`.
+    fn list(&self, dir: &Path) -> Result<Vec<PathBuf>>;
+}
+
+/// Production IO: buffered per-path append handles + plain std::fs.
+#[derive(Debug, Default)]
+pub struct RealIo {
+    handles: Mutex<HashMap<PathBuf, BufWriter<File>>>,
+}
+
+impl RealIo {
+    /// Flush (not fsync) the append buffer for `path` so reads observe
+    /// appended bytes; drop the handle entirely when `close` is set
+    /// (before rename/remove/truncate).
+    fn settle(&self, path: &Path, close: bool) -> Result<()> {
+        let mut handles = self.handles.lock().unwrap();
+        if close {
+            if let Some(mut w) = handles.remove(path) {
+                w.flush().with_context(|| format!("flush {path:?}"))?;
+            }
+        } else if let Some(w) = handles.get_mut(path) {
+            w.flush().with_context(|| format!("flush {path:?}"))?;
+        }
+        Ok(())
+    }
+}
+
+impl StoreIo for RealIo {
+    fn append(&self, path: &Path, bytes: &[u8]) -> Result<()> {
+        let mut handles = self.handles.lock().unwrap();
+        if !handles.contains_key(path) {
+            let file = OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(path)
+                .with_context(|| format!("open append {path:?}"))?;
+            handles.insert(path.to_path_buf(), BufWriter::new(file));
+        }
+        let w = handles.get_mut(path).expect("just inserted");
+        w.write_all(bytes).with_context(|| format!("append {path:?}"))
+    }
+
+    fn sync(&self, path: &Path) -> Result<()> {
+        let mut handles = self.handles.lock().unwrap();
+        if let Some(w) = handles.get_mut(path) {
+            w.flush().with_context(|| format!("flush {path:?}"))?;
+            w.get_ref()
+                .sync_data()
+                .with_context(|| format!("fsync {path:?}"))?;
+        }
+        Ok(())
+    }
+
+    fn write_file(&self, path: &Path, bytes: &[u8]) -> Result<()> {
+        self.settle(path, true)?;
+        let mut f =
+            File::create(path).with_context(|| format!("create {path:?}"))?;
+        f.write_all(bytes).with_context(|| format!("write {path:?}"))?;
+        f.sync_data().with_context(|| format!("fsync {path:?}"))
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> Result<()> {
+        self.settle(from, true)?;
+        self.settle(to, true)?;
+        fs::rename(from, to).with_context(|| format!("rename {from:?} -> {to:?}"))
+    }
+
+    fn remove_file(&self, path: &Path) -> Result<()> {
+        self.settle(path, true)?;
+        fs::remove_file(path).with_context(|| format!("remove {path:?}"))
+    }
+
+    fn truncate(&self, path: &Path, len: u64) -> Result<()> {
+        self.settle(path, true)?;
+        let f = OpenOptions::new()
+            .write(true)
+            .open(path)
+            .with_context(|| format!("open truncate {path:?}"))?;
+        f.set_len(len).with_context(|| format!("truncate {path:?}"))?;
+        f.sync_data().with_context(|| format!("fsync {path:?}"))
+    }
+
+    fn read(&self, path: &Path) -> Result<Option<Vec<u8>>> {
+        self.settle(path, false)?;
+        match fs::read(path) {
+            Ok(bytes) => Ok(Some(bytes)),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+            Err(e) => Err(e).with_context(|| format!("read {path:?}")),
+        }
+    }
+
+    fn read_range(&self, path: &Path, off: u64, len: usize) -> Result<Vec<u8>> {
+        self.settle(path, false)?;
+        let mut f =
+            File::open(path).with_context(|| format!("open {path:?}"))?;
+        f.seek(SeekFrom::Start(off))
+            .with_context(|| format!("seek {path:?}@{off}"))?;
+        let mut buf = vec![0u8; len];
+        f.read_exact(&mut buf)
+            .with_context(|| format!("read {len}B at {path:?}@{off}"))?;
+        Ok(buf)
+    }
+
+    fn file_len(&self, path: &Path) -> Result<u64> {
+        self.settle(path, false)?;
+        match fs::metadata(path) {
+            Ok(m) => Ok(m.len()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(0),
+            Err(e) => Err(e).with_context(|| format!("stat {path:?}")),
+        }
+    }
+
+    fn list(&self, dir: &Path) -> Result<Vec<PathBuf>> {
+        let mut out = Vec::new();
+        for entry in
+            fs::read_dir(dir).with_context(|| format!("read dir {dir:?}"))?
+        {
+            let entry = entry?;
+            if entry.file_type()?.is_file() {
+                out.push(entry.path());
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+}
+
+/// How the injected crash interacts with the bytes of the crash op.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultMode {
+    /// The op fails before touching disk (power cut between ops).
+    Power,
+    /// Half the op's bytes are persisted first (a torn write mid-op).
+    Torn,
+}
+
+/// Fault-injecting wrapper: mutating op number `fail_at` (1-based) crashes
+/// the store; everything after fails like a dead process.
+#[derive(Debug)]
+pub struct FaultIo {
+    inner: RealIo,
+    fail_at: u64,
+    mode: FaultMode,
+    ops: AtomicU64,
+    crashed: AtomicBool,
+}
+
+impl FaultIo {
+    pub fn new(fail_at: u64, mode: FaultMode) -> Self {
+        Self {
+            inner: RealIo::default(),
+            fail_at,
+            mode,
+            ops: AtomicU64::new(0),
+            crashed: AtomicBool::new(false),
+        }
+    }
+
+    /// Counting mode: never crashes; [`FaultIo::ops_attempted`] after a
+    /// full run gives the sweep's upper bound.
+    pub fn counting() -> Self {
+        Self::new(u64::MAX, FaultMode::Power)
+    }
+
+    /// Mutating ops attempted so far (including the crash op).
+    pub fn ops_attempted(&self) -> u64 {
+        self.ops.load(Ordering::Relaxed)
+    }
+
+    pub fn did_crash(&self) -> bool {
+        self.crashed.load(Ordering::Relaxed)
+    }
+
+    /// Returns `true` when this op is the injected crash op.
+    fn gate(&self) -> Result<bool> {
+        if self.crashed.load(Ordering::Relaxed) {
+            bail!("store io: process killed by fault injection");
+        }
+        let n = self.ops.fetch_add(1, Ordering::Relaxed) + 1;
+        if n == self.fail_at {
+            self.crashed.store(true, Ordering::Relaxed);
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    fn crash(&self, what: &str) -> anyhow::Error {
+        anyhow::anyhow!("store io: injected crash during {what}")
+    }
+}
+
+impl StoreIo for FaultIo {
+    fn append(&self, path: &Path, bytes: &[u8]) -> Result<()> {
+        if self.gate()? {
+            if self.mode == FaultMode::Torn && !bytes.is_empty() {
+                // a torn append: a prefix reaches the file, the tail not.
+                // flushing makes the prefix durable-visible like a page
+                // that hit disk before the cut
+                let half = &bytes[..bytes.len() / 2];
+                let _ = self.inner.append(path, half);
+                let _ = self.inner.sync(path);
+            }
+            return Err(self.crash("append"));
+        }
+        self.inner.append(path, bytes)
+    }
+
+    fn sync(&self, path: &Path) -> Result<()> {
+        if self.gate()? {
+            return Err(self.crash("fsync"));
+        }
+        self.inner.sync(path)
+    }
+
+    fn write_file(&self, path: &Path, bytes: &[u8]) -> Result<()> {
+        if self.gate()? {
+            if self.mode == FaultMode::Torn && !bytes.is_empty() {
+                let _ = self.inner.write_file(path, &bytes[..bytes.len() / 2]);
+            }
+            return Err(self.crash("write_file"));
+        }
+        self.inner.write_file(path, bytes)
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> Result<()> {
+        // rename is atomic: either it happened (crash after) or it did
+        // not (crash before) — Torn degrades to Power here
+        if self.gate()? {
+            return Err(self.crash("rename"));
+        }
+        self.inner.rename(from, to)
+    }
+
+    fn remove_file(&self, path: &Path) -> Result<()> {
+        if self.gate()? {
+            return Err(self.crash("remove_file"));
+        }
+        self.inner.remove_file(path)
+    }
+
+    fn truncate(&self, path: &Path, len: u64) -> Result<()> {
+        if self.gate()? {
+            return Err(self.crash("truncate"));
+        }
+        self.inner.truncate(path, len)
+    }
+
+    fn read(&self, path: &Path) -> Result<Option<Vec<u8>>> {
+        self.inner.read(path)
+    }
+
+    fn read_range(&self, path: &Path, off: u64, len: usize) -> Result<Vec<u8>> {
+        self.inner.read_range(path, off, len)
+    }
+
+    fn file_len(&self, path: &Path) -> Result<u64> {
+        self.inner.file_len(path)
+    }
+
+    fn list(&self, dir: &Path) -> Result<Vec<PathBuf>> {
+        self.inner.list(dir)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TestDir;
+
+    #[test]
+    fn real_io_appends_through_one_handle() {
+        let dir = TestDir::new("io-append");
+        let io = RealIo::default();
+        let path = dir.join("log");
+        io.append(&path, b"one").unwrap();
+        io.append(&path, b"two").unwrap();
+        // reads flush the buffered handle first
+        assert_eq!(io.read(&path).unwrap().unwrap(), b"onetwo");
+        io.sync(&path).unwrap();
+        assert_eq!(io.file_len(&path).unwrap(), 6);
+        io.truncate(&path, 3).unwrap();
+        assert_eq!(io.read(&path).unwrap().unwrap(), b"one");
+        // the handle was dropped by truncate; appends reopen in append mode
+        io.append(&path, b"!").unwrap();
+        assert_eq!(io.read(&path).unwrap().unwrap(), b"one!");
+    }
+
+    #[test]
+    fn fault_io_kills_at_nth_op_and_stays_dead() {
+        let dir = TestDir::new("io-fault");
+        let io = FaultIo::new(2, FaultMode::Power);
+        let path = dir.join("f");
+        io.append(&path, b"ok").unwrap();
+        assert!(io.sync(&path).is_err()); // op 2: the crash
+        assert!(io.did_crash());
+        assert!(io.append(&path, b"no").is_err()); // dead process
+        assert_eq!(io.ops_attempted(), 2);
+    }
+
+    #[test]
+    fn torn_write_persists_a_prefix() {
+        let dir = TestDir::new("io-torn");
+        let io = FaultIo::new(1, FaultMode::Torn);
+        let path = dir.join("f");
+        assert!(io.write_file(&path, b"abcdef").is_err());
+        let real = RealIo::default();
+        assert_eq!(real.read(&path).unwrap().unwrap(), b"abc");
+    }
+}

@@ -1,105 +1,338 @@
-//! Postgres-sim persistence of the hybrid strategy (paper §6.2): the
-//! strongly-compacted `ᵢ𝔇𝔘𝔖𝔅` is the stored representation; the
-//! in-memory `ᵢ𝔇𝔓𝔐` is recreated through the decompaction "view"
-//! (Alg 4 + Alg 2). An append-only update log stands in for the WAL and
-//! lets operators audit the state-i history.
+//! The durable log-structured matrix store (paper §6.2, hardened): the
+//! strongly-compacted `ᵢ𝔇𝔘𝔖𝔅` lives in immutable snapshot **segments**,
+//! evolution-lane updates commit to a checksummed **WAL** *before* their
+//! epoch publishes, and restart recovery replays the WAL tail through
+//! Alg 5 on top of the latest segment — so an acknowledged schema change
+//! survives a crash at any write point.
 //!
-//! Writers: every change accepted by the evolution lane
-//! ([`crate::coordinator::evolution`]) saves the new DUSB and appends an
-//! audit line. Readers: the restart path
-//! (`Pipeline::restore_from_store`) recreates the DPM through
-//! [`MatrixStore::view_recreate_dpm`] and publishes it as a fresh epoch
-//! (with an unknown diff, so caches fully evict once).
+//! Layout of a store directory:
+//!
+//! ```text
+//! MANIFEST.json     the live segment + WAL cursor (atomic rename swap)
+//! seg-000003.mseg   immutable DUSB snapshot, one region per schema
+//! wal.log           length+crc32-framed schema-change records
+//! update_log.jsonl  human-readable audit trail (not used for recovery)
+//! ```
+//!
+//! Submodules: [`io`] (the injectable filesystem seam + fault injection),
+//! [`wal`] (framing/replay), [`segment`] (snapshot + manifest swap + GC),
+//! [`index`] (sparse per-schema regions), [`recovery`] (the replay
+//! algorithm). [`MatrixStore`] is the facade the coordinator talks to —
+//! the DLQ/error lane (`coordinator::recovery`) and the §6.2 view
+//! (`view_recreate_dpm`) ride on it unchanged.
 
-use std::fs;
+pub mod index;
+pub mod io;
+pub mod recovery;
+pub mod segment;
+pub mod wal;
+
 use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+pub use io::{FaultIo, FaultMode, RealIo, StoreIo};
+pub use recovery::{RecoveryOutcome, SegmentBase};
+pub use segment::Manifest;
+pub use wal::{FsyncPolicy, WalOp, WalRecord};
+
 use crate::cdm::CdmTree;
-use crate::matrix::decompact::recreate_dpm;
 use crate::matrix::dpm::DpmSet;
 use crate::matrix::dusb::DusbSet;
-use crate::schema::SchemaTree;
+use crate::message::StateI;
+use crate::metrics::StoreMetrics;
+use crate::schema::{SchemaId, SchemaTree, VersionNo};
+use crate::util::json::Json;
+use crate::workload::Landscape;
 
-/// Directory-backed matrix store.
+/// Audit-log file name (JSONL, operator-facing; recovery never reads it).
+pub const AUDIT_FILE: &str = "update_log.jsonl";
+
+/// Store tuning knobs (`runtime.store.*` config keys).
+#[derive(Debug, Clone)]
+pub struct StoreConfig {
+    /// Write a fresh snapshot segment once this many WAL records have
+    /// accumulated past the current manifest's cursor.
+    pub segment_update_threshold: u64,
+    /// WAL fsync policy (`runtime.store.fsync`).
+    pub fsync: FsyncPolicy,
+    /// Recovery-time budget asserted by tests/benches (`recovery_ms` must
+    /// stay under this; the store itself only reports the gauge).
+    pub recovery_budget_ms: u64,
+}
+
+impl Default for StoreConfig {
+    fn default() -> Self {
+        Self {
+            segment_update_threshold: 32,
+            fsync: FsyncPolicy::Always,
+            recovery_budget_ms: 5_000,
+        }
+    }
+}
+
+/// Result of a single-schema point recovery (sparse-index path).
+#[derive(Debug)]
+pub struct PointRecovery {
+    pub schema: SchemaId,
+    /// Bytes actually read from the segment (one indexed region).
+    pub bytes_read: u64,
+    /// Total bytes the store holds on disk (segment + WAL + manifest +
+    /// audit log) — the denominator of the "<10%" acceptance bound.
+    pub store_bytes: u64,
+    /// The schema's version set recorded at snapshot time.
+    pub versions: Vec<VersionNo>,
+    /// DUSB groups recovered for the schema.
+    pub groups: usize,
+}
+
+#[derive(Debug)]
+struct Inner {
+    manifest: Option<Manifest>,
+    /// Full WAL history, in commit order (the log is tiny: schema changes
+    /// happen "a few times a day", §3.3).
+    records: Vec<WalRecord>,
+}
+
+/// Directory-backed durable matrix store.
+#[derive(Debug)]
 pub struct MatrixStore {
     dir: PathBuf,
+    cfg: StoreConfig,
+    io: Arc<dyn StoreIo>,
+    metrics: Arc<StoreMetrics>,
+    wal: wal::Wal,
+    inner: Mutex<Inner>,
 }
 
 impl MatrixStore {
+    /// Open with defaults (real IO, fresh metrics) — the back-compat
+    /// constructor for benches/tests.
     pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        Self::open_with(
+            dir,
+            StoreConfig::default(),
+            Arc::new(RealIo::default()),
+            Arc::new(StoreMetrics::default()),
+        )
+    }
+
+    /// Open (creating the directory), load the manifest and replay the
+    /// WAL. A corrupt WAL tail is truncated here; a corrupt manifest or
+    /// segment index fails loudly — those are rename-swapped atomically
+    /// and must never be torn.
+    pub fn open_with(
+        dir: impl AsRef<Path>,
+        cfg: StoreConfig,
+        io: Arc<dyn StoreIo>,
+        metrics: Arc<StoreMetrics>,
+    ) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
-        fs::create_dir_all(&dir)
+        std::fs::create_dir_all(&dir)
             .with_context(|| format!("create store dir {dir:?}"))?;
-        Ok(Self { dir })
+        let manifest = segment::load_manifest(&io, &dir)?;
+        let (wal, records) = wal::Wal::open(
+            Arc::clone(&io),
+            dir.join(wal::WAL_FILE),
+            cfg.fsync,
+            Arc::clone(&metrics),
+        )?;
+        metrics.segments_live.set(manifest.is_some() as u64);
+        Ok(Self {
+            dir,
+            cfg,
+            io,
+            metrics,
+            wal,
+            inner: Mutex::new(Inner { manifest, records }),
+        })
     }
 
-    fn dusb_path(&self) -> PathBuf {
-        self.dir.join("dusb.json")
+    pub fn dir(&self) -> &Path {
+        &self.dir
     }
 
-    fn log_path(&self) -> PathBuf {
-        self.dir.join("update_log.jsonl")
+    pub fn config(&self) -> &StoreConfig {
+        &self.cfg
     }
 
-    /// Persist the current `ᵢ𝔇𝔘𝔖𝔅` (atomic replace via temp file).
-    pub fn save_dusb(&self, dusb: &DusbSet) -> Result<()> {
-        let tmp = self.dir.join("dusb.json.tmp");
-        fs::write(&tmp, dusb.to_json().to_pretty())
-            .with_context(|| format!("write {tmp:?}"))?;
-        fs::rename(&tmp, self.dusb_path()).context("atomic replace")?;
+    /// The current manifest, if a snapshot was ever published.
+    pub fn manifest(&self) -> Option<Manifest> {
+        self.inner.lock().unwrap().manifest.clone()
+    }
+
+    /// The replayed/committed WAL history (commit order).
+    pub fn wal_records(&self) -> Vec<WalRecord> {
+        self.inner.lock().unwrap().records.clone()
+    }
+
+    /// Commit one evolution-lane update to the WAL — **the durability
+    /// point**: once this returns, the change survives any crash. Called
+    /// by the evolution lane *before* it mutates the tree or publishes
+    /// the epoch. Returns the record's sequence number.
+    pub fn commit_update(
+        &self,
+        state: StateI,
+        schema: SchemaId,
+        v: VersionNo,
+        op: WalOp,
+        ts_us: u64,
+    ) -> Result<u64> {
+        let mut inner = self.inner.lock().unwrap();
+        let seq = self.wal.next_seq();
+        let rec = WalRecord { seq, state, schema, v, ts_us, op };
+        self.wal.commit(&rec)?;
+        inner.records.push(rec);
+        Ok(seq)
+    }
+
+    /// Should the caller build + persist a fresh snapshot segment now?
+    /// True once `segment_update_threshold` WAL records accumulated past
+    /// the manifest's cursor (cheap — no DUSB is built to answer this).
+    pub fn snapshot_due(&self) -> bool {
+        let inner = self.inner.lock().unwrap();
+        let cursor = inner.manifest.as_ref().map(|m| m.wal_seq).unwrap_or(0);
+        let pending =
+            inner.records.iter().filter(|r| r.seq > cursor).count() as u64;
+        pending >= self.cfg.segment_update_threshold
+    }
+
+    /// Persist `dusb` as a new immutable segment and atomically swap the
+    /// manifest to it; superseded segments are GCed afterwards. The tree
+    /// is needed to record each schema's version set at snapshot time
+    /// (the replay bound of [`DusbSet::decompact_bounded`]).
+    pub fn save_dusb(&self, dusb: &DusbSet, tree: &SchemaTree) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        let seq = inner.manifest.as_ref().map(|m| m.seq + 1).unwrap_or(1);
+        let wal_seq = self.wal.next_seq() - 1;
+        let manifest = segment::write_segment(
+            &self.io,
+            &self.dir,
+            seq,
+            dusb,
+            tree,
+            wal_seq,
+            &self.metrics,
+        )?;
+        segment::gc(&self.io, &self.dir, &manifest, &self.metrics)?;
+        inner.manifest = Some(manifest);
         Ok(())
     }
 
-    /// Load the stored `ᵢ𝔇𝔘𝔖𝔅`, if any.
+    /// Load the snapshot DUSB from the live segment, if any.
     pub fn load_dusb(&self) -> Result<Option<DusbSet>> {
-        let path = self.dusb_path();
-        if !path.exists() {
-            return Ok(None);
-        }
-        let text = fs::read_to_string(&path)
-            .with_context(|| format!("read {path:?}"))?;
-        let json = crate::util::json::parse(&text)
-            .map_err(|e| anyhow::anyhow!("{e}"))?;
-        Ok(Some(DusbSet::from_json(&json)?))
+        let Some(manifest) = self.manifest() else { return Ok(None) };
+        let (dusb, _) = segment::read_full(&self.io, &self.dir, &manifest)?;
+        Ok(Some(dusb))
     }
 
     /// The "Postgres view" of §6.2: recreate the in-memory DPM from the
-    /// stored DUSB. Returns None when nothing is stored yet.
+    /// stored DUSB (snapshot only — no WAL replay; restart recovery goes
+    /// through [`MatrixStore::recover`]). Returns None when nothing is
+    /// stored yet.
     pub fn view_recreate_dpm(
         &self,
         tree: &SchemaTree,
         cdm: &CdmTree,
     ) -> Result<Option<DpmSet>> {
-        match self.load_dusb()? {
-            None => Ok(None),
-            Some(dusb) => {
-                let dpm = recreate_dpm(&dusb, tree, cdm)
-                    .map_err(|e| anyhow::anyhow!("{e}"))?;
-                Ok(Some(dpm))
+        let Some(manifest) = self.manifest() else { return Ok(None) };
+        let (dusb, versions) =
+            segment::read_full(&self.io, &self.dir, &manifest)?;
+        let matrix = dusb.decompact_bounded(tree, cdm, &versions);
+        let dpm = DpmSet::from_matrix(&matrix, tree, cdm, dusb.state)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        Ok(Some(dpm))
+    }
+
+    /// Full crash-point recovery: segment base + WAL tail replay (see
+    /// [`recovery::recover`]). Mutates `land` to the recovered
+    /// configuration and reports `recovery_ms` / `replayed_updates`.
+    pub fn recover(
+        &self,
+        land: &mut Landscape,
+    ) -> Result<Option<RecoveryOutcome>> {
+        let t0 = Instant::now();
+        let (manifest, records) = {
+            let inner = self.inner.lock().unwrap();
+            (inner.manifest.clone(), inner.records.clone())
+        };
+        let base = match manifest {
+            None => None,
+            Some(m) => {
+                let (dusb, versions) =
+                    segment::read_full(&self.io, &self.dir, &m)?;
+                Some(SegmentBase { dusb, versions, wal_seq: m.wal_seq })
             }
+        };
+        let outcome = recovery::recover(land, base, &records)?;
+        if let Some(out) = &outcome {
+            self.metrics.replayed_updates.add(out.replayed as u64);
         }
+        self.metrics.recovery_ms.set(t0.elapsed().as_millis() as u64);
+        Ok(outcome)
     }
 
-    /// Append one line to the update log (WAL-style audit trail).
-    pub fn log_update(&self, line: &crate::util::json::Json) -> Result<()> {
-        use std::io::Write;
-        let mut f = fs::OpenOptions::new()
-            .create(true)
-            .append(true)
-            .open(self.log_path())?;
-        writeln!(f, "{}", line.to_string())?;
-        Ok(())
+    /// Single-schema point recovery through the sparse index: reads one
+    /// segment region instead of the whole store. `None` when no snapshot
+    /// exists or the segment has no region for `schema`.
+    pub fn recover_schema(
+        &self,
+        schema: SchemaId,
+    ) -> Result<Option<PointRecovery>> {
+        let Some(manifest) = self.manifest() else { return Ok(None) };
+        let Some((region, bytes_read)) = segment::read_schema_region(
+            &self.io,
+            &self.dir,
+            &manifest,
+            schema,
+        )?
+        else {
+            return Ok(None);
+        };
+        Ok(Some(PointRecovery {
+            schema,
+            bytes_read,
+            store_bytes: self.total_bytes()?,
+            versions: region.versions,
+            groups: region.groups.len(),
+        }))
     }
 
-    /// Read back the update log.
-    pub fn read_log(&self) -> Result<Vec<crate::util::json::Json>> {
-        let path = self.log_path();
-        if !path.exists() {
+    /// Total bytes the store occupies on disk.
+    pub fn total_bytes(&self) -> Result<u64> {
+        let mut total = self.io.file_len(&self.dir.join(segment::MANIFEST_FILE))?
+            + self.io.file_len(&self.dir.join(wal::WAL_FILE))?
+            + self.io.file_len(&self.dir.join(AUDIT_FILE))?;
+        for seg in segment::list_segments(&self.io, &self.dir)? {
+            total += self.io.file_len(&seg)?;
+        }
+        Ok(total)
+    }
+
+    /// Append one line to the operator audit log through the store's
+    /// buffered append handle (one open handle, not one open per line);
+    /// [`MatrixStore::sync`] makes it durable.
+    pub fn log_update(&self, line: &Json) -> Result<()> {
+        let mut bytes = line.to_string().into_bytes();
+        bytes.push(b'\n');
+        self.io.append(&self.dir.join(AUDIT_FILE), &bytes)
+    }
+
+    /// Flush + fsync the buffered append files (audit log; the WAL syncs
+    /// at every commit under `fsync = always`).
+    pub fn sync(&self) -> Result<()> {
+        self.io.sync(&self.dir.join(AUDIT_FILE))?;
+        self.wal.sync()
+    }
+
+    /// Read back the audit log.
+    pub fn read_log(&self) -> Result<Vec<Json>> {
+        let Some(bytes) = self.io.read(&self.dir.join(AUDIT_FILE))? else {
             return Ok(Vec::new());
-        }
-        fs::read_to_string(&path)?
+        };
+        String::from_utf8_lossy(&bytes)
             .lines()
             .filter(|l| !l.trim().is_empty())
             .map(|l| {
@@ -113,38 +346,40 @@ impl MatrixStore {
 mod tests {
     use super::*;
     use crate::matrix::fixtures::{fig5_matrix, fig5_trees};
-    use crate::message::StateI;
-    use crate::util::json::Json;
+    use crate::util::tmp::TestDir;
 
-    fn tmpdir(name: &str) -> PathBuf {
-        let dir = std::env::temp_dir()
-            .join("metl-store-tests")
-            .join(format!("{name}-{}", std::process::id()));
-        let _ = fs::remove_dir_all(&dir);
-        dir
+    fn fig5_dusb(state: StateI) -> (SchemaTree, CdmTree, DusbSet) {
+        let (t, c) = fig5_trees();
+        let m = fig5_matrix(&t, &c);
+        let dusb = DusbSet::from_matrix(&m, &t, &c, state).unwrap();
+        (t, c, dusb)
     }
 
     #[test]
     fn save_load_roundtrip() {
-        let (t, c) = fig5_trees();
-        let m = fig5_matrix(&t, &c);
-        let dusb = DusbSet::from_matrix(&m, &t, &c, StateI(4)).unwrap();
-        let store = MatrixStore::open(tmpdir("roundtrip")).unwrap();
-        store.save_dusb(&dusb).unwrap();
+        let dir = TestDir::new("store-roundtrip");
+        let (t, c, dusb) = fig5_dusb(StateI(4));
+        let store = MatrixStore::open(dir.path()).unwrap();
+        store.save_dusb(&dusb, &t).unwrap();
         let back = store.load_dusb().unwrap().unwrap();
         assert_eq!(back.state, StateI(4));
         assert_eq!(back.n_elements(), dusb.n_elements());
-        assert_eq!(back.decompact(&t, &c), m);
+        assert_eq!(back.decompact(&t, &c), fig5_matrix(&t, &c));
+        // reopening sees the same snapshot (manifest + segment on disk)
+        let store2 = MatrixStore::open(dir.path()).unwrap();
+        assert_eq!(store2.manifest().unwrap(), store.manifest().unwrap());
     }
 
     #[test]
     fn view_recreates_dpm() {
-        let (t, c) = fig5_trees();
-        let m = fig5_matrix(&t, &c);
-        let direct = DpmSet::from_matrix(&m, &t, &c, StateI(2)).unwrap();
-        let dusb = DusbSet::from_matrix(&m, &t, &c, StateI(2)).unwrap();
-        let store = MatrixStore::open(tmpdir("view")).unwrap();
-        store.save_dusb(&dusb).unwrap();
+        use crate::matrix::dpm::DpmSet;
+        let dir = TestDir::new("store-view");
+        let (t, c, dusb) = fig5_dusb(StateI(2));
+        let direct =
+            DpmSet::from_matrix(&fig5_matrix(&t, &c), &t, &c, StateI(2))
+                .unwrap();
+        let store = MatrixStore::open(dir.path()).unwrap();
+        store.save_dusb(&dusb, &t).unwrap();
         let restored = store.view_recreate_dpm(&t, &c).unwrap().unwrap();
         assert!(direct.same_elements(&restored));
         assert_eq!(restored.state, StateI(2));
@@ -152,15 +387,20 @@ mod tests {
 
     #[test]
     fn empty_store_returns_none() {
+        let dir = TestDir::new("store-empty");
         let (t, c) = fig5_trees();
-        let store = MatrixStore::open(tmpdir("empty")).unwrap();
+        let store = MatrixStore::open(dir.path()).unwrap();
+        assert!(store.manifest().is_none());
         assert!(store.load_dusb().unwrap().is_none());
         assert!(store.view_recreate_dpm(&t, &c).unwrap().is_none());
+        assert!(store.recover_schema(SchemaId(0)).unwrap().is_none());
+        assert_eq!(store.total_bytes().unwrap(), 0);
     }
 
     #[test]
     fn update_log_appends() {
-        let store = MatrixStore::open(tmpdir("log")).unwrap();
+        let dir = TestDir::new("store-log");
+        let store = MatrixStore::open(dir.path()).unwrap();
         let mut e1 = Json::obj();
         e1.set("state", Json::Num(1.0));
         e1.set("case", Json::Str("added-schema-version".into()));
@@ -168,6 +408,7 @@ mod tests {
         let mut e2 = Json::obj();
         e2.set("state", Json::Num(2.0));
         store.log_update(&e2).unwrap();
+        store.sync().unwrap();
         let log = store.read_log().unwrap();
         assert_eq!(log.len(), 2);
         assert_eq!(log[0].get("state").unwrap().as_u64(), Some(1));
@@ -175,5 +416,59 @@ mod tests {
             log[0].get("case").unwrap().as_str(),
             Some("added-schema-version")
         );
+    }
+
+    #[test]
+    fn commit_update_survives_reopen() {
+        let dir = TestDir::new("store-commit");
+        let store = MatrixStore::open(dir.path()).unwrap();
+        let seq = store
+            .commit_update(
+                StateI(1),
+                SchemaId(0),
+                VersionNo(4),
+                WalOp::InBand,
+                42,
+            )
+            .unwrap();
+        assert_eq!(seq, 1);
+        assert_eq!(store.wal_records().len(), 1);
+        drop(store);
+        let store2 = MatrixStore::open(dir.path()).unwrap();
+        let records = store2.wal_records();
+        assert_eq!(records.len(), 1);
+        assert_eq!(records[0].v, VersionNo(4));
+        assert_eq!(records[0].op, WalOp::InBand);
+    }
+
+    #[test]
+    fn snapshot_due_follows_threshold_and_cursor() {
+        let dir = TestDir::new("store-due");
+        let cfg = StoreConfig { segment_update_threshold: 2, ..Default::default() };
+        let store = MatrixStore::open_with(
+            dir.path(),
+            cfg,
+            Arc::new(RealIo::default()),
+            Arc::new(StoreMetrics::default()),
+        )
+        .unwrap();
+        let (t, _c, dusb) = fig5_dusb(StateI(0));
+        assert!(!store.snapshot_due());
+        for i in 1..=2 {
+            store
+                .commit_update(
+                    StateI(i),
+                    SchemaId(0),
+                    VersionNo(4),
+                    WalOp::InBand,
+                    i,
+                )
+                .unwrap();
+        }
+        assert!(store.snapshot_due());
+        store.save_dusb(&dusb, &t).unwrap();
+        // the snapshot advanced the cursor past both records
+        assert!(!store.snapshot_due());
+        assert_eq!(store.manifest().unwrap().wal_seq, 2);
     }
 }

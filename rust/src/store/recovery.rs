@@ -1,0 +1,279 @@
+//! Crash-point recovery: segment snapshot + WAL tail → one fresh epoch.
+//!
+//! The sequence (see `MatrixStore::recover` for the orchestration):
+//!
+//! 1. **Registry replay** — every WAL record replays *idempotently*
+//!    against the schema tree: a version the tree already holds is
+//!    skipped (the in-process restore case), an absent one is registered
+//!    exactly as the live lane did (the cold-restart case — the tree's
+//!    deterministic `add_version` must reassign the recorded version
+//!    number, which is asserted). Adds also migrate the bound source
+//!    tables, drops retire the tree node.
+//! 2. **Base DPM** — the segment's DUSB is decompacted **bounded to the
+//!    version sets recorded at snapshot time** (see
+//!    [`DusbSet::decompact_bounded`]) so trailing PM runs never bleed
+//!    into WAL-era versions, then compacted to the DPM at the segment's
+//!    state.
+//! 3. **Alg-5 tail replay** — records with `seq > manifest.wal_seq` run
+//!    through [`prepare_update`] in commit order, rebuilding exactly the
+//!    column diffs the live lane produced. A record whose column is
+//!    already non-empty in the base is skipped (idempotency for the
+//!    in-process restore, where the live matrix already carried it into
+//!    the snapshot).
+//! 4. The final DPM's decompaction becomes the landscape's ground-truth
+//!    matrix, and the affected-column list from step 3 drives targeted
+//!    cache eviction in the caller — unaffected columns stay warm across
+//!    a restore.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use super::wal::{WalOp, WalRecord};
+use crate::matrix::dpm::DpmSet;
+use crate::matrix::dusb::DusbSet;
+use crate::matrix::update::{prepare_update, ChangeCase, UpdateReport};
+use crate::message::StateI;
+use crate::schema::{SchemaId, VersionNo};
+use crate::workload::Landscape;
+
+/// The segment side of a recovery: the snapshot DUSB, the per-schema
+/// version sets recorded when it was written, and the WAL cursor it
+/// covers.
+pub struct SegmentBase {
+    pub dusb: DusbSet,
+    pub versions: HashMap<SchemaId, Vec<VersionNo>>,
+    pub wal_seq: u64,
+}
+
+/// What a recovery produced.
+pub struct RecoveryOutcome {
+    /// The rebuilt `ᵢ𝔇𝔓𝔐`, ready to publish as one fresh epoch.
+    pub dpm: DpmSet,
+    /// The state the store had committed (== `dpm.state`).
+    pub state: StateI,
+    /// Mapping columns touched by the WAL tail — the targeted-eviction
+    /// list for `DcpmCache::advance`.
+    pub affected: Vec<(SchemaId, VersionNo)>,
+    /// WAL records replayed through Alg 5 (past the segment cursor).
+    pub replayed: usize,
+    /// Alg-5 reports of the replayed records, in commit order.
+    pub reports: Vec<UpdateReport>,
+}
+
+/// Rebuild the DMM from a segment base + the full WAL history, mutating
+/// `land` (tree, tables, ground-truth matrix) to the recovered
+/// configuration. `Ok(None)` means the store holds nothing to recover.
+pub fn recover(
+    land: &mut Landscape,
+    base: Option<SegmentBase>,
+    records: &[WalRecord],
+) -> Result<Option<RecoveryOutcome>> {
+    if base.is_none() && records.is_empty() {
+        return Ok(None);
+    }
+
+    // 1. registry replay (idempotent, full history)
+    for rec in records {
+        match &rec.op {
+            WalOp::Add { fields } => {
+                if land.tree.version(rec.schema, rec.v).is_some() {
+                    continue; // in-process restore: already registered
+                }
+                let assigned = land.tree.add_version(rec.schema, fields);
+                if assigned != rec.v {
+                    bail!(
+                        "wal replay diverged: record {} registered v{} as v{}",
+                        rec.seq,
+                        rec.v.0,
+                        assigned.0
+                    );
+                }
+                let Landscape { tree, dbs, .. } = &mut *land;
+                for db in dbs.iter_mut() {
+                    for t in 0..db.tables.len() {
+                        if db.tables[t].schema == rec.schema {
+                            db.migrate_table(tree, t, rec.v);
+                        }
+                    }
+                }
+            }
+            WalOp::Drop => {
+                if land.tree.version(rec.schema, rec.v).is_some() {
+                    land.tree.delete_version(rec.schema, rec.v);
+                }
+            }
+            // in-band patches touch only the DMM; the version was already
+            // registered when the record was committed
+            WalOp::InBand => {}
+        }
+    }
+
+    // 2. base DPM at the segment's state (or the pre-change landscape
+    // matrix when no snapshot was ever written)
+    let (mut dpm, wal_seq) = match &base {
+        Some(seg) => {
+            let matrix =
+                seg.dusb.decompact_bounded(&land.tree, &land.cdm, &seg.versions);
+            let dpm = DpmSet::from_matrix(
+                &matrix,
+                &land.tree,
+                &land.cdm,
+                seg.dusb.state,
+            )
+            .map_err(|e| anyhow::anyhow!("segment DUSB violates 1:1: {e}"))?;
+            (dpm, seg.wal_seq)
+        }
+        None => {
+            let mut matrix = land.matrix.clone();
+            matrix.grow(land.cdm.n_attr_ids(), land.tree.n_attr_ids());
+            let dpm = DpmSet::from_matrix(
+                &matrix,
+                &land.tree,
+                &land.cdm,
+                StateI(0),
+            )
+            .map_err(|e| anyhow::anyhow!("landscape matrix violates 1:1: {e}"))?;
+            (dpm, 0)
+        }
+    };
+
+    // 3. Alg-5 replay of the WAL tail
+    let mut affected = Vec::new();
+    let mut reports = Vec::new();
+    let mut replayed = 0usize;
+    for rec in records.iter().filter(|r| r.seq > wal_seq) {
+        let case = match &rec.op {
+            WalOp::Add { .. } | WalOp::InBand => {
+                if !dpm.column(rec.schema, rec.v).is_empty() {
+                    continue; // column already present in the base
+                }
+                ChangeCase::AddedSchemaVersion { schema: rec.schema, v: rec.v }
+            }
+            WalOp::Drop => {
+                ChangeCase::DeletedSchemaVersion { schema: rec.schema, v: rec.v }
+            }
+        };
+        let (next, report) =
+            prepare_update(&dpm, &land.tree, &land.cdm, case, rec.state);
+        dpm = next;
+        reports.push(report);
+        replayed += 1;
+        if !affected.contains(&(rec.schema, rec.v)) {
+            affected.push((rec.schema, rec.v));
+        }
+    }
+
+    // 4. the recovered DPM is the new ground truth
+    let state = records.last().map(|r| r.state).unwrap_or(dpm.state);
+    dpm.state = state;
+    land.matrix =
+        dpm.decompact(land.cdm.n_attr_ids(), land.tree.n_attr_ids());
+
+    Ok(Some(RecoveryOutcome { dpm, state, affected, replayed, reports }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PipelineConfig;
+    use crate::schema::ExtractType;
+    use crate::workload;
+
+    fn land() -> Landscape {
+        workload::generate(&PipelineConfig::small())
+    }
+
+    fn add_record(
+        seq: u64,
+        land: &Landscape,
+        service: usize,
+    ) -> (WalRecord, Vec<(String, ExtractType, bool)>) {
+        let schema = land.dbs[service].tables[0].schema;
+        let mut fields = {
+            let latest = land.tree.latest_version(schema).unwrap();
+            land.tree.field_list(schema, latest).unwrap()
+        };
+        fields.push((format!("evolved_{seq}"), ExtractType::Varchar, true));
+        let v = VersionNo(land.tree.latest_version(schema).unwrap().0 + 1);
+        (
+            WalRecord {
+                seq,
+                state: StateI(seq),
+                schema,
+                v,
+                ts_us: seq * 1_000,
+                op: WalOp::Add { fields: fields.clone() },
+            },
+            fields,
+        )
+    }
+
+    #[test]
+    fn empty_store_recovers_nothing() {
+        let mut l = land();
+        assert!(recover(&mut l, None, &[]).unwrap().is_none());
+    }
+
+    #[test]
+    fn cold_replay_registers_versions_and_rebuilds_columns() {
+        let mut l = land();
+        let (rec, fields) = add_record(1, &l, 0);
+        let out = recover(&mut l, None, &[rec.clone()]).unwrap().unwrap();
+        assert_eq!(out.state, StateI(1));
+        assert_eq!(out.replayed, 1);
+        assert_eq!(out.affected, vec![(rec.schema, rec.v)]);
+        // the version registered with the recorded field list...
+        assert_eq!(l.tree.field_list(rec.schema, rec.v).unwrap(), fields);
+        // ...the bound table migrated to it...
+        assert_eq!(l.dbs[0].tables[0].live_version, rec.v);
+        // ...and the DMM carries the copied column
+        assert!(!out.dpm.column(rec.schema, rec.v).is_empty());
+        // ground-truth matrix was rewritten to match
+        assert_eq!(
+            l.matrix,
+            out.dpm.decompact(l.cdm.n_attr_ids(), l.tree.n_attr_ids())
+        );
+    }
+
+    #[test]
+    fn replay_is_idempotent_when_tree_already_evolved() {
+        // in-process restore: the tree already has the version
+        let mut l = land();
+        let (rec, fields) = add_record(1, &l, 0);
+        let v = l.tree.add_version(rec.schema, &fields);
+        assert_eq!(v, rec.v);
+        let n_attrs = l.tree.n_attr_ids();
+        let out = recover(&mut l, None, &[rec.clone()]).unwrap().unwrap();
+        // no duplicate registration
+        assert_eq!(l.tree.n_attr_ids(), n_attrs);
+        assert!(!out.dpm.column(rec.schema, rec.v).is_empty());
+    }
+
+    #[test]
+    fn diverged_wal_fails_loudly() {
+        let mut l = land();
+        let (mut rec, _) = add_record(1, &l, 0);
+        rec.v = VersionNo(rec.v.0 + 7); // recorded version can't be assigned
+        let err = recover(&mut l, None, &[rec]).unwrap_err();
+        assert!(err.to_string().contains("diverged"));
+    }
+
+    #[test]
+    fn drop_record_retires_version_and_column() {
+        let mut l = land();
+        let schema = l.dbs[0].tables[0].schema;
+        let drop = WalRecord {
+            seq: 1,
+            state: StateI(1),
+            schema,
+            v: VersionNo(1),
+            ts_us: 1,
+            op: WalOp::Drop,
+        };
+        let out = recover(&mut l, None, &[drop]).unwrap().unwrap();
+        assert!(l.tree.version(schema, VersionNo(1)).is_none());
+        assert!(out.dpm.column(schema, VersionNo(1)).is_empty());
+        assert_eq!(out.state, StateI(1));
+    }
+}

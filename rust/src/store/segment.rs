@@ -1,0 +1,409 @@
+//! Immutable snapshot segments + the atomically swapped manifest.
+//!
+//! A segment (`seg-NNNNNN.mseg`) is an SSTable-style immutable file: the
+//! full `ᵢ𝔇𝔘𝔖𝔅` at snapshot time, laid out as one independent JSON
+//! region **per schema** (newline-terminated, byte offsets recorded in
+//! the manifest's [`SparseIndex`]). Each region also records the
+//! schema's **version set at snapshot time**, which bounds Alg-4 replay
+//! during recovery (see `DusbSet::decompact_bounded`).
+//!
+//! The manifest (`MANIFEST.json`) names the live segment and the WAL
+//! cursor (`wal_seq`) the segment covers. Both files are published with
+//! the classic crash-safe dance: write `*.tmp` + fsync, then rename over
+//! the final name. A crash between any two steps leaves either the old
+//! manifest (pointing at the old, still-present segment) or the new one
+//! — never a torn view. Superseded segments are garbage-collected only
+//! *after* the new manifest rename.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::index::{IndexEntry, SparseIndex};
+use super::io::StoreIo;
+use crate::cdm::{CdmVersionNo, EntityId};
+use crate::matrix::dusb::{usb_entries_from_json, usb_entries_to_json, DusbSet};
+use crate::message::StateI;
+use crate::metrics::StoreMetrics;
+use crate::schema::{SchemaId, SchemaTree, VersionNo};
+use crate::util::json::Json;
+
+/// Manifest file name inside the store directory.
+pub const MANIFEST_FILE: &str = "MANIFEST.json";
+/// On-disk format version gate.
+pub const FORMAT: u64 = 1;
+
+/// The store's root metadata: which segment is live and how much of the
+/// WAL it already covers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    /// Monotonic snapshot number; also the segment file's number.
+    pub seq: u64,
+    /// Live segment file name (relative to the store dir).
+    pub segment: String,
+    /// The state `i` the segment's DUSB was built at.
+    pub state: StateI,
+    /// Highest WAL `seq` folded into the segment; recovery replays
+    /// records strictly after this cursor.
+    pub wal_seq: u64,
+    pub index: SparseIndex,
+}
+
+impl Manifest {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("format", Json::Num(FORMAT as f64));
+        j.set("seq", Json::Num(self.seq as f64));
+        j.set("segment", Json::Str(self.segment.clone()));
+        j.set("state", Json::Num(self.state.0 as f64));
+        j.set("wal_seq", Json::Num(self.wal_seq as f64));
+        j.set("index", self.index.to_json());
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        let num = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("manifest missing {k}"))
+        };
+        let format = num("format")?;
+        if format != FORMAT {
+            bail!("unsupported store format {format} (want {FORMAT})");
+        }
+        Ok(Manifest {
+            seq: num("seq")?,
+            segment: j
+                .get("segment")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("manifest missing segment"))?
+                .to_string(),
+            state: StateI(num("state")?),
+            wal_seq: num("wal_seq")?,
+            index: SparseIndex::from_json(
+                j.get("index").ok_or_else(|| anyhow!("manifest missing index"))?,
+            )?,
+        })
+    }
+}
+
+/// `seg-000042.mseg` for snapshot 42.
+pub fn segment_file_name(seq: u64) -> String {
+    format!("seg-{seq:06}.mseg")
+}
+
+/// Write a new snapshot segment + swap the manifest to it. Crash-safe at
+/// every step; returns the published manifest.
+pub fn write_segment(
+    io: &Arc<dyn StoreIo>,
+    dir: &Path,
+    seq: u64,
+    dusb: &DusbSet,
+    tree: &SchemaTree,
+    wal_seq: u64,
+    metrics: &StoreMetrics,
+) -> Result<Manifest> {
+    // one region per registered schema — including schemas with no groups,
+    // whose recorded (possibly empty) version set still bounds replay
+    let mut schema_ids: Vec<SchemaId> = tree.schemas().map(|s| s.id).collect();
+    schema_ids.sort();
+    let mut bytes = Vec::new();
+    let mut entries = Vec::with_capacity(schema_ids.len());
+    for o in schema_ids {
+        let mut region = Json::obj();
+        region.set("o", Json::Num(o.0 as f64));
+        region.set(
+            "versions",
+            Json::Arr(
+                tree.versions_of(o)
+                    .iter()
+                    .map(|v| Json::Num(v.0 as f64))
+                    .collect(),
+            ),
+        );
+        let mut groups: Vec<_> =
+            dusb.groups().filter(|((go, _, _), _)| *go == o).collect();
+        groups.sort_by_key(|(k, _)| **k);
+        region.set(
+            "groups",
+            Json::Arr(
+                groups
+                    .into_iter()
+                    .map(|(&(_, r, w), seq_entries)| {
+                        let mut g = Json::obj();
+                        g.set("r", Json::Num(r.0 as f64));
+                        g.set("w", Json::Num(w.0 as f64));
+                        g.set("seq", usb_entries_to_json(seq_entries));
+                        g
+                    })
+                    .collect(),
+            ),
+        );
+        let mut region_bytes = region.to_string().into_bytes();
+        region_bytes.push(b'\n');
+        entries.push(IndexEntry {
+            schema: o,
+            offset: bytes.len() as u64,
+            len: region_bytes.len() as u64,
+        });
+        bytes.extend_from_slice(&region_bytes);
+    }
+
+    let seg_name = segment_file_name(seq);
+    let seg_tmp = dir.join(format!("{seg_name}.tmp"));
+    io.write_file(&seg_tmp, &bytes)?;
+    io.rename(&seg_tmp, &dir.join(&seg_name))?;
+
+    let manifest = Manifest {
+        seq,
+        segment: seg_name,
+        state: dusb.state,
+        wal_seq,
+        index: SparseIndex::new(entries),
+    };
+    let man_tmp = dir.join(format!("{MANIFEST_FILE}.tmp"));
+    io.write_file(&man_tmp, manifest.to_json().to_pretty().as_bytes())?;
+    io.rename(&man_tmp, &dir.join(MANIFEST_FILE))?;
+    metrics.segments_live.set(1);
+    Ok(manifest)
+}
+
+/// Load the current manifest; `None` when the store is empty.
+pub fn load_manifest(io: &Arc<dyn StoreIo>, dir: &Path) -> Result<Option<Manifest>> {
+    let Some(bytes) = io.read(&dir.join(MANIFEST_FILE))? else {
+        return Ok(None);
+    };
+    let text = std::str::from_utf8(&bytes).context("manifest is not utf-8")?;
+    let j = crate::util::json::parse(text)
+        .map_err(|e| anyhow!("manifest parse error: {e:?}"))?;
+    Ok(Some(Manifest::from_json(&j)?))
+}
+
+/// One parsed segment region: the schema's snapshot-time version set and
+/// its DUSB groups.
+pub struct Region {
+    pub schema: SchemaId,
+    pub versions: Vec<VersionNo>,
+    pub groups: Vec<(
+        (SchemaId, EntityId, CdmVersionNo),
+        Vec<crate::matrix::dusb::UsbEntry>,
+    )>,
+}
+
+fn parse_region(bytes: &[u8]) -> Result<Region> {
+    let text = std::str::from_utf8(bytes).context("segment region is not utf-8")?;
+    let j = crate::util::json::parse(text.trim_end())
+        .map_err(|e| anyhow!("segment region parse error: {e:?}"))?;
+    let o = SchemaId(
+        j.get("o")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow!("region missing o"))? as u32,
+    );
+    let versions = j
+        .get("versions")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("region missing versions"))?
+        .iter()
+        .map(|v| {
+            v.as_u64()
+                .map(|n| VersionNo(n as u32))
+                .ok_or_else(|| anyhow!("bad version"))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let mut groups = Vec::new();
+    for g in j
+        .get("groups")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("region missing groups"))?
+    {
+        let num = |k: &str| {
+            g.get(k)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("group missing {k}"))
+        };
+        let key = (o, EntityId(num("r")? as u32), CdmVersionNo(num("w")? as u32));
+        let seq = usb_entries_from_json(
+            g.get("seq").ok_or_else(|| anyhow!("group missing seq"))?,
+        )?;
+        groups.push((key, seq));
+    }
+    Ok(Region { schema: o, versions, groups })
+}
+
+/// Read the whole segment back: the DUSB (at `manifest.state`) and the
+/// per-schema snapshot-time version sets.
+pub fn read_full(
+    io: &Arc<dyn StoreIo>,
+    dir: &Path,
+    manifest: &Manifest,
+) -> Result<(DusbSet, HashMap<SchemaId, Vec<VersionNo>>)> {
+    let path = dir.join(&manifest.segment);
+    let bytes = io
+        .read(&path)?
+        .ok_or_else(|| anyhow!("manifest names missing segment {:?}", manifest.segment))?;
+    if bytes.len() as u64 != manifest.index.total_bytes() {
+        bail!(
+            "segment {:?} is {}B but the index covers {}B",
+            manifest.segment,
+            bytes.len(),
+            manifest.index.total_bytes()
+        );
+    }
+    let mut dusb = DusbSet::new(manifest.state);
+    let mut versions = HashMap::new();
+    for e in manifest.index.entries() {
+        let region =
+            parse_region(&bytes[e.offset as usize..(e.offset + e.len) as usize])?;
+        versions.insert(region.schema, region.versions);
+        for (key, seq) in region.groups {
+            dusb.insert_group(key, seq);
+        }
+    }
+    Ok((dusb, versions))
+}
+
+/// Point-read exactly one schema's region through the sparse index.
+/// Returns the parsed region plus the bytes read (`None` when the segment
+/// has no region for `schema`) — the byte count backs the "<10% of store
+/// bytes for single-schema recovery" acceptance check.
+pub fn read_schema_region(
+    io: &Arc<dyn StoreIo>,
+    dir: &Path,
+    manifest: &Manifest,
+    schema: SchemaId,
+) -> Result<Option<(Region, u64)>> {
+    let Some(entry) = manifest.index.lookup(schema) else {
+        return Ok(None);
+    };
+    let bytes = io.read_range(
+        &dir.join(&manifest.segment),
+        entry.offset,
+        entry.len as usize,
+    )?;
+    Ok(Some((parse_region(&bytes)?, entry.len)))
+}
+
+/// Remove segment files superseded by `manifest` (plus orphaned `*.tmp`
+/// from crashed publishes). Runs after the manifest swap; a crash halfway
+/// just leaves garbage for the next GC.
+pub fn gc(
+    io: &Arc<dyn StoreIo>,
+    dir: &Path,
+    manifest: &Manifest,
+    metrics: &StoreMetrics,
+) -> Result<usize> {
+    let mut removed = 0;
+    for path in io.list(dir)? {
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+            continue;
+        };
+        let stale_seg = name.starts_with("seg-")
+            && name.ends_with(".mseg")
+            && name != manifest.segment;
+        let orphan_tmp = name.ends_with(".tmp");
+        if stale_seg || orphan_tmp {
+            io.remove_file(&path)?;
+            removed += 1;
+        }
+    }
+    metrics.segment_gc_total.add(removed as u64);
+    metrics.segments_live.set(1);
+    Ok(removed)
+}
+
+/// The store directory's segment files (live + not-yet-GCed).
+pub fn list_segments(io: &Arc<dyn StoreIo>, dir: &Path) -> Result<Vec<PathBuf>> {
+    Ok(io
+        .list(dir)?
+        .into_iter()
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("seg-") && n.ends_with(".mseg"))
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::fixtures::{fig5_matrix, fig5_trees};
+    use crate::store::io::RealIo;
+    use crate::util::tmp::TestDir;
+
+    fn fixture() -> (SchemaTree, crate::cdm::CdmTree, DusbSet) {
+        let (t, c) = fig5_trees();
+        let m = fig5_matrix(&t, &c);
+        let dusb = DusbSet::from_matrix(&m, &t, &c, StateI(3)).unwrap();
+        (t, c, dusb)
+    }
+
+    #[test]
+    fn segment_roundtrip_with_version_sets() {
+        let dir = TestDir::new("seg-roundtrip");
+        let io: Arc<dyn StoreIo> = Arc::new(RealIo::default());
+        let m = StoreMetrics::default();
+        let (t, c, dusb) = fixture();
+        let manifest =
+            write_segment(&io, dir.path(), 1, &dusb, &t, 5, &m).unwrap();
+        assert_eq!(manifest.wal_seq, 5);
+        assert_eq!(manifest.state, StateI(3));
+        let loaded = load_manifest(&io, dir.path()).unwrap().unwrap();
+        assert_eq!(loaded, manifest);
+        let (back, versions) = read_full(&io, dir.path(), &loaded).unwrap();
+        assert_eq!(back.state, StateI(3));
+        assert_eq!(back.n_elements(), dusb.n_elements());
+        assert_eq!(back.decompact(&t, &c), dusb.decompact(&t, &c));
+        // every schema has a recorded version set, even group-less ones
+        for s in t.schemas() {
+            assert_eq!(versions[&s.id], s.versions);
+        }
+    }
+
+    #[test]
+    fn point_read_touches_only_one_region() {
+        let dir = TestDir::new("seg-point");
+        let io: Arc<dyn StoreIo> = Arc::new(RealIo::default());
+        let m = StoreMetrics::default();
+        let (t, _c, dusb) = fixture();
+        let manifest =
+            write_segment(&io, dir.path(), 1, &dusb, &t, 1, &m).unwrap();
+        let s1 = t.schema_by_name("s1").unwrap();
+        let (region, bytes_read) =
+            read_schema_region(&io, dir.path(), &manifest, s1)
+                .unwrap()
+                .unwrap();
+        assert_eq!(region.schema, s1);
+        assert!(!region.groups.is_empty());
+        assert!(bytes_read < manifest.index.total_bytes());
+        assert!(
+            read_schema_region(&io, dir.path(), &manifest, SchemaId(999))
+                .unwrap()
+                .is_none()
+        );
+    }
+
+    #[test]
+    fn gc_removes_superseded_segments_and_tmp() {
+        let dir = TestDir::new("seg-gc");
+        let io: Arc<dyn StoreIo> = Arc::new(RealIo::default());
+        let m = StoreMetrics::default();
+        let (t, _c, dusb) = fixture();
+        write_segment(&io, dir.path(), 1, &dusb, &t, 1, &m).unwrap();
+        let manifest =
+            write_segment(&io, dir.path(), 2, &dusb, &t, 2, &m).unwrap();
+        io.write_file(&dir.join("seg-000009.mseg.tmp"), b"junk").unwrap();
+        assert_eq!(list_segments(&io, dir.path()).unwrap().len(), 2);
+        let removed = gc(&io, dir.path(), &manifest, &m).unwrap();
+        assert_eq!(removed, 2); // old segment + orphan tmp
+        let left = list_segments(&io, dir.path()).unwrap();
+        assert_eq!(left.len(), 1);
+        assert!(left[0].ends_with(segment_file_name(2)));
+        assert_eq!(m.segment_gc_total.get(), 2);
+        // the survivor still loads
+        let (back, _) = read_full(&io, dir.path(), &manifest).unwrap();
+        assert_eq!(back.n_elements(), dusb.n_elements());
+    }
+}

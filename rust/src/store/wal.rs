@@ -1,0 +1,468 @@
+//! The write-ahead log of the durable matrix store.
+//!
+//! Evolution-lane updates are committed here **before** the epoch
+//! publishes (see `coordinator::evolution`): once [`Wal::commit`]
+//! returns, the schema change survives any crash. Records are framed as
+//!
+//! ```text
+//! [len: u32 LE][crc32(payload): u32 LE][payload: len bytes of JSON]
+//! ```
+//!
+//! Replay scans frames from the start and **truncates at the first
+//! corrupt frame** (short header, implausible length, checksum mismatch,
+//! unparseable payload): everything before the tear is intact and
+//! everything after it was never acknowledged, so dropping it loses no
+//! committed update.
+//!
+//! The WAL keeps the **entire schema-change history** (records are never
+//! garbage-collected — schema changes are "a few times a day", §3.3, so
+//! the log stays tiny). Recovery needs the full history to rebuild the
+//! registry tree deterministically on a cold start; the segment
+//! manifest's `wal_seq` cursor decides which suffix is replayed through
+//! Alg-5 (see `super::recovery`).
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::io::StoreIo;
+use crate::message::StateI;
+use crate::metrics::StoreMetrics;
+use crate::schema::{ExtractType, SchemaId, VersionNo};
+use crate::util::json::Json;
+
+/// WAL file name inside the store directory.
+pub const WAL_FILE: &str = "wal.log";
+
+/// Frames larger than this are treated as corruption, not data (the
+/// biggest real record is a field list of a few hundred bytes).
+const MAX_FRAME: u32 = 1 << 24;
+
+/// When the WAL fsyncs (`runtime.store.fsync`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    /// fsync on every committed update (the durability default).
+    Always,
+    /// Never fsync (benchmarks / throwaway sims; a crash may lose tail
+    /// updates that were acked).
+    Never,
+}
+
+impl std::str::FromStr for FsyncPolicy {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "always" => Ok(FsyncPolicy::Always),
+            "never" => Ok(FsyncPolicy::Never),
+            other => Err(format!(
+                "unknown fsync policy {other:?} (expected always|never)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for FsyncPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            FsyncPolicy::Always => "always",
+            FsyncPolicy::Never => "never",
+        })
+    }
+}
+
+/// The schema-change operation a WAL record describes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WalOp {
+    /// A new version with its full field list (registry add).
+    Add { fields: Vec<(String, ExtractType, bool)> },
+    /// A version retirement (Alg-5 case 1).
+    Drop,
+    /// An in-band Alg-5 case-3 patch of an already registered version.
+    InBand,
+}
+
+impl WalOp {
+    fn case_name(&self) -> &'static str {
+        match self {
+            WalOp::Add { .. } => "add",
+            WalOp::Drop => "drop",
+            WalOp::InBand => "in-band",
+        }
+    }
+}
+
+/// One committed evolution-lane update.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WalRecord {
+    /// Monotonic commit sequence number (1-based).
+    pub seq: u64,
+    /// The state `i` the update installed.
+    pub state: StateI,
+    pub schema: SchemaId,
+    pub v: VersionNo,
+    pub ts_us: u64,
+    pub op: WalOp,
+}
+
+impl WalRecord {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("seq", Json::Num(self.seq as f64));
+        j.set("state", Json::Num(self.state.0 as f64));
+        j.set("case", Json::Str(self.op.case_name().to_string()));
+        j.set("o", Json::Num(self.schema.0 as f64));
+        j.set("v", Json::Num(self.v.0 as f64));
+        j.set("ts", Json::Num(self.ts_us as f64));
+        if let WalOp::Add { fields } = &self.op {
+            let arr = fields
+                .iter()
+                .map(|(name, ty, optional)| {
+                    Json::Arr(vec![
+                        Json::Str(name.clone()),
+                        Json::Str(ty.wire_name().to_string()),
+                        Json::Bool(*optional),
+                    ])
+                })
+                .collect();
+            j.set("fields", Json::Arr(arr));
+        }
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<WalRecord> {
+        let num = |k: &str| -> Result<u64> {
+            j.get(k)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("wal record missing {k}"))
+        };
+        let case = j
+            .get("case")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("wal record missing case"))?;
+        let op = match case {
+            "drop" => WalOp::Drop,
+            "in-band" => WalOp::InBand,
+            "add" => {
+                let fields = j
+                    .get("fields")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("add record missing fields"))?
+                    .iter()
+                    .map(|f| {
+                        let f = f
+                            .as_arr()
+                            .ok_or_else(|| anyhow!("bad field entry"))?;
+                        if f.len() != 3 {
+                            bail!("bad field entry arity");
+                        }
+                        let name = f[0]
+                            .as_str()
+                            .ok_or_else(|| anyhow!("bad field name"))?;
+                        let wire = f[1]
+                            .as_str()
+                            .ok_or_else(|| anyhow!("bad field type"))?;
+                        let ty = ExtractType::from_wire_name(wire)
+                            .ok_or_else(|| anyhow!("unknown type {wire:?}"))?;
+                        let optional = f[2]
+                            .as_bool()
+                            .ok_or_else(|| anyhow!("bad field optional"))?;
+                        Ok((name.to_string(), ty, optional))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                WalOp::Add { fields }
+            }
+            other => bail!("unknown wal case {other:?}"),
+        };
+        Ok(WalRecord {
+            seq: num("seq")?,
+            state: StateI(num("state")?),
+            schema: SchemaId(num("o")? as u32),
+            v: VersionNo(num("v")? as u32),
+            ts_us: num("ts")?,
+            op,
+        })
+    }
+}
+
+/// CRC-32 (IEEE, reflected) over `bytes` — hand-rolled, table-driven; the
+/// vendor set has no checksum crate.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    const TABLE: [u32; 256] = crc32_table();
+    let mut crc: u32 = !0;
+    for &b in bytes {
+        crc = (crc >> 8) ^ TABLE[((crc ^ b as u32) & 0xFF) as usize];
+    }
+    !crc
+}
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            crc = if crc & 1 != 0 {
+                (crc >> 1) ^ 0xEDB8_8320
+            } else {
+                crc >> 1
+            };
+            k += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+}
+
+/// Encode one record as a length+checksum frame.
+pub fn encode_frame(rec: &WalRecord) -> Vec<u8> {
+    let payload = rec.to_json().to_string().into_bytes();
+    let mut frame = Vec::with_capacity(8 + payload.len());
+    frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&crc32(&payload).to_le_bytes());
+    frame.extend_from_slice(&payload);
+    frame
+}
+
+/// Scan `bytes` for frames. Returns the decoded records, the byte offset
+/// of the first corrupt frame (== `bytes.len()` when the log is clean),
+/// and whether a tear was found.
+pub fn decode_frames(bytes: &[u8]) -> (Vec<WalRecord>, usize, bool) {
+    let mut records = Vec::new();
+    let mut off = 0usize;
+    while off < bytes.len() {
+        let rest = &bytes[off..];
+        if rest.len() < 8 {
+            return (records, off, true);
+        }
+        let len = u32::from_le_bytes(rest[0..4].try_into().unwrap());
+        let crc = u32::from_le_bytes(rest[4..8].try_into().unwrap());
+        if len > MAX_FRAME || (len as usize) > rest.len() - 8 {
+            return (records, off, true);
+        }
+        let payload = &rest[8..8 + len as usize];
+        if crc32(payload) != crc {
+            return (records, off, true);
+        }
+        let parsed = std::str::from_utf8(payload)
+            .ok()
+            .and_then(|text| crate::util::json::parse(text).ok())
+            .and_then(|j| WalRecord::from_json(&j).ok());
+        match parsed {
+            Some(rec) => records.push(rec),
+            None => return (records, off, true),
+        }
+        off += 8 + len as usize;
+    }
+    (records, off, false)
+}
+
+/// The open write-ahead log: an append cursor over [`StoreIo`].
+#[derive(Debug)]
+pub struct Wal {
+    io: Arc<dyn StoreIo>,
+    path: PathBuf,
+    fsync: FsyncPolicy,
+    next_seq: AtomicU64,
+    metrics: Arc<StoreMetrics>,
+}
+
+impl Wal {
+    /// Open (creating if absent) and replay the log. A corrupt tail is
+    /// truncated away on open, so the append cursor always lands on a
+    /// frame boundary. Returns the log plus the surviving records.
+    pub fn open(
+        io: Arc<dyn StoreIo>,
+        path: PathBuf,
+        fsync: FsyncPolicy,
+        metrics: Arc<StoreMetrics>,
+    ) -> Result<(Wal, Vec<WalRecord>)> {
+        let bytes = io.read(&path)?.unwrap_or_default();
+        let (records, good_len, torn) = decode_frames(&bytes);
+        if torn {
+            io.truncate(&path, good_len as u64)?;
+        }
+        let next_seq = records.last().map(|r| r.seq + 1).unwrap_or(1);
+        // commit order must be strictly sequential — gaps or reordering
+        // mean the file is not our WAL
+        for (i, rec) in records.iter().enumerate() {
+            if rec.seq != i as u64 + 1 {
+                bail!(
+                    "wal sequence corrupt: record {i} has seq {}",
+                    rec.seq
+                );
+            }
+        }
+        let wal = Wal {
+            io,
+            path,
+            fsync,
+            next_seq: AtomicU64::new(next_seq),
+            metrics,
+        };
+        Ok((wal, records))
+    }
+
+    /// The sequence number the next commit will get.
+    pub fn next_seq(&self) -> u64 {
+        self.next_seq.load(Ordering::Relaxed)
+    }
+
+    /// Append + (policy-dependent) fsync one record: **the commit point**.
+    /// The caller passes `seq == next_seq()`; callers are serialized by
+    /// the store's inner lock.
+    pub fn commit(&self, rec: &WalRecord) -> Result<()> {
+        debug_assert_eq!(rec.seq, self.next_seq());
+        let frame = encode_frame(rec);
+        self.io.append(&self.path, &frame)?;
+        self.sync()?;
+        // count only after the bytes are durable
+        self.metrics.wal_bytes.add(frame.len() as u64);
+        self.next_seq.store(rec.seq + 1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Flush + fsync the append handle (no-op under `fsync = never`).
+    pub fn sync(&self) -> Result<()> {
+        if self.fsync == FsyncPolicy::Always {
+            self.io.sync(&self.path)?;
+            self.metrics.wal_fsyncs.inc();
+        }
+        Ok(())
+    }
+
+    /// Current WAL size in bytes.
+    pub fn len_bytes(&self) -> Result<u64> {
+        self.io.file_len(&self.path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::io::RealIo;
+    use crate::util::tmp::TestDir;
+
+    fn rec(seq: u64, op: WalOp) -> WalRecord {
+        WalRecord {
+            seq,
+            state: StateI(seq),
+            schema: SchemaId(3),
+            v: VersionNo(4),
+            ts_us: 1_700_000,
+            op,
+        }
+    }
+
+    fn add_op() -> WalOp {
+        WalOp::Add {
+            fields: vec![
+                ("id".into(), ExtractType::Int64, false),
+                ("when".into(), ExtractType::MicroTimestamp, true),
+            ],
+        }
+    }
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // standard IEEE check values
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn record_json_roundtrip() {
+        for op in [add_op(), WalOp::Drop, WalOp::InBand] {
+            let r = rec(7, op);
+            let j = r.to_json();
+            let back =
+                WalRecord::from_json(&crate::util::json::parse(&j.to_string()).unwrap())
+                    .unwrap();
+            assert_eq!(back, r);
+        }
+    }
+
+    #[test]
+    fn commit_and_replay() {
+        let dir = TestDir::new("wal-replay");
+        let io: Arc<dyn StoreIo> = Arc::new(RealIo::default());
+        let m = Arc::new(StoreMetrics::default());
+        let (wal, existing) = Wal::open(
+            Arc::clone(&io),
+            dir.join(WAL_FILE),
+            FsyncPolicy::Always,
+            Arc::clone(&m),
+        )
+        .unwrap();
+        assert!(existing.is_empty());
+        wal.commit(&rec(1, add_op())).unwrap();
+        wal.commit(&rec(2, WalOp::Drop)).unwrap();
+        assert_eq!(wal.next_seq(), 3);
+        assert!(m.wal_bytes.get() > 0);
+        assert_eq!(m.wal_fsyncs.get(), 2);
+        let (wal2, records) = Wal::open(
+            io,
+            dir.join(WAL_FILE),
+            FsyncPolicy::Always,
+            Arc::new(StoreMetrics::default()),
+        )
+        .unwrap();
+        assert_eq!(records.len(), 2);
+        assert_eq!(records[0], rec(1, add_op()));
+        assert_eq!(wal2.next_seq(), 3);
+    }
+
+    #[test]
+    fn corrupt_tail_is_truncated_clean_prefix_survives() {
+        let dir = TestDir::new("wal-torn");
+        let io: Arc<dyn StoreIo> = Arc::new(RealIo::default());
+        let m = Arc::new(StoreMetrics::default());
+        let path = dir.join(WAL_FILE);
+        let (wal, _) = Wal::open(
+            Arc::clone(&io),
+            path.clone(),
+            FsyncPolicy::Always,
+            Arc::clone(&m),
+        )
+        .unwrap();
+        wal.commit(&rec(1, add_op())).unwrap();
+        let good_len = io.file_len(&path).unwrap();
+        // a torn second frame: header + half the payload
+        let frame = encode_frame(&rec(2, WalOp::Drop));
+        io.append(&path, &frame[..frame.len() / 2]).unwrap();
+        io.sync(&path).unwrap();
+        drop(wal);
+        let (wal2, records) = Wal::open(
+            Arc::clone(&io),
+            path.clone(),
+            FsyncPolicy::Always,
+            m,
+        )
+        .unwrap();
+        assert_eq!(records.len(), 1);
+        assert_eq!(io.file_len(&path).unwrap(), good_len);
+        // the log keeps working after the repair
+        wal2.commit(&rec(2, WalOp::InBand)).unwrap();
+        let bytes = io.read(&path).unwrap().unwrap();
+        let (records, _, torn) = decode_frames(&bytes);
+        assert_eq!(records.len(), 2);
+        assert!(!torn);
+    }
+
+    #[test]
+    fn corrupt_checksum_stops_replay() {
+        let mut bytes = encode_frame(&rec(1, WalOp::Drop));
+        let tail = encode_frame(&rec(2, WalOp::Drop));
+        bytes.extend_from_slice(&tail);
+        // flip one payload byte of frame 2
+        let flip = bytes.len() - 3;
+        bytes[flip] ^= 0xFF;
+        let (records, good, torn) = decode_frames(&bytes);
+        assert_eq!(records.len(), 1);
+        assert!(torn);
+        assert_eq!(good, bytes.len() - tail.len());
+    }
+}

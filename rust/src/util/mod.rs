@@ -10,6 +10,7 @@ pub mod json;
 pub mod rng;
 pub mod stats;
 pub mod threadpool;
+pub mod tmp;
 
 /// Monotonic id source used for message keys / event ids across the sim.
 #[derive(Debug, Default)]

@@ -1,0 +1,75 @@
+//! Self-cleaning unique temp directories for tests and benches.
+//!
+//! The old pattern (`temp_dir()/metl-store-tests/{name}-{pid}`) leaked
+//! directories on every run and collided when the OS reused a pid. A
+//! [`TestDir`] is unique per *instantiation* (pid + monotonic counter +
+//! wall-clock nanos) and removes itself on `Drop`, so parallel tests,
+//! repeated runs and crash-injection sweeps never see each other's state.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A uniquely named temp directory that is deleted when dropped.
+#[derive(Debug)]
+pub struct TestDir {
+    path: PathBuf,
+    keep: bool,
+}
+
+impl TestDir {
+    /// Create `temp_dir()/metl-tests/{prefix}-{pid}-{nanos}-{n}`.
+    pub fn new(prefix: &str) -> TestDir {
+        static NEXT: AtomicU64 = AtomicU64::new(0);
+        let n = NEXT.fetch_add(1, Ordering::Relaxed);
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos())
+            .unwrap_or(0);
+        let path = std::env::temp_dir().join("metl-tests").join(format!(
+            "{prefix}-{}-{nanos}-{n}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&path).expect("create test dir");
+        TestDir { path, keep: false }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn join(&self, p: impl AsRef<Path>) -> PathBuf {
+        self.path.join(p)
+    }
+
+    /// Leave the directory on disk after drop (debugging a failed run).
+    pub fn keep(mut self) -> Self {
+        self.keep = true;
+        self
+    }
+}
+
+impl Drop for TestDir {
+    fn drop(&mut self) {
+        if !self.keep {
+            let _ = std::fs::remove_dir_all(&self.path);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dirs_are_unique_and_cleaned_up() {
+        let a = TestDir::new("x");
+        let b = TestDir::new("x");
+        assert_ne!(a.path(), b.path());
+        assert!(a.path().is_dir());
+        std::fs::write(a.join("f"), "data").unwrap();
+        let path = a.path().to_path_buf();
+        drop(a);
+        assert!(!path.exists());
+        assert!(b.path().is_dir());
+    }
+}

@@ -95,26 +95,47 @@ fn malformed_wire_payloads_rejected() {
     }
 }
 
-/// A corrupted store file fails loudly on restore; the pipeline keeps the
-/// live DMM.
+/// A corrupted manifest or segment fails loudly on restore (they are
+/// rename-swapped atomically, so corruption there is operator-level
+/// damage, not a crash artifact); the pipeline keeps the live DMM. A
+/// corrupt WAL *tail* is the expected crash artifact and is truncated
+/// silently on reopen instead.
 #[test]
 fn corrupted_store_fails_loudly() {
-    let dir = std::env::temp_dir()
-        .join("metl-fi-store")
-        .join(format!("{}", std::process::id()));
-    let _ = std::fs::remove_dir_all(&dir);
+    let dir = metl::util::tmp::TestDir::new("fi-store");
     let p = Pipeline::new(PipelineConfig::small())
         .unwrap()
-        .with_store(&dir)
+        .with_store(dir.path())
         .unwrap();
-    // corrupt the persisted DUSB
-    std::fs::write(dir.join("dusb.json"), "{\"groups\": [{\"bad\"").unwrap();
-    assert!(p.restore_from_store().is_err());
-    // live DMM untouched
+    let manifest = dir.join("MANIFEST.json");
+    let good = std::fs::read(&manifest).unwrap();
+    // corrupt the manifest: reopening the store fails loudly
+    std::fs::write(&manifest, "{\"segment\": [{\"bad\"").unwrap();
+    assert!(metl::store::MatrixStore::open(dir.path()).is_err());
+    // valid JSON with the wrong shape also errors
+    std::fs::write(&manifest, "{\"state\": 3}").unwrap();
+    assert!(metl::store::MatrixStore::open(dir.path()).is_err());
+    // live DMM untouched throughout
     assert!(p.dmm.snapshot().n_elements() > 0);
-    // a truncated-but-valid-json store with wrong shape also errors
-    std::fs::write(dir.join("dusb.json"), "{\"state\": 3}").unwrap();
-    assert!(p.restore_from_store().is_err());
+    // restore the manifest but truncate the segment: loud restore failure
+    std::fs::write(&manifest, &good).unwrap();
+    let seg = {
+        let m = p.store.as_ref().unwrap().manifest().unwrap();
+        dir.join(&m.segment)
+    };
+    let seg_bytes = std::fs::read(&seg).unwrap();
+    std::fs::write(&seg, &seg_bytes[..seg_bytes.len() / 2]).unwrap();
+    let p2 = Pipeline::new(PipelineConfig::small()).unwrap();
+    let p2 = p2
+        .attach_store(metl::store::MatrixStore::open(dir.path()).unwrap())
+        .unwrap();
+    assert!(p2.restore_from_store().is_err());
+    // a torn WAL tail is tolerated: valid prefix survives, tail drops
+    std::fs::write(&seg, &seg_bytes).unwrap();
+    std::fs::write(dir.join("wal.log"), [0xDE, 0xAD, 0xBE, 0xEF, 0x01, 0x02])
+        .unwrap();
+    let store = metl::store::MatrixStore::open(dir.path()).unwrap();
+    assert!(store.wal_records().is_empty());
 }
 
 /// 1:1 constraint violations (double-mapped attribute) are rejected by

@@ -148,12 +148,9 @@ fn events_across_state_transition_survive() {
 /// The store restart path reproduces the live DMM including updates.
 #[test]
 fn store_restart_reproduces_dmm() {
-    let dir = std::env::temp_dir()
-        .join("metl-it-store")
-        .join(format!("{}", std::process::id()));
-    let _ = std::fs::remove_dir_all(&dir);
+    let dir = metl::util::tmp::TestDir::new("it-store");
     let cfg = PipelineConfig::small();
-    let p = Pipeline::new(cfg).unwrap().with_store(&dir).unwrap();
+    let p = Pipeline::new(cfg).unwrap().with_store(dir.path()).unwrap();
     p.apply_schema_change(0).unwrap();
     p.apply_schema_change(1).unwrap();
     let live = p.dmm.snapshot();
