@@ -1,0 +1,158 @@
+//! Bench: adversarial workload engine, the numbers behind `BENCH_8.json`.
+//!
+//! Runs every [`Scenario`] end-to-end through the sharded pipeline via
+//! the conformance [`ScenarioRunner`] (redelivery exercise off — this
+//! measures steady-state throughput, not the crash seam) and records
+//! events/s per scenario. The acceptance bound from the scenario
+//! conformance work: the Zipfian hot-key/hot-schema axis stays within 3×
+//! of the uniform baseline (skew must degrade gracefully, not collapse).
+//!
+//! Flags (after `cargo bench --bench adversarial --`):
+//!   --smoke           reduced event count + small profile (CI shape check)
+//!   --scenario NAME   run only this hostile scenario besides the
+//!                     uniform + zipf required axes
+//!   --out PATH        artifact destination (default ../BENCH_8.json from
+//!                     the crate root, i.e. the repo-root baseline)
+//!   --validate PATH   validate an existing artifact's schema and exit
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{arg_value, has_flag, section, Artifact};
+use metl::config::PipelineConfig;
+use metl::util::json::Json;
+use metl::workload::adversarial::Scenario;
+use metl::workload::scenario::{ScenarioOutcome, ScenarioRunner};
+
+/// Metrics every `BENCH_8.json`-shaped artifact must carry (dotted paths
+/// under `metrics`; shared by `--validate` and the CI bench-smoke job).
+const REQUIRED: &[&str] = &["uniform_eps", "zipf_eps", "zipf_over_uniform"];
+
+const SHARDS: usize = 4;
+
+fn metric_key(s: Scenario) -> String {
+    format!("{}_eps", s.name().replace('-', "_"))
+}
+
+fn run_scenario(cfg: &PipelineConfig, scenario: Scenario) -> ScenarioOutcome {
+    let mut runner = ScenarioRunner::new(cfg.clone(), scenario);
+    runner.exercise_redelivery = false;
+    let runner = runner.shards(SHARDS);
+    let (pipeline, outcome) = runner.run().unwrap();
+    assert_eq!(
+        outcome.events_in, outcome.published,
+        "{scenario}: published records went unconsumed"
+    );
+    assert_eq!(
+        pipeline.metrics.transformations.get() + outcome.dead_letters,
+        outcome.events_in,
+        "{scenario}: silent drop"
+    );
+    outcome
+}
+
+fn main() {
+    if let Some(path) = arg_value("--validate") {
+        match harness::validate_artifact_file(&path, "adversarial", REQUIRED) {
+            Ok(()) => {
+                println!("{path}: valid adversarial artifact");
+                return;
+            }
+            Err(e) => {
+                eprintln!("invalid adversarial artifact: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+
+    let smoke = has_flag("--smoke");
+    let mut cfg =
+        if smoke { PipelineConfig::small() } else { PipelineConfig::paper_day() };
+    cfg.trace_events = if smoke { 2_000 } else { 20_000 };
+    let profile = if smoke { "small" } else { "paper_day" };
+    let pinned = arg_value("--scenario").map(|name| {
+        Scenario::from_name(&name).unwrap_or_else(|| {
+            eprintln!(
+                "unknown scenario {name:?}; known: {}",
+                Scenario::ALL.map(|s| s.name()).join(", ")
+            );
+            std::process::exit(1);
+        })
+    });
+    let mut artifact = Artifact::new("adversarial");
+    artifact
+        .meta("profile", Json::Str(profile.to_string()))
+        .meta("smoke", Json::Bool(smoke))
+        .meta("events", Json::Num(cfg.trace_events as f64))
+        .meta("shards", Json::Num(SHARDS as f64));
+
+    section(&format!(
+        "adversarial scenarios: {} events, {SHARDS} shards ({profile})",
+        cfg.trace_events
+    ));
+    println!(
+        "  {:<18} {:>14} {:>10} {:>10} {:>8}",
+        "scenario", "events/s", "published", "dlq", "vs unif"
+    );
+
+    // uniform + zipf always run: they anchor the required ratio axis
+    let mut axis: Vec<Scenario> = vec![Scenario::Uniform, Scenario::Zipf];
+    match pinned {
+        Some(s) => {
+            if !axis.contains(&s) {
+                axis.push(s);
+            }
+        }
+        None => axis.extend(
+            Scenario::HOSTILE
+                .iter()
+                .copied()
+                .filter(|s| *s != Scenario::Zipf),
+        ),
+    }
+
+    let mut uniform_eps = 0.0;
+    let mut zipf_eps = 0.0;
+    for &scenario in &axis {
+        let outcome = run_scenario(&cfg, scenario);
+        let eps = outcome.report.throughput_eps();
+        println!(
+            "  {:<18} {:>14.0} {:>10} {:>10} {:>7.2}x",
+            scenario.name(),
+            eps,
+            outcome.published,
+            outcome.dead_letters,
+            if uniform_eps > 0.0 { uniform_eps / eps } else { 1.0 }
+        );
+        match scenario {
+            Scenario::Uniform => uniform_eps = eps,
+            Scenario::Zipf => zipf_eps = eps,
+            _ => {}
+        }
+        artifact.set_num(&metric_key(scenario), eps);
+    }
+
+    let ratio = uniform_eps / zipf_eps.max(1e-9);
+    println!(
+        "  zipf slowdown vs uniform: {ratio:.2}x (acceptance bound: < 3x)"
+    );
+    artifact.set_num("zipf_over_uniform", ratio);
+    if !smoke {
+        assert!(
+            ratio < 3.0,
+            "Zipfian skew degraded throughput {ratio:.2}x vs uniform (bound 3x)"
+        );
+    }
+
+    // --- emit ------------------------------------------------------------
+    let out =
+        arg_value("--out").unwrap_or_else(|| "../BENCH_8.json".to_string());
+    artifact.write(&out).unwrap();
+    if let Err(e) =
+        harness::validate_artifact_file(&out, "adversarial", REQUIRED)
+    {
+        eprintln!("emitted artifact failed self-validation: {e}");
+        std::process::exit(1);
+    }
+    println!("\nadversarial bench OK");
+}

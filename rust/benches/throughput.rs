@@ -7,7 +7,10 @@
 //! throughput at 1/2/4 registered sinks (`--sinks N` pins one count),
 //! and the online evolution lane under a change storm (`--evolve N` pins
 //! the storm size): mapping-throughput dip and update latency with
-//! targeted vs full cache eviction.
+//! targeted vs full cache eviction. A final adversarial lane drives one
+//! hostile workload through the conformance runner (`--scenario NAME`
+//! pins it; default `zipf` — see `benches/adversarial.rs` for the full
+//! per-scenario sweep behind `BENCH_8.json`).
 
 #[path = "harness.rs"]
 mod harness;
@@ -23,6 +26,8 @@ use metl::message::{InMessage, StateI};
 use metl::runtime::BulkRuntime;
 use metl::util::rng::Rng;
 use metl::util::stats::format_ns;
+use metl::workload::adversarial::Scenario;
+use metl::workload::scenario::ScenarioRunner;
 use metl::workload::{self, DmlKind, TraceOp};
 
 const BACKLOG: usize = 80_000;
@@ -326,6 +331,37 @@ fn main() {
         "  dip = baseline eps / storm eps (1.00x = no dip); targeted \
          eviction keeps unaffected columns warm, so its dip and map p99 \
          stay below the full-evict fallback"
+    );
+
+    section("adversarial scenario lane (--scenario NAME pins; default zipf)");
+    let scenario_name =
+        harness::arg_value("--scenario").unwrap_or_else(|| "zipf".to_string());
+    let scenario = Scenario::from_name(&scenario_name).unwrap_or_else(|| {
+        eprintln!(
+            "unknown scenario {scenario_name:?}; known: {}",
+            Scenario::ALL.map(|s| s.name()).join(", ")
+        );
+        std::process::exit(1);
+    });
+    let mut adv_cfg = cfg.clone();
+    adv_cfg.trace_events = 20_000;
+    let mut runner = ScenarioRunner::new(adv_cfg, scenario);
+    runner.exercise_redelivery = false;
+    let (p, outcome) = runner.shards(4).run().unwrap();
+    let eps = outcome.report.throughput_eps();
+    println!(
+        "  {scenario}: {:>10.0} events/s over {} published records \
+         ({} dead-lettered, 4 shards)",
+        eps, outcome.published, outcome.dead_letters
+    );
+    assert_eq!(outcome.events_in, outcome.published);
+    assert_eq!(
+        p.metrics.transformations.get() + outcome.dead_letters,
+        outcome.events_in
+    );
+    artifact.set_num(
+        &format!("scenario_{}_eps", scenario_name.replace('-', "_")),
+        eps,
     );
 
     artifact.write_default().unwrap();

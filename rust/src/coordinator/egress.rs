@@ -17,7 +17,7 @@ use anyhow::Result;
 use super::pipeline::OutRecord;
 use crate::broker::Consumer;
 use crate::metrics::SinkMetrics;
-use crate::sink::{SinkConnector, SinkStats};
+use crate::sink::{DeliveryTag, SinkConnector, SinkStats};
 
 /// Batch size of one egress poll round.
 const DRAIN_BATCH: usize = 256;
@@ -72,10 +72,7 @@ impl SinkHandle {
             if batch.is_empty() {
                 break;
             }
-            for (_, rec) in &batch {
-                let (op, msg) = &*rec.value;
-                sink.apply(msg, *op);
-            }
+            Self::apply_batch(&mut **sink, &batch);
             if sink.flush().is_err() {
                 self.metrics.flush_errors.inc();
                 consumer.rewind_to_committed();
@@ -88,6 +85,49 @@ impl SinkHandle {
         let stats = sink.snapshot_stats();
         self.metrics.duplicates.set(stats.duplicates);
         self.metrics.dropped.set(stats.dropped);
+        self.metrics.lag.set(consumer.lag());
+        n
+    }
+
+    /// Apply one polled batch through the delivery-aware path: each
+    /// record carries its `(partition, offset)` tag so backends dedupe
+    /// at-least-once redelivery exactly.
+    fn apply_batch(
+        sink: &mut dyn SinkConnector,
+        batch: &[(usize, crate::broker::Record<OutRecord>)],
+    ) {
+        for (partition, rec) in batch {
+            let (op, msg) = &*rec.value;
+            let tag =
+                DeliveryTag { partition: *partition as u32, offset: rec.offset };
+            sink.apply_at(tag, msg, *op);
+        }
+    }
+
+    /// Crash-injection seam for the at-least-once conformance tests:
+    /// poll → apply → flush exactly like [`Self::drain`], but "crash"
+    /// before any offset commit — the consumer position rewinds to the
+    /// last commit, so the next [`Self::drain`] redelivers everything
+    /// this round applied and the backend's offset-watermark dedupe must
+    /// absorb it. Returns records applied (none of them committed).
+    pub fn drain_crash_before_commit(&self) -> usize {
+        let mut consumer = self.consumer.lock().unwrap();
+        let mut sink = self.sink.lock().unwrap();
+        let mut n = 0;
+        loop {
+            let batch = consumer.poll(DRAIN_BATCH);
+            if batch.is_empty() {
+                break;
+            }
+            Self::apply_batch(&mut **sink, &batch);
+            if sink.flush().is_err() {
+                self.metrics.flush_errors.inc();
+                break;
+            }
+            n += batch.len();
+        }
+        // the crash: applied + flushed, but the commit never happened
+        consumer.rewind_to_committed();
         self.metrics.lag.set(consumer.lag());
         n
     }
@@ -112,9 +152,13 @@ impl SinkHandle {
 
     /// Reset this group's offsets to the beginning of the CDM topic — the
     /// §3.4 "set back Kafka-offsets" fallback, per sink (idempotent
-    /// backends absorb the re-deliveries).
+    /// backends absorb the re-deliveries). The backend's delivery-dedupe
+    /// watermarks reset with it: this replay is deliberate — a wiped
+    /// backend must be rebuilt, not have the whole stream deduplicated
+    /// away.
     pub fn reset_to_beginning(&self) {
         self.consumer.lock().unwrap().reset_to_beginning();
+        self.sink.lock().unwrap().reset_dedupe();
     }
 
     /// Abandon uncommitted progress (crash simulation: next drain

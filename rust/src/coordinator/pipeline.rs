@@ -375,7 +375,7 @@ impl Pipeline {
     pub fn resolve_op(&self, op: &TraceOp) -> Result<()> {
         match op {
             TraceOp::Dml { service, kind } => {
-                let ev = self.apply_dml(*service, *kind)?;
+                let ev = self.apply_dml(*service, *kind, None)?;
                 if let Some(ev) = ev {
                     self.source.publish(&self.cdc_topic, ev);
                 }
@@ -387,7 +387,58 @@ impl Pipeline {
         }
     }
 
-    fn apply_dml(&self, service: usize, kind: DmlKind) -> Result<Option<CdcEvent>> {
+    /// Resolve one DML against the landscape **without publishing**: the
+    /// adversarial workload engine ([`crate::workload::scenario`]) buffers
+    /// the returned events so it can shuffle/duplicate them before they
+    /// hit the CDC topic. `rank` targets the rank-th *oldest* live key of
+    /// the service's table (Zipfian hot-key skew: rank 0 is the hottest);
+    /// `None` picks uniformly like [`Pipeline::resolve_op`].
+    pub fn resolve_dml(
+        &self,
+        service: usize,
+        kind: DmlKind,
+        rank: Option<u64>,
+    ) -> Result<Option<CdcEvent>> {
+        self.apply_dml(service, kind, rank)
+    }
+
+    /// Publish one already-resolved CDC event through the source connector
+    /// (keyed produce, commit order). Pairs with [`Pipeline::resolve_dml`]
+    /// so hostile traces can reorder/duplicate events between resolution
+    /// and publication.
+    pub fn publish_event(&self, ev: CdcEvent) {
+        self.source.publish(&self.cdc_topic, ev);
+    }
+
+    /// Initial-load storm: snapshot one service's table and publish every
+    /// `SnapshotRead` event onto the **same** CDC topic the live stream
+    /// uses (the fig-1 race the harness must prove convergent). Returns
+    /// rows published.
+    pub fn publish_snapshot(&self, service: usize) -> usize {
+        let ts = self.now_us();
+        let events = {
+            let land = self.landscape.read().unwrap();
+            self.source.snapshot(
+                &land.tree,
+                &land.dbs[service],
+                0,
+                self.state.current(),
+                ts,
+            )
+        };
+        let n = events.len();
+        for ev in events {
+            self.source.publish(&self.cdc_topic, ev);
+        }
+        n
+    }
+
+    fn apply_dml(
+        &self,
+        service: usize,
+        kind: DmlKind,
+        rank: Option<u64>,
+    ) -> Result<Option<CdcEvent>> {
         let mut land = self.landscape.write().unwrap();
         let state = self.state.current();
         let ts = self.now_us();
@@ -406,8 +457,18 @@ impl Pipeline {
                 Dml::Insert { table: 0, row }
             }
             DmlKind::Update | DmlKind::Delete => {
+                // BTreeMap keys iterate sorted ascending, so rank r is the
+                // r-th oldest live key — a stable hot-key target even as
+                // inserts/deletes churn the tail
                 let keys: Vec<u64> = db.tables[0].keys().collect();
-                match rng.choose(&keys).copied() {
+                let picked = match rank {
+                    Some(r) if !keys.is_empty() => {
+                        Some(keys[(r % keys.len() as u64) as usize])
+                    }
+                    Some(_) => None,
+                    None => rng.choose(&keys).copied(),
+                };
+                match picked {
                     None => {
                         // empty table: degrade to insert
                         let key = self.next_key.next() + 1_000_000;

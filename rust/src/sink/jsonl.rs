@@ -15,7 +15,7 @@ use std::path::PathBuf;
 
 use anyhow::{Context, Result};
 
-use super::{SinkConnector, SinkStats};
+use super::{DeliveryTag, OffsetTracker, SinkConnector, SinkStats};
 use crate::message::cdc::CdcOp;
 use crate::message::OutMessage;
 use crate::util::json::Json;
@@ -40,6 +40,14 @@ pub struct JsonlSink {
     flushed: usize,
     /// Total records ever applied (survives the file-mode buffer drain).
     applied: u64,
+    /// Consumer-side delivery dedupe: an append log is *not* naturally
+    /// idempotent (a replayed record would simply append again), so
+    /// redelivered offsets are recognized by watermark and skipped.
+    delivery: OffsetTracker,
+    /// Delivery tags of the records currently buffered (apply order,
+    /// tagged applies only): a failed flush drops the buffer, so these
+    /// watermark entries are rolled back for clean redelivery.
+    pending_tags: Vec<DeliveryTag>,
 }
 
 impl JsonlSink {
@@ -127,6 +135,20 @@ impl SinkConnector for JsonlSink {
         self.applied += 1;
     }
 
+    /// Delivery-exact append: offsets the watermark has already seen are
+    /// consumer-side redeliveries and never reach the log twice.
+    fn apply_at(&mut self, tag: DeliveryTag, msg: &OutMessage, op: CdcOp) {
+        if self.delivery.is_new(tag) {
+            self.pending_tags.push(tag);
+            self.apply(msg, op);
+        }
+    }
+
+    fn reset_dedupe(&mut self) {
+        self.delivery.reset();
+        self.pending_tags.clear();
+    }
+
     /// Append the buffered records to the configured file, if any.
     ///
     /// On failure the **whole** buffer is dropped and the lifetime count
@@ -140,9 +162,11 @@ impl SinkConnector for JsonlSink {
     fn flush(&mut self) -> Result<()> {
         if self.path.is_none() {
             self.flushed = self.records.len();
+            self.pending_tags.clear();
             return Ok(());
         }
         if self.flushed == self.records.len() {
+            self.pending_tags.clear();
             return Ok(());
         }
         match self.write_tail() {
@@ -151,19 +175,30 @@ impl SinkConnector for JsonlSink {
                 // mode keeps memory bounded by one drain round)
                 self.records.clear();
                 self.flushed = 0;
+                self.pending_tags.clear();
                 Ok(())
             }
             Err(e) => {
                 self.applied -= self.records.len() as u64;
                 self.records.clear();
                 self.flushed = 0;
+                // the dropped records must re-apply when the egress
+                // redelivers them — roll their watermarks back so the
+                // dedupe doesn't swallow the retry
+                for tag in self.pending_tags.drain(..) {
+                    self.delivery.forget(tag);
+                }
                 Err(e)
             }
         }
     }
 
     fn snapshot_stats(&self) -> SinkStats {
-        SinkStats { applied: self.applied, duplicates: 0, dropped: 0 }
+        SinkStats {
+            applied: self.applied,
+            duplicates: self.delivery.duplicates,
+            dropped: 0,
+        }
     }
 
     fn as_any(&self) -> &dyn Any {
@@ -234,6 +269,42 @@ mod tests {
         assert_eq!(lines[0], first_line);
         assert_eq!(sink.len(), 2);
         assert_eq!(sink.snapshot_stats().applied, 2);
+    }
+
+    #[test]
+    fn apply_at_skips_redelivered_offsets() {
+        use crate::sink::DeliveryTag;
+        let mut sink = JsonlSink::new();
+        let t0 = DeliveryTag { partition: 0, offset: 0 };
+        let t1 = DeliveryTag { partition: 0, offset: 1 };
+        sink.apply_at(t0, &out(1, 1.0), CdcOp::Create);
+        sink.apply_at(t1, &out(2, 2.0), CdcOp::Create);
+        sink.flush().unwrap();
+        // crash between flush and commit: both records replay
+        sink.apply_at(t0, &out(1, 1.0), CdcOp::Create);
+        sink.apply_at(t1, &out(2, 2.0), CdcOp::Create);
+        assert_eq!(sink.len(), 2, "append log must not double-append");
+        assert_eq!(sink.snapshot_stats().duplicates, 2);
+    }
+
+    /// A failed flush drops un-durable records AND rolls their offset
+    /// watermarks back — the redelivery must re-apply, not be deduped.
+    #[test]
+    fn failed_flush_rolls_back_dedupe_watermark() {
+        use crate::sink::DeliveryTag;
+        let dir = std::env::temp_dir()
+            .join("metl-jsonl-sink-wm")
+            .join(format!("{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // the "file" is a directory: opening for append fails
+        let mut sink = JsonlSink::new().with_path(&dir);
+        let t0 = DeliveryTag { partition: 0, offset: 0 };
+        sink.apply_at(t0, &out(1, 1.0), CdcOp::Create);
+        assert!(sink.flush().is_err());
+        assert_eq!(sink.len(), 0);
+        // redelivery of the dropped record applies cleanly
+        sink.apply_at(t0, &out(1, 1.0), CdcOp::Create);
+        assert_eq!(sink.len(), 1);
     }
 
     /// At-least-once: a failed flush drops the un-durable tail and rolls

@@ -19,6 +19,16 @@
 //!   with the originating CDC op. Delivery is **at-least-once**: a record
 //!   may be re-applied after a crash between poll and commit, so applies
 //!   must be idempotent (upsert/dedup by key + payload, like [`DwSink`]).
+//! - [`SinkConnector::apply_at`] is the delivery-aware variant the egress
+//!   drain calls: it carries the record's [`DeliveryTag`] (CDM partition +
+//!   offset), letting backends dedupe consumer-side redeliveries exactly
+//!   — an [`OffsetTracker`] watermark per partition absorbs any replay of
+//!   already-applied offsets (the crash-between-flush-and-commit window).
+//!   The default forwards to `apply`, so direct/test callers without
+//!   delivery metadata keep working.
+//! - [`SinkConnector::reset_dedupe`] clears that delivery state; the
+//!   egress calls it on a §3.4 full offset reset so a deliberate
+//!   from-the-beginning replay can rebuild a wiped backend.
 //! - [`SinkConnector::flush`] is called after every drain round; buffered
 //!   backends (files, network batches) persist there.
 //! - [`SinkConnector::snapshot_stats`] is a cheap counters snapshot the
@@ -62,6 +72,59 @@ pub struct SinkStats {
     pub dropped: u64,
 }
 
+/// Broker coordinates of one delivered CDM record: the consumer's
+/// partition index plus the record's offset within it. Offsets are
+/// totally ordered per partition and delivered in order, so a
+/// per-partition high-water mark ([`OffsetTracker`]) recognizes every
+/// at-least-once redelivery exactly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct DeliveryTag {
+    pub partition: u32,
+    pub offset: u64,
+}
+
+/// Per-partition next-expected-offset watermarks: the idempotence state
+/// backends embed to dedupe consumer-side redelivery (a crash between
+/// flush and offset commit re-polls already-applied records with the
+/// *same* tag; producer-side retries arrive as fresh offsets and are
+/// absorbed by payload dedupe instead).
+#[derive(Debug, Default, Clone)]
+pub struct OffsetTracker {
+    watermarks: HashMap<u32, u64>,
+    /// Redeliveries recognized (offset below the partition watermark).
+    pub duplicates: u64,
+}
+
+impl OffsetTracker {
+    /// True iff `tag` has not been applied yet; advances the watermark
+    /// for fresh deliveries and counts replays.
+    pub fn is_new(&mut self, tag: DeliveryTag) -> bool {
+        let next = self.watermarks.entry(tag.partition).or_insert(0);
+        if tag.offset >= *next {
+            *next = tag.offset + 1;
+            true
+        } else {
+            self.duplicates += 1;
+            false
+        }
+    }
+
+    /// Forget everything (deliberate §3.4 full replay: the backend will
+    /// be rebuilt from offset zero).
+    pub fn reset(&mut self) {
+        self.watermarks.clear();
+        self.duplicates = 0;
+    }
+
+    /// Roll the partition watermark back to `tag.offset` (a failed flush
+    /// dropped this un-durable record; its redelivery must re-apply).
+    pub fn forget(&mut self, tag: DeliveryTag) {
+        if let Some(next) = self.watermarks.get_mut(&tag.partition) {
+            *next = (*next).min(tag.offset);
+        }
+    }
+}
+
 /// An egress backend of the CDM stream. Object-safe; see the module docs
 /// for the implementor contract.
 pub trait SinkConnector: Send {
@@ -72,6 +135,22 @@ pub trait SinkConnector: Send {
     /// Apply one mapped CDM record; `op` is the CDC op of the originating
     /// event (deletes tombstone, everything else upserts/observes).
     fn apply(&mut self, msg: &OutMessage, op: CdcOp);
+
+    /// Delivery-aware apply: like [`Self::apply`] but carrying the CDM
+    /// record's broker coordinates, so backends can dedupe at-least-once
+    /// redelivery by `(partition, offset)` watermark. The egress drain
+    /// always calls this; the default ignores the tag and forwards to
+    /// `apply` (for backends that are naturally idempotent or want every
+    /// delivery, like the audit mirror).
+    fn apply_at(&mut self, tag: DeliveryTag, msg: &OutMessage, op: CdcOp) {
+        let _ = tag;
+        self.apply(msg, op);
+    }
+
+    /// Drop all delivery-dedupe state (offset watermarks). Called by the
+    /// egress on a §3.4 full offset reset: the subsequent replay from the
+    /// beginning is deliberate and must re-apply, not be deduplicated.
+    fn reset_dedupe(&mut self) {}
 
     /// Persist buffered state (called after every drain round). The
     /// default is a no-op for purely in-memory backends.
@@ -145,6 +224,8 @@ pub struct DwSink {
     tables: HashMap<(EntityId, CdmVersionNo), DwTable>,
     /// Deletes of rows the DW never held (no-ops, kept for audits).
     pub noop_deletes: u64,
+    /// Consumer-side delivery dedupe (offset watermarks per partition).
+    delivery: OffsetTracker,
 }
 
 impl DwSink {
@@ -177,6 +258,13 @@ impl DwSink {
 
     pub fn total_duplicates(&self) -> u64 {
         self.tables.values().map(|t| t.duplicates).sum()
+    }
+
+    /// Consumer-side redeliveries absorbed by the offset watermark (a
+    /// subset of [`SinkStats::duplicates`], which also counts
+    /// producer-retry payload duplicates).
+    pub fn delivery_duplicates(&self) -> u64 {
+        self.delivery.duplicates
     }
 }
 
@@ -212,10 +300,23 @@ impl SinkConnector for DwSink {
         }
     }
 
+    /// Delivery-exact apply: an offset the watermark has already seen is
+    /// a consumer-side redelivery and is absorbed without touching table
+    /// state (fresh offsets still go through the payload dedupe above).
+    fn apply_at(&mut self, tag: DeliveryTag, msg: &OutMessage, op: CdcOp) {
+        if self.delivery.is_new(tag) {
+            self.apply(msg, op);
+        }
+    }
+
+    fn reset_dedupe(&mut self) {
+        self.delivery.reset();
+    }
+
     fn snapshot_stats(&self) -> SinkStats {
         SinkStats {
             applied: self.total_upserts() + self.total_deletes(),
-            duplicates: self.total_duplicates(),
+            duplicates: self.total_duplicates() + self.delivery.duplicates,
             dropped: self.noop_deletes,
         }
     }
@@ -264,11 +365,21 @@ pub struct MlSink {
     /// Delete tombstones skipped — a deleted row's before-image is not a
     /// training observation and must not move feature means/variances.
     pub deletes_skipped: u64,
+    /// Consumer-side delivery dedupe. Running moments are **not**
+    /// naturally idempotent — re-observing a redelivered record drags
+    /// count/mean/variance — so the ML sink must dedupe exactly, by
+    /// offset watermark.
+    delivery: OffsetTracker,
 }
 
 impl MlSink {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Consumer-side redeliveries absorbed by the offset watermark.
+    pub fn delivery_duplicates(&self) -> u64 {
+        self.delivery.duplicates
     }
 
     /// Fold one upsert payload into the running feature statistics.
@@ -288,6 +399,13 @@ impl MlSink {
 
     pub fn feature(&self, entity: EntityId, attr: CdmAttrId) -> Option<&FeatureStat> {
         self.features.get(&(entity, attr))
+    }
+
+    /// All accumulated features, unordered (conformance audits).
+    pub fn features(
+        &self,
+    ) -> impl Iterator<Item = ((EntityId, CdmAttrId), &FeatureStat)> {
+        self.features.iter().map(|(k, v)| (*k, v))
     }
 
     pub fn n_features(&self) -> usize {
@@ -311,10 +429,22 @@ impl SinkConnector for MlSink {
         self.observe(msg);
     }
 
+    /// Welford moments double-count on redelivery, so the watermark check
+    /// comes first: replayed offsets never reach [`MlSink::observe`].
+    fn apply_at(&mut self, tag: DeliveryTag, msg: &OutMessage, op: CdcOp) {
+        if self.delivery.is_new(tag) {
+            self.apply(msg, op);
+        }
+    }
+
+    fn reset_dedupe(&mut self) {
+        self.delivery.reset();
+    }
+
     fn snapshot_stats(&self) -> SinkStats {
         SinkStats {
             applied: self.observations,
-            duplicates: 0,
+            duplicates: self.delivery.duplicates,
             dropped: self.deletes_skipped,
         }
     }
@@ -425,6 +555,87 @@ mod tests {
         ml.apply(&m, CdcOp::Create);
         assert_eq!(ml.n_features(), 0);
         assert_eq!(ml.observations, 1);
+    }
+
+    fn tag(partition: u32, offset: u64) -> DeliveryTag {
+        DeliveryTag { partition, offset }
+    }
+
+    #[test]
+    fn offset_tracker_recognizes_replays_per_partition() {
+        let mut t = OffsetTracker::default();
+        assert!(t.is_new(tag(0, 0)));
+        assert!(t.is_new(tag(0, 1)));
+        assert!(t.is_new(tag(1, 0))); // partitions are independent
+        assert!(!t.is_new(tag(0, 0))); // rewind replay
+        assert!(!t.is_new(tag(0, 1)));
+        assert_eq!(t.duplicates, 2);
+        t.forget(tag(0, 1));
+        assert!(!t.is_new(tag(0, 0)), "offset 0 is still durable");
+        assert!(t.is_new(tag(0, 1)), "forgotten offset re-applies");
+        t.reset();
+        assert!(t.is_new(tag(0, 0)));
+        assert_eq!(t.duplicates, 0);
+    }
+
+    /// The satellite regression in miniature: a crash between flush and
+    /// commit replays the same (partition, offset) records; the ML
+    /// moments must not move.
+    #[test]
+    fn ml_sink_dedupes_offset_replay_exactly() {
+        let mut ml = MlSink::new();
+        for (i, v) in [1.0, 2.0, 3.0].iter().enumerate() {
+            ml.apply_at(tag(0, i as u64), &out(1, *v), CdcOp::Create);
+        }
+        let before = ml.feature(EntityId(0), CdmAttrId(0)).unwrap().clone();
+        // redeliver the whole uncommitted batch
+        for (i, v) in [1.0, 2.0, 3.0].iter().enumerate() {
+            ml.apply_at(tag(0, i as u64), &out(1, *v), CdcOp::Create);
+        }
+        let after = ml.feature(EntityId(0), CdmAttrId(0)).unwrap();
+        assert_eq!(after.count, before.count);
+        assert!((after.mean() - before.mean()).abs() < 1e-12);
+        assert!((after.variance() - before.variance()).abs() < 1e-12);
+        assert_eq!(ml.observations, 3);
+        assert_eq!(ml.delivery_duplicates(), 3);
+        assert_eq!(
+            ml.snapshot_stats(),
+            SinkStats { applied: 3, duplicates: 3, dropped: 0 }
+        );
+    }
+
+    #[test]
+    fn dw_sink_offset_dedupe_composes_with_payload_dedupe() {
+        let mut dw = DwSink::new();
+        dw.apply_at(tag(0, 0), &out(1, 10.0), CdcOp::Create);
+        // producer retry: same payload at a fresh offset → payload dedupe
+        dw.apply_at(tag(0, 1), &out(1, 10.0), CdcOp::Create);
+        // consumer replay: same offset → watermark dedupe, state untouched
+        dw.apply_at(tag(0, 0), &out(1, 10.0), CdcOp::Create);
+        let t = dw.table(EntityId(0), CdmVersionNo(1)).unwrap();
+        assert_eq!(t.upserts, 1);
+        assert_eq!(t.duplicates, 1);
+        assert_eq!(dw.delivery_duplicates(), 1);
+        assert_eq!(dw.snapshot_stats().duplicates, 2);
+        assert_eq!(dw.total_rows(), 1);
+        // a replayed *stale* payload must not overwrite newer state
+        dw.apply_at(tag(0, 2), &out(1, 11.0), CdcOp::Update);
+        dw.apply_at(tag(0, 0), &out(1, 10.0), CdcOp::Create);
+        let t = dw.table(EntityId(0), CdmVersionNo(1)).unwrap();
+        assert_eq!(t.row(1).unwrap()[0].1.as_f64(), Some(11.0));
+    }
+
+    #[test]
+    fn reset_dedupe_lets_full_replay_rebuild() {
+        let mut dw = DwSink::new();
+        dw.apply_at(tag(0, 0), &out(1, 10.0), CdcOp::Create);
+        // §3.4 full replay of a deliberately wiped backend
+        dw.reset_dedupe();
+        dw.apply_at(tag(0, 0), &out(1, 10.0), CdcOp::Create);
+        assert_eq!(dw.delivery_duplicates(), 0);
+        // the payload dedupe still recognizes the unchanged row
+        assert_eq!(dw.total_duplicates(), 1);
+        assert_eq!(dw.total_rows(), 1);
     }
 
     #[test]

@@ -110,6 +110,49 @@ impl Rng {
     }
 }
 
+/// Precomputed Zipfian sampler over ranks `0..n` with exponent `s`:
+/// rank r is drawn with probability proportional to `1/(r+1)^s` — the
+/// hot-key/hot-schema skew of real CDC traffic (a handful of entities
+/// take most of the writes). Exact inverse-CDF over the precomputed
+/// cumulative weights, so sampling is O(log n) and fully deterministic
+/// under a seeded [`Rng`].
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    /// Build the sampler for `n` ranks (`n >= 1`) and exponent `s > 0`.
+    pub fn new(n: usize, s: f64) -> Self {
+        let n = n.max(1);
+        let mut cdf = Vec::with_capacity(n);
+        let mut total = 0.0;
+        for r in 0..n {
+            total += 1.0 / ((r + 1) as f64).powf(s);
+            cdf.push(total);
+        }
+        for w in &mut cdf {
+            *w /= total;
+        }
+        Zipf { cdf }
+    }
+
+    /// Number of ranks in the universe.
+    pub fn n(&self) -> usize {
+        self.cdf.len()
+    }
+
+    /// Draw one rank in `[0, n)`; rank 0 is the hottest.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64();
+        // first rank whose cumulative weight exceeds u
+        match self.cdf.binary_search_by(|w| w.partial_cmp(&u).unwrap()) {
+            Ok(i) => (i + 1).min(self.cdf.len() - 1),
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -178,5 +221,35 @@ mod tests {
         d.sort();
         d.dedup();
         assert_eq!(d.len(), 10);
+    }
+
+    #[test]
+    fn zipf_is_skewed_toward_rank_zero() {
+        let zipf = Zipf::new(16, 1.1);
+        let mut rng = Rng::seed_from(21);
+        let mut counts = [0u64; 16];
+        for _ in 0..50_000 {
+            counts[zipf.sample(&mut rng)] += 1;
+        }
+        // the head dominates and frequencies decay monotonically-ish
+        assert!(counts[0] > counts[1]);
+        assert!(counts[0] > 4 * counts[8], "head {counts:?}");
+        assert_eq!(counts.iter().sum::<u64>(), 50_000);
+    }
+
+    #[test]
+    fn zipf_stays_in_range_and_is_deterministic() {
+        let zipf = Zipf::new(5, 1.3);
+        let mut a = Rng::seed_from(7);
+        let mut b = Rng::seed_from(7);
+        for _ in 0..10_000 {
+            let ra = zipf.sample(&mut a);
+            assert!(ra < 5);
+            assert_eq!(ra, zipf.sample(&mut b));
+        }
+        // degenerate universes stay safe
+        let one = Zipf::new(1, 1.0);
+        assert_eq!(one.sample(&mut a), 0);
+        assert_eq!(Zipf::new(0, 1.0).n(), 1);
     }
 }

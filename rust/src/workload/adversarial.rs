@@ -1,0 +1,468 @@
+//! Adversarial workload engine: composable hostile [`Scenario`]s layered
+//! over the polite day trace — the "make the generator mean" ROADMAP
+//! item. Each scenario stresses one production pathology the paper's EOS
+//! deployment lives with: Zipfian hot-key/hot-schema skew, burst/drain
+//! cycles, late/out-of-order CDC (bounded reordering), duplicate
+//! delivery (the broker is at-least-once), an initial-load storm racing
+//! live CDC on the same topic, and schema changes landing mid-burst on
+//! the hottest schema.
+//!
+//! Everything is driven by one seeded [`Rng`], so a `(seed, scenario)`
+//! pair replays byte-identically — the golden-fixture test in
+//! `tests/adversarial_scenarios.rs` pins one such trace. The
+//! [`super::scenario::ScenarioRunner`] resolves [`HostileOp`]s against a
+//! live pipeline, applies the [`shuffle_bounded`]/[`duplicate_delivery`]
+//! transforms between resolution and publication, and checks the
+//! conformance invariants.
+
+use std::collections::HashMap;
+use std::fmt;
+
+use crate::config::PipelineConfig;
+use crate::util::rng::{Rng, Zipf};
+use crate::workload::DmlKind;
+
+/// Zipfian universe of hot-key ranks (rank 0 = oldest live key).
+const KEY_RANKS: usize = 64;
+/// Skew exponent over services (hot-schema concentration).
+const SVC_EXPONENT: f64 = 1.2;
+/// Skew exponent over key ranks (hot-key concentration).
+const KEY_EXPONENT: f64 = 1.1;
+
+/// One hostile workload shape. `Uniform` is the polite baseline the
+/// bench compares against; the other six are the adversaries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scenario {
+    /// Uniform service/key selection, steady cadence — the control.
+    Uniform,
+    /// Zipfian hot-key + hot-schema skew: a handful of services and the
+    /// oldest few keys absorb most of the writes.
+    Zipf,
+    /// Burst/drain cycles: long flushless bursts alternating with
+    /// one-op-per-flush quiet stretches.
+    Burst,
+    /// Late/out-of-order delivery: each flushed batch is reordered within
+    /// a bounded displacement window (per-key order preserved — Kafka's
+    /// actual guarantee).
+    Shuffle,
+    /// At-least-once duplicate delivery: producer-retry re-publishes land
+    /// adjacent to their originals on the CDC topic.
+    Duplicate,
+    /// Initial-load storm: a full table snapshot is published onto the
+    /// same topic the live stream uses, racing in-flight CDC.
+    LoadStorm,
+    /// Schema changes arrive mid-burst on the hottest schema while its
+    /// old-version events are still in flight.
+    HotSchemaChange,
+}
+
+impl Scenario {
+    /// Every scenario, baseline first.
+    pub const ALL: [Scenario; 7] = [
+        Scenario::Uniform,
+        Scenario::Zipf,
+        Scenario::Burst,
+        Scenario::Shuffle,
+        Scenario::Duplicate,
+        Scenario::LoadStorm,
+        Scenario::HotSchemaChange,
+    ];
+
+    /// The six adversaries (everything but the uniform control).
+    pub const HOSTILE: [Scenario; 6] = [
+        Scenario::Zipf,
+        Scenario::Burst,
+        Scenario::Shuffle,
+        Scenario::Duplicate,
+        Scenario::LoadStorm,
+        Scenario::HotSchemaChange,
+    ];
+
+    /// Stable CLI/bench name (the `--scenario` axis).
+    pub fn name(self) -> &'static str {
+        match self {
+            Scenario::Uniform => "uniform",
+            Scenario::Zipf => "zipf",
+            Scenario::Burst => "burst",
+            Scenario::Shuffle => "shuffle",
+            Scenario::Duplicate => "duplicate",
+            Scenario::LoadStorm => "load-storm",
+            Scenario::HotSchemaChange => "hot-schema-change",
+        }
+    }
+
+    /// Parse a `--scenario` value.
+    pub fn from_name(name: &str) -> Option<Scenario> {
+        Scenario::ALL.iter().copied().find(|s| s.name() == name)
+    }
+
+    /// The delivery-transform knobs the runner applies per flushed batch.
+    pub fn params(self) -> ScenarioParams {
+        ScenarioParams {
+            shuffle_bound: match self {
+                Scenario::Shuffle => 32,
+                _ => 0,
+            },
+            duplicate_p: match self {
+                Scenario::Duplicate => 0.15,
+                _ => 0.0,
+            },
+        }
+    }
+}
+
+impl fmt::Display for Scenario {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Per-batch delivery-transform knobs (see [`Scenario::params`]).
+#[derive(Debug, Clone, Copy)]
+pub struct ScenarioParams {
+    /// Max positions any event may be displaced by [`shuffle_bounded`].
+    pub shuffle_bound: usize,
+    /// Probability an event is re-published by [`duplicate_delivery`].
+    pub duplicate_p: f64,
+}
+
+/// One step of a hostile trace. Unlike [`super::TraceOp`], DMLs carry an
+/// optional hot-key rank and explicit `Drain` steps mark the batch
+/// boundaries where the runner applies the delivery transforms, publishes
+/// and dispatches.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum HostileOp {
+    /// A DML intent; `rank` targets the rank-th oldest live key (Zipfian
+    /// hot-key skew), `None` picks uniformly.
+    Dml { service: usize, kind: DmlKind, rank: Option<u64> },
+    /// Evolve the service's schema (mid-burst when no `Drain` precedes).
+    SchemaChange { service: usize },
+    /// Snapshot the service's table onto the live CDC topic (initial-load
+    /// storm racing the buffered stream).
+    SnapshotStorm { service: usize },
+    /// Flush boundary: transform, publish and dispatch the buffer.
+    Drain,
+}
+
+fn roll_kind(rng: &mut Rng) -> DmlKind {
+    let roll = rng.f64();
+    if roll < 0.70 {
+        DmlKind::Insert
+    } else if roll < 0.95 {
+        DmlKind::Update
+    } else {
+        DmlKind::Delete
+    }
+}
+
+/// Generate the hostile trace for `(cfg, scenario)` — fully determined by
+/// the caller's `rng` seed. `cfg.trace_events` DML intents with the day
+/// trace's 70/25/5 mix; the scenario shapes cadence, skew and the storm /
+/// schema-change placement.
+pub fn hostile_trace(
+    cfg: &PipelineConfig,
+    scenario: Scenario,
+    rng: &mut Rng,
+) -> Vec<HostileOp> {
+    let n = cfg.trace_events;
+    // hottest-first service permutation: which schema is hot is itself
+    // seed-dependent, so scenarios don't all hammer service 0
+    let mut order: Vec<usize> = (0..cfg.n_services).collect();
+    rng.shuffle(&mut order);
+    let svc_zipf = Zipf::new(order.len(), SVC_EXPONENT);
+    let key_zipf = Zipf::new(KEY_RANKS, KEY_EXPONENT);
+    let skewed =
+        matches!(scenario, Scenario::Zipf | Scenario::HotSchemaChange);
+    let mut dml = |rng: &mut Rng| -> HostileOp {
+        let service = if skewed {
+            order[svc_zipf.sample(rng)]
+        } else {
+            order[rng.gen_range(order.len() as u64) as usize]
+        };
+        let kind = roll_kind(rng);
+        let rank = if skewed && kind != DmlKind::Insert {
+            Some(key_zipf.sample(rng) as u64)
+        } else {
+            None
+        };
+        HostileOp::Dml { service, kind, rank }
+    };
+    let mut ops: Vec<HostileOp> = Vec::with_capacity(n + n / 8 + 4);
+    match scenario {
+        Scenario::Uniform
+        | Scenario::Zipf
+        | Scenario::Shuffle
+        | Scenario::Duplicate => {
+            let flush_every = match scenario {
+                Scenario::Shuffle => 32,
+                Scenario::Duplicate => 24,
+                _ => 16,
+            };
+            for i in 0..n {
+                ops.push(dml(rng));
+                if (i + 1) % flush_every == 0 {
+                    ops.push(HostileOp::Drain);
+                }
+            }
+        }
+        Scenario::Burst => {
+            // 48-op flushless bursts alternating with per-op-flushed
+            // quiet stretches — the backlog saw-tooth
+            let mut i = 0;
+            while i < n {
+                let burst = 48.min(n - i);
+                for _ in 0..burst {
+                    ops.push(dml(rng));
+                }
+                ops.push(HostileOp::Drain);
+                i += burst;
+                let quiet = 8.min(n - i);
+                for _ in 0..quiet {
+                    ops.push(dml(rng));
+                    ops.push(HostileOp::Drain);
+                }
+                i += quiet;
+            }
+        }
+        Scenario::LoadStorm => {
+            // the hottest service's full table snapshots onto the live
+            // topic twice, racing whatever the buffer holds
+            let storm_at = [n / 4, n / 2];
+            for i in 0..n {
+                if storm_at.contains(&i) {
+                    ops.push(HostileOp::SnapshotStorm { service: order[0] });
+                }
+                ops.push(dml(rng));
+                if (i + 1) % 16 == 0 {
+                    ops.push(HostileOp::Drain);
+                }
+            }
+        }
+        Scenario::HotSchemaChange => {
+            // 40-op bursts; each change lands at offset 20 into a burst —
+            // never on a drain boundary — on the hottest schema
+            let changes = cfg.schema_changes.max(1);
+            let stride = n.max(1) / (changes + 1);
+            let mut change_at: Vec<usize> = (1..=changes)
+                .map(|c| ((c * stride) / 40) * 40 + 20)
+                .filter(|&at| at < n)
+                .collect();
+            change_at.dedup();
+            for i in 0..n {
+                if change_at.contains(&i) {
+                    ops.push(HostileOp::SchemaChange { service: order[0] });
+                }
+                ops.push(dml(rng));
+                if (i + 1) % 40 == 0 {
+                    ops.push(HostileOp::Drain);
+                }
+            }
+        }
+    }
+    ops.push(HostileOp::Drain);
+    ops
+}
+
+/// Bounded out-of-order shuffle: every item lands within `bound`
+/// positions of where it started, and items sharing a key keep their
+/// relative order (exactly Kafka's guarantee — cross-key reordering only).
+///
+/// Construction: item `i` gets rank `i + U[0, bound]`; a stable sort by
+/// rank displaces nothing by more than `bound`. Per-key order is then
+/// restored by reassigning each key's original indices, ascending, to
+/// that key's output positions, ascending — a sorted matching, which
+/// never increases any item's displacement beyond the bound (swapping two
+/// out-of-order assignments moves both items strictly inward).
+pub fn shuffle_bounded<T: Clone>(
+    items: &[T],
+    key_of: impl Fn(&T) -> u64,
+    bound: usize,
+    rng: &mut Rng,
+) -> Vec<T> {
+    if bound == 0 || items.len() < 2 {
+        return items.to_vec();
+    }
+    let mut ranked: Vec<(usize, usize)> = items
+        .iter()
+        .enumerate()
+        .map(|(i, _)| (i + rng.gen_range(bound as u64 + 1) as usize, i))
+        .collect();
+    ranked.sort_by_key(|&(rank, i)| (rank, i));
+    let mut slots: Vec<usize> = ranked.into_iter().map(|(_, i)| i).collect();
+    // per-key restoration (groups are independent, so HashMap iteration
+    // order cannot change the result)
+    let mut positions_of: HashMap<u64, Vec<usize>> = HashMap::new();
+    for (pos, &orig) in slots.iter().enumerate() {
+        positions_of.entry(key_of(&items[orig])).or_default().push(pos);
+    }
+    for positions in positions_of.values() {
+        let mut origs: Vec<usize> =
+            positions.iter().map(|&p| slots[p]).collect();
+        origs.sort_unstable();
+        for (&pos, orig) in positions.iter().zip(origs) {
+            slots[pos] = orig;
+        }
+    }
+    slots.into_iter().map(|i| items[i].clone()).collect()
+}
+
+/// Producer-retry duplicate delivery: each item is re-published adjacent
+/// to its original with probability `p` (a retried produce lands right
+/// after the record it duplicates). Returns the expanded batch and the
+/// number of duplicates injected.
+pub fn duplicate_delivery<T: Clone>(
+    items: &[T],
+    p: f64,
+    rng: &mut Rng,
+) -> (Vec<T>, usize) {
+    let mut out = Vec::with_capacity(items.len() + items.len() / 4);
+    let mut dups = 0;
+    for item in items {
+        out.push(item.clone());
+        if rng.chance(p) {
+            out.push(item.clone());
+            dups += 1;
+        }
+    }
+    (out, dups)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dml_count(ops: &[HostileOp]) -> usize {
+        ops.iter().filter(|o| matches!(o, HostileOp::Dml { .. })).count()
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for s in Scenario::ALL {
+            assert_eq!(Scenario::from_name(s.name()), Some(s));
+            assert_eq!(format!("{s}"), s.name());
+        }
+        assert_eq!(Scenario::from_name("nope"), None);
+        assert!(!Scenario::HOSTILE.contains(&Scenario::Uniform));
+    }
+
+    #[test]
+    fn traces_are_deterministic_and_complete() {
+        let cfg = PipelineConfig::small();
+        for s in Scenario::ALL {
+            let a = hostile_trace(&cfg, s, &mut Rng::seed_from(9));
+            let b = hostile_trace(&cfg, s, &mut Rng::seed_from(9));
+            assert_eq!(a, b, "{s}");
+            assert_eq!(dml_count(&a), cfg.trace_events, "{s}");
+            assert_eq!(a.last(), Some(&HostileOp::Drain), "{s}");
+        }
+    }
+
+    #[test]
+    fn zipf_trace_concentrates_on_hot_service() {
+        let mut cfg = PipelineConfig::small();
+        cfg.trace_events = 1000;
+        let ops = hostile_trace(&cfg, Scenario::Zipf, &mut Rng::seed_from(3));
+        let mut counts = vec![0usize; cfg.n_services];
+        for op in &ops {
+            if let HostileOp::Dml { service, .. } = op {
+                counts[*service] += 1;
+            }
+        }
+        let max = *counts.iter().max().unwrap();
+        assert!(
+            max * 2 > cfg.trace_events,
+            "hot service should take most writes: {counts:?}"
+        );
+        // hot-key ranks ride along on updates/deletes
+        assert!(ops.iter().any(
+            |o| matches!(o, HostileOp::Dml { rank: Some(_), .. })
+        ));
+    }
+
+    #[test]
+    fn hot_schema_change_lands_mid_burst() {
+        let mut cfg = PipelineConfig::small();
+        cfg.trace_events = 240;
+        let ops = hostile_trace(
+            &cfg,
+            Scenario::HotSchemaChange,
+            &mut Rng::seed_from(5),
+        );
+        let at: Vec<usize> = ops
+            .iter()
+            .enumerate()
+            .filter(|(_, o)| matches!(o, HostileOp::SchemaChange { .. }))
+            .map(|(i, _)| i)
+            .collect();
+        assert!(!at.is_empty());
+        for i in at {
+            assert!(ops[i - 1] != HostileOp::Drain, "change on a boundary");
+            assert!(ops[i + 1] != HostileOp::Drain, "change on a boundary");
+        }
+    }
+
+    #[test]
+    fn load_storm_includes_snapshots() {
+        let cfg = PipelineConfig::small();
+        let ops =
+            hostile_trace(&cfg, Scenario::LoadStorm, &mut Rng::seed_from(7));
+        let storms = ops
+            .iter()
+            .filter(|o| matches!(o, HostileOp::SnapshotStorm { .. }))
+            .count();
+        assert_eq!(storms, 2);
+    }
+
+    #[test]
+    fn shuffle_bounded_respects_bound_and_key_order() {
+        let items: Vec<(u64, usize)> =
+            (0..200).map(|i| (i as u64 % 7, i)).collect();
+        let mut rng = Rng::seed_from(11);
+        let out = shuffle_bounded(&items, |it| it.0, 9, &mut rng);
+        // multiset preserved
+        let mut a = items.clone();
+        let mut b = out.clone();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+        // displacement bound
+        for (pos, it) in out.iter().enumerate() {
+            assert!(
+                pos.abs_diff(it.1) <= 9,
+                "item {it:?} displaced to {pos}"
+            );
+        }
+        // per-key relative order preserved
+        for k in 0..7u64 {
+            let seq: Vec<usize> =
+                out.iter().filter(|it| it.0 == k).map(|it| it.1).collect();
+            assert!(seq.windows(2).all(|w| w[0] < w[1]), "key {k}: {seq:?}");
+        }
+        // and it actually reorders something
+        assert_ne!(out, items);
+    }
+
+    #[test]
+    fn shuffle_bound_zero_is_identity() {
+        let items: Vec<(u64, usize)> = (0..20).map(|i| (i as u64, i)).collect();
+        let out = shuffle_bounded(&items, |it| it.0, 0, &mut Rng::seed_from(1));
+        assert_eq!(out, items);
+    }
+
+    #[test]
+    fn duplicate_delivery_is_adjacent() {
+        let items: Vec<usize> = (0..500).collect();
+        let (out, dups) =
+            duplicate_delivery(&items, 0.2, &mut Rng::seed_from(13));
+        assert_eq!(out.len(), items.len() + dups);
+        assert!(dups > 50, "p=0.2 over 500 should inject plenty: {dups}");
+        // every duplicate sits right after its original
+        let mut seen = 0;
+        for (i, v) in out.iter().enumerate() {
+            if i > 0 && out[i - 1] == *v {
+                seen += 1;
+            }
+        }
+        assert_eq!(seen, dups);
+    }
+}

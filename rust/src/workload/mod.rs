@@ -9,6 +9,15 @@
 //! evolved field list ([`evolved_fields`]) is published as a
 //! registry-style change event and applied with one epoch swap while
 //! mapping continues.
+//!
+//! The polite day trace is only half the story: [`adversarial`] layers
+//! hostile [`adversarial::Scenario`]s over it (Zipfian skew, burst/drain,
+//! bounded reordering, duplicate delivery, initial-load storms,
+//! mid-burst schema changes) and [`scenario`] runs them through the full
+//! pipeline with conformance invariants.
+
+pub mod adversarial;
+pub mod scenario;
 
 use crate::cdm::{CdmType, CdmTree};
 use crate::config::PipelineConfig;

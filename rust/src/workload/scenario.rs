@@ -1,0 +1,452 @@
+//! Scenario conformance runner: drives one hostile
+//! [`Scenario`](super::adversarial::Scenario) through the full pipeline
+//! (sharded mapping lane + per-sink egress groups) and checks the
+//! invariant trio every adversary must preserve:
+//!
+//! 1. **Restart equivalence** — a cold pipeline built with the final
+//!    schema that replays the recorded CDC topic verbatim converges to
+//!    the same sink state ([`verify_restart_equivalence`]).
+//! 2. **Zero silent drops** — every produced record is mapped,
+//!    dead-lettered or deduped, and the counters prove it
+//!    ([`check_accounting`]).
+//! 3. **At-least-once dedupe** — the runner crashes every egress lane
+//!    between flush and commit ([`crate::coordinator::egress::SinkHandle::
+//!    drain_crash_before_commit`]) and redelivers; backends must absorb
+//!    the replay exactly.
+//!
+//! The runner buffers resolved CDC events and applies the scenario's
+//! delivery transforms ([`super::adversarial::shuffle_bounded`],
+//! [`super::adversarial::duplicate_delivery`]) at each flush boundary —
+//! hostile *delivery*, not hostile data. One seeded [`Rng`] drives trace
+//! generation and transforms, so `(seed, scenario)` replays
+//! byte-identically.
+
+use std::collections::HashMap;
+
+use anyhow::{ensure, Result};
+
+use super::adversarial::{
+    duplicate_delivery, hostile_trace, shuffle_bounded, HostileOp, Scenario,
+};
+use crate::config::PipelineConfig;
+use crate::coordinator::pipeline::Pipeline;
+use crate::coordinator::shard::{run_sharded_session, ShardReport};
+use crate::message::cdc::CdcEvent;
+use crate::sink::{DwSink, JsonlSink, MlSink};
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+/// Relative tolerance for cross-run ML moment comparison: the multiset
+/// of observations is identical but cross-key Welford accumulation order
+/// differs between a sharded live run and a sequential replay.
+const ML_REL_TOL: f64 = 1e-6;
+
+/// Drives one `(cfg, scenario, seed, shards)` combination; see the
+/// module docs for what it asserts.
+pub struct ScenarioRunner {
+    pub cfg: PipelineConfig,
+    pub scenario: Scenario,
+    /// Seeds the trace + delivery-transform [`Rng`] (independent of the
+    /// landscape seed in `cfg.seed`).
+    pub seed: u64,
+    pub shards: usize,
+    /// Crash every egress lane between flush and commit after the
+    /// session, then redeliver — doubling deliveries so the sinks'
+    /// offset-watermark dedupe is exercised on every run.
+    pub exercise_redelivery: bool,
+}
+
+/// What one scenario run produced (inputs to the conformance checks).
+#[derive(Debug)]
+pub struct ScenarioOutcome {
+    pub scenario: Scenario,
+    pub events_in: u64,
+    pub out_messages: u64,
+    pub dead_letters: u64,
+    /// Records on the CDC topic (= events the pipeline must account for).
+    pub published: u64,
+    /// Producer-retry duplicates the delivery transform injected.
+    pub duplicates_published: usize,
+    /// Initial-load rows the snapshot storms published.
+    pub snapshot_rows: usize,
+    /// Services whose schema evolved, in application order — the cold
+    /// replay applies the same log upfront.
+    pub schema_change_log: Vec<usize>,
+    /// Records applied (but never committed) by the crash exercise.
+    pub crash_deliveries: usize,
+    pub report: ShardReport,
+}
+
+impl ScenarioRunner {
+    pub fn new(cfg: PipelineConfig, scenario: Scenario) -> Self {
+        let seed = cfg.seed ^ 0xAD5E;
+        Self { cfg, scenario, seed, shards: 1, exercise_redelivery: true }
+    }
+
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.shards = shards;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Build a pipeline, run the scenario, drain the sinks. The returned
+    /// pipeline holds the final state for inspection / verification.
+    pub fn run(&self) -> Result<(Pipeline, ScenarioOutcome)> {
+        let pipeline = Pipeline::new(self.cfg.clone())?;
+        let outcome = self.drive(&pipeline)?;
+        Ok((pipeline, outcome))
+    }
+
+    /// Run plus the full invariant trio; the conformance-suite entry.
+    pub fn run_and_verify(&self) -> Result<ScenarioOutcome> {
+        let (pipeline, outcome) = self.run()?;
+        check_accounting(&pipeline, &outcome)?;
+        verify_restart_equivalence(&pipeline, &outcome, &self.cfg)?;
+        Ok(outcome)
+    }
+
+    /// Drive the hostile trace against a live shard pool: resolve DMLs
+    /// into a buffer; at each flush boundary shuffle within the bound,
+    /// inject producer-retry duplicates, publish, dispatch. Schema
+    /// changes flush first (their burst is already racing the workers),
+    /// snapshot storms publish past the buffer so the initial load races
+    /// buffered live CDC.
+    fn drive(&self, pipeline: &Pipeline) -> Result<ScenarioOutcome> {
+        let mut rng = Rng::seed_from(self.seed);
+        let ops = hostile_trace(&self.cfg, self.scenario, &mut rng);
+        let params = self.scenario.params();
+        let mut buffer: Vec<CdcEvent> = Vec::new();
+        let mut duplicates_published = 0usize;
+        let mut snapshot_rows = 0usize;
+        let mut schema_change_log: Vec<usize> = Vec::new();
+        let (report, driven) = run_sharded_session(
+            pipeline,
+            self.shards,
+            |dispatch| -> Result<()> {
+                let mut flush = |buffer: &mut Vec<CdcEvent>,
+                                 rng: &mut Rng,
+                                 dispatch: &mut dyn FnMut()| {
+                    if buffer.is_empty() {
+                        dispatch();
+                        return;
+                    }
+                    let batch = shuffle_bounded(
+                        buffer,
+                        |ev| {
+                            ev.mapping_payload().map(|m| m.key).unwrap_or(0)
+                        },
+                        params.shuffle_bound,
+                        rng,
+                    );
+                    let (batch, dups) =
+                        duplicate_delivery(&batch, params.duplicate_p, rng);
+                    duplicates_published += dups;
+                    buffer.clear();
+                    for ev in batch {
+                        pipeline.publish_event(ev);
+                    }
+                    dispatch();
+                };
+                for op in &ops {
+                    match op {
+                        HostileOp::Dml { service, kind, rank } => {
+                            if let Some(ev) =
+                                pipeline.resolve_dml(*service, *kind, *rank)?
+                            {
+                                buffer.push(ev);
+                            }
+                        }
+                        HostileOp::SchemaChange { service } => {
+                            flush(&mut buffer, &mut rng, dispatch);
+                            pipeline.apply_schema_change(*service)?;
+                            schema_change_log.push(*service);
+                        }
+                        HostileOp::SnapshotStorm { service } => {
+                            snapshot_rows +=
+                                pipeline.publish_snapshot(*service);
+                        }
+                        HostileOp::Drain => {
+                            flush(&mut buffer, &mut rng, dispatch)
+                        }
+                    }
+                }
+                flush(&mut buffer, &mut rng, dispatch);
+                Ok(())
+            },
+        );
+        driven?;
+        let crash_deliveries = if self.exercise_redelivery {
+            pipeline
+                .sinks
+                .iter()
+                .map(|handle| handle.drain_crash_before_commit())
+                .sum()
+        } else {
+            0
+        };
+        pipeline.drain_sinks();
+        Ok(ScenarioOutcome {
+            scenario: self.scenario,
+            events_in: pipeline.metrics.events_in.get(),
+            out_messages: pipeline.metrics.messages_out.get(),
+            dead_letters: pipeline.metrics.dead_letters.get(),
+            published: pipeline.cdc_topic.total_records(),
+            duplicates_published,
+            snapshot_rows,
+            schema_change_log,
+            crash_deliveries,
+            report,
+        })
+    }
+}
+
+/// Invariant 2 + 3: zero silent drops and exact at-least-once dedupe,
+/// proven by counter conservation. Every CDC record is consumed and
+/// either transformed or dead-lettered; every CDM delivery to every sink
+/// is applied, deduped or intentionally dropped — nothing vanishes
+/// uncounted.
+pub fn check_accounting(
+    pipeline: &Pipeline,
+    outcome: &ScenarioOutcome,
+) -> Result<()> {
+    let s = outcome.scenario;
+    ensure!(
+        outcome.events_in == outcome.published,
+        "{s}: {} of {} published CDC records consumed",
+        outcome.events_in,
+        outcome.published
+    );
+    let transformed = pipeline.metrics.transformations.get();
+    ensure!(
+        transformed + outcome.dead_letters == outcome.events_in,
+        "{s}: {} transformed + {} dead-lettered != {} in",
+        transformed,
+        outcome.dead_letters,
+        outcome.events_in
+    );
+    ensure!(
+        outcome.dead_letters == pipeline.dlq.len() as u64,
+        "{s}: dead-letter counter diverged from DLQ contents"
+    );
+    let cdm_total = pipeline.out_topic.total_records();
+    for handle in &pipeline.sinks {
+        let stats = handle.stats();
+        // the crash exercise delivered every CDM record twice
+        let deliveries =
+            if outcome.crash_deliveries > 0 { 2 * cdm_total } else { cdm_total };
+        ensure!(
+            stats.applied + stats.duplicates + stats.dropped == deliveries,
+            "{s}/{}: applied {} + duplicates {} + dropped {} != {} delivered",
+            handle.name(),
+            stats.applied,
+            stats.duplicates,
+            stats.dropped,
+            deliveries
+        );
+        ensure!(
+            handle.lag() == 0,
+            "{s}/{}: egress lag {} after final drain",
+            handle.name(),
+            handle.lag()
+        );
+    }
+    Ok(())
+}
+
+/// Invariant 1: cold-restart equivalence. A fresh pipeline (same config
+/// ⇒ same generated landscape) applies the recorded schema-change log
+/// upfront — the "restart with the final schema" — then replays the live
+/// run's CDC topic **verbatim** (duplicates, reorderings and storms
+/// included) and drains once. DW state must match exactly; ML moments up
+/// to accumulation-order rounding; the JSONL log per key up to the state
+/// stamp (cold maps everything at the final state, live restamped along
+/// the way).
+pub fn verify_restart_equivalence(
+    live: &Pipeline,
+    outcome: &ScenarioOutcome,
+    cfg: &PipelineConfig,
+) -> Result<()> {
+    let s = outcome.scenario;
+    let cold = Pipeline::new(cfg.clone())?;
+    for &service in &outcome.schema_change_log {
+        cold.apply_schema_change(service)?;
+    }
+    for partition in 0..live.cdc_topic.n_partitions() {
+        for rec in live.cdc_topic.fetch(partition, 0, usize::MAX) {
+            cold.process_event(&rec.value);
+        }
+    }
+    cold.drain_sinks();
+    ensure!(
+        cold.metrics.dead_letters.get() == outcome.dead_letters,
+        "{s}: cold replay dead-lettered {} vs live {}",
+        cold.metrics.dead_letters.get(),
+        outcome.dead_letters
+    );
+    if live.sink("dw").is_some() {
+        ensure!(
+            dw_dump(live) == dw_dump(&cold),
+            "{s}: DW state diverged between live run and cold replay"
+        );
+    }
+    if live.sink("ml").is_some() {
+        compare_ml(live, &cold, s)?;
+    }
+    if live.sink("jsonl").is_some() {
+        ensure!(
+            jsonl_by_key(live) == jsonl_by_key(&cold),
+            "{s}: JSONL per-key streams diverged"
+        );
+    }
+    Ok(())
+}
+
+/// Canonical DW dump: every materialized row as a sorted line.
+pub fn dw_dump(pipeline: &Pipeline) -> Vec<String> {
+    pipeline
+        .with_sink("dw", |dw: &DwSink| {
+            let mut rows: Vec<String> = dw
+                .tables()
+                .flat_map(|((entity, w), table)| {
+                    table.rows().map(move |(key, fields)| {
+                        let mut fields: Vec<String> = fields
+                            .iter()
+                            .map(|(attr, v)| format!("{}={}", attr.0, v.to_string()))
+                            .collect();
+                        fields.sort();
+                        format!(
+                            "e{}w{}k{key}:{}",
+                            entity.0,
+                            w.0,
+                            fields.join(",")
+                        )
+                    })
+                })
+                .collect();
+            rows.sort();
+            rows
+        })
+        .unwrap_or_default()
+}
+
+/// ML features keyed `(entity, attr)` → (count, mean, variance).
+pub fn ml_features(pipeline: &Pipeline) -> HashMap<(u64, u64), (u64, f64, f64)> {
+    pipeline
+        .with_sink("ml", |ml: &MlSink| {
+            ml.features()
+                .map(|((entity, attr), stat)| {
+                    (
+                        (entity.0 as u64, attr.0 as u64),
+                        (stat.count, stat.mean(), stat.variance()),
+                    )
+                })
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+fn compare_ml(live: &Pipeline, cold: &Pipeline, s: Scenario) -> Result<()> {
+    let a = ml_features(live);
+    let b = ml_features(cold);
+    ensure!(
+        a.len() == b.len(),
+        "{s}: ML feature sets differ ({} vs {})",
+        a.len(),
+        b.len()
+    );
+    for (key, (count, mean, var)) in &a {
+        let Some((bc, bm, bv)) = b.get(key) else {
+            anyhow::bail!("{s}: ML feature {key:?} missing from cold replay");
+        };
+        ensure!(
+            count == bc,
+            "{s}: ML feature {key:?} count {} vs {}",
+            count,
+            bc
+        );
+        let close = |x: f64, y: f64| {
+            (x - y).abs() <= ML_REL_TOL * (1.0 + x.abs().max(y.abs()))
+        };
+        ensure!(
+            close(*mean, *bm) && close(*var, *bv),
+            "{s}: ML feature {key:?} moments diverged: ({mean}, {var}) vs ({bm}, {bv})"
+        );
+    }
+    Ok(())
+}
+
+/// Per-key JSONL line streams, with the state stamp normalized away (the
+/// only field a legitimate restamp may change).
+pub fn jsonl_by_key(pipeline: &Pipeline) -> HashMap<u64, Vec<String>> {
+    pipeline
+        .with_sink("jsonl", |sink: &JsonlSink| {
+            let mut by_key: HashMap<u64, Vec<String>> = HashMap::new();
+            for (key, line) in sink.records() {
+                by_key.entry(*key).or_default().push(normalized_line(line));
+            }
+            by_key
+        })
+        .unwrap_or_default()
+}
+
+fn normalized_line(line: &str) -> String {
+    let parsed = json::parse(line).expect("sink lines are valid JSON");
+    match parsed {
+        Json::Obj(entries) => Json::Obj(
+            entries.into_iter().filter(|(k, _)| k != "state").collect(),
+        )
+        .to_string(),
+        other => other.to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> PipelineConfig {
+        let mut cfg = PipelineConfig::small();
+        cfg.trace_events = 96;
+        cfg.sinks = vec!["dw".into(), "ml".into(), "jsonl".into()];
+        cfg
+    }
+
+    #[test]
+    fn uniform_scenario_passes_all_invariants() {
+        let outcome = ScenarioRunner::new(small_cfg(), Scenario::Uniform)
+            .run_and_verify()
+            .unwrap();
+        assert_eq!(outcome.events_in, 96);
+        assert_eq!(outcome.dead_letters, 0);
+        assert!(outcome.crash_deliveries > 0, "redelivery was exercised");
+    }
+
+    #[test]
+    fn duplicate_scenario_publishes_more_than_resolved() {
+        let outcome = ScenarioRunner::new(small_cfg(), Scenario::Duplicate)
+            .run_and_verify()
+            .unwrap();
+        assert!(outcome.duplicates_published > 0);
+        assert_eq!(
+            outcome.published,
+            96 + outcome.duplicates_published as u64
+        );
+    }
+
+    #[test]
+    fn runner_is_seed_deterministic() {
+        let run = || {
+            let (p, o) =
+                ScenarioRunner::new(small_cfg(), Scenario::Shuffle)
+                    .seed(77)
+                    .run()
+                    .unwrap();
+            (dw_dump(&p), o.published)
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,253 @@
+//! Scenario conformance harness: every adversarial workload
+//! ([`Scenario`]) runs through the full pipeline across kernels
+//! (native/scalar), shard counts (N=1 vs N=4) and evict modes, and must
+//! pass the invariant trio enforced by
+//! [`metl::workload::scenario::ScenarioRunner::run_and_verify`]:
+//!
+//! 1. final sink state ≡ a cold restart with the final schema replaying
+//!    the recorded CDC topic verbatim;
+//! 2. zero silent drops — counter conservation proves every record was
+//!    transformed, dead-lettered or deduped;
+//! 3. sinks absorb at-least-once delivery — every run crashes each
+//!    egress lane between flush and commit and redelivers everything.
+
+use metl::cache::EvictMode;
+use metl::config::PipelineConfig;
+use metl::mapper::kernel::KernelMode;
+use metl::util::rng::Rng;
+use metl::workload::adversarial::{hostile_trace, HostileOp, Scenario};
+use metl::workload::scenario::{
+    dw_dump, jsonl_by_key, ml_features, ScenarioOutcome, ScenarioRunner,
+};
+use metl::workload::DmlKind;
+
+/// kernel × shards × evict combinations every scenario must pass.
+const COMBOS: [(KernelMode, usize, EvictMode); 4] = [
+    (KernelMode::Native, 1, EvictMode::Targeted),
+    (KernelMode::Native, 4, EvictMode::Full),
+    (KernelMode::Scalar, 1, EvictMode::Full),
+    (KernelMode::Scalar, 4, EvictMode::Targeted),
+];
+
+fn base_cfg() -> PipelineConfig {
+    let mut cfg = PipelineConfig::small();
+    cfg.trace_events = 240;
+    cfg.sinks = vec!["dw".into(), "ml".into(), "jsonl".into()];
+    cfg
+}
+
+/// Run `scenario` across the full combo matrix, returning each outcome.
+fn conformance_matrix(scenario: Scenario) -> Vec<ScenarioOutcome> {
+    COMBOS
+        .iter()
+        .map(|&(kernel, shards, evict)| {
+            let mut cfg = base_cfg();
+            cfg.kernel = kernel;
+            cfg.evict = evict;
+            ScenarioRunner::new(cfg, scenario)
+                .shards(shards)
+                .run_and_verify()
+                .unwrap_or_else(|e| {
+                    panic!("{scenario}/{kernel:?}/N={shards}/{evict:?}: {e}")
+                })
+        })
+        .collect()
+}
+
+#[test]
+fn uniform_conformance() {
+    for outcome in conformance_matrix(Scenario::Uniform) {
+        assert_eq!(outcome.events_in, 240);
+        assert!(outcome.crash_deliveries > 0, "redelivery exercised");
+    }
+}
+
+#[test]
+fn zipf_conformance() {
+    for outcome in conformance_matrix(Scenario::Zipf) {
+        assert_eq!(outcome.events_in, outcome.published);
+    }
+}
+
+#[test]
+fn burst_conformance() {
+    for outcome in conformance_matrix(Scenario::Burst) {
+        assert_eq!(outcome.events_in, outcome.published);
+    }
+}
+
+#[test]
+fn shuffle_conformance() {
+    for outcome in conformance_matrix(Scenario::Shuffle) {
+        assert_eq!(outcome.events_in, outcome.published);
+    }
+}
+
+#[test]
+fn duplicate_conformance() {
+    for outcome in conformance_matrix(Scenario::Duplicate) {
+        assert!(
+            outcome.duplicates_published > 0,
+            "duplicate scenario must inject producer retries"
+        );
+        assert_eq!(
+            outcome.published,
+            240 + outcome.duplicates_published as u64
+        );
+    }
+}
+
+#[test]
+fn load_storm_conformance() {
+    for outcome in conformance_matrix(Scenario::LoadStorm) {
+        assert!(
+            outcome.snapshot_rows > 0,
+            "storm must race snapshot rows onto the live topic"
+        );
+        assert_eq!(
+            outcome.published,
+            240 + outcome.snapshot_rows as u64
+        );
+    }
+}
+
+#[test]
+fn hot_schema_change_conformance() {
+    for outcome in conformance_matrix(Scenario::HotSchemaChange) {
+        assert!(
+            !outcome.schema_change_log.is_empty(),
+            "scenario must evolve the hot schema mid-burst"
+        );
+    }
+}
+
+/// Satellite regression for the sink dedupe gap: crash every egress lane
+/// between flush and commit, redeliver everything, and the ML feature
+/// moments must be byte-identical to a run that never crashed — a Welford
+/// accumulator that sees any observation twice can never recover.
+#[test]
+fn egress_crash_between_flush_and_commit_does_not_double_count() {
+    let scenario = Scenario::Burst;
+    let mut control_runner = ScenarioRunner::new(base_cfg(), scenario);
+    control_runner.exercise_redelivery = false;
+    let (control, control_outcome) = control_runner.run().unwrap();
+    assert_eq!(control_outcome.crash_deliveries, 0);
+
+    let (crashed, outcome) =
+        ScenarioRunner::new(base_cfg(), scenario).run().unwrap();
+    assert!(outcome.crash_deliveries > 0, "crash seam was exercised");
+
+    // every redelivered record was recognized, none re-applied: the ML
+    // lane's final drain re-saw the whole CDM topic as delivery dups
+    let ml = crashed.sink("ml").unwrap();
+    assert_eq!(ml.stats().duplicates, crashed.out_topic.total_records());
+    assert_eq!(ml_features(&control), ml_features(&crashed));
+    assert_eq!(dw_dump(&control), dw_dump(&crashed));
+    assert_eq!(jsonl_by_key(&control), jsonl_by_key(&crashed));
+}
+
+/// A sink reset to the topic beginning (dedupe state cleared) rebuilds
+/// the exact same warehouse state from the retained CDM topic.
+#[test]
+fn dw_rebuild_after_reset_matches_original() {
+    let (pipeline, _) =
+        ScenarioRunner::new(base_cfg(), Scenario::Zipf).run().unwrap();
+    let before = dw_dump(&pipeline);
+    assert!(!before.is_empty());
+    let dw = pipeline.sink("dw").unwrap();
+    dw.reset_to_beginning();
+    assert!(dw.drain() > 0);
+    assert_eq!(dw_dump(&pipeline), before);
+}
+
+/// `(seed, scenario)` replays byte-identically: two runs agree on every
+/// sink byte, including the JSONL stream and exact ML floats (same
+/// accumulation order).
+#[test]
+fn same_seed_same_scenario_is_byte_identical() {
+    let run = || {
+        let (p, o) = ScenarioRunner::new(base_cfg(), Scenario::Duplicate)
+            .seed(0xBEE5)
+            .run()
+            .unwrap();
+        (dw_dump(&p), ml_features(&p), jsonl_by_key(&p), o.published)
+    };
+    assert_eq!(run(), run());
+}
+
+/// Shard count must not change the outcome: N=1 and N=4 agree on DW and
+/// JSONL state exactly and on ML moments up to accumulation-order
+/// rounding.
+#[test]
+fn shard_count_does_not_change_sink_state() {
+    let run = |shards: usize| {
+        ScenarioRunner::new(base_cfg(), Scenario::Zipf)
+            .shards(shards)
+            .run()
+            .unwrap()
+            .0
+    };
+    let one = run(1);
+    let four = run(4);
+    assert_eq!(dw_dump(&one), dw_dump(&four));
+    assert_eq!(jsonl_by_key(&one), jsonl_by_key(&four));
+    let a = ml_features(&one);
+    let b = ml_features(&four);
+    assert_eq!(a.len(), b.len());
+    let close =
+        |x: f64, y: f64| (x - y).abs() <= 1e-6 * (1.0 + x.abs().max(y.abs()));
+    for (key, (count, mean, var)) in &a {
+        let (bc, bm, bv) = b[key];
+        assert_eq!(*count, bc, "{key:?} count");
+        assert!(
+            close(*mean, bm) && close(*var, bv),
+            "{key:?}: ({mean}, {var}) vs ({bm}, {bv})"
+        );
+    }
+}
+
+fn render(op: &HostileOp) -> String {
+    match op {
+        HostileOp::Dml { service, kind, rank } => {
+            let kind = match kind {
+                DmlKind::Insert => "insert",
+                DmlKind::Update => "update",
+                DmlKind::Delete => "delete",
+            };
+            let rank = match rank {
+                Some(r) => r.to_string(),
+                None => "-".to_string(),
+            };
+            format!("dml service={service} kind={kind} rank={rank}")
+        }
+        HostileOp::SchemaChange { service } => {
+            format!("schema-change service={service}")
+        }
+        HostileOp::SnapshotStorm { service } => {
+            format!("snapshot-storm service={service}")
+        }
+        HostileOp::Drain => "drain".to_string(),
+    }
+}
+
+/// Golden fixture: one small hostile trace is pinned line-for-line, so
+/// any drift in the RNG, the Zipf sampler or the trace shapes shows up as
+/// a diff instead of a silent behaviour change.
+#[test]
+fn golden_zipf_trace_matches_fixture() {
+    let mut cfg = PipelineConfig::small();
+    cfg.trace_events = 48;
+    let ops =
+        hostile_trace(&cfg, Scenario::Zipf, &mut Rng::seed_from(0xD1CE));
+    let rendered: String = ops
+        .iter()
+        .map(|op| render(op) + "\n")
+        .collect();
+    let expected = include_str!("fixtures/hostile_zipf_seed_d1ce.txt");
+    assert_eq!(
+        rendered, expected,
+        "hostile trace drifted from the golden fixture; regenerate \
+         tests/fixtures/hostile_zipf_seed_d1ce.txt only for an \
+         intentional generator change"
+    );
+}

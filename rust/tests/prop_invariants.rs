@@ -15,8 +15,11 @@ use metl::matrix::dusb::DusbSet;
 use metl::matrix::update::{auto_update, prepare_update, ChangeCase};
 use metl::message::{InMessage, OutMessage, StateI};
 use metl::util::json::Json;
-use metl::util::rng::Rng;
-use metl::workload::{self, Landscape};
+use metl::util::rng::{Rng, Zipf};
+use metl::workload::adversarial::{
+    duplicate_delivery, hostile_trace, shuffle_bounded, HostileOp, Scenario,
+};
+use metl::workload::{self, DmlKind, Landscape};
 
 /// Randomized config within paper-plausible bounds.
 fn random_cfg(rng: &mut Rng) -> PipelineConfig {
@@ -574,5 +577,131 @@ fn prop_state_sync_contract() {
                 ));
             }
         }
+    }
+}
+
+/// Invariant: the bounded delivery shuffle preserves the event multiset,
+/// keeps per-key relative order (Kafka's actual guarantee) and never
+/// displaces any item by more than the bound — for any batch size, key
+/// cardinality and bound.
+#[test]
+fn prop_shuffle_bounded_invariants() {
+    let mut meta = Rng::seed_from(0x5BFF);
+    for trial in 0..40 {
+        let n = meta.gen_range(300) as usize;
+        let keys = 1 + meta.gen_range(12);
+        let bound = meta.gen_range(50) as usize;
+        let items: Vec<(u64, usize)> =
+            (0..n).map(|i| (meta.gen_range(keys), i)).collect();
+        let mut rng = Rng::seed_from(meta.next_u64());
+        let out = shuffle_bounded(&items, |it| it.0, bound, &mut rng);
+        let mut a = items.clone();
+        let mut b = out.clone();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b, "trial {trial}: multiset changed");
+        for (pos, it) in out.iter().enumerate() {
+            assert!(
+                pos.abs_diff(it.1) <= bound,
+                "trial {trial}: item {it:?} displaced to {pos} (bound {bound})"
+            );
+        }
+        for k in 0..keys {
+            let seq: Vec<usize> =
+                out.iter().filter(|it| it.0 == k).map(|it| it.1).collect();
+            assert!(
+                seq.windows(2).all(|w| w[0] < w[1]),
+                "trial {trial}: key {k} reordered: {seq:?}"
+            );
+        }
+    }
+}
+
+/// Invariant: duplicate delivery only ever inserts adjacent repeats —
+/// collapsing consecutive repeats recovers the original batch exactly,
+/// and the reported count matches the growth.
+#[test]
+fn prop_duplicate_delivery_is_adjacent_and_counted() {
+    let mut meta = Rng::seed_from(0xD00D);
+    for trial in 0..40 {
+        let n = meta.gen_range(400) as usize;
+        let p = meta.f64() * 0.5;
+        let items: Vec<usize> = (0..n).collect();
+        let mut rng = Rng::seed_from(meta.next_u64());
+        let (out, dups) = duplicate_delivery(&items, p, &mut rng);
+        assert_eq!(out.len(), n + dups, "trial {trial}: count mismatch");
+        let mut collapsed = out.clone();
+        collapsed.dedup();
+        assert_eq!(
+            collapsed, items,
+            "trial {trial}: a duplicate landed away from its original"
+        );
+    }
+}
+
+/// Invariant: hostile traces are a pure function of `(cfg, scenario,
+/// seed)`, conserve the configured DML count for every scenario, stay
+/// inside the service universe, and only attach hot-key ranks to
+/// non-insert ops.
+#[test]
+fn prop_hostile_trace_deterministic_and_conserves_dmls() {
+    let mut meta = Rng::seed_from(0x7A11);
+    for trial in 0..12 {
+        let mut cfg = PipelineConfig::small();
+        cfg.trace_events = 32 + meta.gen_range(200) as usize;
+        let seed = meta.next_u64();
+        for scenario in Scenario::ALL {
+            let a = hostile_trace(&cfg, scenario, &mut Rng::seed_from(seed));
+            let b = hostile_trace(&cfg, scenario, &mut Rng::seed_from(seed));
+            assert_eq!(a, b, "trial {trial}: {scenario} not deterministic");
+            let mut dmls = 0;
+            for op in &a {
+                if let HostileOp::Dml { service, kind, rank } = op {
+                    dmls += 1;
+                    assert!(
+                        *service < cfg.n_services,
+                        "trial {trial}: {scenario} service {service}"
+                    );
+                    if *kind == DmlKind::Insert {
+                        assert!(
+                            rank.is_none(),
+                            "trial {trial}: {scenario} insert with rank"
+                        );
+                    }
+                }
+            }
+            assert_eq!(
+                dmls, cfg.trace_events,
+                "trial {trial}: {scenario} DML count"
+            );
+            assert_eq!(
+                a.last(),
+                Some(&HostileOp::Drain),
+                "trial {trial}: {scenario} missing final drain"
+            );
+        }
+    }
+}
+
+/// Invariant: the Zipf sampler stays in `[0, n)` and the head rank is at
+/// least as hot as the tail, for any universe size and exponent.
+#[test]
+fn prop_zipf_in_range_and_head_heavy() {
+    let mut meta = Rng::seed_from(0x21FF);
+    for trial in 0..20 {
+        let n = 2 + meta.gen_range(60) as usize;
+        let s = 0.8 + meta.f64() * 1.2;
+        let zipf = Zipf::new(n, s);
+        assert_eq!(zipf.n(), n);
+        let mut rng = Rng::seed_from(meta.next_u64());
+        let mut counts = vec![0u64; n];
+        for _ in 0..3000 {
+            counts[zipf.sample(&mut rng)] += 1;
+        }
+        assert_eq!(counts.iter().sum::<u64>(), 3000, "trial {trial}");
+        assert!(
+            counts[0] >= counts[n - 1],
+            "trial {trial}: n={n} s={s}: {counts:?}"
+        );
     }
 }
