@@ -1,0 +1,206 @@
+//! Bench: tracing overhead — the observability tentpole's cost contract.
+//!
+//! Runs the same pre-resolved CDC backlog through two pipelines that
+//! differ only in `runtime.trace`, interleaving tracing-on and
+//! tracing-off iterations so machine drift hits both sides equally, and
+//! emits `trace.overhead_ratio` (on-mean / off-mean). The checked-in
+//! `BENCH_9.json` pins the contract that spans are cheap enough to leave
+//! on by default: ratio < 1.05.
+//!
+//! Flags (after `cargo bench --bench overhead --`):
+//!   --smoke           reduced backlog + small profile (CI shape check)
+//!   --out PATH        artifact destination (default ../BENCH_9.json)
+//!   --validate PATH   validate an artifact's schema (and, for non-smoke
+//!                     artifacts, the < 1.05 overhead bound) and exit
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::{Duration, Instant};
+
+use harness::{arg_value, has_flag, section, Artifact};
+use metl::broker::Consumer;
+use metl::config::PipelineConfig;
+use metl::coordinator::pipeline::Pipeline;
+use metl::util::json::{self, Json};
+use metl::util::rng::Rng;
+use metl::util::stats::{format_ns, Summary};
+use metl::workload::{self, DmlKind, TraceOp};
+
+/// Metrics every `BENCH_9.json`-shaped artifact must carry.
+const REQUIRED: &[&str] = &[
+    "trace.on_ns.mean",
+    "trace.off_ns.mean",
+    "trace.overhead_ratio",
+    "trace.spans_per_event",
+];
+
+/// The cost contract: tracing-on must stay within 5% of tracing-off.
+const MAX_OVERHEAD: f64 = 1.05;
+
+fn validate(path: &str) -> Result<(), String> {
+    harness::validate_artifact_file(path, "overhead", REQUIRED)?;
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    let doc = json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+    let smoke = doc
+        .get("smoke")
+        .and_then(Json::as_bool)
+        .ok_or_else(|| format!("{path}: missing smoke flag"))?;
+    let ratio = doc
+        .get("metrics")
+        .and_then(|m| m.get("trace"))
+        .and_then(|t| t.get("overhead_ratio"))
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("{path}: missing trace.overhead_ratio"))?;
+    // smoke runs are too short to be noise-free on shared CI runners;
+    // the bound is enforced on real (checked-in) artifacts only
+    if !smoke && ratio >= MAX_OVERHEAD {
+        return Err(format!(
+            "{path}: trace.overhead_ratio {ratio:.4} >= {MAX_OVERHEAD}"
+        ));
+    }
+    Ok(())
+}
+
+/// Build a pipeline with `backlog` pre-resolved DML events on the CDC
+/// topic, then time draining it end to end (consume → map → egress).
+/// Construction and backlog resolution stay outside the timed region.
+fn timed_drain(
+    cfg_base: &PipelineConfig,
+    trace_on: bool,
+    backlog: usize,
+) -> (Duration, Pipeline) {
+    let mut cfg = cfg_base.clone();
+    cfg.trace = trace_on;
+    let mut land = workload::generate(&cfg);
+    let mut rng = Rng::seed_from(cfg.seed ^ 0x0B5);
+    workload::populate(&mut land, 50, &mut rng);
+    let p = Pipeline::from_landscape(cfg.clone(), land).unwrap();
+    for i in 0..backlog {
+        p.resolve_op(&TraceOp::Dml {
+            service: i % cfg.n_services,
+            kind: if i % 3 == 0 { DmlKind::Update } else { DmlKind::Insert },
+        })
+        .unwrap();
+    }
+    let t0 = Instant::now();
+    let mut consumer = Consumer::new(p.cdc_topic.clone(), 0, 1);
+    loop {
+        let batch = consumer.poll(256);
+        if batch.is_empty() {
+            break;
+        }
+        for (partition, rec) in &batch {
+            p.process_event_from(*partition, rec.offset, &rec.value);
+        }
+        consumer.commit();
+    }
+    p.drain_sinks();
+    let dt = t0.elapsed();
+    assert_eq!(p.metrics.events_in.get() as usize, backlog);
+    assert_eq!(p.metrics.dead_letters.get(), 0);
+    if trace_on {
+        assert_eq!(p.metrics.trace.traces.get() as usize, backlog);
+        assert_eq!(p.metrics.trace.spans_dropped.get(), 0);
+    } else {
+        assert_eq!(p.tracer.span_count(), 0);
+    }
+    (dt, p)
+}
+
+fn main() {
+    if let Some(path) = arg_value("--validate") {
+        match validate(&path) {
+            Ok(()) => {
+                println!("{path}: valid overhead artifact");
+                return;
+            }
+            Err(e) => {
+                eprintln!("invalid overhead artifact: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+
+    let smoke = has_flag("--smoke");
+    let (cfg, backlog, iters) = if smoke {
+        (PipelineConfig::small(), 2_000usize, 3usize)
+    } else {
+        let mut cfg = PipelineConfig::paper_day();
+        cfg.partitions = 16;
+        (cfg, 20_000, 8)
+    };
+    let profile = if smoke { "small" } else { "paper_day" };
+    let mut artifact = Artifact::new("overhead");
+    artifact
+        .meta("profile", Json::Str(profile.to_string()))
+        .meta("smoke", Json::Bool(smoke))
+        .meta("iters", Json::Num(iters as f64));
+
+    section(format!("tracing on vs off ({backlog} events, interleaved)").as_str());
+    // warmup one pair, then interleave A/B so thermal and cache drift
+    // land on both sides equally
+    timed_drain(&cfg, true, backlog);
+    timed_drain(&cfg, false, backlog);
+    let mut on_ns = Vec::with_capacity(iters);
+    let mut off_ns = Vec::with_capacity(iters);
+    let mut spans_per_event = 0.0;
+    for i in 0..iters {
+        let (dt_on, p_on) = timed_drain(&cfg, true, backlog);
+        let (dt_off, _) = timed_drain(&cfg, false, backlog);
+        on_ns.push(dt_on.as_nanos() as f64);
+        off_ns.push(dt_off.as_nanos() as f64);
+        spans_per_event =
+            p_on.metrics.trace.spans.get() as f64 / backlog as f64;
+        println!(
+            "  iter {i}: on={} off={} ({:.1} spans/event)",
+            format_ns(dt_on.as_nanos() as f64),
+            format_ns(dt_off.as_nanos() as f64),
+            spans_per_event
+        );
+    }
+    let s_on = Summary::from(&on_ns);
+    let s_off = Summary::from(&off_ns);
+    let ratio = s_on.mean / s_off.mean.max(1.0);
+    println!(
+        "  on mean={} off mean={} -> overhead {:.4}x",
+        format_ns(s_on.mean),
+        format_ns(s_off.mean),
+        ratio
+    );
+
+    artifact.set(
+        "trace",
+        Json::Obj(vec![
+            ("on_ns".to_string(), summary_obj(&s_on)),
+            ("off_ns".to_string(), summary_obj(&s_off)),
+            ("overhead_ratio".to_string(), Json::Num(ratio)),
+            ("spans_per_event".to_string(), Json::Num(spans_per_event)),
+        ]),
+    );
+    if !smoke {
+        assert!(
+            ratio < MAX_OVERHEAD,
+            "tracing overhead {ratio:.4}x breaks the < {MAX_OVERHEAD} contract"
+        );
+    }
+
+    let out = arg_value("--out").unwrap_or_else(|| "../BENCH_9.json".to_string());
+    artifact.write(&out).unwrap();
+    if let Err(e) = validate(&out) {
+        eprintln!("emitted artifact failed self-validation: {e}");
+        std::process::exit(1);
+    }
+    println!("\noverhead bench OK");
+}
+
+fn summary_obj(s: &Summary) -> Json {
+    Json::Obj(vec![
+        ("count".to_string(), Json::Num(s.count as f64)),
+        ("mean".to_string(), Json::Num(s.mean)),
+        ("std".to_string(), Json::Num(s.std)),
+        ("p50".to_string(), Json::Num(s.p50)),
+        ("p90".to_string(), Json::Num(s.p90)),
+        ("p99".to_string(), Json::Num(s.p99)),
+    ])
+}

@@ -228,6 +228,11 @@ impl DcpmCache {
             h / (h + m)
         }
     }
+
+    /// Compiled-plan cache `(hits, misses)` (exposition metric).
+    pub fn plan_counts(&self) -> (u64, u64) {
+        self.plans.stats.counts()
+    }
 }
 
 #[cfg(test)]

@@ -77,6 +77,10 @@ pub struct PipelineConfig {
     /// Restart-recovery time budget asserted by the crash tests/benches
     /// (`runtime.store.recovery_budget_ms`).
     pub store_recovery_budget_ms: u64,
+    /// Span tracing + flight recorder (`runtime.trace` / `--trace`),
+    /// on by default — the observability overhead budget is enforced by
+    /// `benches/overhead.rs` (< 5%).
+    pub trace: bool,
 }
 
 impl Default for PipelineConfig {
@@ -114,6 +118,7 @@ impl PipelineConfig {
             store_segment_threshold: 32,
             store_fsync: FsyncPolicy::Always,
             store_recovery_budget_ms: 5_000,
+            trace: true,
         }
     }
 
@@ -146,6 +151,7 @@ impl PipelineConfig {
             store_segment_threshold: 32,
             store_fsync: FsyncPolicy::Always,
             store_recovery_budget_ms: 5_000,
+            trace: true,
         }
     }
 
@@ -178,6 +184,7 @@ impl PipelineConfig {
             store_segment_threshold: 32,
             store_fsync: FsyncPolicy::Always,
             store_recovery_budget_ms: 5_000,
+            trace: true,
         }
     }
 
@@ -250,6 +257,7 @@ impl PipelineConfig {
                 v.parse::<FsyncPolicy>().map_err(|e| anyhow::anyhow!(e))?;
         }
         num!("runtime.store.recovery_budget_ms", cfg.store_recovery_budget_ms);
+        num!("runtime.trace", cfg.trace);
         Ok(cfg)
     }
 }
@@ -422,6 +430,18 @@ mod tests {
         assert!(
             PipelineConfig::parse("[runtime.store]\nfsync = maybe").is_err()
         );
+    }
+
+    #[test]
+    fn parses_trace_knob() {
+        // on by default in every profile (the overhead bench keeps it cheap)
+        assert!(PipelineConfig::small().trace);
+        assert!(PipelineConfig::paper_day().trace);
+        assert!(PipelineConfig::eos_scale().trace);
+        let cfg =
+            PipelineConfig::parse("[runtime]\ntrace = false").unwrap();
+        assert!(!cfg.trace);
+        assert!(PipelineConfig::parse("[runtime]\ntrace = sorta").is_err());
     }
 
     #[test]

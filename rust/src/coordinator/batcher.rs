@@ -8,6 +8,8 @@
 //! `OutMessage`s the Alg-6 lane would produce — the two lanes are
 //! equivalence-tested in `rust/tests/integration_runtime.rs`.
 
+use std::time::Instant;
+
 use anyhow::{Context, Result};
 
 use super::pipeline::Pipeline;
@@ -16,6 +18,7 @@ use crate::matrix::blocks;
 use crate::message::cdc::CdcOp;
 use crate::message::{InMessage, OutMessage};
 use crate::runtime::BulkRuntime;
+use crate::trace::{Lane, Stage, TraceCtx, SINK_NONE};
 use crate::util::json::Json;
 
 /// Outcome of one initial load.
@@ -53,6 +56,7 @@ impl InitialLoader {
         pipeline: &Pipeline,
         service: usize,
     ) -> Result<LoadReport> {
+        let t_load = Instant::now();
         let land = pipeline.landscape.read().unwrap();
         let db = &land.dbs[service];
         let state = pipeline.state.current();
@@ -152,6 +156,7 @@ impl InitialLoader {
             pipeline.metrics.bulk_events.add(rows as u64);
             pipeline.metrics.events_in.add(rows as u64);
             pipeline.metrics.transformations.add(rows as u64);
+            self.bulk_span(pipeline, schema.0, version.0, t_load);
             Ok(LoadReport { rows, out_messages, used_bulk: true, lane: "xla" })
         } else if pipeline.cfg.kernel == KernelMode::Native {
             drop(land);
@@ -176,6 +181,7 @@ impl InitialLoader {
             pipeline.metrics.bulk_events.add(rows as u64);
             pipeline.metrics.events_in.add(rows as u64);
             pipeline.metrics.transformations.add(rows as u64);
+            self.bulk_span(pipeline, schema.0, version.0, t_load);
             Ok(LoadReport { rows, out_messages, used_bulk: false, lane: "native" })
         } else {
             drop(land);
@@ -189,6 +195,30 @@ impl InitialLoader {
             }
             Ok(LoadReport { rows, out_messages, used_bulk: false, lane: "scalar" })
         }
+    }
+
+    /// One batch-level map span for a whole bulk load (the per-event lanes
+    /// trace per event instead); the `Bulk` lane tag marks it in exports.
+    fn bulk_span(
+        &self,
+        pipeline: &Pipeline,
+        schema: u32,
+        version: u32,
+        t0: Instant,
+    ) {
+        pipeline.tracer.record_span(
+            TraceCtx {
+                schema,
+                version,
+                epoch: pipeline.dmm.epoch(),
+                lane: Lane::Bulk,
+                ..TraceCtx::default()
+            },
+            Stage::Map,
+            SINK_NONE,
+            t0,
+            true,
+        );
     }
 }
 

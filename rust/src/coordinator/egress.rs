@@ -11,13 +11,15 @@
 
 use std::any::Any;
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::Result;
 
 use super::pipeline::OutRecord;
 use crate::broker::Consumer;
-use crate::metrics::SinkMetrics;
+use crate::metrics::{PipelineMetrics, SinkMetrics};
 use crate::sink::{DeliveryTag, SinkConnector, SinkStats};
+use crate::trace::{Stage, TraceCtx, Tracer};
 
 /// Batch size of one egress poll round.
 const DRAIN_BATCH: usize = 256;
@@ -28,6 +30,11 @@ pub struct SinkHandle {
     sink: Mutex<Box<dyn SinkConnector>>,
     consumer: Mutex<Consumer<OutRecord>>,
     metrics: Arc<SinkMetrics>,
+    metrics_root: Arc<PipelineMetrics>,
+    tracer: Arc<Tracer>,
+    /// This sink's id in the tracer's sink registry — egress spans carry
+    /// it so Chrome exports land each backend on its own track.
+    sink_idx: u8,
 }
 
 impl SinkHandle {
@@ -35,12 +42,18 @@ impl SinkHandle {
         sink: Box<dyn SinkConnector>,
         consumer: Consumer<OutRecord>,
         metrics: Arc<SinkMetrics>,
+        metrics_root: Arc<PipelineMetrics>,
+        tracer: Arc<Tracer>,
     ) -> Self {
+        let sink_idx = tracer.register_sink(sink.name());
         Self {
             name: sink.name().to_string(),
             sink: Mutex::new(sink),
             consumer: Mutex::new(consumer),
             metrics,
+            metrics_root,
+            tracer,
+            sink_idx,
         }
     }
 
@@ -72,9 +85,18 @@ impl SinkHandle {
             if batch.is_empty() {
                 break;
             }
+            let t0 = Instant::now();
             Self::apply_batch(&mut **sink, &batch);
-            if sink.flush().is_err() {
+            let ok = sink.flush().is_ok();
+            self.metrics_root.egress_latency.record(t0.elapsed());
+            self.tracer
+                .record_span(TraceCtx::default(), Stage::Egress, self.sink_idx, t0, ok);
+            if !ok {
                 self.metrics.flush_errors.inc();
+                // ship the causal history with the failure: the last N
+                // completed traces tell which events fed this batch
+                self.tracer
+                    .dump_recent(&format!("sink {} flush error", self.name));
                 consumer.rewind_to_committed();
                 break;
             }

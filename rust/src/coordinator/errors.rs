@@ -12,6 +12,9 @@ pub struct DeadLetter {
     pub event: Arc<CdcEvent>,
     pub error: String,
     pub attempts: u32,
+    /// Rendered flight-recorder trace (full causal history: source
+    /// offset → epoch → failing stage) when tracing was enabled.
+    pub trace: Option<String>,
 }
 
 /// Thread-safe dead-letter queue.
@@ -22,10 +25,22 @@ pub struct Dlq {
 
 impl Dlq {
     pub fn push(&self, event: Arc<CdcEvent>, error: String, attempts: u32) {
+        self.push_traced(event, error, attempts, None);
+    }
+
+    /// [`Dlq::push`] with the record's rendered flight-recorder trace, so
+    /// a quarantined event ships with its provenance.
+    pub fn push_traced(
+        &self,
+        event: Arc<CdcEvent>,
+        error: String,
+        attempts: u32,
+        trace: Option<String>,
+    ) {
         self.entries
             .lock()
             .unwrap()
-            .push(DeadLetter { event, error, attempts });
+            .push(DeadLetter { event, error, attempts, trace });
     }
 
     pub fn len(&self) -> usize {

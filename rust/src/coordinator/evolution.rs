@@ -43,6 +43,7 @@ use crate::schema::evolution::{self, Compatibility};
 use crate::schema::{ExtractType, SchemaId, VersionNo};
 use crate::source::{SchemaChange, SchemaChangeEvent, SchemaChangeSource};
 use crate::store::WalOp;
+use crate::trace::{Stage, TraceCtx, SINK_NONE};
 use crate::workload::Landscape;
 
 /// Result of applying one schema-change event.
@@ -333,13 +334,28 @@ impl EvolutionController {
         ts_us: u64,
     ) -> Result<()> {
         let Some(store) = &p.store else { return Ok(()) };
-        store.commit_update(
+        let t0 = Instant::now();
+        let result = store.commit_update(
             StateI(p.state.current().0 + 1),
             schema,
             v,
             op,
             ts_us,
-        )?;
+        );
+        p.metrics.store_latency.record(t0.elapsed());
+        p.tracer.record_span(
+            TraceCtx {
+                schema: schema.0,
+                version: v.0,
+                epoch: p.dmm.epoch(),
+                ..TraceCtx::default()
+            },
+            Stage::StoreCommit,
+            SINK_NONE,
+            t0,
+            result.is_ok(),
+        );
+        result?;
         Ok(())
     }
 

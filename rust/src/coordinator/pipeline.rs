@@ -95,8 +95,9 @@ use crate::matrix::dusb::DusbSet;
 use crate::matrix::update::UpdateReport;
 use crate::message::cdc::{CdcEvent, CdcOp};
 use crate::message::{OutMessage, StateI};
-use crate::metrics::PipelineMetrics;
+use crate::metrics::{CacheView, PipelineMetrics};
 use crate::sink::SinkConnector;
+use crate::trace::{EventTrace, Lane, Stage, TraceCtx, Tracer, SINK_NONE};
 use crate::source::{
     Connector, DdlQueue, Dml, SchemaChangeEvent, SchemaChangeSource,
     SourceConnector,
@@ -125,6 +126,9 @@ pub struct Pipeline {
     pub store: Option<MatrixStore>,
     pub state: StateManager,
     pub metrics: Arc<PipelineMetrics>,
+    /// Span/provenance collector (see [`crate::trace`]); enabled by
+    /// `PipelineConfig::trace` (on by default).
+    pub tracer: Arc<Tracer>,
     pub dlq: Dlq,
     pub retry: RetryPolicy,
     pub notice_policy: NoticePolicy,
@@ -244,6 +248,7 @@ impl PipelineBuilder {
                 );
             }
         }
+        let tracer = Arc::new(Tracer::new(Arc::clone(&metrics.trace), cfg.trace));
         let handles: Vec<SinkHandle> = sinks
             .into_iter()
             .map(|sink| {
@@ -252,6 +257,8 @@ impl PipelineBuilder {
                     sink,
                     Consumer::new(out_topic.clone(), 0, 1),
                     sink_metrics,
+                    Arc::clone(&metrics),
+                    Arc::clone(&tracer),
                 )
             })
             .collect();
@@ -276,6 +283,7 @@ impl PipelineBuilder {
             store: None,
             state,
             metrics,
+            tracer,
             dlq: Dlq::default(),
             retry: RetryPolicy::default(),
             notice_policy: NoticePolicy::AutoConfirm,
@@ -528,6 +536,16 @@ impl Pipeline {
         &self,
         ev: &CdcEvent,
     ) -> Result<Vec<(CdcOp, OutMessage)>, MapError> {
+        self.map_event_traced(ev, &mut EventTrace::inactive())
+    }
+
+    /// [`Pipeline::map_event`] with span recording: an in-band heal adds a
+    /// [`Stage::Heal`] span and re-stamps the trace's epoch.
+    pub fn map_event_traced(
+        &self,
+        ev: &CdcEvent,
+        tr: &mut EventTrace,
+    ) -> Result<Vec<(CdcOp, OutMessage)>, MapError> {
         let Some(payload) = ev.mapping_payload() else {
             return Ok(Vec::new());
         };
@@ -536,12 +554,18 @@ impl Pipeline {
         let mapper = self.mapper_for(self.dmm.snapshot());
         let (outs, retried) = match mapper.map_or_restamp(payload) {
             Ok(mapped) => mapped,
-            Err(MapError::UnknownColumn { schema, version })
-                if self.evolution.on_unknown_version(self, schema, version) =>
-            {
-                // the in-band patch published a new epoch: map against it
-                let mapper = self.mapper_for(self.dmm.snapshot());
-                mapper.map_or_restamp(payload)?
+            Err(MapError::UnknownColumn { schema, version }) => {
+                let t_heal = Instant::now();
+                if self.evolution.on_unknown_version(self, schema, version) {
+                    // the in-band patch published a new epoch: map against it
+                    tr.span(Stage::Heal, t_heal);
+                    tr.stamp_epoch(self.dmm.epoch());
+                    let mapper = self.mapper_for(self.dmm.snapshot());
+                    mapper.map_or_restamp(payload)?
+                } else {
+                    tr.span_err(Stage::Heal, t_heal);
+                    return Err(MapError::UnknownColumn { schema, version });
+                }
             }
             Err(e) => return Err(e),
         };
@@ -561,25 +585,56 @@ impl Pipeline {
     }
 
     /// Process one CDC event end to end: map, publish, count, time.
+    /// Callers that don't know the event's source position (bulk lane,
+    /// scaler rounds) trace it as partition 0, offset 0.
     pub fn process_event(&self, ev: &Arc<CdcEvent>) {
+        self.process_event_from(0, 0, ev);
+    }
+
+    /// [`Pipeline::process_event`] with source provenance: the trace
+    /// carries the CDC partition/offset the event was consumed from, so a
+    /// dead-lettered record's flight dump names its exact source position.
+    pub fn process_event_from(
+        &self,
+        partition: usize,
+        offset: u64,
+        ev: &Arc<CdcEvent>,
+    ) {
         self.metrics.events_in.inc();
+        let t_in = Instant::now();
+        let mut tr = self.tracer.begin(partition as u32, offset);
+        if tr.is_active() {
+            if let Some(payload) = ev.mapping_payload() {
+                tr.stamp_payload(payload.schema.0, payload.version.0);
+            }
+            tr.stamp_epoch(self.dmm.epoch());
+            tr.stamp_lane(Lane::from(self.cfg.kernel));
+            tr.span(Stage::Ingest, t_in);
+            self.metrics.ingest_latency.record(t_in.elapsed());
+        }
         let t0 = Instant::now();
-        match self.map_event(ev) {
+        match self.map_event_traced(ev, &mut tr) {
             Ok(outs) => {
                 self.metrics.transformations.inc();
                 self.metrics.map_latency.record(t0.elapsed());
+                tr.span(Stage::Map, t0);
                 for out in outs {
                     let key = out.1.key;
                     self.out_topic.produce(key, Arc::new(out));
                     self.metrics.messages_out.inc();
                 }
+                self.tracer.finish(tr);
             }
             Err(e) => {
+                tr.span_err(Stage::Map, t0);
                 self.metrics.dead_letters.inc();
-                self.dlq.push(
+                let error = e.to_string();
+                let dump = self.tracer.finish_dead_letter(tr, &error);
+                self.dlq.push_traced(
                     Arc::clone(ev),
-                    e.to_string(),
+                    error,
                     self.retry.max_attempts,
+                    dump,
                 );
             }
         }
@@ -622,8 +677,8 @@ impl Pipeline {
                 if batch.is_empty() {
                     break;
                 }
-                for (_, rec) in &batch {
-                    self.process_event(&rec.value);
+                for (partition, rec) in &batch {
+                    self.process_event_from(*partition, rec.offset, &rec.value);
                 }
                 consumer.commit();
             }
@@ -650,6 +705,7 @@ impl Pipeline {
     /// committed transition so post-restore changes continue the sequence.
     pub fn restore_from_store(&self) -> Result<bool> {
         let Some(store) = &self.store else { return Ok(false) };
+        let t0 = Instant::now();
         let mut land = self.landscape.write().unwrap();
         let Some(out) = store.recover(&mut land)? else {
             return Ok(false);
@@ -659,6 +715,16 @@ impl Pipeline {
         self.metrics.dmm_epoch.set(epoch);
         self.state.sync_to(state);
         self.cache.advance(state, Some(&affected));
+        // recovery is a provenance event: record the span and dump the
+        // flight ring so the causal tail before the crash is preserved
+        self.tracer.record_span(
+            TraceCtx { epoch, ..TraceCtx::default() },
+            Stage::Recovery,
+            SINK_NONE,
+            t0,
+            true,
+        );
+        self.tracer.dump_recent("store-recovery");
         Ok(true)
     }
 
@@ -679,6 +745,36 @@ impl Pipeline {
         }
         self.metrics
             .dashboard(self.cache.approx_bytes(), self.cache.hit_rate())
+    }
+
+    /// Live cache-side values for exposition/snapshot.
+    fn cache_view(&self) -> CacheView {
+        let (plan_hits, plan_misses) = self.cache.plan_counts();
+        CacheView {
+            bytes: self.cache.approx_bytes(),
+            hit_rate: self.cache.hit_rate(),
+            plan_hits,
+            plan_misses,
+        }
+    }
+
+    /// Prometheus-style text exposition of all pipeline metrics (per-sink
+    /// lag gauges refreshed first). See ARCHITECTURE.md §Observability
+    /// for the metric name table.
+    pub fn expose_text(&self) -> String {
+        for handle in &self.sinks {
+            handle.lag();
+        }
+        self.metrics.expose_text(&self.cache_view())
+    }
+
+    /// JSON snapshot of all pipeline metrics (same data as
+    /// [`Pipeline::expose_text`]).
+    pub fn metrics_snapshot(&self) -> crate::util::json::Json {
+        for handle in &self.sinks {
+            handle.lag();
+        }
+        self.metrics.snapshot(&self.cache_view())
     }
 
     /// The source connector (snapshot/initial-load paths).

@@ -35,7 +35,16 @@ use crate::mapper::parallel::ParallelMapper;
 use crate::mapper::MapError;
 use crate::message::cdc::{CdcEvent, CdcOp};
 use crate::message::OutMessage;
+use crate::trace::{EventTrace, Stage};
 use crate::workload::TraceOp;
+
+/// One dispatched CDC event with its source position: the shard queue
+/// carries provenance so worker traces name the exact partition/offset.
+struct Delivery {
+    partition: u32,
+    offset: u64,
+    ev: Arc<CdcEvent>,
+}
 
 /// Largest number of queued events a worker folds into one mapping
 /// micro-batch (one epoch check + one ordered commit per batch).
@@ -167,13 +176,13 @@ pub fn run_sharded_session<R>(
 fn with_shard_pool<R>(
     pipeline: &Pipeline,
     n: usize,
-    drive: impl FnOnce(&mut Consumer<Arc<CdcEvent>>, &[Sender<Arc<CdcEvent>>]) -> R,
+    drive: impl FnOnce(&mut Consumer<Arc<CdcEvent>>, &[Sender<Delivery>]) -> R,
 ) -> (Vec<u64>, R) {
     std::thread::scope(|scope| {
-        let mut txs: Vec<Sender<Arc<CdcEvent>>> = Vec::with_capacity(n);
+        let mut txs: Vec<Sender<Delivery>> = Vec::with_capacity(n);
         let mut handles = Vec::with_capacity(n);
         for shard_idx in 0..n {
-            let (tx, rx) = mpsc::channel::<Arc<CdcEvent>>();
+            let (tx, rx) = mpsc::channel::<Delivery>();
             txs.push(tx);
             handles.push(scope.spawn(move || run_worker(pipeline, shard_idx, rx)));
         }
@@ -192,7 +201,7 @@ fn with_shard_pool<R>(
 /// Forward every currently fetchable CDC event to its shard queue.
 fn dispatch_available(
     consumer: &mut Consumer<Arc<CdcEvent>>,
-    txs: &[Sender<Arc<CdcEvent>>],
+    txs: &[Sender<Delivery>],
     shards: usize,
 ) {
     loop {
@@ -200,11 +209,15 @@ fn dispatch_available(
         if batch.is_empty() {
             break;
         }
-        for (_, rec) in batch {
+        for (partition, rec) in batch {
             let shard = shard_of(&rec.value, shards);
             // a closed queue means the worker already exited (only possible
             // after the driver dropped the senders) — unreachable here
-            let _ = txs[shard].send(rec.value);
+            let _ = txs[shard].send(Delivery {
+                partition: partition as u32,
+                offset: rec.offset,
+                ev: rec.value,
+            });
         }
         consumer.commit();
     }
@@ -241,11 +254,7 @@ fn refresh_worker(
 /// One shard worker: an epoch-cached mapper over a worker-local column
 /// cache (eviction storms stay shard-local), FIFO over the shard queue,
 /// ordered batch commit into the CDM topic. Returns events processed.
-fn run_worker(
-    pipeline: &Pipeline,
-    shard_idx: usize,
-    rx: Receiver<Arc<CdcEvent>>,
-) -> u64 {
+fn run_worker(pipeline: &Pipeline, shard_idx: usize, rx: Receiver<Delivery>) -> u64 {
     let shard_counters = pipeline.metrics.shard.shard(shard_idx);
     let cache = Arc::new(DcpmCache::with_mode(
         pipeline.dmm.snapshot().state,
@@ -261,7 +270,7 @@ fn run_worker(
         let mut batch = vec![first];
         while batch.len() < MICRO_BATCH {
             match rx.try_recv() {
-                Ok(ev) => batch.push(ev),
+                Ok(d) => batch.push(d),
                 Err(_) => break,
             }
         }
@@ -270,25 +279,45 @@ fn run_worker(
         if pipeline.dmm.epoch() != epoch {
             refresh_worker(pipeline, &mut mapper, &cache, &mut epoch);
         }
-        for ev in &batch {
+        for d in &batch {
             pipeline.metrics.events_in.inc();
             shard_counters.events.inc();
             processed += 1;
+            let t_in = Instant::now();
+            let mut tr = pipeline.tracer.begin(d.partition, d.offset);
+            if tr.is_active() {
+                if let Some(payload) = d.ev.mapping_payload() {
+                    tr.stamp_payload(payload.schema.0, payload.version.0);
+                }
+                tr.stamp_shard(shard_idx as u16);
+                tr.stamp_lane(mapper.lane());
+                tr.span(Stage::Ingest, t_in);
+                pipeline.metrics.ingest_latency.record(t_in.elapsed());
+            }
             let t0 = Instant::now();
-            match map_on_shard(pipeline, &mut mapper, &cache, &mut epoch, ev) {
+            match map_on_shard(pipeline, &mut mapper, &cache, &mut epoch, &d.ev, &mut tr)
+            {
                 Ok(outs) => {
                     pipeline.metrics.transformations.inc();
                     pipeline.metrics.map_latency.record(t0.elapsed());
+                    tr.stamp_epoch(epoch);
+                    tr.span(Stage::Map, t0);
+                    pipeline.tracer.finish(tr);
                     for out in outs {
                         outs_buf.push((out.1.key, Arc::new(out)));
                     }
                 }
                 Err(e) => {
                     pipeline.metrics.dead_letters.inc();
-                    pipeline.dlq.push(
-                        Arc::clone(ev),
-                        e.to_string(),
+                    tr.stamp_epoch(epoch);
+                    tr.span_err(Stage::Map, t0);
+                    let error = e.to_string();
+                    let dump = pipeline.tracer.finish_dead_letter(tr, &error);
+                    pipeline.dlq.push_traced(
+                        Arc::clone(&d.ev),
+                        error,
                         pipeline.retry.max_attempts,
+                        dump,
                     );
                 }
             }
@@ -312,6 +341,7 @@ fn map_on_shard(
     cache: &DcpmCache,
     epoch: &mut u64,
     ev: &CdcEvent,
+    tr: &mut EventTrace,
 ) -> Result<Vec<(CdcOp, OutMessage)>, MapError> {
     let Some(payload) = ev.mapping_payload() else {
         return Ok(Vec::new());
@@ -335,15 +365,18 @@ fn map_on_shard(
             // in-band evolution: a version the registry knows but the DMM
             // does not yet is patched into a fresh epoch, then retried
             let err = match err {
-                MapError::UnknownColumn { schema, version }
-                    if pipeline
-                        .evolution
-                        .on_unknown_version(pipeline, schema, version) =>
-                {
-                    refresh_worker(pipeline, mapper, cache, epoch);
-                    match mapper.map(payload) {
-                        Ok(outs) => return Ok(pair(ev.op, outs)),
-                        Err(e) => e,
+                MapError::UnknownColumn { schema, version } => {
+                    let t_heal = Instant::now();
+                    if pipeline.evolution.on_unknown_version(pipeline, schema, version) {
+                        tr.span(Stage::Heal, t_heal);
+                        refresh_worker(pipeline, mapper, cache, epoch);
+                        match mapper.map(payload) {
+                            Ok(outs) => return Ok(pair(ev.op, outs)),
+                            Err(e) => e,
+                        }
+                    } else {
+                        tr.span_err(Stage::Heal, t_heal);
+                        MapError::UnknownColumn { schema, version }
                     }
                 }
                 e => e,
@@ -360,15 +393,21 @@ fn map_on_shard(
                         // schema while this one migrated early) — give
                         // the in-band lane the same chance it gets on
                         // the first attempt
-                        Err(MapError::UnknownColumn { schema, version })
+                        Err(MapError::UnknownColumn { schema, version }) => {
+                            let t_heal = Instant::now();
                             if pipeline
                                 .evolution
-                                .on_unknown_version(pipeline, schema, version) =>
-                        {
-                            refresh_worker(pipeline, mapper, cache, epoch);
-                            let mut restamped = payload.clone();
-                            restamped.state = mapper.state();
-                            Ok(pair(ev.op, mapper.map(&restamped)?))
+                                .on_unknown_version(pipeline, schema, version)
+                            {
+                                tr.span(Stage::Heal, t_heal);
+                                refresh_worker(pipeline, mapper, cache, epoch);
+                                let mut restamped = payload.clone();
+                                restamped.state = mapper.state();
+                                Ok(pair(ev.op, mapper.map(&restamped)?))
+                            } else {
+                                tr.span_err(Stage::Heal, t_heal);
+                                Err(MapError::UnknownColumn { schema, version })
+                            }
                         }
                         Err(e) => Err(e),
                     }

@@ -44,6 +44,7 @@ pub mod schema;
 pub mod sink;
 pub mod source;
 pub mod store;
+pub mod trace;
 pub mod util;
 pub mod workload;
 pub mod xla_stub;
@@ -76,6 +77,7 @@ pub mod prelude {
         AttrId, Compatibility, ExtractType, Registry, SchemaId, SchemaTree,
         VersionNo,
     };
+    pub use crate::trace::{Stage, TraceCtx, Tracer};
     pub use crate::util::json::Json;
     pub use crate::util::rng::Rng;
     pub use crate::util::stats::Summary;

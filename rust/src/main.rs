@@ -7,6 +7,8 @@
 //!   inspect    UI-sim queries: reverse search + version progression
 //!   bulk       run an initial load through the XLA bulk lane
 //!   dashboard  run a short trace and print the fig-7 dashboard
+//!   trace      run a short trace, export Chrome trace-event JSON +
+//!              the Prometheus-style metric exposition
 
 use anyhow::{bail, Context, Result};
 
@@ -26,6 +28,7 @@ fn usage() -> ! {
         "usage: metl <command> [--profile small|paper_day|eos_scale] [--config FILE]\n\
          \x20                   [--sinks dw,ml,jsonl,audit] [--evict targeted|full]\n\
          \x20                   [--kernel native|scalar] [--store DIR]\n\
+         \x20                   [--trace on|off]\n\
          \n\
          commands:\n\
            run        [--instances N]   simulate a day trace end to end\n\
@@ -34,10 +37,17 @@ fn usage() -> ! {
            inspect    [--entity N | --schema N]\n\
            bulk       [--rows N]        initial load via the XLA bulk lane\n\
            dashboard                    short trace + fig-7 dashboard\n\
+           trace      [--out FILE] [--events N]\n\
+                                        short trace -> Chrome trace-event\n\
+                                        JSON (default trace.json) + metric\n\
+                                        exposition on stdout\n\
            csv-export [--out FILE]      export the DMM as mapping CSV\n\
            csv-import --file FILE       validate + import a mapping CSV\n\
-           serve      [--seconds N]     run the pipeline as a daemon with\n\
-                                        live traffic + periodic dashboards"
+           serve      [--seconds N] [--expose PATH|-]\n\
+                                        run the pipeline as a daemon with\n\
+                                        live traffic + periodic dashboards\n\
+                                        (--expose also writes the metric\n\
+                                        exposition each refresh)"
     );
     std::process::exit(2);
 }
@@ -108,6 +118,13 @@ fn load_config(args: &Args) -> Result<PipelineConfig> {
         cfg.store_dir =
             if dir.is_empty() { None } else { Some(dir.to_string()) };
     }
+    if let Some(mode) = args.get("trace") {
+        cfg.trace = match mode {
+            "on" | "true" => true,
+            "off" | "false" => false,
+            other => bail!("bad --trace {other:?} (expected on|off)"),
+        };
+    }
     Ok(cfg)
 }
 
@@ -121,6 +138,7 @@ fn main() -> Result<()> {
         "inspect" => cmd_inspect(&args, cfg),
         "bulk" => cmd_bulk(&args, cfg),
         "dashboard" => cmd_dashboard(cfg),
+        "trace" => cmd_trace(&args, cfg),
         "csv-export" => cmd_csv_export(&args, cfg),
         "csv-import" => cmd_csv_import(&args, cfg),
         "serve" => cmd_serve(&args, cfg),
@@ -186,11 +204,17 @@ fn cmd_serve(args: &Args, cfg: PipelineConfig) -> Result<()> {
         pipeline.drain_sinks();
         if last_dash.elapsed() >= std::time::Duration::from_secs(1) {
             println!("{}", pipeline.dashboard());
+            if let Some(path) = args.get("expose") {
+                write_exposition(&pipeline, path)?;
+            }
             last_dash = std::time::Instant::now();
         }
         std::thread::sleep(std::time::Duration::from_millis(2));
     }
     println!("{}", pipeline.dashboard());
+    if let Some(path) = args.get("expose") {
+        write_exposition(&pipeline, path)?;
+    }
     println!(
         "served {} events, {} updates, dlq={}",
         pipeline.metrics.events_in.get(),
@@ -209,6 +233,42 @@ fn cmd_serve(args: &Args, cfg: PipelineConfig) -> Result<()> {
             handle.metrics().flush_errors.get()
         );
     }
+    Ok(())
+}
+
+/// Write (or print, for `-`) the Prometheus-style text exposition.
+fn write_exposition(pipeline: &Pipeline, path: &str) -> Result<()> {
+    let text = pipeline.expose_text();
+    if path == "-" {
+        print!("{text}");
+    } else {
+        std::fs::write(path, &text)
+            .with_context(|| format!("write exposition {path}"))?;
+    }
+    Ok(())
+}
+
+/// Run a short day trace with tracing forced on and export every span as
+/// Chrome `trace_event` JSON (open in `chrome://tracing` or Perfetto),
+/// plus the metric exposition on stdout.
+fn cmd_trace(args: &Args, cfg: PipelineConfig) -> Result<()> {
+    let out = args.get("out").unwrap_or("trace.json");
+    let events = args.get_usize("events", cfg.trace_events.min(300))?;
+    let mut rng = Rng::seed_from(cfg.seed);
+    let mut cfg = cfg;
+    cfg.trace = true;
+    cfg.trace_events = events;
+    let ops = workload::day_trace(&cfg, &mut rng);
+    let pipeline = Pipeline::new(cfg)?;
+    pipeline.run_trace(&ops)?;
+    std::fs::write(out, pipeline.tracer.chrome_trace_json())
+        .with_context(|| format!("write trace {out}"))?;
+    println!(
+        "wrote {} spans from {} completed traces to {out}",
+        pipeline.tracer.span_count(),
+        pipeline.metrics.trace.traces.get(),
+    );
+    print!("{}", pipeline.expose_text());
     Ok(())
 }
 

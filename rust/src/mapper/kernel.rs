@@ -221,6 +221,16 @@ pub struct PlanStats {
     pub misses: AtomicU64,
 }
 
+impl PlanStats {
+    /// `(hits, misses)` snapshot for exposition.
+    pub fn counts(&self) -> (u64, u64) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+        )
+    }
+}
+
 /// Cache of compiled [`ColumnPlan`]s, keyed like the column cache.
 ///
 /// An entry is valid only while its [`Weak`] upgrades to the *same* `Arc`

@@ -63,6 +63,11 @@ impl ParallelMapper {
         self
     }
 
+    /// The trace lane this mapper's events execute on.
+    pub fn lane(&self) -> crate::trace::Lane {
+        self.kernel.into()
+    }
+
     pub fn state(&self) -> StateI {
         self.dpm.state
     }

@@ -1,10 +1,17 @@
 //! Pipeline metrics + the fig-7 dashboard: "we record the number of
 //! transformations, the time they take and the storage requirements of the
 //! Caffeine cache" (§7).
+//!
+//! Two machine-readable views sit next to the human dashboard:
+//! [`PipelineMetrics::expose_text`] renders a Prometheus-style text
+//! exposition with stable metric names (see ARCHITECTURE.md
+//! §Observability for the full table) and [`PipelineMetrics::snapshot`]
+//! the same data as a JSON document.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
+use crate::util::json::Json;
 use crate::util::stats::{format_ns, LatencyRecorder, LogHistogram, Summary};
 
 /// A monotonically increasing counter, cache-line-padded so the hot-path
@@ -77,6 +84,16 @@ impl ShardCounters {
             .unwrap()
             .iter()
             .map(|c| c.events.get())
+            .collect()
+    }
+
+    /// `(events, out)` per shard, in shard order.
+    pub fn rows(&self) -> Vec<(u64, u64)> {
+        self.shards
+            .read()
+            .unwrap()
+            .iter()
+            .map(|c| (c.events.get(), c.out.get()))
             .collect()
     }
 }
@@ -207,14 +224,18 @@ impl LatencyChannel {
         self.merged().summary()
     }
 
-    pub fn histogram(&self) -> String {
+    /// Shard histograms merged bucket-wise — no sample replay, so cost is
+    /// O(shards × buckets) regardless of how much was recorded.
+    pub fn merged_histogram(&self) -> LogHistogram {
         let mut merged = LogHistogram::new();
         for s in &self.shards {
-            for &ns in s.inner.lock().unwrap().0.samples() {
-                merged.record_ns(ns as u64);
-            }
+            merged.merge(&s.inner.lock().unwrap().1);
         }
-        merged.render()
+        merged
+    }
+
+    pub fn histogram(&self) -> String {
+        self.merged_histogram().render()
     }
 
     pub fn count(&self) -> usize {
@@ -250,6 +271,37 @@ pub struct StoreMetrics {
     pub replayed_updates: Counter,
 }
 
+/// Counters of the tracing subsystem itself: shared by `Arc` between
+/// [`PipelineMetrics`] and the `trace::Tracer` so conservation checks and
+/// exposition see live values.
+#[derive(Debug, Default)]
+pub struct TraceMetrics {
+    /// Spans admitted to the span buffer.
+    pub spans: Counter,
+    /// Spans dropped on buffer/trace overflow — surfaced by the scenario
+    /// conservation checks, never silent.
+    pub spans_dropped: Counter,
+    /// Event traces completed (one per consumed CDC event when tracing
+    /// is enabled, dead-lettered events included).
+    pub traces: Counter,
+    /// Flight-recorder dumps taken (dead-letter, flush error, recovery).
+    pub flight_dumps: Counter,
+}
+
+/// Cache-side values the exposition needs but `PipelineMetrics` doesn't
+/// own (they live in the `DcpmCache` / kernel `PlanCache`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheView {
+    /// Resident bytes of the DCPM cache (the paper's fig-7 storage axis).
+    pub bytes: usize,
+    /// DCPM column-cache hit rate in `[0, 1]`.
+    pub hit_rate: f64,
+    /// Native-kernel plan-cache hits.
+    pub plan_hits: u64,
+    /// Native-kernel plan-cache misses.
+    pub plan_misses: u64,
+}
+
 /// All counters/latencies of one METL deployment.
 #[derive(Debug, Default)]
 pub struct PipelineMetrics {
@@ -281,15 +333,41 @@ pub struct PipelineMetrics {
     pub store: Arc<StoreMetrics>,
     /// Per-sink counters/gauges of the registered egress backends.
     pub sinks: SinkMetricsRegistry,
+    /// Tracing-subsystem counters (span/trace/dump accounting).
+    pub trace: Arc<TraceMetrics>,
+    /// Per-event consume + provenance-stamp overhead.
+    pub ingest_latency: LatencyChannel,
     /// Per-event full mapping latency (the §7 headline metric).
     pub map_latency: LatencyChannel,
+    /// Per-drain-batch sink apply+flush latency.
+    pub egress_latency: LatencyChannel,
+    /// Per-commit durable-store WAL latency.
+    pub store_latency: LatencyChannel,
     /// End-to-end latency source-commit → DW-visible.
     pub e2e_latency: LatencyChannel,
     /// Per-change evolution-lane latency: event consumed → new epoch live.
     pub update_latency: LatencyChannel,
 }
 
+/// The stage-latency channels exported with stable `stage=` labels.
+const STAGE_CHANNELS: [&str; 6] =
+    ["ingest", "map", "egress", "store", "update", "e2e"];
+
 impl PipelineMetrics {
+    /// The stage-latency channel registered under `name` (one of
+    /// `ingest|map|egress|store|update|e2e`).
+    fn stage_channel(&self, name: &str) -> &LatencyChannel {
+        match name {
+            "ingest" => &self.ingest_latency,
+            "map" => &self.map_latency,
+            "egress" => &self.egress_latency,
+            "store" => &self.store_latency,
+            "update" => &self.update_latency,
+            "e2e" => &self.e2e_latency,
+            other => panic!("unknown stage channel {other}"),
+        }
+    }
+
     /// Render the fig-7 style text dashboard.
     pub fn dashboard(&self, cache_bytes: usize, cache_hit_rate: f64) -> String {
         let s = self.map_latency.summary();
@@ -357,6 +435,28 @@ impl PipelineMetrics {
             self.store.recovery_ms.get(),
             self.store.replayed_updates.get()
         ));
+        let ing = self.ingest_latency.summary();
+        let eg = self.egress_latency.summary();
+        let st = self.store_latency.summary();
+        out.push_str(&format!(
+            "| stage p99  ingest {:>9} egress {:>9}       |\n",
+            format_ns(ing.p99),
+            format_ns(eg.p99)
+        ));
+        out.push_str(&format!(
+            "|            store  {:>9}                       |\n",
+            format_ns(st.p99)
+        ));
+        out.push_str(&format!(
+            "| trace spans       {:>12}  dropped  {:>9} |\n",
+            self.trace.spans.get(),
+            self.trace.spans_dropped.get()
+        ));
+        out.push_str(&format!(
+            "| trace completed   {:>12}  dumps    {:>9} |\n",
+            self.trace.traces.get(),
+            self.trace.flight_dumps.get()
+        ));
         for row in self.sinks.rows() {
             out.push_str(&format!(
                 "| sink {:<7} drained {:>9} dup {:>5} lag {:>5} |\n",
@@ -373,6 +473,214 @@ impl PipelineMetrics {
         out.push_str("map latency histogram:\n");
         out.push_str(&self.map_latency.histogram());
         out
+    }
+
+    /// Prometheus-style text exposition. Metric names are a stable
+    /// contract (golden-tested; table in ARCHITECTURE.md §Observability):
+    /// renaming one is a breaking change for scrapers.
+    pub fn expose_text(&self, cache: &CacheView) -> String {
+        let mut out = String::new();
+        let mut counter = |name: &str, v: u64| {
+            out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+        };
+        counter("metl_events_in_total", self.events_in.get());
+        counter("metl_messages_out_total", self.messages_out.get());
+        counter("metl_transformations_total", self.transformations.get());
+        counter("metl_dead_letters_total", self.dead_letters.get());
+        counter("metl_sync_retries_total", self.sync_retries.get());
+        counter("metl_dmm_updates_total", self.dmm_updates.get());
+        counter("metl_rejected_changes_total", self.rejected_changes.get());
+        counter("metl_bulk_events_total", self.bulk_events.get());
+        counter("metl_trace_spans_total", self.trace.spans.get());
+        counter("metl_trace_spans_dropped_total", self.trace.spans_dropped.get());
+        counter("metl_trace_traces_total", self.trace.traces.get());
+        counter("metl_trace_flight_dumps_total", self.trace.flight_dumps.get());
+        counter("metl_store_wal_bytes_total", self.store.wal_bytes.get());
+        counter("metl_store_wal_fsyncs_total", self.store.wal_fsyncs.get());
+        counter("metl_store_segment_gc_total", self.store.segment_gc_total.get());
+        counter(
+            "metl_store_replayed_updates_total",
+            self.store.replayed_updates.get(),
+        );
+        counter("metl_plan_cache_hits_total", cache.plan_hits);
+        counter("metl_plan_cache_misses_total", cache.plan_misses);
+
+        let mut gauge = |name: &str, v: f64| {
+            out.push_str(&format!("# TYPE {name} gauge\n{name} {v}\n"));
+        };
+        gauge("metl_dmm_epoch", self.dmm_epoch.get() as f64);
+        gauge("metl_epoch_lag", self.epoch_lag.get() as f64);
+        gauge("metl_store_segments_live", self.store.segments_live.get() as f64);
+        gauge("metl_store_recovery_ms", self.store.recovery_ms.get() as f64);
+        gauge("metl_cache_bytes", cache.bytes as f64);
+        gauge("metl_cache_hit_rate", cache.hit_rate);
+
+        out.push_str("# TYPE metl_shard_events_total counter\n");
+        out.push_str("# TYPE metl_shard_out_total counter\n");
+        for (i, (events, msgs)) in self.shard.rows().iter().enumerate() {
+            out.push_str(&format!(
+                "metl_shard_events_total{{shard=\"{i}\"}} {events}\n"
+            ));
+            out.push_str(&format!("metl_shard_out_total{{shard=\"{i}\"}} {msgs}\n"));
+        }
+
+        out.push_str("# TYPE metl_sink_drained_total counter\n");
+        out.push_str("# TYPE metl_sink_flush_errors_total counter\n");
+        out.push_str("# TYPE metl_sink_duplicates gauge\n");
+        out.push_str("# TYPE metl_sink_dropped gauge\n");
+        out.push_str("# TYPE metl_sink_lag gauge\n");
+        for row in self.sinks.rows() {
+            let n = &row.name;
+            out.push_str(&format!(
+                "metl_sink_drained_total{{sink=\"{n}\"}} {}\n",
+                row.drained
+            ));
+            out.push_str(&format!(
+                "metl_sink_flush_errors_total{{sink=\"{n}\"}} {}\n",
+                row.flush_errors
+            ));
+            out.push_str(&format!(
+                "metl_sink_duplicates{{sink=\"{n}\"}} {}\n",
+                row.duplicates
+            ));
+            out.push_str(&format!(
+                "metl_sink_dropped{{sink=\"{n}\"}} {}\n",
+                row.dropped
+            ));
+            out.push_str(&format!("metl_sink_lag{{sink=\"{n}\"}} {}\n", row.lag));
+        }
+
+        out.push_str("# TYPE metl_stage_latency_ns summary\n");
+        for stage in STAGE_CHANNELS {
+            let s = self.stage_channel(stage).summary();
+            for (q, v) in
+                [("0.5", s.p50), ("0.9", s.p90), ("0.99", s.p99)]
+            {
+                out.push_str(&format!(
+                    "metl_stage_latency_ns{{stage=\"{stage}\",quantile=\"{q}\"}} {v}\n"
+                ));
+            }
+            out.push_str(&format!(
+                "metl_stage_latency_ns_sum{{stage=\"{stage}\"}} {}\n",
+                s.mean * s.count as f64
+            ));
+            out.push_str(&format!(
+                "metl_stage_latency_ns_count{{stage=\"{stage}\"}} {}\n",
+                s.count
+            ));
+        }
+        out
+    }
+
+    /// The same data as [`PipelineMetrics::expose_text`], as one JSON
+    /// document (for dashboards that want structure, and for tests).
+    pub fn snapshot(&self, cache: &CacheView) -> Json {
+        let mut counters = Json::obj();
+        counters.set("events_in", Json::Num(self.events_in.get() as f64));
+        counters.set("messages_out", Json::Num(self.messages_out.get() as f64));
+        counters.set(
+            "transformations",
+            Json::Num(self.transformations.get() as f64),
+        );
+        counters.set("dead_letters", Json::Num(self.dead_letters.get() as f64));
+        counters.set("sync_retries", Json::Num(self.sync_retries.get() as f64));
+        counters.set("dmm_updates", Json::Num(self.dmm_updates.get() as f64));
+        counters.set(
+            "rejected_changes",
+            Json::Num(self.rejected_changes.get() as f64),
+        );
+        counters.set("bulk_events", Json::Num(self.bulk_events.get() as f64));
+        counters.set("dmm_epoch", Json::Num(self.dmm_epoch.get() as f64));
+        counters.set("epoch_lag", Json::Num(self.epoch_lag.get() as f64));
+
+        let mut trace = Json::obj();
+        trace.set("spans", Json::Num(self.trace.spans.get() as f64));
+        trace.set(
+            "spans_dropped",
+            Json::Num(self.trace.spans_dropped.get() as f64),
+        );
+        trace.set("traces", Json::Num(self.trace.traces.get() as f64));
+        trace.set(
+            "flight_dumps",
+            Json::Num(self.trace.flight_dumps.get() as f64),
+        );
+
+        let mut store = Json::obj();
+        store.set("wal_bytes", Json::Num(self.store.wal_bytes.get() as f64));
+        store.set("wal_fsyncs", Json::Num(self.store.wal_fsyncs.get() as f64));
+        store.set(
+            "segments_live",
+            Json::Num(self.store.segments_live.get() as f64),
+        );
+        store.set(
+            "segment_gc_total",
+            Json::Num(self.store.segment_gc_total.get() as f64),
+        );
+        store.set("recovery_ms", Json::Num(self.store.recovery_ms.get() as f64));
+        store.set(
+            "replayed_updates",
+            Json::Num(self.store.replayed_updates.get() as f64),
+        );
+
+        let mut cache_obj = Json::obj();
+        cache_obj.set("bytes", Json::Num(cache.bytes as f64));
+        cache_obj.set("hit_rate", Json::Num(cache.hit_rate));
+        cache_obj.set("plan_hits", Json::Num(cache.plan_hits as f64));
+        cache_obj.set("plan_misses", Json::Num(cache.plan_misses as f64));
+
+        let mut stages = Json::obj();
+        for stage in STAGE_CHANNELS {
+            let s = self.stage_channel(stage).summary();
+            let mut o = Json::obj();
+            o.set("count", Json::Num(s.count as f64));
+            o.set("mean_ns", Json::Num(s.mean));
+            o.set("std_ns", Json::Num(s.std));
+            o.set("p50_ns", Json::Num(s.p50));
+            o.set("p90_ns", Json::Num(s.p90));
+            o.set("p99_ns", Json::Num(s.p99));
+            o.set("max_ns", Json::Num(s.max));
+            stages.set(stage, o);
+        }
+
+        let shards = Json::Arr(
+            self.shard
+                .rows()
+                .iter()
+                .map(|(events, msgs)| {
+                    let mut o = Json::obj();
+                    o.set("events", Json::Num(*events as f64));
+                    o.set("out", Json::Num(*msgs as f64));
+                    o
+                })
+                .collect(),
+        );
+
+        let sinks = Json::Arr(
+            self.sinks
+                .rows()
+                .iter()
+                .map(|row| {
+                    let mut o = Json::obj();
+                    o.set("name", Json::Str(row.name.clone()));
+                    o.set("drained", Json::Num(row.drained as f64));
+                    o.set("duplicates", Json::Num(row.duplicates as f64));
+                    o.set("dropped", Json::Num(row.dropped as f64));
+                    o.set("lag", Json::Num(row.lag as f64));
+                    o.set("flush_errors", Json::Num(row.flush_errors as f64));
+                    o
+                })
+                .collect(),
+        );
+
+        let mut doc = Json::obj();
+        doc.set("counters", counters);
+        doc.set("trace", trace);
+        doc.set("store", store);
+        doc.set("cache", cache_obj);
+        doc.set("stages", stages);
+        doc.set("shards", shards);
+        doc.set("sinks", sinks);
+        doc
     }
 }
 

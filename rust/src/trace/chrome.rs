@@ -1,0 +1,105 @@
+//! Chrome `trace_event` JSON export.
+//!
+//! Emits the "JSON Object Format" (`{"traceEvents": [...]}`) with
+//! complete events (`"ph": "X"`, microsecond `ts`/`dur`), loadable in
+//! `chrome://tracing` or Perfetto. Track layout: one `tid` per mapping
+//! shard, a track per sink, and a control track for store/recovery spans.
+
+use crate::util::json::Json;
+
+use super::{Span, Stage, TraceCtx, Tracer, SINK_NONE};
+
+/// `pid` for all pipeline tracks (single process).
+const PID: u64 = 1;
+/// `tid` base for per-sink egress tracks.
+const TID_SINK_BASE: u64 = 1000;
+/// `tid` for control-plane spans (store commit, recovery).
+const TID_CONTROL: u64 = 900;
+
+fn tid_for(ctx: &TraceCtx, span: &Span) -> u64 {
+    match span.stage {
+        Stage::Egress if span.sink != SINK_NONE => TID_SINK_BASE + span.sink as u64,
+        Stage::StoreCommit | Stage::Recovery => TID_CONTROL,
+        _ => ctx.shard as u64,
+    }
+}
+
+/// Render buffered spans as a Chrome trace JSON document.
+pub fn render(spans: &[(TraceCtx, Span)], tracer: &Tracer) -> String {
+    let mut events = Vec::with_capacity(spans.len());
+    for (ctx, span) in spans {
+        let mut args = Json::obj();
+        args.set("trace_id", Json::Num(ctx.trace_id as f64));
+        args.set("partition", Json::Num(ctx.partition as f64));
+        args.set("offset", Json::Num(ctx.offset as f64));
+        args.set("schema", Json::Num(ctx.schema as f64));
+        args.set("version", Json::Num(ctx.version as f64));
+        args.set("epoch", Json::Num(ctx.epoch as f64));
+        args.set("lane", Json::Str(ctx.lane.name().to_string()));
+        args.set("ok", Json::Bool(span.ok));
+        if let Some(name) = tracer.sink_name(span.sink) {
+            args.set("sink", Json::Str(name));
+        }
+        let mut ev = Json::obj();
+        ev.set("name", Json::Str(span.stage.name().to_string()));
+        ev.set("cat", Json::Str("metl".to_string()));
+        ev.set("ph", Json::Str("X".to_string()));
+        // trace_event timestamps are microseconds
+        ev.set("ts", Json::Num(span.ts_ns as f64 / 1_000.0));
+        ev.set("dur", Json::Num(span.dur_ns as f64 / 1_000.0));
+        ev.set("pid", Json::Num(PID as f64));
+        ev.set("tid", Json::Num(tid_for(ctx, span) as f64));
+        ev.set("args", args);
+        events.push(ev);
+    }
+    let mut doc = Json::obj();
+    doc.set("traceEvents", Json::Arr(events));
+    doc.set("displayTimeUnit", Json::Str("ns".to_string()));
+    doc.to_pretty()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Tracer;
+    use super::*;
+    use crate::metrics::TraceMetrics;
+    use crate::util::json;
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    #[test]
+    fn export_parses_and_has_complete_events() {
+        let tr = Tracer::new(Arc::new(TraceMetrics::default()), true);
+        let sink = tr.register_sink("dw");
+        let mut t = tr.begin(1, 5);
+        t.stamp_payload(2, 1);
+        t.stamp_epoch(3);
+        let t0 = Instant::now();
+        t.span(Stage::Ingest, t0);
+        t.span(Stage::Map, t0);
+        tr.finish(t);
+        tr.record_span(TraceCtx::default(), Stage::Egress, sink, Instant::now(), true);
+
+        let text = tr.chrome_trace_json();
+        let doc = json::parse(&text).expect("valid json");
+        let events = doc.get("traceEvents").and_then(Json::as_arr).expect("traceEvents");
+        assert_eq!(events.len(), 3);
+        for ev in events {
+            assert_eq!(ev.get("ph").and_then(Json::as_str), Some("X"));
+            assert!(ev.get("ts").and_then(Json::as_f64).is_some());
+            assert!(ev.get("dur").and_then(Json::as_f64).is_some());
+            assert!(ev.get("pid").and_then(Json::as_u64).is_some());
+            assert!(ev.get("tid").and_then(Json::as_u64).is_some());
+        }
+        // the egress span landed on the sink track with its name in args
+        let egress = events
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("egress"))
+            .unwrap();
+        assert_eq!(egress.get("tid").and_then(Json::as_u64), Some(TID_SINK_BASE));
+        assert_eq!(
+            egress.get("args").unwrap().get("sink").and_then(Json::as_str),
+            Some("dw")
+        );
+    }
+}

@@ -1,0 +1,223 @@
+//! Flight recorder: a bounded ring of the last N completed traces.
+//!
+//! When something goes wrong after the fact — a record dead-letters, a
+//! sink flush fails, the store recovers from a crash — the ring is
+//! rendered into a [`FlightDump`] so the operator (and the quarantined
+//! record itself) gets the causal history leading up to the failure, not
+//! just a counter bump.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use crate::metrics::TraceMetrics;
+use crate::util::stats::format_ns;
+
+use super::{Span, TraceCtx, Tracer, MAX_EVENT_SPANS, SINK_NONE};
+
+/// Default completed-trace ring capacity.
+pub const DEFAULT_FLIGHT_CAP: usize = 256;
+
+/// How many recent traces a non-dead-letter dump includes.
+const DUMP_TRACES: usize = 16;
+
+/// Bounded number of retained dumps (oldest evicted).
+const MAX_DUMPS: usize = 64;
+
+/// One finished trace held in the flight ring.
+#[derive(Debug, Clone)]
+pub struct CompletedTrace {
+    pub ctx: TraceCtx,
+    spans: [Span; MAX_EVENT_SPANS],
+    n: u8,
+    /// Dead-letter error, when the trace ended in quarantine.
+    pub error: Option<String>,
+}
+
+impl CompletedTrace {
+    pub(super) fn new(ctx: TraceCtx, spans: &[Span], error: Option<&str>) -> CompletedTrace {
+        let mut arr = [Span::default(); MAX_EVENT_SPANS];
+        let n = spans.len().min(MAX_EVENT_SPANS);
+        arr[..n].copy_from_slice(&spans[..n]);
+        CompletedTrace { ctx, spans: arr, n: n as u8, error: error.map(str::to_string) }
+    }
+
+    pub fn spans(&self) -> &[Span] {
+        &self.spans[..self.n as usize]
+    }
+
+    /// Timestamp of the trace's last span (ring ordering key).
+    fn end_ts(&self) -> u64 {
+        self.spans().iter().map(|s| s.ts_ns + s.dur_ns).max().unwrap_or(0)
+    }
+
+    /// Render the full span chain, e.g.:
+    ///
+    /// ```text
+    /// trace=7 src=p2@17 schema=s3v99 epoch=4 shard=0 lane=native
+    ///   ingest        1.20µs ok
+    ///   map          39.00ms FAIL
+    ///   error: unknown version v99
+    /// ```
+    pub fn render(&self, tracer: &Tracer) -> String {
+        let mut out = self.ctx.render();
+        out.push('\n');
+        for s in self.spans() {
+            let stage = if s.stage == super::Stage::Egress && s.sink != SINK_NONE {
+                match tracer.sink_name(s.sink) {
+                    Some(name) => format!("{}:{}", s.stage.name(), name),
+                    None => s.stage.name().to_string(),
+                }
+            } else {
+                s.stage.name().to_string()
+            };
+            out.push_str(&format!(
+                "  {:<14} {:>10} {}\n",
+                stage,
+                format_ns(s.dur_ns as f64),
+                if s.ok { "ok" } else { "FAIL" }
+            ));
+        }
+        if let Some(err) = &self.error {
+            out.push_str(&format!("  error: {err}\n"));
+        }
+        out
+    }
+}
+
+/// One rendered flight-recorder dump.
+#[derive(Debug, Clone)]
+pub struct FlightDump {
+    /// Why the dump was taken ("dead-letter: …", "sink dw flush error",
+    /// "store-recovery").
+    pub reason: String,
+    /// Rendered traces, oldest first.
+    pub traces: Vec<String>,
+}
+
+impl FlightDump {
+    pub fn render(&self) -> String {
+        let mut out = format!("=== flight dump: {} ({} traces) ===\n", self.reason, self.traces.len());
+        for t in &self.traces {
+            out.push_str(t);
+        }
+        out
+    }
+}
+
+/// The ring itself. Sub-ring sharded by thread (same affinity scheme as
+/// the span buffer) so the per-event `push` doesn't serialize workers;
+/// dumps merge and re-order by end timestamp.
+#[derive(Debug)]
+pub(super) struct FlightRecorder {
+    rings: Vec<Mutex<VecDeque<CompletedTrace>>>,
+    cap_per_ring: usize,
+    dumps: Mutex<VecDeque<FlightDump>>,
+}
+
+const SUB_RINGS: usize = 8;
+
+impl FlightRecorder {
+    pub(super) fn new(capacity: usize) -> FlightRecorder {
+        FlightRecorder {
+            rings: (0..SUB_RINGS).map(|_| Mutex::new(VecDeque::new())).collect(),
+            cap_per_ring: (capacity / SUB_RINGS).max(1),
+            dumps: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    pub(super) fn push(&self, t: CompletedTrace) {
+        let id = std::thread::current().id();
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        std::hash::Hash::hash(&id, &mut h);
+        let idx = std::hash::Hasher::finish(&h) as usize % self.rings.len();
+        let mut ring = self.rings[idx].lock().unwrap();
+        if ring.len() >= self.cap_per_ring {
+            ring.pop_front();
+        }
+        ring.push_back(t);
+    }
+
+    /// Completed traces across all sub-rings, oldest first.
+    pub(super) fn snapshot(&self) -> Vec<CompletedTrace> {
+        let mut all: Vec<CompletedTrace> = Vec::new();
+        for ring in &self.rings {
+            all.extend(ring.lock().unwrap().iter().cloned());
+        }
+        all.sort_by_key(|t| t.end_ts());
+        all
+    }
+
+    /// Render the most recent traces into a dump under `reason`.
+    pub(super) fn dump_recent(
+        &self,
+        reason: &str,
+        tracer: &Tracer,
+        metrics: &TraceMetrics,
+    ) -> Option<FlightDump> {
+        let all = self.snapshot();
+        let tail = all.iter().rev().take(DUMP_TRACES).rev();
+        let traces: Vec<String> = tail.map(|t| t.render(tracer)).collect();
+        Some(self.dump(reason, traces, metrics))
+    }
+
+    /// Record a pre-rendered dump (dead-letter path renders its one trace).
+    pub(super) fn dump(
+        &self,
+        reason: &str,
+        traces: Vec<String>,
+        metrics: &TraceMetrics,
+    ) -> FlightDump {
+        let d = FlightDump { reason: reason.to_string(), traces };
+        let mut dumps = self.dumps.lock().unwrap();
+        if dumps.len() >= MAX_DUMPS {
+            dumps.pop_front();
+        }
+        dumps.push_back(d.clone());
+        metrics.flight_dumps.inc();
+        d
+    }
+
+    pub(super) fn dumps(&self) -> Vec<FlightDump> {
+        self.dumps.lock().unwrap().iter().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Stage, Tracer};
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    #[test]
+    fn ring_is_bounded() {
+        let tr = Tracer::with_capacity(Arc::new(TraceMetrics::default()), true, 1 << 12, 8);
+        for i in 0..100 {
+            let mut t = tr.begin(0, i);
+            t.span(Stage::Map, Instant::now());
+            tr.finish(t);
+        }
+        // single thread → one sub-ring of cap 8/8 = 1
+        let snap = tr.flight_snapshot();
+        assert!(!snap.is_empty() && snap.len() <= 8, "len={}", snap.len());
+        // the retained trace is the most recent one
+        assert_eq!(snap.last().unwrap().ctx.offset, 99);
+    }
+
+    #[test]
+    fn dump_recent_renders_tail() {
+        let tr = Tracer::with_capacity(Arc::new(TraceMetrics::default()), true, 1 << 12, 64);
+        for i in 0..5 {
+            let mut t = tr.begin(1, i);
+            t.stamp_epoch(i);
+            t.span(Stage::Map, Instant::now());
+            tr.finish(t);
+        }
+        let dump = tr.dump_recent("sink dw flush error").unwrap();
+        assert_eq!(dump.reason, "sink dw flush error");
+        assert_eq!(dump.traces.len(), 5);
+        assert!(dump.render().contains("flight dump"));
+        assert!(dump.traces.iter().any(|t| t.contains("p1@4")));
+        assert_eq!(tr.dumps().len(), 1);
+    }
+}

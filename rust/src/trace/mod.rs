@@ -1,0 +1,593 @@
+//! Span-based tracing and record provenance.
+//!
+//! Every CDC event processed by the pipeline carries a [`TraceCtx`] — its
+//! trace id, source partition/offset, schema id + version, the DMM epoch
+//! it was mapped under, the kernel lane, and the worker shard. Each stage
+//! (ingest → map/kernel → evolution heal → egress per sink → store
+//! commit) records a timed [`Span`] into a thread-sharded bounded
+//! [`Tracer`] buffer, exportable as Chrome `trace_event` JSON
+//! ([`Tracer::chrome_trace_json`]) for flamegraph viewing.
+//!
+//! On top sits the [`flight`] recorder: a bounded ring of the last N
+//! completed traces, dumped automatically on dead-letter, sink flush
+//! error, or store recovery — so every quarantined record ships with its
+//! full causal history.
+//!
+//! Cost model: recording is on by default (`PipelineConfig::trace`), so
+//! the hot path must stay cheap — [`EventTrace`] is a stack value with a
+//! fixed-size span array (no per-event allocation), and the only
+//! synchronization per event is one lock on a thread-affine buffer shard
+//! plus one on a thread-affine flight sub-ring. `benches/overhead.rs`
+//! gates the end-to-end overhead at < 5%.
+
+pub mod chrome;
+pub mod flight;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+use crate::mapper::kernel::KernelMode;
+use crate::metrics::TraceMetrics;
+
+pub use flight::{CompletedTrace, FlightDump};
+
+/// Pipeline stage a span measures. Names are stable — they appear in
+/// metric labels and Chrome trace output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Stage {
+    /// Source consume + provenance stamping overhead.
+    Ingest,
+    /// DMM mapping (Alg 6 / native kernel), including sync retries.
+    Map,
+    /// In-band evolution heal (Alg-5 case 3) triggered by this event.
+    Heal,
+    /// One sink drain batch: apply + flush.
+    Egress,
+    /// Durable-store WAL commit of an evolution-lane update.
+    StoreCommit,
+    /// Store recovery replay at startup.
+    Recovery,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 6] = [
+        Stage::Ingest,
+        Stage::Map,
+        Stage::Heal,
+        Stage::Egress,
+        Stage::StoreCommit,
+        Stage::Recovery,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Ingest => "ingest",
+            Stage::Map => "map",
+            Stage::Heal => "heal",
+            Stage::Egress => "egress",
+            Stage::StoreCommit => "store_commit",
+            Stage::Recovery => "recovery",
+        }
+    }
+}
+
+/// Which execution lane mapped the event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[repr(u8)]
+pub enum Lane {
+    /// Scalar Alg-6 per-element mapping.
+    Scalar,
+    /// Native block-permutation kernel.
+    Native,
+    /// XLA/native bulk initial-load lane.
+    Bulk,
+    /// Control-plane work (evolution, store, recovery).
+    #[default]
+    Control,
+}
+
+impl Lane {
+    pub fn name(self) -> &'static str {
+        match self {
+            Lane::Scalar => "scalar",
+            Lane::Native => "native",
+            Lane::Bulk => "bulk",
+            Lane::Control => "control",
+        }
+    }
+}
+
+impl From<KernelMode> for Lane {
+    fn from(k: KernelMode) -> Lane {
+        match k {
+            KernelMode::Native => Lane::Native,
+            KernelMode::Scalar => Lane::Scalar,
+        }
+    }
+}
+
+/// Sink index meaning "no sink" on non-egress spans.
+pub const SINK_NONE: u8 = u8::MAX;
+
+/// Provenance carried by one traced event through the pipeline.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TraceCtx {
+    /// Unique per-tracer trace id (0 = batch/control span, not an event).
+    pub trace_id: u64,
+    /// Source CDC topic partition the event was consumed from.
+    pub partition: u32,
+    /// Offset within that partition.
+    pub offset: u64,
+    /// Schema id of the mapping payload.
+    pub schema: u32,
+    /// Schema version of the mapping payload.
+    pub version: u32,
+    /// DMM epoch the event was (last) mapped under.
+    pub epoch: u64,
+    /// Worker shard of the sharded mapping lane (0 in the single lane).
+    pub shard: u16,
+    /// Execution lane.
+    pub lane: Lane,
+}
+
+impl TraceCtx {
+    /// Render the provenance half of a flight-recorder line.
+    pub fn render(&self) -> String {
+        format!(
+            "trace={} src=p{}@{} schema=s{}v{} epoch={} shard={} lane={}",
+            self.trace_id,
+            self.partition,
+            self.offset,
+            self.schema,
+            self.version,
+            self.epoch,
+            self.shard,
+            self.lane.name()
+        )
+    }
+}
+
+/// One timed stage of a trace. Timestamps are nanoseconds relative to the
+/// owning [`Tracer`]'s anchor instant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    pub stage: Stage,
+    /// Registered sink index for [`Stage::Egress`], else [`SINK_NONE`].
+    pub sink: u8,
+    pub ok: bool,
+    pub ts_ns: u64,
+    pub dur_ns: u64,
+}
+
+impl Default for Span {
+    fn default() -> Self {
+        Span { stage: Stage::Ingest, sink: SINK_NONE, ok: true, ts_ns: 0, dur_ns: 0 }
+    }
+}
+
+/// Max spans retained per event trace (ingest + map + a few heal
+/// retries); later spans are dropped and counted.
+pub const MAX_EVENT_SPANS: usize = 6;
+
+/// Per-event trace under construction: a stack value threaded through
+/// `process_event` — no allocation, nothing shared until
+/// [`Tracer::finish`].
+#[derive(Debug, Clone)]
+pub struct EventTrace {
+    active: bool,
+    anchor: Instant,
+    ctx: TraceCtx,
+    n: u8,
+    overflow: u8,
+    spans: [Span; MAX_EVENT_SPANS],
+}
+
+impl EventTrace {
+    /// A no-op trace: every method returns immediately. Used when tracing
+    /// is disabled and by untraced internal callers.
+    pub fn inactive() -> EventTrace {
+        EventTrace {
+            active: false,
+            anchor: Instant::now(),
+            ctx: TraceCtx::default(),
+            n: 0,
+            overflow: 0,
+            spans: [Span::default(); MAX_EVENT_SPANS],
+        }
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.active
+    }
+
+    pub fn ctx(&self) -> TraceCtx {
+        self.ctx
+    }
+
+    /// Stamp schema id + version from the mapping payload.
+    pub fn stamp_payload(&mut self, schema: u32, version: u32) {
+        self.ctx.schema = schema;
+        self.ctx.version = version;
+    }
+
+    /// Stamp the DMM epoch the event is being mapped under (re-stamped
+    /// after an in-band heal or worker epoch refresh).
+    pub fn stamp_epoch(&mut self, epoch: u64) {
+        self.ctx.epoch = epoch;
+    }
+
+    pub fn stamp_shard(&mut self, shard: u16) {
+        self.ctx.shard = shard;
+    }
+
+    pub fn stamp_lane(&mut self, lane: Lane) {
+        self.ctx.lane = lane;
+    }
+
+    /// Record a successful span covering `t0 → now`.
+    pub fn span(&mut self, stage: Stage, t0: Instant) {
+        self.push(stage, t0, true);
+    }
+
+    /// Record a failed span covering `t0 → now`.
+    pub fn span_err(&mut self, stage: Stage, t0: Instant) {
+        self.push(stage, t0, false);
+    }
+
+    fn push(&mut self, stage: Stage, t0: Instant, ok: bool) {
+        if !self.active {
+            return;
+        }
+        if (self.n as usize) >= MAX_EVENT_SPANS {
+            self.overflow += 1;
+            return;
+        }
+        let ts_ns = t0
+            .checked_duration_since(self.anchor)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        self.spans[self.n as usize] = Span {
+            stage,
+            sink: SINK_NONE,
+            ok,
+            ts_ns,
+            dur_ns: t0.elapsed().as_nanos() as u64,
+        };
+        self.n += 1;
+    }
+
+    /// Spans recorded so far.
+    pub fn spans(&self) -> &[Span] {
+        &self.spans[..self.n as usize]
+    }
+}
+
+/// One shard of the span buffer: cache-line padded so hot worker threads
+/// don't false-share.
+#[derive(Debug, Default)]
+#[repr(align(64))]
+struct BufShard {
+    inner: Mutex<Vec<(TraceCtx, Span)>>,
+}
+
+const BUF_SHARDS: usize = 16;
+
+/// Default total span-buffer capacity across shards. At ~48 bytes per
+/// slot this bounds the buffer to a few MiB; overflow is dropped and
+/// counted in `TraceMetrics::spans_dropped` (surfaced by the scenario
+/// conservation checks — never silent).
+pub const DEFAULT_SPAN_CAPACITY: usize = 1 << 18;
+
+/// The pipeline-wide trace collector: hands out [`EventTrace`]s, stores
+/// completed spans in thread-sharded bounded buffers, and feeds the
+/// [`flight`] recorder.
+#[derive(Debug)]
+pub struct Tracer {
+    enabled: AtomicBool,
+    anchor: Instant,
+    next_id: AtomicU64,
+    shards: Vec<BufShard>,
+    cap_per_shard: usize,
+    flight: flight::FlightRecorder,
+    sink_names: RwLock<Vec<String>>,
+    /// Shared with `PipelineMetrics::trace` so exposition sees live values.
+    pub metrics: Arc<TraceMetrics>,
+}
+
+impl Tracer {
+    pub fn new(metrics: Arc<TraceMetrics>, enabled: bool) -> Tracer {
+        Tracer::with_capacity(metrics, enabled, DEFAULT_SPAN_CAPACITY, flight::DEFAULT_FLIGHT_CAP)
+    }
+
+    /// Tracer with explicit span-buffer and flight-ring bounds (tests).
+    pub fn with_capacity(
+        metrics: Arc<TraceMetrics>,
+        enabled: bool,
+        span_capacity: usize,
+        flight_capacity: usize,
+    ) -> Tracer {
+        Tracer {
+            enabled: AtomicBool::new(enabled),
+            anchor: Instant::now(),
+            next_id: AtomicU64::new(1),
+            shards: (0..BUF_SHARDS).map(|_| BufShard::default()).collect(),
+            cap_per_shard: (span_capacity / BUF_SHARDS).max(1),
+            flight: flight::FlightRecorder::new(flight_capacity),
+            sink_names: RwLock::new(Vec::new()),
+            metrics,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Register a sink name, returning its stable index for egress spans.
+    pub fn register_sink(&self, name: &str) -> u8 {
+        let mut names = self.sink_names.write().unwrap();
+        if let Some(i) = names.iter().position(|n| n == name) {
+            return i as u8;
+        }
+        names.push(name.to_string());
+        (names.len() - 1) as u8
+    }
+
+    /// Name of a registered sink index.
+    pub fn sink_name(&self, idx: u8) -> Option<String> {
+        self.sink_names.read().unwrap().get(idx as usize).cloned()
+    }
+
+    /// Begin tracing one consumed event. Near-free when disabled.
+    pub fn begin(&self, partition: u32, offset: u64) -> EventTrace {
+        if !self.enabled() {
+            return EventTrace::inactive();
+        }
+        EventTrace {
+            active: true,
+            anchor: self.anchor,
+            ctx: TraceCtx {
+                trace_id: self.next_id.fetch_add(1, Ordering::Relaxed),
+                partition,
+                offset,
+                ..TraceCtx::default()
+            },
+            n: 0,
+            overflow: 0,
+            spans: [Span::default(); MAX_EVENT_SPANS],
+        }
+    }
+
+    /// Complete a trace: persist its spans and admit it to the flight ring.
+    pub fn finish(&self, t: EventTrace) {
+        self.finish_inner(t, None);
+    }
+
+    /// Complete a dead-lettered trace; returns the rendered flight dump
+    /// (the record's full causal history) for attachment to the DLQ entry.
+    pub fn finish_dead_letter(&self, t: EventTrace, error: &str) -> Option<String> {
+        if !t.active {
+            return None;
+        }
+        let completed = self.finish_inner(t, Some(error));
+        let rendered = completed.as_ref().map(|c| c.render(self));
+        if let Some(text) = &rendered {
+            self.flight.dump(
+                &format!("dead-letter: {error}"),
+                vec![text.clone()],
+                &self.metrics,
+            );
+        }
+        rendered
+    }
+
+    fn finish_inner(&self, t: EventTrace, error: Option<&str>) -> Option<CompletedTrace> {
+        if !t.active {
+            return None;
+        }
+        self.push_spans(t.ctx, t.spans());
+        if t.overflow > 0 {
+            self.metrics.spans_dropped.add(t.overflow as u64);
+        }
+        self.metrics.traces.inc();
+        let completed = CompletedTrace::new(t.ctx, t.spans(), error);
+        self.flight.push(completed.clone());
+        Some(completed)
+    }
+
+    /// Record a standalone span not tied to one event trace (egress drain
+    /// batches, store commits, bulk-lane batches, recovery).
+    pub fn record_span(&self, ctx: TraceCtx, stage: Stage, sink: u8, t0: Instant, ok: bool) {
+        if !self.enabled() {
+            return;
+        }
+        let ts_ns = t0
+            .checked_duration_since(self.anchor)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        let span = Span { stage, sink, ok, ts_ns, dur_ns: t0.elapsed().as_nanos() as u64 };
+        self.push_spans(ctx, &[span]);
+    }
+
+    fn push_spans(&self, ctx: TraceCtx, spans: &[Span]) {
+        if spans.is_empty() {
+            return;
+        }
+        // thread-affine shard, same scheme as LatencyChannel
+        let id = std::thread::current().id();
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        std::hash::Hash::hash(&id, &mut h);
+        let idx = std::hash::Hasher::finish(&h) as usize % self.shards.len();
+        let mut buf = self.shards[idx].inner.lock().unwrap();
+        let room = self.cap_per_shard.saturating_sub(buf.len());
+        let take = spans.len().min(room);
+        buf.extend(spans[..take].iter().map(|s| (ctx, *s)));
+        drop(buf);
+        self.metrics.spans.add(take as u64);
+        if take < spans.len() {
+            self.metrics.spans_dropped.add((spans.len() - take) as u64);
+        }
+    }
+
+    /// Dump the most recent completed traces (flight-recorder contents)
+    /// under `reason` — called on sink flush error and store recovery.
+    pub fn dump_recent(&self, reason: &str) -> Option<FlightDump> {
+        if !self.enabled() {
+            return None;
+        }
+        self.flight.dump_recent(reason, self, &self.metrics)
+    }
+
+    /// All flight dumps taken so far (bounded; oldest evicted first).
+    pub fn dumps(&self) -> Vec<FlightDump> {
+        self.flight.dumps()
+    }
+
+    /// Snapshot of the completed-trace ring, oldest first.
+    pub fn flight_snapshot(&self) -> Vec<CompletedTrace> {
+        self.flight.snapshot()
+    }
+
+    /// Spans currently buffered, ordered by start timestamp.
+    pub fn spans(&self) -> Vec<(TraceCtx, Span)> {
+        let mut all = Vec::new();
+        for s in &self.shards {
+            all.extend(s.inner.lock().unwrap().iter().copied());
+        }
+        all.sort_by_key(|(_, s)| s.ts_ns);
+        all
+    }
+
+    /// Number of spans currently buffered.
+    pub fn span_count(&self) -> usize {
+        self.shards.iter().map(|s| s.inner.lock().unwrap().len()).sum()
+    }
+
+    /// Export buffered spans as Chrome `trace_event` JSON (load in
+    /// `chrome://tracing` or Perfetto).
+    pub fn chrome_trace_json(&self) -> String {
+        chrome::render(&self.spans(), self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tracer(enabled: bool) -> Tracer {
+        Tracer::new(Arc::new(TraceMetrics::default()), enabled)
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let tr = tracer(false);
+        let mut t = tr.begin(0, 7);
+        assert!(!t.is_active());
+        t.span(Stage::Map, Instant::now());
+        tr.finish(t);
+        assert_eq!(tr.span_count(), 0);
+        assert_eq!(tr.metrics.traces.get(), 0);
+    }
+
+    #[test]
+    fn event_trace_carries_provenance() {
+        let tr = tracer(true);
+        let mut t = tr.begin(3, 41);
+        t.stamp_payload(5, 2);
+        t.stamp_epoch(9);
+        t.stamp_shard(1);
+        t.stamp_lane(Lane::Native);
+        let t0 = Instant::now();
+        t.span(Stage::Ingest, t0);
+        t.span(Stage::Map, t0);
+        let ctx = t.ctx();
+        tr.finish(t);
+        assert_eq!(ctx.partition, 3);
+        assert_eq!(ctx.offset, 41);
+        assert_eq!(ctx.schema, 5);
+        assert_eq!(ctx.version, 2);
+        assert_eq!(ctx.epoch, 9);
+        assert_eq!(ctx.shard, 1);
+        assert_eq!(ctx.lane, Lane::Native);
+        assert_eq!(tr.span_count(), 2);
+        assert_eq!(tr.metrics.spans.get(), 2);
+        assert_eq!(tr.metrics.traces.get(), 1);
+        let r = ctx.render();
+        assert!(r.contains("p3@41"));
+        assert!(r.contains("s5v2"));
+        assert!(r.contains("epoch=9"));
+    }
+
+    #[test]
+    fn span_overflow_is_counted_not_silent() {
+        let tr = tracer(true);
+        let mut t = tr.begin(0, 0);
+        let t0 = Instant::now();
+        for _ in 0..MAX_EVENT_SPANS + 3 {
+            t.span(Stage::Map, t0);
+        }
+        tr.finish(t);
+        assert_eq!(tr.span_count(), MAX_EVENT_SPANS);
+        assert_eq!(tr.metrics.spans_dropped.get(), 3);
+    }
+
+    #[test]
+    fn buffer_capacity_drops_are_counted() {
+        let tr = Tracer::with_capacity(Arc::new(TraceMetrics::default()), true, 16, 4);
+        // 16 total / 16 shards = 1 slot on this thread's shard
+        for i in 0..5 {
+            let mut t = tr.begin(0, i);
+            t.span(Stage::Map, Instant::now());
+            tr.finish(t);
+        }
+        assert_eq!(tr.metrics.traces.get(), 5);
+        assert_eq!(tr.metrics.spans.get() + tr.metrics.spans_dropped.get(), 5);
+        assert!(tr.metrics.spans_dropped.get() > 0);
+    }
+
+    #[test]
+    fn dead_letter_dump_contains_chain() {
+        let tr = tracer(true);
+        let mut t = tr.begin(2, 17);
+        t.stamp_payload(3, 99);
+        t.stamp_epoch(4);
+        let t0 = Instant::now();
+        t.span(Stage::Ingest, t0);
+        t.span_err(Stage::Map, t0);
+        let dump = tr.finish_dead_letter(t, "unknown version v99").unwrap();
+        assert!(dump.contains("p2@17"), "{dump}");
+        assert!(dump.contains("epoch=4"), "{dump}");
+        assert!(dump.contains("map"), "{dump}");
+        assert!(dump.contains("FAIL"), "{dump}");
+        let dumps = tr.dumps();
+        assert_eq!(dumps.len(), 1);
+        assert!(dumps[0].reason.contains("dead-letter"));
+        assert_eq!(tr.metrics.flight_dumps.get(), 1);
+    }
+
+    #[test]
+    fn sink_registry_is_stable() {
+        let tr = tracer(true);
+        assert_eq!(tr.register_sink("dw"), 0);
+        assert_eq!(tr.register_sink("ml"), 1);
+        assert_eq!(tr.register_sink("dw"), 0);
+        assert_eq!(tr.sink_name(1).as_deref(), Some("ml"));
+        assert_eq!(tr.sink_name(SINK_NONE), None);
+    }
+
+    #[test]
+    fn standalone_spans_are_recorded() {
+        let tr = tracer(true);
+        let sink = tr.register_sink("dw");
+        tr.record_span(TraceCtx::default(), Stage::Egress, sink, Instant::now(), true);
+        tr.record_span(TraceCtx::default(), Stage::StoreCommit, SINK_NONE, Instant::now(), true);
+        let spans = tr.spans();
+        assert_eq!(spans.len(), 2);
+        assert!(spans.iter().any(|(_, s)| s.stage == Stage::Egress && s.sink == sink));
+    }
+}

@@ -1,6 +1,13 @@
 //! Latency statistics — the measurement substrate for reproducing the
 //! paper's §7 evaluation (mean 39 ms, σ 51 ms over 1168 CDC events) and for
 //! the bench harness (no criterion offline).
+//!
+//! [`LatencyRecorder`] keeps exact count/mean/σ/min/max as running
+//! aggregates plus a bounded, deterministically seeded reservoir for
+//! percentiles, so a long `serve` run holds steady-state memory no matter
+//! how many samples it records.
+
+use crate::util::rng::Rng;
 
 /// Summary statistics over a sample of f64 observations.
 #[derive(Debug, Clone, PartialEq)]
@@ -90,10 +97,33 @@ pub fn format_ns(ns: f64) -> String {
     }
 }
 
+/// Default reservoir capacity: large enough that the paper's 1168-event
+/// day trace is retained exactly, small enough to bound a week-long
+/// `serve` run to a few tens of KiB per channel shard.
+pub const RESERVOIR_CAP: usize = 4096;
+
 /// A latency recorder accumulating nanosecond observations.
-#[derive(Debug, Default, Clone)]
+///
+/// Count, mean, σ, min and max are exact running aggregates; percentiles
+/// come from a bounded reservoir (Vitter's Algorithm R) driven by a
+/// fixed-seed [`Rng`], so memory is bounded and results are reproducible
+/// run-to-run for a given sample sequence.
+#[derive(Debug, Clone)]
 pub struct LatencyRecorder {
-    samples_ns: Vec<f64>,
+    count: u64,
+    sum: f64,
+    sumsq: f64,
+    min: f64,
+    max: f64,
+    reservoir: Vec<f64>,
+    cap: usize,
+    rng: Rng,
+}
+
+impl Default for LatencyRecorder {
+    fn default() -> Self {
+        Self::with_capacity(RESERVOIR_CAP)
+    }
 }
 
 impl LatencyRecorder {
@@ -101,32 +131,92 @@ impl LatencyRecorder {
         Self::default()
     }
 
+    /// Recorder with a custom reservoir bound (`cap >= 1`).
+    pub fn with_capacity(cap: usize) -> Self {
+        Self {
+            count: 0,
+            sum: 0.0,
+            sumsq: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            reservoir: Vec::new(),
+            cap: cap.max(1),
+            // fixed seed: determinism matters more than independence here
+            rng: Rng::seed_from(0x5EED_CAFE),
+        }
+    }
+
     pub fn record(&mut self, d: std::time::Duration) {
-        self.samples_ns.push(d.as_nanos() as f64);
+        self.record_ns(d.as_nanos() as f64);
     }
 
     pub fn record_ns(&mut self, ns: f64) {
-        self.samples_ns.push(ns);
+        self.count += 1;
+        self.sum += ns;
+        self.sumsq += ns * ns;
+        self.min = self.min.min(ns);
+        self.max = self.max.max(ns);
+        if self.reservoir.len() < self.cap {
+            self.reservoir.push(ns);
+        } else {
+            // Algorithm R: keep each of the `count` samples with equal
+            // probability cap/count.
+            let j = self.rng.gen_range(self.count) as usize;
+            if j < self.cap {
+                self.reservoir[j] = ns;
+            }
+        }
     }
 
+    /// Total observations recorded (exact, not the reservoir size).
     pub fn len(&self) -> usize {
-        self.samples_ns.len()
+        self.count as usize
     }
 
     pub fn is_empty(&self) -> bool {
-        self.samples_ns.is_empty()
+        self.count == 0
     }
 
+    /// Exact count/mean/σ/min/max; percentiles estimated from the
+    /// reservoir (exact while `len() <= cap`).
     pub fn summary(&self) -> Summary {
-        Summary::from(&self.samples_ns)
+        if self.count == 0 {
+            return Summary::from(&[]);
+        }
+        let mut s = Summary::from(&self.reservoir);
+        let count = self.count as f64;
+        let mean = self.sum / count;
+        let var = if self.count < 2 {
+            0.0
+        } else {
+            ((self.sumsq - self.sum * self.sum / count) / (count - 1.0)).max(0.0)
+        };
+        s.count = self.count as usize;
+        s.mean = mean;
+        s.std = var.sqrt();
+        s.min = self.min;
+        s.max = self.max;
+        s
     }
 
+    /// The retained reservoir sample (all samples while `len() <= cap`).
     pub fn samples(&self) -> &[f64] {
-        &self.samples_ns
+        &self.reservoir
     }
 
+    /// Merge another recorder in: aggregates add exactly; the reservoirs
+    /// concatenate and thin deterministically back to `cap`.
     pub fn merge(&mut self, other: &LatencyRecorder) {
-        self.samples_ns.extend_from_slice(&other.samples_ns);
+        self.count += other.count;
+        self.sum += other.sum;
+        self.sumsq += other.sumsq;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.reservoir.extend_from_slice(&other.reservoir);
+        while self.reservoir.len() > self.cap {
+            let j = self.rng.gen_range(self.reservoir.len() as u64) as usize;
+            self.reservoir.swap_remove(j);
+        }
     }
 }
 
@@ -155,6 +245,25 @@ impl LogHistogram {
 
     pub fn total(&self) -> u64 {
         self.counts.iter().sum()
+    }
+
+    /// Merge another histogram in (bucket-wise add) — lets
+    /// `LatencyChannel::histogram()` combine shards without replaying
+    /// samples.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+    }
+
+    /// `(bucket_floor_ns, count)` for every non-empty bucket, low to high.
+    pub fn buckets(&self) -> Vec<(u64, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (1u64 << i, c))
+            .collect()
     }
 
     /// Render non-empty buckets as ASCII bars.
@@ -233,6 +342,89 @@ mod tests {
         assert_eq!(format_ns(1_500.0), "1.50µs");
         assert_eq!(format_ns(39_000_000.0), "39.00ms");
         assert_eq!(format_ns(2_000_000_000.0), "2.000s");
+    }
+
+    #[test]
+    fn recorder_exact_aggregates_with_small_sample() {
+        let mut r = LatencyRecorder::new();
+        for v in [1.0, 2.0, 3.0] {
+            r.record_ns(v);
+        }
+        let s = r.summary();
+        assert_eq!(s.count, 3);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert!((s.std - 1.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(r.samples().len(), 3);
+    }
+
+    #[test]
+    fn recorder_memory_is_bounded_and_aggregates_stay_exact() {
+        let mut r = LatencyRecorder::with_capacity(64);
+        let n = 10_000u64;
+        for i in 0..n {
+            r.record_ns(i as f64);
+        }
+        assert_eq!(r.len(), n as usize);
+        assert_eq!(r.samples().len(), 64); // reservoir bounded
+        let s = r.summary();
+        assert_eq!(s.count, n as usize);
+        // exact running mean of 0..n-1
+        assert!((s.mean - (n - 1) as f64 / 2.0).abs() < 1e-6, "mean={}", s.mean);
+        assert_eq!(s.min, 0.0);
+        assert_eq!(s.max, (n - 1) as f64);
+        // reservoir percentiles are estimates but must stay in range and
+        // roughly track the uniform distribution
+        assert!(s.p50 > 0.2 * n as f64 && s.p50 < 0.8 * n as f64, "p50={}", s.p50);
+    }
+
+    #[test]
+    fn recorder_is_deterministic() {
+        let run = || {
+            let mut r = LatencyRecorder::with_capacity(32);
+            for i in 0..5_000 {
+                r.record_ns((i * 7 % 997) as f64);
+            }
+            r.samples().to_vec()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn recorder_merge_adds_exactly_and_stays_bounded() {
+        let mut a = LatencyRecorder::with_capacity(16);
+        let mut b = LatencyRecorder::with_capacity(16);
+        for i in 0..100 {
+            a.record_ns(i as f64);
+            b.record_ns((1000 + i) as f64);
+        }
+        a.merge(&b);
+        let s = a.summary();
+        assert_eq!(s.count, 200);
+        assert_eq!(s.min, 0.0);
+        assert_eq!(s.max, 1099.0);
+        assert!((s.mean - (49.5 + 1049.5) / 2.0).abs() < 1e-9);
+        assert!(a.samples().len() <= 16);
+    }
+
+    #[test]
+    fn histogram_merge_matches_combined_recording() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        let mut combined = LogHistogram::new();
+        for ns in [1u64, 100, 1024, 1_000_000] {
+            a.record_ns(ns);
+            combined.record_ns(ns);
+        }
+        for ns in [1024u64, 7, 7, 1 << 40] {
+            b.record_ns(ns);
+            combined.record_ns(ns);
+        }
+        a.merge(&b);
+        assert_eq!(a.total(), combined.total());
+        assert_eq!(a.buckets(), combined.buckets());
+        assert_eq!(a.render(), combined.render());
     }
 
     #[test]

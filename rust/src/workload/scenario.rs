@@ -74,6 +74,13 @@ pub struct ScenarioOutcome {
     pub schema_change_log: Vec<usize>,
     /// Records applied (but never committed) by the crash exercise.
     pub crash_deliveries: usize,
+    /// Event traces the tracer completed (finish or dead-letter); must
+    /// equal `events_in` when tracing is on — a missing trace means an
+    /// event left the pipeline unobserved.
+    pub traces_completed: u64,
+    /// Spans lost to the tracer's bounded buffers — surfaced so a drop
+    /// is a loud conformance failure, never a silent gap in the export.
+    pub spans_dropped: u64,
     pub report: ShardReport,
 }
 
@@ -199,6 +206,8 @@ impl ScenarioRunner {
             snapshot_rows,
             schema_change_log,
             crash_deliveries,
+            traces_completed: pipeline.metrics.trace.traces.get(),
+            spans_dropped: pipeline.metrics.trace.spans_dropped.get(),
             report,
         })
     }
@@ -232,6 +241,21 @@ pub fn check_accounting(
         outcome.dead_letters == pipeline.dlq.len() as u64,
         "{s}: dead-letter counter diverged from DLQ contents"
     );
+    if pipeline.tracer.enabled() {
+        // trace conservation: every consumed event completed exactly one
+        // trace, and no span fell out of the bounded buffers unnoticed
+        ensure!(
+            outcome.traces_completed == outcome.events_in,
+            "{s}: {} traces completed for {} events consumed",
+            outcome.traces_completed,
+            outcome.events_in
+        );
+        ensure!(
+            outcome.spans_dropped == 0,
+            "{s}: {} spans dropped by the tracer's bounded buffers",
+            outcome.spans_dropped
+        );
+    }
     let cdm_total = pipeline.out_topic.total_records();
     for handle in &pipeline.sinks {
         let stats = handle.stats();
@@ -423,6 +447,9 @@ mod tests {
         assert_eq!(outcome.events_in, 96);
         assert_eq!(outcome.dead_letters, 0);
         assert!(outcome.crash_deliveries > 0, "redelivery was exercised");
+        // trace conservation rode along (tracing is on by default)
+        assert_eq!(outcome.traces_completed, 96);
+        assert_eq!(outcome.spans_dropped, 0);
     }
 
     #[test]

@@ -1,0 +1,365 @@
+//! Observability contract tests: the Prometheus-style exposition names,
+//! the JSON snapshot shape, the Chrome `trace_event` export, and the
+//! flight-recorder semantics (dead-lettered records carry their full
+//! causal history) are all stable interfaces — drift here breaks
+//! scrapers and debugging workflows, so it must show up as a red test.
+
+use std::sync::Arc;
+
+use metl::config::PipelineConfig;
+use metl::coordinator::pipeline::Pipeline;
+use metl::message::cdc::{CdcEvent, CdcOp, CdcSource};
+use metl::message::{InMessage, StateI};
+use metl::schema::{AttrId, VersionNo};
+use metl::trace::Stage;
+use metl::util::json::{self, Json};
+use metl::workload::adversarial::Scenario;
+use metl::workload::scenario::ScenarioRunner;
+use metl::workload::{DmlKind, TraceOp};
+
+fn run_small_trace(events: usize) -> Pipeline {
+    let p = Pipeline::new(PipelineConfig::small()).unwrap();
+    let ops: Vec<TraceOp> = (0..events)
+        .map(|i| TraceOp::Dml { service: i % 4, kind: DmlKind::Insert })
+        .collect();
+    p.run_trace(&ops).unwrap();
+    p
+}
+
+/// A wire event stamped with a version the registry never saw: the only
+/// way to force a genuine dead letter through the public API.
+fn unknown_version_event(p: &Pipeline) -> Arc<CdcEvent> {
+    let schema = p.landscape.read().unwrap().dbs[0].tables[0].schema;
+    Arc::new(CdcEvent {
+        op: CdcOp::Create,
+        before: None,
+        after: Some(InMessage {
+            key: 7,
+            schema,
+            version: VersionNo(99),
+            state: p.state.current(),
+            ts_us: 1,
+            fields: vec![(AttrId(0), Json::Num(1.0))],
+        }),
+        source: CdcSource {
+            connector: "postgresql".into(),
+            db: "svc0".into(),
+            table: "main".into(),
+        },
+        ts_us: 1,
+    })
+}
+
+/// Golden name set: every scraper-visible metric name must appear in the
+/// exposition. Renaming one is a breaking change (ARCHITECTURE.md
+/// §Observability holds the documented table).
+#[test]
+fn expose_text_contains_golden_metric_names() {
+    let p = run_small_trace(8);
+    let text = p.expose_text();
+    for name in [
+        "metl_events_in_total",
+        "metl_messages_out_total",
+        "metl_transformations_total",
+        "metl_dead_letters_total",
+        "metl_sync_retries_total",
+        "metl_dmm_updates_total",
+        "metl_rejected_changes_total",
+        "metl_bulk_events_total",
+        "metl_trace_spans_total",
+        "metl_trace_spans_dropped_total",
+        "metl_trace_traces_total",
+        "metl_trace_flight_dumps_total",
+        "metl_store_wal_bytes_total",
+        "metl_store_wal_fsyncs_total",
+        "metl_store_segment_gc_total",
+        "metl_store_replayed_updates_total",
+        "metl_plan_cache_hits_total",
+        "metl_plan_cache_misses_total",
+        "metl_dmm_epoch",
+        "metl_epoch_lag",
+        "metl_store_segments_live",
+        "metl_store_recovery_ms",
+        "metl_cache_bytes",
+        "metl_cache_hit_rate",
+        "metl_shard_events_total",
+        "metl_sink_drained_total",
+        "metl_sink_flush_errors_total",
+        "metl_sink_lag",
+        "metl_stage_latency_ns",
+    ] {
+        assert!(text.contains(name), "exposition lost metric {name}");
+        assert!(
+            text.contains(&format!("# TYPE {name} "))
+                || text.contains(&format!("{name}{{")),
+            "{name} has neither a TYPE line nor a labeled sample"
+        );
+    }
+    // labeled series render Prometheus-style
+    assert!(text.contains("metl_sink_lag{sink=\"dw\"}"));
+    assert!(text.contains("metl_shard_events_total{shard=\"0\"}"));
+    assert!(
+        text.contains("metl_stage_latency_ns{stage=\"map\",quantile=\"0.99\"}")
+    );
+    assert!(text.contains("metl_stage_latency_ns_count{stage=\"ingest\"}"));
+    // live values made it through: 8 events in, 8 completed traces
+    assert!(text.contains("metl_events_in_total 8\n"));
+    assert!(text.contains("metl_trace_traces_total 8\n"));
+    assert!(text.contains("metl_trace_spans_dropped_total 0\n"));
+}
+
+#[test]
+fn dashboard_shows_stage_and_trace_rows() {
+    let p = run_small_trace(5);
+    let dash = p.dashboard();
+    assert!(dash.contains("METL dashboard"));
+    assert!(dash.contains("stage p99"));
+    assert!(dash.contains("trace spans"));
+    assert!(dash.contains("trace completed"));
+}
+
+/// The JSON snapshot mirrors the exposition: same counters, per-stage
+/// summaries, and the trace block.
+#[test]
+fn metrics_snapshot_has_structured_sections() {
+    let p = run_small_trace(6);
+    let doc = p.metrics_snapshot();
+    let events_in = doc
+        .get("counters")
+        .and_then(|c| c.get("events_in"))
+        .and_then(Json::as_f64)
+        .unwrap();
+    assert_eq!(events_in as u64, 6);
+    let traces = doc
+        .get("trace")
+        .and_then(|t| t.get("traces"))
+        .and_then(Json::as_f64)
+        .unwrap();
+    assert_eq!(traces as u64, 6);
+    for stage in ["ingest", "map", "egress", "store", "update", "e2e"] {
+        let count = doc
+            .get("stages")
+            .and_then(|s| s.get(stage))
+            .and_then(|s| s.get("count"))
+            .and_then(Json::as_f64)
+            .unwrap_or_else(|| panic!("snapshot lost stage {stage}"));
+        if stage == "ingest" || stage == "map" {
+            assert_eq!(count as u64, 6, "{stage} count");
+        }
+    }
+    assert!(doc.get("sinks").and_then(Json::as_arr).is_some());
+    // the document round-trips through the parser
+    let reparsed = json::parse(&doc.to_string()).unwrap();
+    assert_eq!(
+        reparsed.get("counters").and_then(|c| c.get("events_in")),
+        doc.get("counters").and_then(|c| c.get("events_in"))
+    );
+}
+
+/// A dead-lettered record ships with its full causal history: the DLQ
+/// entry's rendered trace names the exact source position
+/// (partition/offset), the DMM epoch it mapped against, and the failed
+/// map span — and the tracer records a flight dump for the incident.
+#[test]
+fn dead_letter_carries_provenance_trace() {
+    let p = Pipeline::new(PipelineConfig::small()).unwrap();
+    let ev = unknown_version_event(&p);
+    p.process_event_from(2, 17, &ev);
+    assert_eq!(p.metrics.dead_letters.get(), 1);
+    let dlq = p.dlq.snapshot();
+    assert_eq!(dlq.len(), 1);
+    let trace = dlq[0].trace.as_ref().expect("dead letter lost its trace");
+    assert!(trace.contains("src=p2@17"), "missing source position: {trace}");
+    assert!(trace.contains("epoch=0"), "missing DMM epoch: {trace}");
+    assert!(trace.contains("schema=s"), "missing schema stamp: {trace}");
+    assert!(trace.contains("map"), "missing map span: {trace}");
+    assert!(trace.contains("FAIL"), "failed span not marked: {trace}");
+    // the flight recorder dumped the incident with the error attached
+    let dumps = p.tracer.dumps();
+    assert_eq!(dumps.len(), 1);
+    assert!(dumps[0].reason.contains("dead-letter"));
+    assert!(dumps[0].render().contains("no mapping column"));
+    assert_eq!(p.metrics.trace.flight_dumps.get(), 1);
+}
+
+/// The Chrome `trace_event` export parses as JSON and carries the
+/// documented shape: complete ("X") events with µs timestamps and the
+/// provenance args (trace id, source position, schema, epoch, lane).
+#[test]
+fn chrome_trace_export_is_well_formed() {
+    let p = run_small_trace(10);
+    let doc = json::parse(&p.tracer.chrome_trace_json()).unwrap();
+    assert_eq!(
+        doc.get("displayTimeUnit").and_then(Json::as_str),
+        Some("ns")
+    );
+    let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+    // 10 events × (ingest + map) + 10 egress batch spans at minimum
+    assert!(events.len() >= 20, "only {} spans exported", events.len());
+    let mut names = std::collections::HashSet::new();
+    for ev in events {
+        assert_eq!(ev.get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(ev.get("cat").and_then(Json::as_str), Some("metl"));
+        assert!(ev.get("ts").and_then(Json::as_f64).is_some());
+        assert!(ev.get("dur").and_then(Json::as_f64).is_some());
+        assert!(ev.get("pid").is_some() && ev.get("tid").is_some());
+        let args = ev.get("args").expect("span lost its args");
+        for key in ["trace_id", "partition", "offset", "schema", "epoch"] {
+            assert!(args.get(key).is_some(), "args lost {key}");
+        }
+        names.insert(ev.get("name").and_then(Json::as_str).unwrap().to_owned());
+    }
+    assert!(names.contains("ingest"));
+    assert!(names.contains("map"));
+    assert!(names.contains("egress"));
+    // egress spans name their sink backend
+    assert!(events.iter().any(|ev| {
+        ev.get("name").and_then(Json::as_str) == Some("egress")
+            && ev.get("args").and_then(|a| a.get("sink")).is_some()
+    }));
+}
+
+/// The scenario harness extends counter conservation to the tracer:
+/// every consumed event finishes exactly one trace and the bounded span
+/// buffers never drop silently.
+#[test]
+fn scenario_conservation_covers_traces() {
+    let mut cfg = PipelineConfig::small();
+    cfg.trace_events = 120;
+    let outcome = ScenarioRunner::new(cfg, Scenario::Zipf)
+        .run_and_verify()
+        .unwrap();
+    assert_eq!(outcome.traces_completed, outcome.events_in);
+    assert_eq!(outcome.spans_dropped, 0);
+}
+
+/// An in-band heal (unknown version the registry already knows) records
+/// a [`Stage::Heal`] span inside the event's trace.
+#[test]
+fn in_band_heal_records_heal_span() {
+    let p = Pipeline::new(PipelineConfig::small()).unwrap();
+    p.resolve_op(&TraceOp::Dml { service: 0, kind: DmlKind::Insert })
+        .unwrap();
+    {
+        let land = p.landscape.read().unwrap();
+        let schema = land.dbs[0].tables[0].schema;
+        let v = land.dbs[0].tables[0].live_version;
+        let mut dpm = (*p.dmm.snapshot()).clone();
+        dpm.remove_column(schema, v);
+        p.dmm.publish(Arc::new(dpm));
+        p.cache.evict_all(StateI(0));
+    }
+    let mut consumer =
+        metl::broker::Consumer::new(p.cdc_topic.clone(), 0, 1);
+    for (partition, rec) in consumer.poll(10) {
+        p.process_event_from(partition, rec.offset, &rec.value);
+    }
+    assert_eq!(p.metrics.dead_letters.get(), 0);
+    assert_eq!(p.evolution.in_band_updates(), 1);
+    let spans = p.tracer.spans();
+    assert!(
+        spans.iter().any(|(_, s)| s.stage == Stage::Heal && s.ok),
+        "heal span missing from {} recorded spans",
+        spans.len()
+    );
+    // the healed event's trace carries the post-heal epoch
+    assert!(spans.iter().any(|(ctx, s)| {
+        s.stage == Stage::Map && s.ok && ctx.epoch == p.dmm.epoch()
+    }));
+}
+
+/// Store commits are spans too: a schema change against an attached
+/// store records a [`Stage::StoreCommit`] span and a store-stage latency
+/// sample.
+#[test]
+fn store_commit_records_span_and_latency() {
+    let dir = metl::util::tmp::TestDir::new("obs-store");
+    let p = Pipeline::new(PipelineConfig::small())
+        .unwrap()
+        .with_store(dir.path())
+        .unwrap();
+    p.apply_schema_change(0).unwrap();
+    assert!(p.metrics.store_latency.count() >= 1);
+    let spans = p.tracer.spans();
+    assert!(spans
+        .iter()
+        .any(|(_, s)| s.stage == Stage::StoreCommit && s.ok));
+    let text = p.expose_text();
+    assert!(text.contains("metl_stage_latency_ns_count{stage=\"store\"} 1"));
+}
+
+/// Recovery is a provenance event: restoring from the store records a
+/// [`Stage::Recovery`] span and dumps the flight ring so the causal tail
+/// from before the restart is preserved.
+#[test]
+fn store_recovery_dumps_flight_ring() {
+    use metl::matrix::dpm::DpmSet;
+    let dir = metl::util::tmp::TestDir::new("obs-recovery");
+    let p = Pipeline::new(PipelineConfig::small())
+        .unwrap()
+        .with_store(dir.path())
+        .unwrap();
+    // traffic before the "crash" populates the flight ring
+    let ops: Vec<TraceOp> = (0..4)
+        .map(|_| TraceOp::Dml { service: 0, kind: DmlKind::Insert })
+        .collect();
+    p.run_trace(&ops).unwrap();
+    p.apply_schema_change(0).unwrap();
+    p.dmm.publish(Arc::new(DpmSet::new(StateI(999))));
+    assert!(p.restore_from_store().unwrap());
+    let spans = p.tracer.spans();
+    assert!(spans.iter().any(|(_, s)| s.stage == Stage::Recovery && s.ok));
+    let dumps = p.tracer.dumps();
+    assert!(dumps.iter().any(|d| d.reason == "store-recovery"));
+    let dump = dumps.iter().find(|d| d.reason == "store-recovery").unwrap();
+    assert!(!dump.traces.is_empty(), "flight ring was empty at recovery");
+    assert!(dump.render().contains("src=p"));
+}
+
+/// `runtime.trace = false` turns collection off end to end: no spans, no
+/// completed traces, no flight dumps — while the metrics surfaces keep
+/// working.
+#[test]
+fn tracing_off_collects_nothing() {
+    let mut cfg = PipelineConfig::small();
+    cfg.trace = false;
+    let p = Pipeline::new(cfg).unwrap();
+    let ops: Vec<TraceOp> = (0..8)
+        .map(|_| TraceOp::Dml { service: 0, kind: DmlKind::Insert })
+        .collect();
+    p.run_trace(&ops).unwrap();
+    assert!(!p.tracer.enabled());
+    assert_eq!(p.tracer.span_count(), 0);
+    assert_eq!(p.metrics.trace.traces.get(), 0);
+    assert_eq!(p.metrics.trace.spans.get(), 0);
+    // a dead letter still lands in the DLQ, just without the trace
+    let ev = unknown_version_event(&p);
+    p.process_event_from(1, 3, &ev);
+    let dlq = p.dlq.snapshot();
+    assert_eq!(dlq.len(), 1);
+    assert!(dlq[0].trace.is_none());
+    assert!(p.tracer.dumps().is_empty());
+    // exposition and dashboard still render
+    assert!(p.expose_text().contains("metl_events_in_total 9\n"));
+    assert!(p.dashboard().contains("METL dashboard"));
+}
+
+/// Sharded runs trace too, with per-event provenance intact: every event
+/// completes a trace, and worker spans carry shard ids.
+#[test]
+fn sharded_run_traces_every_event() {
+    let mut cfg = PipelineConfig::small();
+    cfg.trace_events = 64;
+    let p = Pipeline::new(cfg).unwrap();
+    let mut rng = metl::util::rng::Rng::seed_from(0x0B5);
+    let ops = metl::workload::day_trace(&p.cfg, &mut rng);
+    let report = p.run_trace_sharded(&ops, 4).unwrap();
+    assert!(report.events > 0);
+    assert_eq!(
+        p.metrics.trace.traces.get(),
+        report.events,
+        "every consumed event must finish exactly one trace"
+    );
+    assert_eq!(p.metrics.trace.spans_dropped.get(), 0);
+    assert_eq!(p.metrics.ingest_latency.count() as u64, report.events);
+}
