@@ -1,0 +1,394 @@
+//! Bench: broker contention — the segmented lock-free core against an
+//! in-bench replica of the old mutex-log broker, under the same
+//! contended workload: 4 producers racing a 4-member consumer group on
+//! one topic. The mutex replica does exactly what the pre-segment broker
+//! did on the hot path — one lock acquisition per produced record and a
+//! lock + clone for every fetch — while the segmented side publishes
+//! with one release-store per append and fetches `Arc`-shared slices
+//! without taking any lock. The payload is a bare `u64` on both sides,
+//! so the measured gap is lock traffic, not clone cost.
+//!
+//! A second section drives the full 4-shard pipeline with all four sink
+//! backends registered, so the segmented core is also exercised in situ
+//! (dispatcher + workers + egress groups all sharing segments).
+//!
+//! Flags (after `cargo bench --bench contention --`):
+//!   --smoke           reduced record counts (CI shape check)
+//!   --out PATH        artifact destination (default ../BENCH_10.json)
+//!   --validate PATH   validate an artifact's schema (and, for non-smoke
+//!                     artifacts, the speedup > 1 acceptance bound) and
+//!                     exit
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use harness::{arg_value, has_flag, section, Artifact, Bench};
+use metl::broker::{Broker, Consumer};
+use metl::config::PipelineConfig;
+use metl::coordinator::pipeline::Pipeline;
+use metl::coordinator::shard;
+use metl::util::json::{self, Json};
+use metl::util::rng::Rng;
+use metl::util::stats::Summary;
+use metl::workload::{self, DmlKind, TraceOp};
+
+/// Metrics every `BENCH_10.json`-shaped artifact must carry.
+const REQUIRED: &[&str] = &[
+    "broker.ring_ns.mean",
+    "broker.mutex_ns.mean",
+    "broker.ring_over_mutex_speedup",
+    "pipeline.sharded_eps",
+];
+
+const PARTITIONS: usize = 8;
+const PRODUCERS: usize = 4;
+const MEMBERS: usize = 4;
+
+fn validate(path: &str) -> Result<(), String> {
+    harness::validate_artifact_file(path, "contention", REQUIRED)?;
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    let doc = json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+    let smoke = doc
+        .get("smoke")
+        .and_then(Json::as_bool)
+        .ok_or_else(|| format!("{path}: missing smoke flag"))?;
+    let speedup = doc
+        .get("metrics")
+        .and_then(|m| m.get("broker"))
+        .and_then(|b| b.get("ring_over_mutex_speedup"))
+        .and_then(Json::as_f64)
+        .ok_or_else(|| {
+            format!("{path}: missing broker.ring_over_mutex_speedup")
+        })?;
+    // smoke runs are too short to be noise-free on shared CI runners;
+    // the bound is enforced on real (checked-in) artifacts only
+    if !smoke && speedup <= 1.0 {
+        return Err(format!(
+            "{path}: broker.ring_over_mutex_speedup {speedup:.4} <= 1"
+        ));
+    }
+    Ok(())
+}
+
+/// The pre-segment broker's hot path, reduced to its essence: one
+/// `Mutex<Vec<_>>` per partition, every produce takes the lock to push,
+/// every fetch takes the lock to clone a range.
+struct MutexTopic {
+    partitions: Vec<Mutex<Vec<(u64, u64)>>>,
+}
+
+impl MutexTopic {
+    fn new(n: usize) -> MutexTopic {
+        MutexTopic {
+            partitions: (0..n).map(|_| Mutex::new(Vec::new())).collect(),
+        }
+    }
+
+    fn produce_to(&self, partition: usize, key: u64, value: u64) {
+        self.partitions[partition].lock().unwrap().push((key, value));
+    }
+
+    fn fetch(
+        &self,
+        partition: usize,
+        offset: usize,
+        max: usize,
+    ) -> Vec<(u64, u64)> {
+        let log = self.partitions[partition].lock().unwrap();
+        let end = log.len().min(offset + max);
+        log[offset.min(end)..end].to_vec()
+    }
+
+    fn len(&self, partition: usize) -> usize {
+        self.partitions[partition].lock().unwrap().len()
+    }
+}
+
+/// One contended run over the segmented broker: 4 producers append
+/// concurrently while a 4-member group polls shared batches until every
+/// record is delivered.
+fn ring_run(records_per_producer: usize) {
+    let broker: Broker<u64> = Broker::new(PARTITIONS);
+    let topic = broker.create_topic("bench", PARTITIONS);
+    let done = AtomicBool::new(false);
+    let consumed = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        let done = &done;
+        let consumed = &consumed;
+        let mut producers = Vec::new();
+        for prod in 0..PRODUCERS {
+            let topic = topic.clone();
+            producers.push(s.spawn(move || {
+                for seq in 0..records_per_producer {
+                    let key = (seq * PRODUCERS + prod) as u64;
+                    let value = ((prod as u64) << 32) | seq as u64;
+                    topic.produce_to(key as usize % PARTITIONS, key, value);
+                }
+            }));
+        }
+        for member in 0..MEMBERS {
+            let mut c = Consumer::new(topic.clone(), member, MEMBERS);
+            s.spawn(move || {
+                let mut sum = 0u64;
+                loop {
+                    let batches = c.poll_shared(256);
+                    if batches.is_empty() {
+                        if done.load(Ordering::Acquire) && c.lag() == 0 {
+                            break;
+                        }
+                        std::thread::yield_now();
+                        continue;
+                    }
+                    let mut n = 0;
+                    for b in &batches {
+                        n += b.len();
+                        for rec in b.iter() {
+                            sum = sum.wrapping_add(rec.value);
+                        }
+                    }
+                    c.commit();
+                    consumed.fetch_add(n, Ordering::Relaxed);
+                }
+                std::hint::black_box(sum);
+            });
+        }
+        for h in producers {
+            h.join().unwrap();
+        }
+        done.store(true, Ordering::Release);
+    });
+    assert_eq!(
+        consumed.load(Ordering::Relaxed),
+        PRODUCERS * records_per_producer
+    );
+}
+
+/// The identical workload over the mutex-log replica: same partition
+/// assignment, same batch size, same termination protocol.
+fn mutex_run(records_per_producer: usize) {
+    let topic = MutexTopic::new(PARTITIONS);
+    let done = AtomicBool::new(false);
+    let consumed = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        let topic = &topic;
+        let done = &done;
+        let consumed = &consumed;
+        let mut producers = Vec::new();
+        for prod in 0..PRODUCERS {
+            producers.push(s.spawn(move || {
+                for seq in 0..records_per_producer {
+                    let key = (seq * PRODUCERS + prod) as u64;
+                    let value = ((prod as u64) << 32) | seq as u64;
+                    topic.produce_to(key as usize % PARTITIONS, key, value);
+                }
+            }));
+        }
+        for member in 0..MEMBERS {
+            s.spawn(move || {
+                let assigned: Vec<usize> = (0..PARTITIONS)
+                    .filter(|p| p % MEMBERS == member)
+                    .collect();
+                let mut pos = vec![0usize; assigned.len()];
+                let mut sum = 0u64;
+                loop {
+                    let mut n = 0;
+                    for (i, &p) in assigned.iter().enumerate() {
+                        let batch = topic.fetch(p, pos[i], 256);
+                        pos[i] += batch.len();
+                        n += batch.len();
+                        for &(_, v) in &batch {
+                            sum = sum.wrapping_add(v);
+                        }
+                    }
+                    if n == 0 {
+                        if done.load(Ordering::Acquire) {
+                            let lag: usize = assigned
+                                .iter()
+                                .enumerate()
+                                .map(|(i, &p)| topic.len(p) - pos[i])
+                                .sum();
+                            if lag == 0 {
+                                break;
+                            }
+                        }
+                        std::thread::yield_now();
+                        continue;
+                    }
+                    consumed.fetch_add(n, Ordering::Relaxed);
+                }
+                std::hint::black_box(sum);
+            });
+        }
+        for h in producers {
+            h.join().unwrap();
+        }
+        done.store(true, Ordering::Release);
+    });
+    assert_eq!(
+        consumed.load(Ordering::Relaxed),
+        PRODUCERS * records_per_producer
+    );
+}
+
+fn backlog_pipeline(cfg: &PipelineConfig, backlog: usize) -> Pipeline {
+    let mut land = workload::generate(cfg);
+    let mut rng = Rng::seed_from(cfg.seed ^ 0xC0DE);
+    workload::populate(&mut land, 50, &mut rng);
+    let p = Pipeline::from_landscape(cfg.clone(), land).unwrap();
+    for i in 0..backlog {
+        p.resolve_op(&TraceOp::Dml {
+            service: i % cfg.n_services,
+            kind: if i % 3 == 0 { DmlKind::Update } else { DmlKind::Insert },
+        })
+        .unwrap();
+    }
+    p
+}
+
+fn main() {
+    if let Some(path) = arg_value("--validate") {
+        match validate(&path) {
+            Ok(()) => {
+                println!("{path}: valid contention artifact");
+                return;
+            }
+            Err(e) => {
+                eprintln!("invalid contention artifact: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+
+    let smoke = has_flag("--smoke");
+    let (records, iters, backlog) = if smoke {
+        (5_000usize, 3usize, 2_000usize)
+    } else {
+        (50_000, 8, 20_000)
+    };
+    let mut artifact = Artifact::new("contention");
+    artifact
+        .meta("profile", Json::Str(if smoke { "small" } else { "paper_day" }.to_string()))
+        .meta("smoke", Json::Bool(smoke))
+        .meta("iters", Json::Num(iters as f64));
+
+    section(
+        format!(
+            "contended broker ({PRODUCERS} producers x {MEMBERS} members, \
+             {} records)",
+            PRODUCERS * records
+        )
+        .as_str(),
+    );
+    let bench = Bench::new(2, iters);
+    let ring = bench.run("segmented ring", || ring_run(records));
+    let mutex = bench.run("mutex log (old broker)", || mutex_run(records));
+    let speedup = mutex.mean / ring.mean.max(1.0);
+    println!("  ring over mutex: {speedup:.2}x");
+    artifact.set(
+        "broker",
+        Json::Obj(vec![
+            ("ring_ns".to_string(), summary_obj(&ring)),
+            ("mutex_ns".to_string(), summary_obj(&mutex)),
+            ("ring_over_mutex_speedup".to_string(), Json::Num(speedup)),
+            (
+                "records".to_string(),
+                Json::Num((PRODUCERS * records) as f64),
+            ),
+        ]),
+    );
+    if !smoke {
+        assert!(
+            speedup > 1.0,
+            "segmented broker no faster than the mutex log ({speedup:.4}x)"
+        );
+    }
+
+    section("in-situ: 4-shard drain, all sink backends registered");
+    let mut cfg = if smoke {
+        PipelineConfig::small()
+    } else {
+        let mut cfg = PipelineConfig::paper_day();
+        cfg.partitions = 16;
+        cfg
+    };
+    cfg.sinks = ["dw", "ml", "jsonl", "audit"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let p = backlog_pipeline(&cfg, backlog);
+    let t0 = Instant::now();
+    let report = shard::run_sharded_drain(&p, 4);
+    let applied = p.drain_sinks();
+    let wall = t0.elapsed();
+    assert_eq!(report.processed as usize, backlog);
+    assert_eq!(p.metrics.dead_letters.get(), 0);
+    assert_eq!(
+        applied as u64,
+        p.out_topic.total_records() * cfg.sinks.len() as u64,
+        "every sink drains the whole CDM topic"
+    );
+    let eps = report.throughput_eps();
+    let brk = &p.metrics.broker;
+    println!(
+        "  {eps:>10.0} events/s mapped; {applied} sink records in {wall:?}"
+    );
+    println!(
+        "  broker: {} segments, {} produce batches, {} fetch batches, \
+         {} arena bytes",
+        brk.segments_allocated.get(),
+        brk.produce_batches.get(),
+        brk.fetch_batches.get(),
+        brk.arena_bytes.get()
+    );
+    artifact.set(
+        "pipeline",
+        Json::Obj(vec![
+            ("sharded_eps".to_string(), Json::Num(eps)),
+            (
+                "sink_records".to_string(),
+                Json::Num(applied as f64),
+            ),
+            (
+                "segments_allocated".to_string(),
+                Json::Num(brk.segments_allocated.get() as f64),
+            ),
+            (
+                "produce_batches".to_string(),
+                Json::Num(brk.produce_batches.get() as f64),
+            ),
+            (
+                "fetch_batches".to_string(),
+                Json::Num(brk.fetch_batches.get() as f64),
+            ),
+            (
+                "arena_bytes".to_string(),
+                Json::Num(brk.arena_bytes.get() as f64),
+            ),
+        ]),
+    );
+
+    let out =
+        arg_value("--out").unwrap_or_else(|| "../BENCH_10.json".to_string());
+    artifact.write(&out).unwrap();
+    if let Err(e) = validate(&out) {
+        eprintln!("emitted artifact failed self-validation: {e}");
+        std::process::exit(1);
+    }
+    println!("\ncontention bench OK");
+}
+
+fn summary_obj(s: &Summary) -> Json {
+    Json::Obj(vec![
+        ("count".to_string(), Json::Num(s.count as f64)),
+        ("mean".to_string(), Json::Num(s.mean)),
+        ("std".to_string(), Json::Num(s.std)),
+        ("p50".to_string(), Json::Num(s.p50)),
+        ("p90".to_string(), Json::Num(s.p90)),
+        ("p99".to_string(), Json::Num(s.p99)),
+    ])
+}

@@ -1,5 +1,6 @@
 //! In-process Kafka-sim broker: topics, partitions, offsets, consumer
-//! groups, at-least-once delivery, offset reset.
+//! groups, at-least-once delivery, offset reset — now on a **lock-free
+//! segmented log core**.
 //!
 //! Substitution for the paper's Kafka/Kafka-streams substrate (DESIGN.md
 //! §2): what METL relies on is semantic — per-partition ordering, keyed
@@ -8,14 +9,51 @@
 //! (§5.5: "the ETL pipeline with the DMM system ensures an 'at least once'
 //! approach").
 //!
+//! # Segmented log core
+//!
+//! Each partition is a chain of fixed-capacity, append-only
+//! [`Segment`]s (`Arc`-shared, immutable once published) plus one atomic
+//! **committed end-offset** — the Kafka log-end-offset. The protocol:
+//!
+//! - **Append** (producers): a short per-partition writer mutex serializes
+//!   appenders — exactly Kafka's per-partition log-append order — while
+//!   they write records into uninitialized slots of the tail segment
+//!   (allocating and linking a fresh segment when the tail fills). The
+//!   batch becomes visible with **one release-store of the committed
+//!   end-offset per touched partition**; nothing is visible mid-batch.
+//! - **Fetch** (consumers): an acquire-load of the committed end-offset,
+//!   then direct slot reads — **zero locks, zero clones**. [`fetch_shared`]
+//!   returns [`SharedBatch`]es: `Arc`-shared views into the segments
+//!   themselves, so N consumer groups (one per sink) read the same bytes.
+//! - **Lag / end-offset**: a single wait-free atomic load per partition.
+//!
+//! Memory-ordering argument (documented in ARCHITECTURE.md §Broker): a
+//! slot write and the tail `next`-link store are sequenced before the
+//! writer's release-store of `committed`; a reader's acquire-load of
+//! `committed` therefore happens-after every slot (and link) the loaded
+//! watermark covers. Readers never read past the watermark, writers never
+//! rewrite a published slot, and segments are append-only — so the
+//! unsynchronized slot reads are race-free.
+//!
+//! [`fetch_shared`]: Topic::fetch_shared
+//!
 //! Two topics matter in the wired pipeline (`ARCHITECTURE.md`): the CDC
 //! ingress topic consumed partition-parallel by the mapping lanes, and
 //! the CDM egress topic where every registered sink runs its **own**
 //! [`Consumer`] group ([`crate::coordinator::egress::SinkHandle`]) so a
 //! stalled backend never blocks the others.
 
+use std::cell::UnsafeCell;
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex, RwLock};
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
+
+use crate::metrics::BrokerMetrics;
+
+/// Records per segment. Small enough that hostile mini-topics exercise
+/// chain growth, large enough that the per-segment overhead is noise.
+pub const SEGMENT_RECORDS: usize = 256;
 
 /// A record as stored in a partition log.
 #[derive(Debug, Clone)]
@@ -25,20 +63,206 @@ pub struct Record<V> {
     pub value: V,
 }
 
-#[derive(Debug)]
-struct Partition<V> {
-    log: Vec<Record<V>>,
+/// One write-once slot of a segment. Initialization is published by the
+/// partition's committed watermark, never read before it.
+struct Slot<V>(UnsafeCell<MaybeUninit<Record<V>>>);
+
+/// A fixed-capacity, append-only block of the partition log. Immutable
+/// once its slots are covered by the committed watermark; shared by `Arc`
+/// between the log and every in-flight [`SharedBatch`].
+pub struct Segment<V> {
+    /// Offset of slot 0.
+    base: u64,
+    /// Slots initialized so far — the drop authority (readers use the
+    /// partition watermark instead, which never exceeds this).
+    init: AtomicUsize,
+    /// The successor segment, linked by the writer before any record
+    /// beyond this segment publishes.
+    next: OnceLock<Arc<Segment<V>>>,
+    slots: Box<[Slot<V>]>,
 }
 
-impl<V> Default for Partition<V> {
-    fn default() -> Self {
-        Self { log: Vec::new() }
+// SAFETY: slots are plain data owned by the segment; cross-thread access
+// is mediated by the committed-watermark release/acquire protocol (reads)
+// and the writer mutex (writes), as argued in the module docs.
+unsafe impl<V: Send> Send for Segment<V> {}
+unsafe impl<V: Send + Sync> Sync for Segment<V> {}
+
+impl<V> Segment<V> {
+    fn new(base: u64, capacity: usize) -> Arc<Self> {
+        let slots: Box<[Slot<V>]> = (0..capacity)
+            .map(|_| Slot(UnsafeCell::new(MaybeUninit::uninit())))
+            .collect();
+        Arc::new(Segment { base, init: AtomicUsize::new(0), next: OnceLock::new(), slots })
+    }
+
+    fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// # Safety
+    /// `idx` must be below the slots covered by an acquire-loaded
+    /// committed watermark (or, for the writer, below its own fill).
+    unsafe fn slot(&self, idx: usize) -> &Record<V> {
+        (*self.slots[idx].0.get()).assume_init_ref()
+    }
+
+    /// # Safety
+    /// Caller is the unique writer (holds the partition writer mutex) and
+    /// `idx` is the first uninitialized slot.
+    unsafe fn write(&self, idx: usize, rec: Record<V>) {
+        (*self.slots[idx].0.get()).write(rec);
+        // drop authority only — readers are gated by the watermark, and
+        // Arc teardown gives Drop the necessary fences
+        self.init.store(idx + 1, Ordering::Relaxed);
     }
 }
 
-#[derive(Debug)]
+impl<V> Drop for Segment<V> {
+    fn drop(&mut self) {
+        let n = *self.init.get_mut();
+        for slot in &mut self.slots[..n] {
+            unsafe { slot.0.get_mut().assume_init_drop() }
+        }
+    }
+}
+
+/// A zero-copy view of consecutive records inside one segment: the fetch
+/// unit of the lock-free read path. Cloning is one `Arc` bump; the
+/// records themselves are never copied out of the log.
+pub struct SharedBatch<V> {
+    partition: usize,
+    seg: Arc<Segment<V>>,
+    start: usize,
+    len: usize,
+}
+
+impl<V> Clone for SharedBatch<V> {
+    fn clone(&self) -> Self {
+        Self {
+            partition: self.partition,
+            seg: Arc::clone(&self.seg),
+            start: self.start,
+            len: self.len,
+        }
+    }
+}
+
+impl<V> SharedBatch<V> {
+    /// The partition these records live in.
+    pub fn partition(&self) -> usize {
+        self.partition
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Offset of the first record in the view.
+    pub fn first_offset(&self) -> u64 {
+        self.seg.base + self.start as u64
+    }
+
+    /// Record `i` of the view, by reference into the shared segment.
+    pub fn get(&self, i: usize) -> &Record<V> {
+        assert!(i < self.len, "batch index {i} out of {}", self.len);
+        // SAFETY: construction bounds [start, start+len) by the committed
+        // watermark observed with acquire ordering
+        unsafe { self.seg.slot(self.start + i) }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Record<V>> + '_ {
+        (0..self.len).map(move |i| self.get(i))
+    }
+}
+
+/// One partition: the segment chain head, the atomic committed
+/// end-offset readers race, and the writer-side tail cursor.
+struct PartitionLog<V> {
+    head: Arc<Segment<V>>,
+    /// Log end offset — the single publish point (release-stored by
+    /// writers, acquire-loaded by readers).
+    committed: AtomicU64,
+    /// Tail segment, owned by whoever holds the append lock.
+    writer: Mutex<Arc<Segment<V>>>,
+}
+
+impl<V> PartitionLog<V> {
+    fn new(capacity: usize) -> Self {
+        let head = Segment::new(0, capacity);
+        Self {
+            committed: AtomicU64::new(0),
+            writer: Mutex::new(Arc::clone(&head)),
+            head,
+        }
+    }
+
+    /// Wait-free log end offset.
+    fn end(&self) -> u64 {
+        self.committed.load(Ordering::Acquire)
+    }
+
+    /// Append a batch and publish it with one release-store. Returns the
+    /// offset of the first appended record.
+    fn append(
+        &self,
+        metrics: &BrokerMetrics,
+        items: impl IntoIterator<Item = (u64, V)>,
+    ) -> u64 {
+        let mut tail = self.writer.lock().unwrap();
+        // only writers store `committed`, and we hold the writer lock
+        let first = self.committed.load(Ordering::Relaxed);
+        let mut end = first;
+        for (key, value) in items {
+            let mut fill = (end - tail.base) as usize;
+            if fill == tail.capacity() {
+                let seg = Segment::new(end, tail.capacity());
+                metrics.segments_allocated.inc();
+                // link before any of its records can publish
+                if tail.next.set(Arc::clone(&seg)).is_err() {
+                    unreachable!("tail segment already linked");
+                }
+                *tail = seg;
+                fill = 0;
+            }
+            // SAFETY: unique writer under the lock; `fill` is the first
+            // uninitialized slot of the tail
+            unsafe { tail.write(fill, Record { offset: end, key, value }) };
+            end += 1;
+        }
+        if end != first {
+            // the one atomic publish: everything above becomes visible
+            self.committed.store(end, Ordering::Release);
+        }
+        first
+    }
+
+    /// Segment containing `offset`, walking from `hint` when it helps
+    /// (sequential consumers pay O(1) amortized) or from the chain head.
+    /// Returns `None` only for offsets past the published chain.
+    fn seek(
+        &self,
+        hint: Option<&Arc<Segment<V>>>,
+        offset: u64,
+    ) -> Option<Arc<Segment<V>>> {
+        let mut seg = match hint {
+            Some(s) if s.base <= offset => Arc::clone(s),
+            _ => Arc::clone(&self.head),
+        };
+        while offset >= seg.base + seg.capacity() as u64 {
+            seg = Arc::clone(seg.next.get()?);
+        }
+        Some(seg)
+    }
+}
+
 struct TopicInner<V> {
-    partitions: Vec<Mutex<Partition<V>>>,
+    partitions: Box<[PartitionLog<V>]>,
+    metrics: Arc<BrokerMetrics>,
 }
 
 /// A named topic with a fixed partition count.
@@ -52,19 +276,36 @@ impl<V> Clone for Topic<V> {
     }
 }
 
-impl<V: Clone> Topic<V> {
+impl<V> Topic<V> {
     fn new(partitions: usize) -> Self {
+        Self::with_metrics(partitions, SEGMENT_RECORDS, Arc::default())
+    }
+
+    fn with_metrics(
+        partitions: usize,
+        capacity: usize,
+        metrics: Arc<BrokerMetrics>,
+    ) -> Self {
+        let capacity = capacity.max(1);
+        let partitions = partitions.max(1);
+        metrics.segments_allocated.add(partitions as u64); // head segments
         Self {
             inner: Arc::new(TopicInner {
-                partitions: (0..partitions.max(1))
-                    .map(|_| Mutex::new(Partition::default()))
+                partitions: (0..partitions)
+                    .map(|_| PartitionLog::new(capacity))
                     .collect(),
+                metrics,
             }),
         }
     }
 
     pub fn n_partitions(&self) -> usize {
         self.inner.partitions.len()
+    }
+
+    /// The broker-level counters this topic reports into.
+    pub fn metrics(&self) -> &Arc<BrokerMetrics> {
+        &self.inner.metrics
     }
 
     /// Keyed produce: records with the same key land on the same partition
@@ -75,17 +316,17 @@ impl<V: Clone> Topic<V> {
     }
 
     pub fn produce_to(&self, partition: usize, key: u64, value: V) -> (usize, u64) {
-        let mut part = self.inner.partitions[partition].lock().unwrap();
-        let offset = part.log.len() as u64;
-        part.log.push(Record { offset, key, value });
+        let offset = self.inner.partitions[partition]
+            .append(&self.inner.metrics, std::iter::once((key, value)));
+        self.inner.metrics.produce_batches.inc();
         (partition, offset)
     }
 
     /// Keyed batch produce — the sharded lane's ordered commit: records
-    /// are grouped by target partition first, then appended with one lock
-    /// acquisition per touched partition, preserving the input order
-    /// within each partition (and therefore per key). Returns the number
-    /// of records produced.
+    /// are grouped by target partition first, then appended with **one
+    /// atomic publish per touched partition**, preserving the input order
+    /// within each partition (and therefore per key — a key maps to
+    /// exactly one partition). Returns the number of records produced.
     pub fn produce_batch(
         &self,
         records: impl IntoIterator<Item = (u64, V)>,
@@ -103,33 +344,94 @@ impl<V: Clone> Topic<V> {
             if batch.is_empty() {
                 continue;
             }
-            let mut part = self.inner.partitions[p].lock().unwrap();
-            for (key, value) in batch {
-                let offset = part.log.len() as u64;
-                part.log.push(Record { offset, key, value });
-            }
+            self.inner.partitions[p].append(&self.inner.metrics, batch);
+            self.inner.metrics.produce_batches.inc();
         }
         n
     }
 
-    /// Read up to `max` records from `partition` starting at `offset`.
-    pub fn fetch(&self, partition: usize, offset: u64, max: usize) -> Vec<Record<V>> {
-        let part = self.inner.partitions[partition].lock().unwrap();
-        part.log
-            .iter()
-            .skip(offset as usize)
-            .take(max)
-            .cloned()
-            .collect()
+    /// Zero-copy fetch: up to `max` records from `partition` starting at
+    /// `offset`, as `Arc`-shared segment views. No locks are taken and no
+    /// record is cloned — readers race only the committed watermark.
+    pub fn fetch_shared(
+        &self,
+        partition: usize,
+        offset: u64,
+        max: usize,
+    ) -> Vec<SharedBatch<V>> {
+        let mut cursor = None;
+        self.fetch_shared_with_cursor(partition, offset, max, &mut cursor)
     }
 
-    /// End offset (= log length) of a partition.
+    /// [`Topic::fetch_shared`] with a caller-held segment cursor:
+    /// sequential consumers pass the cursor back in so the seek is O(1)
+    /// instead of a walk from the chain head.
+    pub fn fetch_shared_with_cursor(
+        &self,
+        partition: usize,
+        offset: u64,
+        max: usize,
+        cursor: &mut Option<Arc<Segment<V>>>,
+    ) -> Vec<SharedBatch<V>> {
+        let part = &self.inner.partitions[partition];
+        let end = part.end();
+        if offset >= end || max == 0 {
+            return Vec::new();
+        }
+        let mut remaining = max.min((end - offset) as usize);
+        let Some(mut seg) = part.seek(cursor.as_ref(), offset) else {
+            return Vec::new();
+        };
+        let mut out = Vec::new();
+        let mut off = offset;
+        while remaining > 0 {
+            let start = (off - seg.base) as usize;
+            let in_seg = (seg.capacity() - start).min(remaining);
+            out.push(SharedBatch {
+                partition,
+                seg: Arc::clone(&seg),
+                start,
+                len: in_seg,
+            });
+            remaining -= in_seg;
+            off += in_seg as u64;
+            if remaining > 0 {
+                match seg.next.get() {
+                    Some(next) => seg = Arc::clone(next),
+                    None => break,
+                }
+            }
+        }
+        *cursor = Some(seg);
+        self.inner.metrics.fetch_batches.add(out.len() as u64);
+        out
+    }
+
+    /// End offset (= log length) of a partition: one wait-free atomic
+    /// load — the autoscaler's lag loop and the metrics exposition hit
+    /// this on every round, so it must never contend with producers.
     pub fn end_offset(&self, partition: usize) -> u64 {
-        self.inner.partitions[partition].lock().unwrap().log.len() as u64
+        self.inner.partitions[partition].end()
     }
 
+    /// Total records across partitions (wait-free, one load each).
     pub fn total_records(&self) -> u64 {
         (0..self.n_partitions()).map(|p| self.end_offset(p)).sum()
+    }
+}
+
+impl<V: Clone> Topic<V> {
+    /// Read up to `max` records from `partition` starting at `offset`,
+    /// cloned out of the log. Compatibility surface for inspection paths
+    /// and tests; the hot paths use [`Topic::fetch_shared`].
+    pub fn fetch(&self, partition: usize, offset: u64, max: usize) -> Vec<Record<V>> {
+        let batches = self.fetch_shared(partition, offset, max);
+        let total = batches.iter().map(SharedBatch::len).sum();
+        let mut out = Vec::with_capacity(total);
+        for batch in &batches {
+            out.extend(batch.iter().cloned());
+        }
+        out
     }
 }
 
@@ -147,13 +449,24 @@ fn fxhash(key: u64) -> u64 {
 pub struct Broker<V> {
     topics: RwLock<HashMap<String, Topic<V>>>,
     default_partitions: usize,
+    metrics: Arc<BrokerMetrics>,
 }
 
-impl<V: Clone> Broker<V> {
+impl<V> Broker<V> {
     pub fn new(default_partitions: usize) -> Self {
+        Self::with_metrics(default_partitions, Arc::default())
+    }
+
+    /// Broker whose topics report into `metrics` (the pipeline shares one
+    /// [`BrokerMetrics`] across its CDC and CDM brokers).
+    pub fn with_metrics(
+        default_partitions: usize,
+        metrics: Arc<BrokerMetrics>,
+    ) -> Self {
         Self {
             topics: RwLock::new(HashMap::new()),
             default_partitions: default_partitions.max(1),
+            metrics,
         }
     }
 
@@ -161,7 +474,13 @@ impl<V: Clone> Broker<V> {
         let mut topics = self.topics.write().unwrap();
         topics
             .entry(name.to_string())
-            .or_insert_with(|| Topic::new(partitions))
+            .or_insert_with(|| {
+                Topic::with_metrics(
+                    partitions,
+                    SEGMENT_RECORDS,
+                    Arc::clone(&self.metrics),
+                )
+            })
             .clone()
     }
 
@@ -185,15 +504,25 @@ impl<V: Clone> Broker<V> {
 /// partition. Polling returns records past the committed offset; a poll
 /// without a following `commit` re-delivers the same records next time —
 /// that is the at-least-once contract.
+///
+/// Polls interleave **round-robin across assigned partitions** with an
+/// evenly split budget, so a hot partition can delay — but never starve —
+/// the others (the pre-segmented core drained the budget in assignment
+/// order, which let a hot first partition starve the rest permanently).
 pub struct Consumer<V> {
     topic: Topic<V>,
     /// Partitions assigned to this member.
     assignment: Vec<usize>,
     committed: Vec<u64>, // per assigned partition (indexed like assignment)
     position: Vec<u64>,  // fetch position (>= committed)
+    /// Cached tail segment per assigned partition: sequential polls seek
+    /// in O(1) instead of walking the chain from its head.
+    cursors: Vec<Option<Arc<Segment<V>>>>,
+    /// Rotating start index for the round-robin fairness sweep.
+    rr: usize,
 }
 
-impl<V: Clone> Consumer<V> {
+impl<V> Consumer<V> {
     /// Member `member_idx` of `group_size` consumers: round-robin partition
     /// assignment like Kafka's range assignor.
     pub fn new(topic: Topic<V>, member_idx: usize, group_size: usize) -> Self {
@@ -201,27 +530,69 @@ impl<V: Clone> Consumer<V> {
             .filter(|p| p % group_size.max(1) == member_idx)
             .collect();
         let n = assignment.len();
-        Self { topic, assignment, committed: vec![0; n], position: vec![0; n] }
+        Self {
+            topic,
+            assignment,
+            committed: vec![0; n],
+            position: vec![0; n],
+            cursors: vec![None; n],
+            rr: 0,
+        }
     }
 
     pub fn assignment(&self) -> &[usize] {
         &self.assignment
     }
 
-    /// Poll up to `max` records across assigned partitions. Advances the
-    /// *position* (not the committed offset).
-    pub fn poll(&mut self, max: usize) -> Vec<(usize, Record<V>)> {
+    /// Zero-copy poll: up to `max` records across assigned partitions as
+    /// `Arc`-shared segment views, interleaved fairly (see type docs).
+    /// Advances the *position* (not the committed offset).
+    pub fn poll_shared(&mut self, max: usize) -> Vec<SharedBatch<V>> {
+        let n = self.assignment.len();
+        if n == 0 || max == 0 {
+            return Vec::new();
+        }
         let mut out = Vec::new();
-        for (i, &p) in self.assignment.iter().enumerate() {
-            if out.len() >= max {
+        let mut budget = max;
+        // Fairness sweep: rotate the start partition every poll and split
+        // the remaining budget evenly over the partitions left in the
+        // round, redistributing whatever a drained partition didn't use.
+        // Repeat while budget and backlog remain, so a quiet tail
+        // partition still yields its records even when a hot one could
+        // have consumed the whole budget.
+        loop {
+            let mut moved = false;
+            for k in 0..n {
+                if budget == 0 {
+                    break;
+                }
+                let i = (self.rr + k) % n;
+                let p = self.assignment[i];
+                let avail = self.topic.end_offset(p).saturating_sub(self.position[i]);
+                if avail == 0 {
+                    continue;
+                }
+                let left = n - k;
+                let quota = (budget.div_ceil(left)).max(1);
+                let take = quota.min(avail.min(usize::MAX as u64) as usize);
+                let batches = self.topic.fetch_shared_with_cursor(
+                    p,
+                    self.position[i],
+                    take,
+                    &mut self.cursors[i],
+                );
+                for batch in &batches {
+                    self.position[i] = batch.first_offset() + batch.len() as u64;
+                    budget -= batch.len();
+                    moved = true;
+                }
+                out.extend(batches);
+            }
+            if budget == 0 || !moved {
                 break;
             }
-            let batch = self.topic.fetch(p, self.position[i], max - out.len());
-            if let Some(last) = batch.last() {
-                self.position[i] = last.offset + 1;
-            }
-            out.extend(batch.into_iter().map(|r| (p, r)));
         }
+        self.rr = (self.rr + 1) % n;
         out
     }
 
@@ -233,6 +604,7 @@ impl<V: Clone> Consumer<V> {
     /// Abandon uncommitted progress: next poll re-delivers (at-least-once).
     pub fn rewind_to_committed(&mut self) {
         self.position.copy_from_slice(&self.committed);
+        self.cursors.iter_mut().for_each(|c| *c = None);
     }
 
     /// Reset offsets to zero — the paper's "set back Kafka-offsets and start
@@ -240,15 +612,52 @@ impl<V: Clone> Consumer<V> {
     pub fn reset_to_beginning(&mut self) {
         self.committed.iter_mut().for_each(|o| *o = 0);
         self.position.iter_mut().for_each(|o| *o = 0);
+        self.cursors.iter_mut().for_each(|c| *c = None);
     }
 
-    /// Records remaining past the current position (lag).
+    /// Records remaining past the current position (lag). Wait-free: one
+    /// atomic load per assigned partition, no locks anywhere on the path.
     pub fn lag(&self) -> u64 {
         self.assignment
             .iter()
             .enumerate()
             .map(|(i, &p)| self.topic.end_offset(p).saturating_sub(self.position[i]))
             .sum()
+    }
+
+    /// Committed offset per assigned partition, `(partition, offset)` —
+    /// the group's durable progress (monotone between resets).
+    pub fn committed_offsets(&self) -> Vec<(usize, u64)> {
+        self.assignment
+            .iter()
+            .copied()
+            .zip(self.committed.iter().copied())
+            .collect()
+    }
+
+    /// Fetch position per assigned partition, `(partition, offset)`
+    /// (always `>=` the committed offset).
+    pub fn positions(&self) -> Vec<(usize, u64)> {
+        self.assignment
+            .iter()
+            .copied()
+            .zip(self.position.iter().copied())
+            .collect()
+    }
+}
+
+impl<V: Clone> Consumer<V> {
+    /// Poll up to `max` records across assigned partitions, cloned out of
+    /// the log — compatibility surface over [`Consumer::poll_shared`]
+    /// (which the hot paths use directly).
+    pub fn poll(&mut self, max: usize) -> Vec<(usize, Record<V>)> {
+        let batches = self.poll_shared(max);
+        let total: usize = batches.iter().map(SharedBatch::len).sum();
+        let mut out = Vec::with_capacity(total);
+        for batch in &batches {
+            out.extend(batch.iter().map(|r| (batch.partition(), r.clone())));
+        }
+        out
     }
 }
 
@@ -294,6 +703,55 @@ mod tests {
         let (p1, _) = t.produce(42, 0);
         let (p2, _) = t.produce(42, 1);
         assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn segment_chain_grows_and_preserves_order() {
+        // capacity 8 forces the chain to grow every 8 records
+        let t: Topic<u64> = Topic::with_metrics(1, 8, Arc::default());
+        let n = 1000u64;
+        t.produce_batch((0..n).map(|i| (1, i)));
+        let recs = t.fetch(0, 0, usize::MAX);
+        assert_eq!(recs.len(), n as usize);
+        for (i, r) in recs.iter().enumerate() {
+            assert_eq!(r.offset, i as u64);
+            assert_eq!(r.value, i as u64);
+        }
+        // ceil(1000/8) = 125 segments, head included
+        assert_eq!(t.metrics().segments_allocated.get(), 125);
+        // random access mid-chain still works (offset reset paths)
+        let mid = t.fetch(0, 500, 3);
+        assert_eq!(
+            mid.iter().map(|r| r.value).collect::<Vec<_>>(),
+            vec![500, 501, 502]
+        );
+    }
+
+    #[test]
+    fn fetch_shared_is_zero_copy() {
+        let t: Topic<u64> = Topic::new(1);
+        for i in 0..10 {
+            t.produce(1, i);
+        }
+        let a = t.fetch_shared(0, 0, 10);
+        let b = t.fetch_shared(0, 0, 10);
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].len(), 10);
+        // both views alias the same slot memory: nothing was cloned
+        assert!(std::ptr::eq(a[0].get(3), b[0].get(3)));
+        assert_eq!(a[0].get(3).value, 3);
+        assert_eq!(a[0].first_offset(), 0);
+        assert_eq!(t.metrics().fetch_batches.get(), 2);
+    }
+
+    #[test]
+    fn mid_batch_records_invisible_until_publish() {
+        // produce_batch publishes once per touched partition: a reader
+        // sees either none or all of a partition's sub-batch
+        let t: Topic<u64> = Topic::new(1);
+        t.produce_batch((0..50).map(|i| (1, i)));
+        assert_eq!(t.end_offset(0), 50);
+        assert_eq!(t.fetch(0, 0, usize::MAX).len(), 50);
     }
 
     #[test]
@@ -359,5 +817,101 @@ mod tests {
         assert_eq!(c.lag(), 5);
         c.poll(2);
         assert_eq!(c.lag(), 3);
+    }
+
+    #[test]
+    fn poll_interleaves_hot_and_cold_partitions() {
+        // Regression: the pre-segmented Consumer drained its budget in
+        // assignment order, so a hot partition 0 starved partition 1
+        // forever. The fair sweep must deliver the cold partition's
+        // records in the very first poll.
+        let t: Topic<u64> = Topic::new(2);
+        t.produce_batch((0..10_000u64).map(|i| (0, i))); // key 0 → one partition
+        let hot = usize::from(t.end_offset(1) > 0);
+        let cold = 1 - hot;
+        // 5 records on the cold partition
+        for i in 0..5 {
+            t.produce_to(cold, 99, 20_000 + i);
+        }
+        let mut c = Consumer::new(t.clone(), 0, 1);
+        let batch = c.poll(100);
+        let cold_seen = batch
+            .iter()
+            .filter(|(p, _)| *p == cold)
+            .count();
+        assert_eq!(cold_seen, 5, "cold partition starved within one poll");
+        // the hot partition still gets the lion's share of the budget
+        assert!(batch.len() >= 100 - 5);
+        // order within each partition is untouched by the interleave
+        let hot_vals: Vec<u64> = batch
+            .iter()
+            .filter(|(p, _)| *p == hot)
+            .map(|(_, r)| r.value)
+            .collect();
+        assert!(hot_vals.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn poll_shared_budget_is_respected() {
+        let t: Topic<u64> = Topic::new(4);
+        t.produce_batch((0..1000u64).map(|i| (i, i)));
+        let mut c = Consumer::new(t.clone(), 0, 1);
+        let batches = c.poll_shared(100);
+        let total: usize = batches.iter().map(SharedBatch::len).sum();
+        assert_eq!(total, 100);
+        assert_eq!(c.lag(), 900);
+        // drain the rest
+        let mut seen = total;
+        loop {
+            let more: usize =
+                c.poll_shared(256).iter().map(SharedBatch::len).sum();
+            if more == 0 {
+                break;
+            }
+            seen += more;
+        }
+        assert_eq!(seen, 1000);
+    }
+
+    #[test]
+    fn lag_path_takes_no_locks() {
+        // Hold the partition writer mutex (a stalled producer) and prove
+        // the lag path still completes: end_offset/total_records/lag are
+        // wait-free atomic loads, never lock acquisitions. If any of them
+        // took the writer lock this would deadlock — the watchdog turns
+        // that into a failure instead of a hang.
+        let t: Topic<u64> = Topic::new(2);
+        for i in 0..7 {
+            t.produce_to(0, 1, i);
+        }
+        let _stalled_producer = t.inner.partitions[0].writer.lock().unwrap();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let t2 = t.clone();
+        std::thread::spawn(move || {
+            let c = Consumer::new(t2.clone(), 0, 1);
+            tx.send((t2.end_offset(0), t2.total_records(), c.lag())).ok();
+        });
+        let (end, total, lag) = rx
+            .recv_timeout(std::time::Duration::from_secs(10))
+            .expect("lag path blocked on a lock");
+        assert_eq!(end, 7);
+        assert_eq!(total, 7);
+        assert_eq!(lag, 7);
+    }
+
+    #[test]
+    fn values_drop_exactly_once() {
+        // Arc payloads across segment boundaries: every record dropped
+        // exactly once when the topic (and shared batches) go away.
+        let payload = Arc::new(42u64);
+        {
+            let t: Topic<Arc<u64>> = Topic::with_metrics(2, 4, Arc::default());
+            t.produce_batch((0..100).map(|i| (i, Arc::clone(&payload))));
+            let held = t.fetch_shared(0, 0, usize::MAX);
+            drop(t);
+            // batches keep their segments (and payloads) alive
+            assert!(held.iter().map(SharedBatch::len).sum::<usize>() > 0);
+        }
+        assert_eq!(Arc::strong_count(&payload), 1);
     }
 }

@@ -1,0 +1,169 @@
+//! Arena-backed CDM records: one shared slab allocation per produced
+//! batch instead of one `Arc<(CdcOp, OutMessage)>` per record.
+//!
+//! The mapping lanes emit bursts of CDM messages (a micro-batch on a
+//! shard worker, a whole initial-load block on the bulk lane). Before the
+//! segmented-broker refactor every one of those messages paid an `Arc`
+//! allocation just to become cheaply cloneable across the per-sink
+//! consumer groups. An [`OutArena`] collects a burst into one contiguous
+//! buffer and seals it into a single `Arc<[(CdcOp, OutMessage)]>` slab;
+//! each [`OutRecord`] is then a `{slab, index}` handle — cloning it (the
+//! broker does, once per consumer-group fetch before zero-copy fetch, and
+//! still does for compat `fetch`/`poll`) bumps one refcount, and the
+//! messages themselves are never moved again.
+//!
+//! [`OutRecord`] derefs to `(CdcOp, OutMessage)`, so consumers keep the
+//! `let (op, msg) = &*rec.value` shape they used when the type was an
+//! `Arc` of the tuple.
+
+use std::ops::Deref;
+use std::sync::Arc;
+
+use crate::broker::Topic;
+use crate::message::cdc::CdcOp;
+use crate::message::OutMessage;
+use crate::metrics::BrokerMetrics;
+
+/// A mapped output record on the CDM topic: the originating CDC op
+/// travels with the message so the DW can upsert/tombstone. A handle into
+/// an arena slab — see the module docs.
+#[derive(Debug)]
+pub struct OutRecord {
+    slab: Arc<[(CdcOp, OutMessage)]>,
+    idx: u32,
+}
+
+impl Clone for OutRecord {
+    fn clone(&self) -> Self {
+        Self { slab: Arc::clone(&self.slab), idx: self.idx }
+    }
+}
+
+impl Deref for OutRecord {
+    type Target = (CdcOp, OutMessage);
+
+    fn deref(&self) -> &Self::Target {
+        &self.slab[self.idx as usize]
+    }
+}
+
+impl OutRecord {
+    /// A single-record slab, for callers without a batch to amortize
+    /// (tests, one-off repairs).
+    pub fn single(op: CdcOp, msg: OutMessage) -> Self {
+        Self { slab: Arc::from(vec![(op, msg)]), idx: 0 }
+    }
+
+    /// The CDM partitioning key (the message key).
+    pub fn key(&self) -> u64 {
+        self.1.key
+    }
+}
+
+/// Collects one burst of mapped outputs, then seals them into a single
+/// shared slab (one allocation for the whole batch). Reusable: `seal`
+/// drains the arena, so a worker keeps one arena alive across
+/// micro-batches.
+pub struct OutArena {
+    buf: Vec<(CdcOp, OutMessage)>,
+    metrics: Arc<BrokerMetrics>,
+}
+
+impl OutArena {
+    /// An arena whose sealed bytes are reported into `topic`'s broker
+    /// counters (`metl_broker_arena_bytes_total`).
+    pub fn for_topic(topic: &Topic<OutRecord>) -> Self {
+        Self { buf: Vec::new(), metrics: Arc::clone(topic.metrics()) }
+    }
+
+    pub fn push(&mut self, op: CdcOp, msg: OutMessage) {
+        self.buf.push((op, msg));
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Seal the collected outputs into one shared slab and return the
+    /// keyed records ready for [`Topic::produce_batch`]. The arena is
+    /// left empty and reusable.
+    pub fn seal(&mut self) -> Vec<(u64, OutRecord)> {
+        if self.buf.is_empty() {
+            return Vec::new();
+        }
+        let slab: Arc<[(CdcOp, OutMessage)]> =
+            std::mem::take(&mut self.buf).into();
+        self.metrics.arena_bytes.add(
+            (slab.len() * std::mem::size_of::<(CdcOp, OutMessage)>()) as u64,
+        );
+        (0..slab.len())
+            .map(|i| {
+                let rec = OutRecord { slab: Arc::clone(&slab), idx: i as u32 };
+                (rec.key(), rec)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cdm::{CdmAttrId, CdmVersionNo, EntityId};
+    use crate::message::StateI;
+    use crate::util::json::Json;
+
+    fn msg(key: u64) -> OutMessage {
+        OutMessage {
+            key,
+            entity: EntityId(1),
+            version: CdmVersionNo(0),
+            state: StateI(0),
+            ts_us: 7,
+            fields: vec![(CdmAttrId(3), Json::Num(1.0))],
+        }
+    }
+
+    #[test]
+    fn sealed_records_share_one_slab() {
+        let metrics = Arc::new(BrokerMetrics::default());
+        let mut arena =
+            OutArena { buf: Vec::new(), metrics: Arc::clone(&metrics) };
+        arena.push(CdcOp::Create, msg(10));
+        arena.push(CdcOp::Delete, msg(11));
+        assert_eq!(arena.len(), 2);
+        let sealed = arena.seal();
+        assert!(arena.is_empty());
+        assert_eq!(sealed.len(), 2);
+        assert_eq!(sealed[0].0, 10);
+        assert_eq!(sealed[1].0, 11);
+        // both records alias the same slab allocation
+        assert!(Arc::ptr_eq(&sealed[0].1.slab, &sealed[1].1.slab));
+        // deref keeps the (op, msg) tuple shape
+        let (op, m) = &*sealed[1].1;
+        assert_eq!(*op, CdcOp::Delete);
+        assert_eq!(m.key, 11);
+        assert_eq!(
+            metrics.arena_bytes.get(),
+            (2 * std::mem::size_of::<(CdcOp, OutMessage)>()) as u64
+        );
+        // sealing an empty arena is free
+        assert!(arena.seal().is_empty());
+        assert_eq!(
+            metrics.arena_bytes.get(),
+            (2 * std::mem::size_of::<(CdcOp, OutMessage)>()) as u64
+        );
+    }
+
+    #[test]
+    fn single_record_slab() {
+        let rec = OutRecord::single(CdcOp::Update, msg(42));
+        assert_eq!(rec.key(), 42);
+        assert_eq!(rec.0, CdcOp::Update);
+        let clone = rec.clone();
+        assert!(Arc::ptr_eq(&rec.slab, &clone.slab));
+    }
+}

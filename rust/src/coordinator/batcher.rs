@@ -12,7 +12,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use super::pipeline::Pipeline;
+use super::pipeline::{OutArena, Pipeline};
 use crate::mapper::kernel::{self, KernelMode};
 use crate::matrix::blocks;
 use crate::message::cdc::CdcOp;
@@ -68,11 +68,6 @@ impl InitialLoader {
             0,
         );
         let rows = snapshot.len();
-        let messages: Vec<InMessage> = snapshot
-            .iter()
-            .filter_map(|ev| ev.after.as_ref().map(|m| m.to_dense()))
-            .collect();
-
         let schema = db.tables[0].schema;
         let version = db.tables[0].live_version;
         let dpm = pipeline.dmm.snapshot();
@@ -89,9 +84,18 @@ impl InitialLoader {
             })
         });
 
+        let has_payload = snapshot.iter().any(|ev| ev.after.is_some());
+
         let mut out_messages = 0usize;
-        if bulk_ok && !messages.is_empty() {
+        if bulk_ok && has_payload {
+            // dense copies only here: the presence packing below indexes
+            // positional fields, which the sparse wire form doesn't carry
+            let messages: Vec<InMessage> = snapshot
+                .iter()
+                .filter_map(|ev| ev.after.as_ref().map(|m| m.to_dense()))
+                .collect();
             let rt = self.runtime.as_ref().unwrap();
+            let mut arena = OutArena::for_topic(&pipeline.out_topic);
             for block in column.iter() {
                 let ext = blocks::block_extent(&land.tree, &land.cdm, block.key)
                     .context("live block")?;
@@ -146,13 +150,12 @@ impl InitialLoader {
                         ts_us: msg.ts_us,
                         fields,
                     };
-                    pipeline
-                        .out_topic
-                        .produce(out.key, std::sync::Arc::new((CdcOp::SnapshotRead, out)));
-                    out_messages += 1;
-                    pipeline.metrics.messages_out.inc();
+                    arena.push(CdcOp::SnapshotRead, out);
                 }
             }
+            // one slab for the whole load, one publish per partition
+            out_messages = pipeline.out_topic.produce_batch(arena.seal());
+            pipeline.metrics.messages_out.add(out_messages as u64);
             pipeline.metrics.bulk_events.add(rows as u64);
             pipeline.metrics.events_in.add(rows as u64);
             pipeline.metrics.transformations.add(rows as u64);
@@ -166,18 +169,18 @@ impl InitialLoader {
             // rust/tests/kernel_equivalence.rs), without the per-event
             // mapper setup of the fallback below.
             let (_, plan) = pipeline.cache.plan(&dpm, schema, version);
+            let mut arena = OutArena::for_topic(&pipeline.out_topic);
             kernel::with_scratch(|scratch| {
-                for msg in &messages {
+                // no to_dense() copies: the gather plan skips null fields
+                // itself, so the sparse wire form maps identically
+                for msg in snapshot.iter().filter_map(|ev| ev.after.as_ref()) {
                     for out in plan.map_message(msg, scratch) {
-                        pipeline.out_topic.produce(
-                            out.key,
-                            std::sync::Arc::new((CdcOp::SnapshotRead, out)),
-                        );
-                        out_messages += 1;
-                        pipeline.metrics.messages_out.inc();
+                        arena.push(CdcOp::SnapshotRead, out);
                     }
                 }
             });
+            out_messages = pipeline.out_topic.produce_batch(arena.seal());
+            pipeline.metrics.messages_out.add(out_messages as u64);
             pipeline.metrics.bulk_events.add(rows as u64);
             pipeline.metrics.events_in.add(rows as u64);
             pipeline.metrics.transformations.add(rows as u64);

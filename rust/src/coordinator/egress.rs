@@ -16,7 +16,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::pipeline::OutRecord;
-use crate::broker::Consumer;
+use crate::broker::{Consumer, SharedBatch};
 use crate::metrics::{PipelineMetrics, SinkMetrics};
 use crate::sink::{DeliveryTag, SinkConnector, SinkStats};
 use crate::trace::{Stage, TraceCtx, Tracer};
@@ -81,12 +81,14 @@ impl SinkHandle {
         let mut sink = self.sink.lock().unwrap();
         let mut n = 0;
         loop {
-            let batch = consumer.poll(DRAIN_BATCH);
-            if batch.is_empty() {
+            let batches = consumer.poll_shared(DRAIN_BATCH);
+            if batches.is_empty() {
                 break;
             }
             let t0 = Instant::now();
-            Self::apply_batch(&mut **sink, &batch);
+            for batch in &batches {
+                Self::apply_batch(&mut **sink, batch);
+            }
             let ok = sink.flush().is_ok();
             self.metrics_root.egress_latency.record(t0.elapsed());
             self.tracer
@@ -101,7 +103,7 @@ impl SinkHandle {
                 break;
             }
             consumer.commit();
-            n += batch.len();
+            n += batches.iter().map(SharedBatch::len).sum::<usize>();
         }
         self.metrics.drained.add(n as u64);
         let stats = sink.snapshot_stats();
@@ -111,17 +113,16 @@ impl SinkHandle {
         n
     }
 
-    /// Apply one polled batch through the delivery-aware path: each
-    /// record carries its `(partition, offset)` tag so backends dedupe
-    /// at-least-once redelivery exactly.
-    fn apply_batch(
-        sink: &mut dyn SinkConnector,
-        batch: &[(usize, crate::broker::Record<OutRecord>)],
-    ) {
-        for (partition, rec) in batch {
+    /// Apply one shared segment view through the delivery-aware path:
+    /// records are read by reference straight out of the broker segment
+    /// (every sink group shares the same slabs), and each carries its
+    /// `(partition, offset)` tag so backends dedupe at-least-once
+    /// redelivery exactly.
+    fn apply_batch(sink: &mut dyn SinkConnector, batch: &SharedBatch<OutRecord>) {
+        let partition = batch.partition() as u32;
+        for rec in batch.iter() {
             let (op, msg) = &*rec.value;
-            let tag =
-                DeliveryTag { partition: *partition as u32, offset: rec.offset };
+            let tag = DeliveryTag { partition, offset: rec.offset };
             sink.apply_at(tag, msg, *op);
         }
     }
@@ -137,16 +138,18 @@ impl SinkHandle {
         let mut sink = self.sink.lock().unwrap();
         let mut n = 0;
         loop {
-            let batch = consumer.poll(DRAIN_BATCH);
-            if batch.is_empty() {
+            let batches = consumer.poll_shared(DRAIN_BATCH);
+            if batches.is_empty() {
                 break;
             }
-            Self::apply_batch(&mut **sink, &batch);
+            for batch in &batches {
+                Self::apply_batch(&mut **sink, batch);
+            }
             if sink.flush().is_err() {
                 self.metrics.flush_errors.inc();
                 break;
             }
-            n += batch.len();
+            n += batches.iter().map(SharedBatch::len).sum::<usize>();
         }
         // the crash: applied + flushed, but the commit never happened
         consumer.rewind_to_committed();

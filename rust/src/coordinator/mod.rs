@@ -3,6 +3,7 @@
 //! XLA bulk lane and horizontal scaling — the paper's §3/§6 system around
 //! the DMM core.
 
+pub mod arena;
 pub mod batcher;
 pub mod egress;
 pub mod errors;

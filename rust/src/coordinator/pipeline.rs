@@ -107,9 +107,7 @@ use crate::util::rng::Rng;
 use crate::util::IdGen;
 use crate::workload::{self, DmlKind, Landscape, TraceOp};
 
-/// A mapped output record on the CDM topic: the originating CDC op travels
-/// with the message so the DW can upsert/tombstone.
-pub type OutRecord = Arc<(CdcOp, OutMessage)>;
+pub use super::arena::{OutArena, OutRecord};
 
 /// The full pipeline.
 pub struct Pipeline {
@@ -227,11 +225,19 @@ impl PipelineBuilder {
             StateI(0),
         )
         .map_err(|e| anyhow::anyhow!("matrix violates 1:1: {e}"))?;
-        let broker = crate::broker::Broker::new(cfg.partitions);
-        let cdc_topic = broker.create_topic("fx.cdc", cfg.partitions);
-        let out_broker = crate::broker::Broker::new(cfg.partitions);
-        let out_topic = out_broker.create_topic("cdm.out", cfg.partitions);
         let metrics = Arc::new(PipelineMetrics::default());
+        // both brokers report into the same counters: segment growth and
+        // batch I/O are one fleet-level signal, not per-topic
+        let broker = crate::broker::Broker::with_metrics(
+            cfg.partitions,
+            Arc::clone(&metrics.broker),
+        );
+        let cdc_topic = broker.create_topic("fx.cdc", cfg.partitions);
+        let out_broker = crate::broker::Broker::with_metrics(
+            cfg.partitions,
+            Arc::clone(&metrics.broker),
+        );
+        let out_topic = out_broker.create_topic("cdm.out", cfg.partitions);
         if sinks.is_empty() {
             for name in &cfg.sinks {
                 sinks.push(crate::sink::from_config_name(name, &cfg)?);
@@ -618,10 +624,14 @@ impl Pipeline {
                 self.metrics.transformations.inc();
                 self.metrics.map_latency.record(t0.elapsed());
                 tr.span(Stage::Map, t0);
-                for out in outs {
-                    let key = out.1.key;
-                    self.out_topic.produce(key, Arc::new(out));
-                    self.metrics.messages_out.inc();
+                if !outs.is_empty() {
+                    // one sealed slab + one ordered batch commit per event
+                    let mut arena = OutArena::for_topic(&self.out_topic);
+                    for (op, out) in outs {
+                        arena.push(op, out);
+                    }
+                    let n = self.out_topic.produce_batch(arena.seal());
+                    self.metrics.messages_out.add(n as u64);
                 }
                 self.tracer.finish(tr);
             }
@@ -673,12 +683,20 @@ impl Pipeline {
             self.evolution.pump(self);
             self.resolve_op(op)?;
             loop {
-                let batch = consumer.poll(64);
-                if batch.is_empty() {
+                // zero-copy consume: Arc-shared segment views, no record
+                // clones between the broker and the mapper
+                let batches = consumer.poll_shared(64);
+                if batches.is_empty() {
                     break;
                 }
-                for (partition, rec) in &batch {
-                    self.process_event_from(*partition, rec.offset, &rec.value);
+                for batch in &batches {
+                    for rec in batch.iter() {
+                        self.process_event_from(
+                            batch.partition(),
+                            rec.offset,
+                            &rec.value,
+                        );
+                    }
                 }
                 consumer.commit();
             }

@@ -16,7 +16,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use super::batcher::InitialLoader;
-use super::pipeline::Pipeline;
+use super::pipeline::{OutArena, Pipeline};
 use crate::broker::Consumer;
 use crate::matrix::dpm::DpmSet;
 use crate::message::cdc::CdcEvent;
@@ -72,11 +72,14 @@ pub fn replay_dlq(
         match pipeline.map_event(&entry.event) {
             Ok(outs) => {
                 report.replayed += 1;
-                for out in outs {
-                    let key = out.1.key;
-                    pipeline.out_topic.produce(key, Arc::new(out));
-                    pipeline.metrics.messages_out.inc();
+                // sealed per entry: a mid-loop reload (the Err arm below)
+                // must not leapfrog records replayed before it
+                let mut arena = OutArena::for_topic(&pipeline.out_topic);
+                for (op, out) in outs {
+                    arena.push(op, out);
                 }
+                let n = pipeline.out_topic.produce_batch(arena.seal());
+                pipeline.metrics.messages_out.add(n as u64);
             }
             Err(_) => {
                 report.still_failing += 1;
@@ -115,13 +118,19 @@ pub fn offset_reset_reprocess(
     consumer.reset_to_beginning();
     let mut n = 0;
     loop {
-        let batch = consumer.poll(256);
-        if batch.is_empty() {
+        let batches = consumer.poll_shared(256);
+        if batches.is_empty() {
             break;
         }
-        for (_, rec) in &batch {
-            pipeline.process_event(&rec.value);
-            n += 1;
+        for batch in &batches {
+            for rec in batch.iter() {
+                pipeline.process_event_from(
+                    batch.partition(),
+                    rec.offset,
+                    &rec.value,
+                );
+                n += 1;
+            }
         }
         consumer.commit();
     }

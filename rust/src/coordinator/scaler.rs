@@ -51,16 +51,23 @@ pub fn run_scaled(pipeline: &Pipeline, instances: usize) -> ScaleReport {
                 let mut consumer: Consumer<std::sync::Arc<CdcEvent>> =
                     Consumer::new(pipeline.cdc_topic.clone(), member, instances);
                 loop {
-                    let batch = consumer.poll(128);
-                    if batch.is_empty() {
+                    let batches = consumer.poll_shared(128);
+                    if batches.is_empty() {
                         break; // drained this member's partitions
                     }
-                    for (_, rec) in &batch {
-                        pipeline.process_event(&rec.value);
+                    let mut n = 0u64;
+                    for batch in &batches {
+                        for rec in batch.iter() {
+                            pipeline.process_event_from(
+                                batch.partition(),
+                                rec.offset,
+                                &rec.value,
+                            );
+                        }
+                        n += batch.len() as u64;
                     }
                     consumer.commit();
-                    counters[member]
-                        .fetch_add(batch.len() as u64, Ordering::Relaxed);
+                    counters[member].fetch_add(n, Ordering::Relaxed);
                 }
             });
         }
@@ -139,7 +146,9 @@ pub struct AutoscaleReport {
 }
 
 /// Total CDC backlog past the caller-tracked `next` offsets (one slot
-/// per partition).
+/// per partition). Wait-free: `end_offset` is a single atomic
+/// acquire-load per partition, so the scaling policy reads honest lag
+/// without ever contending with producers (see `Topic::end_offset`).
 pub fn total_lag(pipeline: &Pipeline, next: &[u64]) -> u64 {
     next.iter()
         .enumerate()
@@ -172,15 +181,18 @@ pub fn autoscale_round(
                     (0..cells.len()).filter(|p| p % workers == member)
                 {
                     let from = cells[p].load(Ordering::Relaxed);
-                    let batch = pipeline.cdc_topic.fetch(p, from, budget);
-                    for rec in &batch {
-                        pipeline.process_event(&rec.value);
+                    let batches = pipeline.cdc_topic.fetch_shared(p, from, budget);
+                    for batch in &batches {
+                        for rec in batch.iter() {
+                            pipeline.process_event_from(p, rec.offset, &rec.value);
+                        }
+                        cells[p].store(
+                            batch.first_offset() + batch.len() as u64,
+                            Ordering::Relaxed,
+                        );
+                        counters[member]
+                            .fetch_add(batch.len() as u64, Ordering::Relaxed);
                     }
-                    if let Some(last) = batch.last() {
-                        cells[p].store(last.offset + 1, Ordering::Relaxed);
-                    }
-                    counters[member]
-                        .fetch_add(batch.len() as u64, Ordering::Relaxed);
                 }
             });
         }

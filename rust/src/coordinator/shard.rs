@@ -28,8 +28,8 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::pipeline::{OutRecord, Pipeline, TraceReport};
-use crate::broker::Consumer;
+use super::pipeline::{OutArena, Pipeline, TraceReport};
+use crate::broker::{Consumer, SharedBatch};
 use crate::cache::DcpmCache;
 use crate::mapper::parallel::ParallelMapper;
 use crate::mapper::MapError;
@@ -38,12 +38,16 @@ use crate::message::OutMessage;
 use crate::trace::{EventTrace, Stage};
 use crate::workload::TraceOp;
 
-/// One dispatched CDC event with its source position: the shard queue
-/// carries provenance so worker traces name the exact partition/offset.
-struct Delivery {
-    partition: u32,
-    offset: u64,
-    ev: Arc<CdcEvent>,
+/// One dispatched slice of the CDC log: an `Arc`-shared segment view plus
+/// the indices within it routed to this shard. The queue carries shared
+/// views instead of per-event clones — a worker reads its records
+/// straight out of the broker segments (provenance comes free: the view
+/// knows its partition, each record its offset), and the only `Arc` bump
+/// per dispatch is the view's segment handle, not one per event.
+struct ShardBatch {
+    batch: SharedBatch<Arc<CdcEvent>>,
+    /// Indices into `batch` owned by this shard, in partition order.
+    picks: Vec<u32>,
 }
 
 /// Largest number of queued events a worker folds into one mapping
@@ -176,13 +180,13 @@ pub fn run_sharded_session<R>(
 fn with_shard_pool<R>(
     pipeline: &Pipeline,
     n: usize,
-    drive: impl FnOnce(&mut Consumer<Arc<CdcEvent>>, &[Sender<Delivery>]) -> R,
+    drive: impl FnOnce(&mut Consumer<Arc<CdcEvent>>, &[Sender<ShardBatch>]) -> R,
 ) -> (Vec<u64>, R) {
     std::thread::scope(|scope| {
-        let mut txs: Vec<Sender<Delivery>> = Vec::with_capacity(n);
+        let mut txs: Vec<Sender<ShardBatch>> = Vec::with_capacity(n);
         let mut handles = Vec::with_capacity(n);
         for shard_idx in 0..n {
-            let (tx, rx) = mpsc::channel::<Delivery>();
+            let (tx, rx) = mpsc::channel::<ShardBatch>();
             txs.push(tx);
             handles.push(scope.spawn(move || run_worker(pipeline, shard_idx, rx)));
         }
@@ -198,26 +202,34 @@ fn with_shard_pool<R>(
     })
 }
 
-/// Forward every currently fetchable CDC event to its shard queue.
+/// Forward every currently fetchable CDC event to its shard queue: one
+/// zero-copy poll, one routing pass per shared view, one queue send per
+/// `(view × shard)` — events are never cloned out of the broker segments.
 fn dispatch_available(
     consumer: &mut Consumer<Arc<CdcEvent>>,
-    txs: &[Sender<Delivery>],
+    txs: &[Sender<ShardBatch>],
     shards: usize,
 ) {
     loop {
-        let batch = consumer.poll(MICRO_BATCH);
-        if batch.is_empty() {
+        let batches = consumer.poll_shared(MICRO_BATCH);
+        if batches.is_empty() {
             break;
         }
-        for (partition, rec) in batch {
-            let shard = shard_of(&rec.value, shards);
-            // a closed queue means the worker already exited (only possible
-            // after the driver dropped the senders) — unreachable here
-            let _ = txs[shard].send(Delivery {
-                partition: partition as u32,
-                offset: rec.offset,
-                ev: rec.value,
-            });
+        for batch in batches {
+            let mut picks: Vec<Vec<u32>> = vec![Vec::new(); shards];
+            for i in 0..batch.len() {
+                picks[shard_of(&batch.get(i).value, shards)].push(i as u32);
+            }
+            for (shard, picks) in picks.into_iter().enumerate() {
+                if picks.is_empty() {
+                    continue;
+                }
+                // a closed queue means the worker already exited (only
+                // possible after the driver dropped the senders) —
+                // unreachable here
+                let _ = txs[shard]
+                    .send(ShardBatch { batch: batch.clone(), picks });
+            }
         }
         consumer.commit();
     }
@@ -253,8 +265,19 @@ fn refresh_worker(
 
 /// One shard worker: an epoch-cached mapper over a worker-local column
 /// cache (eviction storms stay shard-local), FIFO over the shard queue,
-/// ordered batch commit into the CDM topic. Returns events processed.
-fn run_worker(pipeline: &Pipeline, shard_idx: usize, rx: Receiver<Delivery>) -> u64 {
+/// arena-sealed ordered batch commit into the CDM topic. Returns events
+/// processed.
+///
+/// The worker parks on the queue receive (no spin-poll: `mpsc::recv`
+/// parks the thread until the dispatcher sends or hangs up) and wakes to
+/// whole shared views — records are read by reference out of the broker
+/// segments; the only per-event `Arc` bump left is the DLQ push on the
+/// failure path.
+fn run_worker(
+    pipeline: &Pipeline,
+    shard_idx: usize,
+    rx: Receiver<ShardBatch>,
+) -> u64 {
     let shard_counters = pipeline.metrics.shard.shard(shard_idx);
     let cache = Arc::new(DcpmCache::with_mode(
         pipeline.dmm.snapshot().state,
@@ -265,12 +288,16 @@ fn run_worker(pipeline: &Pipeline, shard_idx: usize, rx: Receiver<Delivery>) -> 
         ParallelMapper::with_threads(pipeline.dmm.snapshot(), Arc::clone(&cache), 1)
             .with_kernel(pipeline.cfg.kernel);
     let mut processed = 0u64;
-    let mut outs_buf: Vec<(u64, OutRecord)> = Vec::new();
+    let mut arena = OutArena::for_topic(&pipeline.out_topic);
     while let Ok(first) = rx.recv() {
-        let mut batch = vec![first];
-        while batch.len() < MICRO_BATCH {
+        let mut queued = first.picks.len();
+        let mut batches = vec![first];
+        while queued < MICRO_BATCH {
             match rx.try_recv() {
-                Ok(d) => batch.push(d),
+                Ok(b) => {
+                    queued += b.picks.len();
+                    batches.push(b);
+                }
                 Err(_) => break,
             }
         }
@@ -279,51 +306,57 @@ fn run_worker(pipeline: &Pipeline, shard_idx: usize, rx: Receiver<Delivery>) -> 
         if pipeline.dmm.epoch() != epoch {
             refresh_worker(pipeline, &mut mapper, &cache, &mut epoch);
         }
-        for d in &batch {
-            pipeline.metrics.events_in.inc();
-            shard_counters.events.inc();
-            processed += 1;
-            let t_in = Instant::now();
-            let mut tr = pipeline.tracer.begin(d.partition, d.offset);
-            if tr.is_active() {
-                if let Some(payload) = d.ev.mapping_payload() {
-                    tr.stamp_payload(payload.schema.0, payload.version.0);
-                }
-                tr.stamp_shard(shard_idx as u16);
-                tr.stamp_lane(mapper.lane());
-                tr.span(Stage::Ingest, t_in);
-                pipeline.metrics.ingest_latency.record(t_in.elapsed());
-            }
-            let t0 = Instant::now();
-            match map_on_shard(pipeline, &mut mapper, &cache, &mut epoch, &d.ev, &mut tr)
-            {
-                Ok(outs) => {
-                    pipeline.metrics.transformations.inc();
-                    pipeline.metrics.map_latency.record(t0.elapsed());
-                    tr.stamp_epoch(epoch);
-                    tr.span(Stage::Map, t0);
-                    pipeline.tracer.finish(tr);
-                    for out in outs {
-                        outs_buf.push((out.1.key, Arc::new(out)));
+        for sb in &batches {
+            let partition = sb.batch.partition() as u32;
+            for &i in &sb.picks {
+                let rec = sb.batch.get(i as usize);
+                pipeline.metrics.events_in.inc();
+                shard_counters.events.inc();
+                processed += 1;
+                let t_in = Instant::now();
+                let mut tr = pipeline.tracer.begin(partition, rec.offset);
+                if tr.is_active() {
+                    if let Some(payload) = rec.value.mapping_payload() {
+                        tr.stamp_payload(payload.schema.0, payload.version.0);
                     }
+                    tr.stamp_shard(shard_idx as u16);
+                    tr.stamp_lane(mapper.lane());
+                    tr.span(Stage::Ingest, t_in);
+                    pipeline.metrics.ingest_latency.record(t_in.elapsed());
                 }
-                Err(e) => {
-                    pipeline.metrics.dead_letters.inc();
-                    tr.stamp_epoch(epoch);
-                    tr.span_err(Stage::Map, t0);
-                    let error = e.to_string();
-                    let dump = pipeline.tracer.finish_dead_letter(tr, &error);
-                    pipeline.dlq.push_traced(
-                        Arc::clone(&d.ev),
-                        error,
-                        pipeline.retry.max_attempts,
-                        dump,
-                    );
+                let t0 = Instant::now();
+                match map_on_shard(
+                    pipeline, &mut mapper, &cache, &mut epoch, &rec.value, &mut tr,
+                ) {
+                    Ok(outs) => {
+                        pipeline.metrics.transformations.inc();
+                        pipeline.metrics.map_latency.record(t0.elapsed());
+                        tr.stamp_epoch(epoch);
+                        tr.span(Stage::Map, t0);
+                        pipeline.tracer.finish(tr);
+                        for (op, out) in outs {
+                            arena.push(op, out);
+                        }
+                    }
+                    Err(e) => {
+                        pipeline.metrics.dead_letters.inc();
+                        tr.stamp_epoch(epoch);
+                        tr.span_err(Stage::Map, t0);
+                        let error = e.to_string();
+                        let dump = pipeline.tracer.finish_dead_letter(tr, &error);
+                        pipeline.dlq.push_traced(
+                            Arc::clone(&rec.value),
+                            error,
+                            pipeline.retry.max_attempts,
+                            dump,
+                        );
+                    }
                 }
             }
         }
-        if !outs_buf.is_empty() {
-            let n = pipeline.out_topic.produce_batch(outs_buf.drain(..));
+        if !arena.is_empty() {
+            // one sealed slab + one atomic publish per touched partition
+            let n = pipeline.out_topic.produce_batch(arena.seal());
             pipeline.metrics.messages_out.add(n as u64);
             shard_counters.out.add(n as u64);
         }

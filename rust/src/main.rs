@@ -190,14 +190,20 @@ fn cmd_serve(args: &Args, cfg: PipelineConfig) -> Result<()> {
         }
         // drain wire-observed schema changes (the online evolution lane)
         pipeline.evolution.pump(&pipeline);
-        // consume + map + sink
+        // consume + map + sink (zero-copy segment views)
         loop {
-            let batch = consumer.poll(128);
-            if batch.is_empty() {
+            let batches = consumer.poll_shared(128);
+            if batches.is_empty() {
                 break;
             }
-            for (_, rec) in &batch {
-                pipeline.process_event(&rec.value);
+            for batch in &batches {
+                for rec in batch.iter() {
+                    pipeline.process_event_from(
+                        batch.partition(),
+                        rec.offset,
+                        &rec.value,
+                    );
+                }
             }
             consumer.commit();
         }

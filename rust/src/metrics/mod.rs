@@ -288,6 +288,24 @@ pub struct TraceMetrics {
     pub flight_dumps: Counter,
 }
 
+/// Counters of the segmented broker core: shared by `Arc` between
+/// [`PipelineMetrics`] and every `broker::Topic` the pipeline creates
+/// (CDC ingress and CDM egress report into the same instance).
+#[derive(Debug, Default)]
+pub struct BrokerMetrics {
+    /// Log segments allocated across all topics/partitions (head segments
+    /// included) — growth of the append-only chains.
+    pub segments_allocated: Counter,
+    /// Batch appends published (one per touched partition per
+    /// `produce`/`produce_batch` call — each is one atomic publish).
+    pub produce_batches: Counter,
+    /// `SharedBatch` views handed out by the zero-copy fetch path.
+    pub fetch_batches: Counter,
+    /// Bytes sealed into arena-backed CDM record slabs (one slab per
+    /// produced batch instead of one `Arc` allocation per record).
+    pub arena_bytes: Counter,
+}
+
 /// Cache-side values the exposition needs but `PipelineMetrics` doesn't
 /// own (they live in the `DcpmCache` / kernel `PlanCache`).
 #[derive(Debug, Clone, Copy, Default)]
@@ -335,6 +353,8 @@ pub struct PipelineMetrics {
     pub sinks: SinkMetricsRegistry,
     /// Tracing-subsystem counters (span/trace/dump accounting).
     pub trace: Arc<TraceMetrics>,
+    /// Segmented-broker counters (segment growth, batch I/O, arenas).
+    pub broker: Arc<BrokerMetrics>,
     /// Per-event consume + provenance-stamp overhead.
     pub ingest_latency: LatencyChannel,
     /// Per-event full mapping latency (the §7 headline metric).
@@ -435,6 +455,11 @@ impl PipelineMetrics {
             self.store.recovery_ms.get(),
             self.store.replayed_updates.get()
         ));
+        out.push_str(&format!(
+            "| broker segs       {:>12}  arena B  {:>9} |\n",
+            self.broker.segments_allocated.get(),
+            self.broker.arena_bytes.get()
+        ));
         let ing = self.ingest_latency.summary();
         let eg = self.egress_latency.summary();
         let st = self.store_latency.summary();
@@ -504,6 +529,19 @@ impl PipelineMetrics {
         );
         counter("metl_plan_cache_hits_total", cache.plan_hits);
         counter("metl_plan_cache_misses_total", cache.plan_misses);
+        counter(
+            "metl_broker_segments_allocated_total",
+            self.broker.segments_allocated.get(),
+        );
+        counter(
+            "metl_broker_produce_batches_total",
+            self.broker.produce_batches.get(),
+        );
+        counter(
+            "metl_broker_fetch_batches_total",
+            self.broker.fetch_batches.get(),
+        );
+        counter("metl_broker_arena_bytes_total", self.broker.arena_bytes.get());
 
         let mut gauge = |name: &str, v: f64| {
             out.push_str(&format!("# TYPE {name} gauge\n{name} {v}\n"));
@@ -622,6 +660,24 @@ impl PipelineMetrics {
             Json::Num(self.store.replayed_updates.get() as f64),
         );
 
+        let mut broker = Json::obj();
+        broker.set(
+            "segments_allocated",
+            Json::Num(self.broker.segments_allocated.get() as f64),
+        );
+        broker.set(
+            "produce_batches",
+            Json::Num(self.broker.produce_batches.get() as f64),
+        );
+        broker.set(
+            "fetch_batches",
+            Json::Num(self.broker.fetch_batches.get() as f64),
+        );
+        broker.set(
+            "arena_bytes",
+            Json::Num(self.broker.arena_bytes.get() as f64),
+        );
+
         let mut cache_obj = Json::obj();
         cache_obj.set("bytes", Json::Num(cache.bytes as f64));
         cache_obj.set("hit_rate", Json::Num(cache.hit_rate));
@@ -676,6 +732,7 @@ impl PipelineMetrics {
         doc.set("counters", counters);
         doc.set("trace", trace);
         doc.set("store", store);
+        doc.set("broker", broker);
         doc.set("cache", cache_obj);
         doc.set("stages", stages);
         doc.set("shards", shards);

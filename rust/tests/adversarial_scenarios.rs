@@ -206,6 +206,49 @@ fn shard_count_does_not_change_sink_state() {
     }
 }
 
+/// High-shard conformance sweep: every scenario through the full
+/// invariant trio at 8 and 16 shards — dispatcher fan-out wider than the
+/// CDC partition count, so the segmented broker's shared-batch routing
+/// (many shards picking from one `SharedBatch`) is exercised hard. Gated
+/// behind `METL_HIGH_SHARDS=1` (CI `concurrency` job, release mode).
+#[test]
+fn high_shard_conformance_sweep() {
+    if std::env::var("METL_HIGH_SHARDS").as_deref() != Ok("1") {
+        eprintln!("skipping: set METL_HIGH_SHARDS=1 to run");
+        return;
+    }
+    let scenarios = [
+        Scenario::Uniform,
+        Scenario::Zipf,
+        Scenario::Burst,
+        Scenario::Shuffle,
+        Scenario::Duplicate,
+        Scenario::LoadStorm,
+        Scenario::HotSchemaChange,
+    ];
+    for scenario in scenarios {
+        for shards in [8usize, 16] {
+            for kernel in [KernelMode::Native, KernelMode::Scalar] {
+                let mut cfg = base_cfg();
+                cfg.kernel = kernel;
+                let outcome = ScenarioRunner::new(cfg, scenario)
+                    .shards(shards)
+                    .run_and_verify()
+                    .unwrap_or_else(|e| {
+                        panic!("{scenario}/{kernel:?}/N={shards}: {e}")
+                    });
+                // duplicate/load-storm scenarios publish extra records on
+                // top of the 240-event trace, so bound from below only
+                assert!(
+                    outcome.events_in >= 240,
+                    "{scenario}/N={shards}: {} events in",
+                    outcome.events_in
+                );
+            }
+        }
+    }
+}
+
 fn render(op: &HostileOp) -> String {
     match op {
         HostileOp::Dml { service, kind, rank } => {

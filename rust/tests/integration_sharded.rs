@@ -131,6 +131,43 @@ fn sharded_trace_equivalent_across_shard_counts() {
     assert!(p4.metrics.dmm_epoch.get() >= 2);
 }
 
+/// High-shard variant of the equivalence e2e: 8 and 16 shards — more
+/// shards than CDC partitions, so several workers idle-park while others
+/// own multiple keys — must reproduce the 1-shard per-key stream bit for
+/// bit. Gated behind `METL_HIGH_SHARDS=1` (CI `concurrency` job) so the
+/// default test run stays fast.
+#[test]
+fn sharded_trace_equivalent_at_high_shard_counts() {
+    if std::env::var("METL_HIGH_SHARDS").as_deref() != Ok("1") {
+        eprintln!("skipping: set METL_HIGH_SHARDS=1 to run");
+        return;
+    }
+    let cfg = test_cfg();
+    let mut rng = Rng::seed_from(cfg.seed);
+    let ops = workload::day_trace(&cfg, &mut rng);
+
+    let (p1, keyed1) = run_with_shards(&ops, 1);
+    for shards in [8usize, 16] {
+        let (pn, keyedn) = run_with_shards(&ops, shards);
+        assert_eq!(
+            p1.metrics.messages_out.get(),
+            pn.metrics.messages_out.get(),
+            "same number of CDM messages at {shards} shards"
+        );
+        assert_eq!(keyed1.len(), keyedn.len(), "key sets at {shards} shards");
+        for (key, records1) in &keyed1 {
+            let recordsn = keyedn.get(key).unwrap_or_else(|| {
+                panic!("key {key} missing under {shards} shards")
+            });
+            assert_eq!(records1, recordsn, "key {key} at {shards} shards");
+        }
+        let jsonl1 = jsonl_by_key(&p1);
+        let jsonln = jsonl_by_key(&pn);
+        assert_eq!(jsonl1, jsonln, "jsonl streams at {shards} shards");
+        assert_eq!(p1.state.current(), pn.state.current());
+    }
+}
+
 #[test]
 fn sharded_trace_spreads_work_across_shards() {
     let cfg = test_cfg();

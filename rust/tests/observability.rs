@@ -76,6 +76,10 @@ fn expose_text_contains_golden_metric_names() {
         "metl_store_replayed_updates_total",
         "metl_plan_cache_hits_total",
         "metl_plan_cache_misses_total",
+        "metl_broker_segments_allocated_total",
+        "metl_broker_produce_batches_total",
+        "metl_broker_fetch_batches_total",
+        "metl_broker_arena_bytes_total",
         "metl_dmm_epoch",
         "metl_epoch_lag",
         "metl_store_segments_live",
@@ -106,6 +110,13 @@ fn expose_text_contains_golden_metric_names() {
     assert!(text.contains("metl_events_in_total 8\n"));
     assert!(text.contains("metl_trace_traces_total 8\n"));
     assert!(text.contains("metl_trace_spans_dropped_total 0\n"));
+    // the broker counters are wired: topic creation allocated head
+    // segments, the mapped outputs went through arena-sealed batch
+    // produces, and the sink drains fetched shared batches
+    assert!(p.metrics.broker.segments_allocated.get() >= 2);
+    assert!(p.metrics.broker.produce_batches.get() >= 1);
+    assert!(p.metrics.broker.fetch_batches.get() >= 1);
+    assert!(p.metrics.broker.arena_bytes.get() > 0);
 }
 
 #[test]

@@ -2,8 +2,11 @@
 //! randomized landscapes/matrices across many seeds, asserting the
 //! system's core invariants.
 
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
 
+use metl::broker::{Broker, Consumer, Topic};
 use metl::cache::DcpmCache;
 use metl::config::PipelineConfig;
 use metl::coordinator::EpochDmm;
@@ -681,6 +684,261 @@ fn prop_hostile_trace_deterministic_and_conserves_dmls() {
             );
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Segmented-broker linearizability under real concurrency
+// ---------------------------------------------------------------------------
+
+/// Broker invariant: with racing keyed producers (mixing single and batch
+/// produces) and two **independent** consumer groups draining live, the
+/// log conserves the produced multiset exactly, keys stay sticky to one
+/// partition, per-producer order survives inside every partition, and
+/// both groups observe the identical per-partition record sequence — the
+/// segmented log, not the consumers, is the source of truth.
+#[test]
+fn prop_concurrent_producers_and_groups_agree_on_the_log() {
+    const PRODUCERS: u64 = 4;
+    const PER_PRODUCER: u64 = 3_000; // ≫ SEGMENT_RECORDS: chains must grow
+    const KEYS: u64 = 13;
+    const BATCH: u64 = 16;
+    let t: Topic<u64> = Broker::new(4).create_topic("conc", 4);
+    let total = (PRODUCERS * PER_PRODUCER) as usize;
+    let encode = |prod: u64, seq: u64| (prod << 32) | seq;
+    let key_of = |prod: u64, seq: u64| (prod * 31 + seq) % KEYS;
+    let groups: Vec<Mutex<Vec<(usize, u64, u64, u64)>>> =
+        (0..2).map(|_| Mutex::new(Vec::new())).collect();
+    let done = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let done = &done;
+        let producers: Vec<_> = (0..PRODUCERS)
+            .map(|prod| {
+                let t = t.clone();
+                scope.spawn(move || {
+                    let mut seq = 0;
+                    while seq < PER_PRODUCER {
+                        // alternate windows of batched and single produces
+                        if seq % (2 * BATCH) < BATCH {
+                            let n = BATCH.min(PER_PRODUCER - seq);
+                            t.produce_batch((seq..seq + n).map(|s| {
+                                (key_of(prod, s), encode(prod, s))
+                            }));
+                            seq += n;
+                        } else {
+                            t.produce(key_of(prod, seq), encode(prod, seq));
+                            seq += 1;
+                        }
+                    }
+                })
+            })
+            .collect();
+        for sink in &groups {
+            for member in 0..2 {
+                let t = t.clone();
+                scope.spawn(move || {
+                    let mut c = Consumer::new(t, member, 2);
+                    let mut got = Vec::new();
+                    loop {
+                        let batch = c.poll(111);
+                        if batch.is_empty() {
+                            if done.load(Ordering::Acquire) && c.lag() == 0 {
+                                break;
+                            }
+                            std::thread::yield_now();
+                            continue;
+                        }
+                        for (p, rec) in batch {
+                            got.push((p, rec.offset, rec.key, rec.value));
+                        }
+                        c.commit();
+                    }
+                    sink.lock().unwrap().extend(got);
+                });
+            }
+        }
+        for h in producers {
+            h.join().unwrap();
+        }
+        done.store(true, Ordering::Release);
+    });
+    let mut views = Vec::new();
+    for sink in &groups {
+        let mut got = sink.lock().unwrap().clone();
+        assert_eq!(got.len(), total, "group lost or duplicated records");
+        // multiset conservation: every (producer, seq) exactly once
+        let mut values: Vec<u64> = got.iter().map(|&(.., v)| v).collect();
+        values.sort_unstable();
+        let mut expected: Vec<u64> = (0..PRODUCERS)
+            .flat_map(|prod| {
+                (0..PER_PRODUCER).map(move |s| encode(prod, s))
+            })
+            .collect();
+        expected.sort_unstable();
+        assert_eq!(values, expected, "multiset not conserved");
+        // (partition, offset) is the log's authoritative order
+        got.sort_unstable_by_key(|&(p, o, _, _)| (p, o));
+        views.push(got);
+    }
+    assert_eq!(views[0], views[1], "consumer groups observed different logs");
+    // offsets are contiguous per partition and account for every record
+    for p in 0..t.n_partitions() {
+        let offs: Vec<u64> = views[0]
+            .iter()
+            .filter(|&&(vp, ..)| vp == p)
+            .map(|&(_, o, _, _)| o)
+            .collect();
+        assert_eq!(offs, (0..offs.len() as u64).collect::<Vec<_>>());
+        assert_eq!(offs.len() as u64, t.end_offset(p));
+    }
+    // key stickiness + per-producer order inside each partition
+    let mut key_home: HashMap<u64, usize> = HashMap::new();
+    let mut last_seq: HashMap<(usize, u64), u64> = HashMap::new();
+    for &(p, _, key, v) in &views[0] {
+        assert_eq!(
+            *key_home.entry(key).or_insert(p),
+            p,
+            "key {key} hopped partitions"
+        );
+        let (prod, seq) = (v >> 32, v & 0xFFFF_FFFF);
+        if let Some(prev) = last_seq.insert((p, prod), seq) {
+            assert!(
+                seq > prev,
+                "producer {prod} reordered in partition {p}: {prev} then {seq}"
+            );
+        }
+    }
+}
+
+/// Broker invariant: the committed watermark is monotone and atomic under
+/// a racing batch producer. A reader that observes end-offset E can
+/// immediately read all E records below it — no holes, no torn batches —
+/// and neither a partition watermark nor the topic total ever moves
+/// backwards.
+#[test]
+fn prop_watermark_monotonic_and_gapless_under_racing_producer() {
+    const ROUNDS: u64 = 2_000;
+    let t: Topic<u64> = Broker::new(2).create_topic("mono", 2);
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let stop = &stop;
+        let tp = t.clone();
+        let producer = scope.spawn(move || {
+            let mut i = 0u64;
+            for round in 0..ROUNDS {
+                let n = round % 7 + 1; // varying batch sizes
+                tp.produce_batch((i..i + n).map(|k| (k, k)));
+                i += n;
+            }
+        });
+        for _ in 0..2 {
+            let tr = t.clone();
+            scope.spawn(move || {
+                let mut last = vec![0u64; tr.n_partitions()];
+                let mut last_total = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let total = tr.total_records();
+                    assert!(total >= last_total, "total_records went backwards");
+                    last_total = total;
+                    for p in 0..tr.n_partitions() {
+                        let end = tr.end_offset(p);
+                        assert!(end >= last[p], "watermark went backwards");
+                        last[p] = end;
+                        let recs = tr.fetch(p, 0, end as usize);
+                        assert_eq!(
+                            recs.len() as u64,
+                            end,
+                            "hole below the watermark"
+                        );
+                        if let Some(rec) = recs.last() {
+                            assert_eq!(rec.offset, end - 1);
+                        }
+                    }
+                }
+            });
+        }
+        producer.join().unwrap();
+        stop.store(true, Ordering::Release);
+    });
+    assert_eq!(t.total_records(), (0..ROUNDS).map(|r| r % 7 + 1).sum::<u64>());
+}
+
+/// Broker invariant: at-least-once delivery across crash/rewind while the
+/// producer is still live. Commits move the group's durable offsets only
+/// forward; a rewind redelivers everything past the last commit; and when
+/// the dust settles every offset of every partition was delivered at
+/// least once — duplicates allowed, gaps never.
+#[test]
+fn prop_rewind_redelivers_at_least_once_under_live_producer() {
+    const EVENTS: u64 = 4_000;
+    let t: Topic<u64> = Broker::new(3).create_topic("alo", 3);
+    let done = AtomicBool::new(false);
+    let seen: Mutex<Vec<(usize, u64, u64)>> = Mutex::new(Vec::new());
+    std::thread::scope(|scope| {
+        let done = &done;
+        let seen = &seen;
+        let tp = t.clone();
+        let producer = scope.spawn(move || {
+            for i in 0..EVENTS {
+                tp.produce(i % 11, i);
+            }
+        });
+        let tc = t.clone();
+        scope.spawn(move || {
+            let mut c = Consumer::new(tc, 0, 1);
+            let mut all = Vec::new();
+            let mut last_committed = c.committed_offsets();
+            let mut round = 0u64;
+            loop {
+                let batch = c.poll(97);
+                if batch.is_empty() {
+                    if done.load(Ordering::Acquire) && c.lag() == 0 {
+                        break;
+                    }
+                    std::thread::yield_now();
+                    continue;
+                }
+                for (p, rec) in &batch {
+                    all.push((*p, rec.offset, rec.value));
+                }
+                round += 1;
+                if round % 5 == 0 {
+                    // simulated crash before the commit
+                    c.rewind_to_committed();
+                } else {
+                    c.commit();
+                    let now = c.committed_offsets();
+                    for (&(pa, a), &(pb, b)) in
+                        last_committed.iter().zip(&now)
+                    {
+                        assert_eq!(pa, pb);
+                        assert!(b >= a, "committed offset moved backwards");
+                    }
+                    last_committed = now;
+                }
+            }
+            seen.lock().unwrap().extend(all);
+        });
+        producer.join().unwrap();
+        done.store(true, Ordering::Release);
+    });
+    let seen = seen.into_inner().unwrap();
+    for p in 0..t.n_partitions() {
+        let end = t.end_offset(p);
+        let mut offs: Vec<u64> = seen
+            .iter()
+            .filter(|&&(sp, ..)| sp == p)
+            .map(|&(_, o, _)| o)
+            .collect();
+        offs.sort_unstable();
+        offs.dedup();
+        assert_eq!(
+            offs,
+            (0..end).collect::<Vec<_>>(),
+            "partition {p} skipped offsets across rewinds"
+        );
+    }
+    // the contract is at-least-once, not exactly-once: rewinds redeliver
+    assert!(seen.len() as u64 >= t.total_records());
 }
 
 /// Invariant: the Zipf sampler stays in `[0, n)` and the head rank is at
